@@ -1,0 +1,120 @@
+//! Quickstart: load the AOT artifacts, run a few real train steps on the
+//! PJRT CPU client, then a predict call — the smallest end-to-end tour of
+//! the three-layer stack.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use molpack::runtime::{Engine, HostBatch};
+use molpack::util::Rng;
+
+/// Hand-rolled demo batch: one random "molecule" per pack with radius-graph
+/// edges (the coordinator's batcher does this for real datasets).
+fn demo_batch(engine: &Engine, rng: &mut Rng) -> HostBatch {
+    let g = engine.manifest.batch;
+    let r_cut = engine.manifest.model.r_cut;
+    let mut b = HostBatch::empty(&g);
+    for p in 0..g.packs_per_batch {
+        let n0 = p * g.nodes_per_pack;
+        let e0 = p * g.edges_per_pack;
+        let na = 20 + rng.range(0, 10);
+        // random atoms in a 6 A box
+        for i in 0..na {
+            b.z[n0 + i] = 1 + rng.range(0, 8) as i32;
+            for c in 0..3 {
+                b.pos[(n0 + i) * 3 + c] = rng.uniform(0.0, 6.0) as f32;
+            }
+            b.graph_id[n0 + i] = (p * g.graphs_per_pack) as i32;
+            b.node_mask[n0 + i] = 1.0;
+        }
+        // radius edges within the pack
+        let mut k = 0;
+        for i in 0..na {
+            for j in 0..na {
+                if i == j || k >= g.edges_per_pack {
+                    continue;
+                }
+                let dx: f32 = (0..3)
+                    .map(|c| {
+                        let d = b.pos[(n0 + i) * 3 + c] - b.pos[(n0 + j) * 3 + c];
+                        d * d
+                    })
+                    .sum::<f32>()
+                    .sqrt();
+                if (dx as f64) < r_cut {
+                    b.src[e0 + k] = (n0 + i) as i32;
+                    b.dst[e0 + k] = (n0 + j) as i32;
+                    b.edge_mask[e0 + k] = 1.0;
+                    k += 1;
+                }
+            }
+        }
+        // padding edges: self-loops on the pack's dump node
+        for e in k..g.edges_per_pack {
+            b.src[e0 + e] = (n0 + na) as i32;
+            b.dst[e0 + e] = (n0 + na) as i32;
+        }
+        // synthetic target: 0.1 * sum(z)
+        let zsum: i32 = (0..na).map(|i| b.z[n0 + i]).sum();
+        b.target[p * g.graphs_per_pack] = 0.1 * zsum as f32;
+        b.graph_mask[p * g.graphs_per_pack] = 1.0;
+    }
+    b
+}
+
+fn main() -> Result<()> {
+    let engine = Engine::load("artifacts")?;
+    println!(
+        "loaded artifacts: platform={} params={} batch(N={}, E={}, G={})",
+        engine.platform(),
+        engine.manifest.param_count,
+        engine.manifest.batch.n_nodes,
+        engine.manifest.batch.n_edges,
+        engine.manifest.batch.n_graphs,
+    );
+
+    let mut rng = Rng::new(42);
+    let batch = demo_batch(&engine, &mut rng);
+    let mut state = engine.init_state()?;
+
+    println!("training 20 steps on a synthetic batch:");
+    for step in 1..=20 {
+        let loss = engine.train_step(&mut state, &batch)?;
+        if step % 5 == 0 || step == 1 {
+            println!("  step {step:>3}  loss {loss:.6}");
+        }
+    }
+
+    let energies = engine.predict(&state.params, &batch)?;
+    let real: Vec<(usize, f32)> = batch
+        .graph_mask
+        .iter()
+        .enumerate()
+        .filter(|(_, &m)| m == 1.0)
+        .map(|(i, _)| (i, energies[i]))
+        .collect();
+    println!("predicted energies (real graphs): {real:?}");
+    println!(
+        "targets                          : {:?}",
+        batch
+            .graph_mask
+            .iter()
+            .enumerate()
+            .filter(|(_, &m)| m == 1.0)
+            .map(|(i, _)| (i, batch.target[i]))
+            .collect::<Vec<_>>()
+    );
+
+    let s = engine.stats();
+    println!(
+        "engine stats: steps={} marshal={:.1}ms/step execute={:.1}ms/step readback={:.1}ms/step",
+        s.steps,
+        1e3 * s.marshal_secs / s.steps as f64,
+        1e3 * s.execute_secs / s.steps as f64,
+        1e3 * s.readback_secs / s.steps as f64,
+    );
+    println!("quickstart OK");
+    Ok(())
+}

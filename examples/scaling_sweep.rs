@@ -1,0 +1,98 @@
+//! Strong-scaling study (paper Figs. 9/13 + Table 1): evaluate the
+//! calibrated performance model across datasets × replica counts ×
+//! optimization settings, and compare against the 8×A100 DDP baseline.
+//!
+//! ```sh
+//! cargo run --release --example scaling_sweep
+//! ```
+
+use molpack::baseline::{estimate_gpu_epoch, GpuArch};
+use molpack::ipu::IpuArch;
+use molpack::perfmodel::calibration::paper_profiles;
+use molpack::perfmodel::{estimate_epoch, OptFlags, SchNetDims, TrainSetup};
+use molpack::util::plot::{line_chart, md_table};
+
+fn main() {
+    let arch = IpuArch::bow();
+    let gpu = GpuArch::a100();
+    let scales = [1usize, 2, 4, 8, 16, 32, 64];
+
+    println!("=== per-epoch seconds (packing, all optimizations) ===\n");
+    let mut rows = Vec::new();
+    for w in paper_profiles() {
+        let mut row = vec![w.name.clone()];
+        for &r in &scales {
+            let e = estimate_epoch(
+                &w,
+                &TrainSetup { n_ipus: r, opts: OptFlags::ALL, ..Default::default() },
+                &arch,
+            );
+            row.push(format!("{:.2}", e.epoch_secs));
+        }
+        let g = estimate_gpu_epoch(&w, &SchNetDims::default(), 8, &gpu);
+        row.push(format!("{:.2}", g.epoch_secs));
+        rows.push(row);
+    }
+    println!(
+        "{}",
+        md_table(&["dataset", "1", "2", "4", "8", "16", "32", "64", "8xA100"], &rows)
+    );
+
+    println!("=== throughput curves (graphs/s), packing vs padding ===\n");
+    for w in paper_profiles() {
+        let x: Vec<f64> = scales.iter().map(|&r| (r as f64).log2()).collect();
+        let mut series = Vec::new();
+        for (label, packing) in [("packing", true), ("padding", false)] {
+            let ys: Vec<f64> = scales
+                .iter()
+                .map(|&r| {
+                    let mut opts = OptFlags::ALL;
+                    opts.packing = packing;
+                    estimate_epoch(
+                        &w,
+                        &TrainSetup { n_ipus: r, opts, ..Default::default() },
+                        &arch,
+                    )
+                    .throughput_graphs_per_s
+                })
+                .collect();
+            series.push((label, ys));
+        }
+        println!(
+            "{}",
+            line_chart(
+                &format!("{} throughput vs log2(IPUs)", w.name),
+                &x,
+                &series,
+                48,
+                10
+            )
+        );
+    }
+
+    println!("=== step breakdown at 16 IPUs ===\n");
+    let mut rows = Vec::new();
+    for w in paper_profiles() {
+        let e = estimate_epoch(
+            &w,
+            &TrainSetup { n_ipus: 16, opts: OptFlags::ALL, ..Default::default() },
+            &arch,
+        );
+        rows.push(vec![
+            w.name.clone(),
+            format!("{:.0}", e.steps_per_epoch),
+            format!("{:.1}", e.graphs_per_step),
+            format!("{:.2}ms", e.step_device_secs * 1e3),
+            format!("{:.2}ms", e.step_allreduce_secs * 1e3),
+            format!("{:.2}ms", e.step_host_secs * 1e3),
+        ]);
+    }
+    println!(
+        "{}",
+        md_table(
+            &["dataset", "steps/epoch", "graphs/step", "device", "allreduce", "host"],
+            &rows
+        )
+    );
+    println!("scaling_sweep OK");
+}

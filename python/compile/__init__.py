@@ -1,0 +1,5 @@
+"""Build-time compile path (L1 kernels + L2 model + AOT lowering).
+
+Never imported at runtime: ``make artifacts`` runs ``compile.aot`` once and
+the Rust binary is self-contained afterwards.
+"""

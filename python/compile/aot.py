@@ -1,0 +1,153 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the published ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out, default ../artifacts):
+  train_step.hlo.txt   fused fwd+bwd+Adam over the packed batch
+  predict.hlo.txt      forward-only energies
+  init_params.bin      flat f32 LE initial parameter vector
+  manifest.json        config + shapes + parameter layout for the Rust side
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .config import DEFAULT, CompileConfig
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _tensor_spec(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": s.dtype.name}
+
+
+def _param_layout(cfg: CompileConfig):
+    layout, off = [], 0
+    for name, shape in model.param_specs(cfg):
+        size = 1
+        for d in shape:
+            size *= d
+        layout.append(
+            {"name": name, "shape": list(shape), "offset": off, "size": size}
+        )
+        off += size
+    return layout, off
+
+
+def build(cfg: CompileConfig, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+
+    # --- train_step -------------------------------------------------------
+    train_args = model.train_step_example_args(cfg)
+    lowered = jax.jit(model.make_train_step(cfg)).lower(*train_args)
+    train_hlo = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, "train_step.hlo.txt"), "w") as f:
+        f.write(train_hlo)
+
+    # --- predict ----------------------------------------------------------
+    pred_args = model.predict_example_args(cfg)
+    lowered = jax.jit(model.make_predict(cfg)).lower(*pred_args)
+    pred_hlo = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, "predict.hlo.txt"), "w") as f:
+        f.write(pred_hlo)
+
+    # --- grad_step (data-parallel path: loss + gradient, no optimizer) ----
+    grad_args = model.grad_step_example_args(cfg)
+    lowered = jax.jit(model.make_grad_step(cfg)).lower(*grad_args)
+    grad_hlo = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, "grad_step.hlo.txt"), "w") as f:
+        f.write(grad_hlo)
+
+    # --- initial parameters -----------------------------------------------
+    flat = model.flatten(cfg, model.init_params(cfg))
+    data = bytes()
+    import numpy as np
+
+    data = np.asarray(flat, dtype="<f4").tobytes()
+    with open(os.path.join(out_dir, "init_params.bin"), "wb") as f:
+        f.write(data)
+
+    # --- manifest -----------------------------------------------------------
+    layout, total = _param_layout(cfg)
+    b = cfg.batch
+    manifest = {
+        "version": 1,
+        "config": cfg.to_dict(),
+        "param_count": total,
+        "param_layout": layout,
+        "batch": {
+            "n_nodes": b.n_nodes,
+            "n_edges": b.n_edges,
+            "n_graphs": b.n_graphs,
+            "packs_per_batch": b.packs_per_batch,
+            "nodes_per_pack": b.nodes_per_pack,
+            "edges_per_pack": b.edges_per_pack,
+            "graphs_per_pack": b.graphs_per_pack,
+        },
+        "artifacts": {
+            "train_step": {
+                "file": "train_step.hlo.txt",
+                "inputs": [_tensor_spec(s) for s in train_args],
+                "input_names": ["params", "adam_m", "adam_v", "step"]
+                + list(model.BATCH_TRAIN_FIELDS),
+                "outputs": ["params", "adam_m", "adam_v", "step", "loss"],
+            },
+            "predict": {
+                "file": "predict.hlo.txt",
+                "inputs": [_tensor_spec(s) for s in pred_args],
+                "input_names": ["params"] + list(model.BATCH_FWD_FIELDS),
+                "outputs": ["energies"],
+            },
+            "grad_step": {
+                "file": "grad_step.hlo.txt",
+                "inputs": [_tensor_spec(s) for s in grad_args],
+                "input_names": ["params"] + list(model.BATCH_TRAIN_FIELDS),
+                "outputs": ["loss", "grad"],
+            },
+        },
+        "init_params": {"file": "init_params.bin", "dtype": "f32-le"},
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    cfg = DEFAULT
+    manifest = build(cfg, args.out)
+    sizes = {
+        k: os.path.getsize(os.path.join(args.out, v["file"]))
+        for k, v in manifest["artifacts"].items()
+    }
+    print(
+        f"AOT done: params={manifest['param_count']} "
+        f"batch(N={manifest['batch']['n_nodes']}, "
+        f"E={manifest['batch']['n_edges']}, "
+        f"G={manifest['batch']['n_graphs']}) "
+        f"hlo bytes={sizes}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Shared model/batch configuration for the L1/L2 compile path.
+
+The same numbers are serialized into ``artifacts/manifest.json`` so that the
+Rust coordinator (L3) assembles batches with exactly the shapes the AOT
+artifacts were compiled for. Fixed shapes are the whole point: like the
+IPU's ahead-of-time Poplar compilation in the paper, the PJRT executable
+is specialized to one (N, E, G) batch geometry, which is what makes batch
+*packing* (vs padding) matter.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """SchNet hyperparameters (paper section 5.1.2 defaults, scaled)."""
+
+    hidden: int = 64          # paper default 100; 64 keeps CPU steps fast
+    n_rbf: int = 25           # paper: uniform grid of 25 Gaussians
+    n_interactions: int = 3   # paper default 4
+    r_cut: float = 6.0        # Angstrom radial cutoff (Eq. 1)
+    z_max: int = 16           # atomic-number vocabulary (H..F + padding 0)
+
+    @property
+    def readout_hidden(self) -> int:
+        return max(self.hidden // 2, 8)
+
+
+@dataclass(frozen=True)
+class BatchConfig:
+    """Fixed-shape packed batch geometry (DESIGN.md section 5).
+
+    A batch is ``packs_per_batch`` packs, each with a node budget of
+    ``nodes_per_pack`` and an edge budget of ``edges_per_pack``. The
+    flattened tensors have N/E/G leading dims below.
+    """
+
+    packs_per_batch: int = 4
+    nodes_per_pack: int = 96
+    edges_per_pack: int = 1152   # k_max(12) * nodes_per_pack
+    graphs_per_pack: int = 12    # >= nodes_per_pack / min_graph_size seen
+
+    @property
+    def n_nodes(self) -> int:
+        return self.packs_per_batch * self.nodes_per_pack
+
+    @property
+    def n_edges(self) -> int:
+        return self.packs_per_batch * self.edges_per_pack
+
+    @property
+    def n_graphs(self) -> int:
+        return self.packs_per_batch * self.graphs_per_pack
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    """Adam, paper section 5.1.2."""
+
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+
+
+@dataclass(frozen=True)
+class CompileConfig:
+    model: ModelConfig = field(default_factory=ModelConfig)
+    batch: BatchConfig = field(default_factory=BatchConfig)
+    opt: OptimizerConfig = field(default_factory=OptimizerConfig)
+    seed: int = 0
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+DEFAULT = CompileConfig()

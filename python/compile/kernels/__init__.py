@@ -1,0 +1,12 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO artifacts).
+
+All kernels run under ``interpret=True`` so the lowered HLO executes on the
+CPU PJRT client the Rust runtime uses. ``ref.py`` is the pure-jnp oracle.
+"""
+
+from . import ref
+from .filter_mlp import filter_messages
+from .rbf import rbf_expand
+from .scatter_add import scatter_add
+
+__all__ = ["ref", "filter_messages", "rbf_expand", "scatter_add"]

@@ -1,0 +1,91 @@
+"""Pallas kernels: Gaussian RBF expansion of edge distances (paper Eq. 2).
+
+TPU adaptation (DESIGN.md section 3): pure VPU elementwise work. The edge
+dimension is tiled into ``block_e`` chunks; each grid step keeps a
+(block_e,) distance slice and the (n_rbf,) center grid resident in VMEM and
+materializes a (block_e, n_rbf) tile. Grid parameters are compile-time
+constants, so there is no parameter traffic at all.
+
+``pallas_call`` has no automatic autodiff, so the backward pass is a
+hand-written Pallas kernel wired up with ``jax.custom_vjp`` -- mirroring
+how the paper's Poplar codelets are scheduled for both directions.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact runs
+under the Rust runtime. On a real TPU the BlockSpecs are the schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _centers(n_rbf: int, r_cut: float, dtype):
+    dmu = r_cut / (n_rbf - 1)
+    gamma = 1.0 / (dmu * dmu)
+    return jnp.arange(n_rbf, dtype=dtype) * dmu, gamma
+
+
+def _fwd_kernel(d_ref, o_ref, *, n_rbf: int, r_cut: float):
+    mu, gamma = _centers(n_rbf, r_cut, o_ref.dtype)
+    diff = d_ref[...][:, None] - mu[None, :]
+    o_ref[...] = jnp.exp(-gamma * diff * diff)
+
+
+def _bwd_kernel(d_ref, g_ref, o_ref, *, n_rbf: int, r_cut: float):
+    # d(exp(-gamma diff^2))/dd = -2 gamma diff exp(-gamma diff^2)
+    mu, gamma = _centers(n_rbf, r_cut, g_ref.dtype)
+    diff = d_ref[...][:, None] - mu[None, :]
+    e = jnp.exp(-gamma * diff * diff)
+    o_ref[...] = jnp.sum(g_ref[...] * (-2.0 * gamma) * diff * e, axis=1)
+
+
+def _call_fwd(d, n_rbf, r_cut, block_e):
+    (e,) = d.shape
+    assert e % block_e == 0, f"edge count {e} not a multiple of {block_e}"
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, n_rbf=n_rbf, r_cut=r_cut),
+        grid=(e // block_e,),
+        in_specs=[pl.BlockSpec((block_e,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_e, n_rbf), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, n_rbf), d.dtype),
+        interpret=True,
+    )(d)
+
+
+def _call_bwd(d, g, n_rbf, r_cut, block_e):
+    (e,) = d.shape
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, n_rbf=n_rbf, r_cut=r_cut),
+        grid=(e // block_e,),
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((block_e, n_rbf), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_e,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((e,), d.dtype),
+        interpret=True,
+    )(d, g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _rbf(d, n_rbf, r_cut, block_e):
+    return _call_fwd(d, n_rbf, r_cut, block_e)
+
+
+def _rbf_fwd(d, n_rbf, r_cut, block_e):
+    return _call_fwd(d, n_rbf, r_cut, block_e), d
+
+
+def _rbf_bwd(n_rbf, r_cut, block_e, d, g):
+    return (_call_bwd(d, g, n_rbf, r_cut, block_e),)
+
+
+_rbf.defvjp(_rbf_fwd, _rbf_bwd)
+
+
+def rbf_expand(d, *, n_rbf: int, r_cut: float, block_e: int = 128):
+    """Expand distances d: [E] -> [E, n_rbf]. E must divide by block_e."""
+    return _rbf(d, n_rbf, r_cut, block_e)

@@ -1,0 +1,109 @@
+"""Pallas kernels: scatter-add aggregation as one-hot matmul (fwd + bwd).
+
+The paper (sections 4.2.1-4.2.2) vectorizes scatter on IPU tiles and plans
+its partitioning. A mechanical port would serialize read-modify-write per
+edge; the TPU rethink (DESIGN.md section 3) converts the scatter into a
+*dense MXU matmul* per edge block:
+
+    out += onehot(dst_block)^T @ msg_block      # (N, block_e) @ (block_e, F)
+
+The output BlockSpec maps every grid step to the same (N, F) block, so the
+accumulator stays in VMEM for the whole sweep over edge blocks (zeroed at
+step 0 with pl.when). Padding edges point at a dump node with zeroed
+messages, exactly like the paper's pack padding.
+
+This mirrors the planner's I-partitioning: each grid step is one
+I-partition of the scatter; the cross-step reduction is the
+'scatter reduce' term of paper Eq. 9 -- free here because the accumulator
+never leaves VMEM.
+
+Backward of scatter-add is a *gather* (paper Eq. 5): g_msg[e] = g[dst[e]],
+implemented as its own Pallas kernel with the cotangent table resident in
+VMEM, and wired up with jax.custom_vjp (dst is an integer input, so its
+cotangent is float0).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _scatter_kernel(msg_ref, dst_ref, o_ref, *, n_nodes: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    msg = msg_ref[...]                       # (block_e, F)
+    dst = dst_ref[...]                       # (block_e,) int32
+    node_ids = jax.lax.broadcasted_iota(jnp.int32, (n_nodes, dst.shape[0]), 0)
+    onehot_t = (node_ids == dst[None, :]).astype(msg.dtype)  # (N, block_e)
+    o_ref[...] += onehot_t @ msg
+
+
+def _gather_kernel(table_ref, idx_ref, o_ref):
+    # Row gather with the full table resident (constant index map).
+    o_ref[...] = table_ref[...][idx_ref[...]]
+
+
+def _call_scatter(messages, dst, n_nodes, block_e):
+    e, f_dim = messages.shape
+    assert e % block_e == 0, f"edge count {e} not a multiple of {block_e}"
+    assert dst.shape == (e,)
+    return pl.pallas_call(
+        functools.partial(_scatter_kernel, n_nodes=n_nodes),
+        grid=(e // block_e,),
+        in_specs=[
+            pl.BlockSpec((block_e, f_dim), lambda i: (i, 0)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((n_nodes, f_dim), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_nodes, f_dim), messages.dtype),
+        interpret=True,
+    )(messages, dst.astype(jnp.int32))
+
+
+def gather_rows(table, idx, *, block_e: int = 128):
+    """Row gather out[e] = table[idx[e]] -- the scatter-add backward."""
+    n, f_dim = table.shape
+    (e,) = idx.shape
+    assert e % block_e == 0, f"edge count {e} not a multiple of {block_e}"
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(e // block_e,),
+        in_specs=[
+            pl.BlockSpec((n, f_dim), lambda i: (0, 0)),   # table resident
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_e, f_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, f_dim), table.dtype),
+        interpret=True,
+    )(table, idx.astype(jnp.int32))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _scatter(messages, dst, n_nodes, block_e):
+    return _call_scatter(messages, dst, n_nodes, block_e)
+
+
+def _scatter_fwd(messages, dst, n_nodes, block_e):
+    return _call_scatter(messages, dst, n_nodes, block_e), dst
+
+
+def _scatter_bwd(n_nodes, block_e, dst, g):
+    g_msg = gather_rows(g, dst, block_e=block_e)
+    return g_msg, np.zeros(dst.shape, jax.dtypes.float0)
+
+
+_scatter.defvjp(_scatter_fwd, _scatter_bwd)
+
+
+def scatter_add(messages, dst, *, n_nodes: int, block_e: int = 128):
+    """out[n] = sum_{e : dst[e]==n} messages[e].
+
+    messages: [E, F], dst: [E] int32 in [0, n_nodes). Returns [n_nodes, F].
+    E must divide by block_e. Differentiable in ``messages``.
+    """
+    return _scatter(messages, dst, n_nodes, block_e)

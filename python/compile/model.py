@@ -1,0 +1,260 @@
+"""L2: SchNet forward/backward in JAX, calling the L1 Pallas kernels.
+
+The model operates on the fixed-shape packed batch format of DESIGN.md
+section 5 and exposes two entry points that ``aot.py`` lowers to HLO text:
+
+* ``train_step(params, m, v, step, *batch) -> (params', m', v', loss)`` --
+  one fused forward + backward + Adam update over a *flat f32 parameter
+  vector* (single tensor), so the Rust side marshals exactly four state
+  tensors plus the batch.
+* ``predict(params, *batch_fwd) -> energies`` -- inference for the serving
+  example.
+
+Parameter layout is defined by ``param_specs`` and serialized into the
+manifest so Rust can inspect/checkpoint parameters by name.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import CompileConfig
+from .kernels import filter_messages, rbf_expand, scatter_add
+from .kernels.ref import cosine_cutoff, ssp
+
+# ---------------------------------------------------------------------------
+# Parameter layout (flat vector <-> named tensors)
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: CompileConfig):
+    """Ordered (name, shape) list defining the flat parameter layout."""
+    m = cfg.model
+    f, k, rh = m.hidden, m.n_rbf, m.readout_hidden
+    specs = [("embedding", (m.z_max, f)), ("atomref", (m.z_max,))]
+    for t in range(m.n_interactions):
+        specs += [
+            (f"int{t}.w_in", (f, f)),
+            (f"int{t}.filter.w1", (k, f)),
+            (f"int{t}.filter.b1", (f,)),
+            (f"int{t}.filter.w2", (f, f)),
+            (f"int{t}.filter.b2", (f,)),
+            (f"int{t}.out.w1", (f, f)),
+            (f"int{t}.out.b1", (f,)),
+            (f"int{t}.out.w2", (f, f)),
+            (f"int{t}.out.b2", (f,)),
+        ]
+    specs += [
+        ("readout.w1", (f, rh)),
+        ("readout.b1", (rh,)),
+        ("readout.w2", (rh, 1)),
+        ("readout.b2", (1,)),
+    ]
+    return specs
+
+
+def param_count(cfg: CompileConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_specs(cfg))
+
+
+def unflatten(cfg: CompileConfig, flat):
+    """Flat f32 vector -> dict of named tensors (pure slicing, fuses away)."""
+    out, off = {}, 0
+    for name, shape in param_specs(cfg):
+        size = 1
+        for d in shape:
+            size *= d
+        out[name] = jax.lax.dynamic_slice(flat, (off,), (size,)).reshape(shape)
+        off += size
+    return out
+
+
+def flatten(cfg: CompileConfig, params) -> jnp.ndarray:
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in param_specs(cfg)]
+    )
+
+
+def init_params(cfg: CompileConfig, key=None):
+    """Xavier-uniform weights, zero biases, zero atomref."""
+    if key is None:
+        key = jax.random.PRNGKey(cfg.seed)
+    params = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".b1", ".b2")) or name == "atomref":
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name == "embedding":
+            params[name] = 0.1 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            fan_in, fan_out = shape[0], shape[-1]
+            lim = (6.0 / (fan_in + fan_out)) ** 0.5
+            params[name] = jax.random.uniform(
+                sub, shape, jnp.float32, -lim, lim
+            )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+BATCH_FWD_FIELDS = (
+    "z",          # [N] i32
+    "pos",        # [N,3] f32
+    "src",        # [E] i32
+    "dst",        # [E] i32
+    "edge_mask",  # [E] f32
+    "graph_id",   # [N] i32
+    "node_mask",  # [N] f32
+)
+BATCH_TRAIN_FIELDS = BATCH_FWD_FIELDS + (
+    "target",      # [G] f32
+    "graph_mask",  # [G] f32
+)
+
+
+def forward(cfg: CompileConfig, p, z, pos, src, dst, edge_mask, graph_id, node_mask):
+    """Packed-batch SchNet forward -> per-graph energies [G]."""
+    m = cfg.model
+    n_graphs = cfg.batch.n_graphs
+
+    # Atom embeddings (gather, paper Eq. 5).
+    h = p["embedding"][z]                                       # [N, F]
+
+    # Edge geometry. Padding edges are (dump, dump) self-loops; masked.
+    rvec = pos[src] - pos[dst]                                  # [E, 3]
+    d2 = jnp.sum(rvec * rvec, axis=-1)
+    # Guard sqrt(0) for padding self-loops (grad of sqrt at 0 is inf).
+    d = jnp.sqrt(jnp.maximum(d2, 1e-12))                        # [E]
+    # Edge-block size: 128 lanes when the edge budget allows, else the
+    # largest power-of-two divisor (small test configs).
+    block_e = math.gcd(128, d.shape[0])
+    rbf = rbf_expand(d, n_rbf=m.n_rbf, r_cut=m.r_cut, block_e=block_e)  # L1
+    cut = cosine_cutoff(d, m.r_cut) * edge_mask                 # [E]
+
+    # Interaction blocks (paper Eq. 3).
+    for t in range(m.n_interactions):
+        x = h @ p[f"int{t}.w_in"]                               # [N, F]
+        msg = filter_messages(                                  # L1 kernel
+            rbf, x[src], cut,
+            p[f"int{t}.filter.w1"], p[f"int{t}.filter.b1"],
+            p[f"int{t}.filter.w2"], p[f"int{t}.filter.b2"],
+            block_e=block_e,
+        )
+        agg = scatter_add(msg, dst, n_nodes=h.shape[0], block_e=block_e)  # L1
+        v = ssp(agg @ p[f"int{t}.out.w1"] + p[f"int{t}.out.b1"])
+        h = h + (v @ p[f"int{t}.out.w2"] + p[f"int{t}.out.b2"])
+
+    # Atom-wise readout to scalar contributions.
+    a = ssp(h @ p["readout.w1"] + p["readout.b1"])
+    e_atom = (a @ p["readout.w2"] + p["readout.b2"])[:, 0]      # [N]
+    e_atom = (e_atom + p["atomref"][z]) * node_mask
+
+    # Pool per molecule: segment-sum over graph ids (pad nodes masked).
+    energies = jnp.zeros((n_graphs,), e_atom.dtype).at[graph_id].add(e_atom)
+    return energies
+
+
+def loss_fn(cfg: CompileConfig, flat, batch):
+    p = unflatten(cfg, flat)
+    pred = forward(cfg, p, *[batch[f] for f in BATCH_FWD_FIELDS])
+    err = (pred - batch["target"]) * batch["graph_mask"]
+    denom = jnp.maximum(jnp.sum(batch["graph_mask"]), 1.0)
+    return jnp.sum(err * err) / denom
+
+
+# ---------------------------------------------------------------------------
+# Training step (Adam in-graph)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: CompileConfig):
+    o = cfg.opt
+
+    def train_step(flat, m_state, v_state, step, *batch_tensors):
+        batch = dict(zip(BATCH_TRAIN_FIELDS, batch_tensors))
+        loss, grad = jax.value_and_grad(lambda w: loss_fn(cfg, w, batch))(flat)
+        step = step + 1.0
+        m_new = o.beta1 * m_state + (1.0 - o.beta1) * grad
+        v_new = o.beta2 * v_state + (1.0 - o.beta2) * grad * grad
+        m_hat = m_new / (1.0 - o.beta1**step)
+        v_hat = v_new / (1.0 - o.beta2**step)
+        flat_new = flat - o.lr * m_hat / (jnp.sqrt(v_hat) + o.eps)
+        return flat_new, m_new, v_new, step, loss
+
+    return train_step
+
+
+def make_grad_step(cfg: CompileConfig):
+    """Loss + flat gradient only (no optimizer): the artifact behind the
+    Rust-side data-parallel path, where the coordinator all-reduces
+    gradients across replicas (merged, like paper section 4.3) and applies
+    Adam natively."""
+
+    def grad_step(flat, *batch_tensors):
+        batch = dict(zip(BATCH_TRAIN_FIELDS, batch_tensors))
+        loss, grad = jax.value_and_grad(lambda w: loss_fn(cfg, w, batch))(flat)
+        return loss, grad
+
+    return grad_step
+
+
+def make_predict(cfg: CompileConfig):
+    def predict(flat, *batch_tensors):
+        p = unflatten(cfg, flat)
+        return forward(cfg, p, *batch_tensors)
+
+    return predict
+
+
+# ---------------------------------------------------------------------------
+# Example-arg builders for AOT lowering
+# ---------------------------------------------------------------------------
+
+
+def batch_shape_structs(cfg: CompileConfig, train: bool = True):
+    b = cfg.batch
+    n, e, g = b.n_nodes, b.n_edges, b.n_graphs
+    sds = jax.ShapeDtypeStruct
+    shapes = {
+        "z": sds((n,), jnp.int32),
+        "pos": sds((n, 3), jnp.float32),
+        "src": sds((e,), jnp.int32),
+        "dst": sds((e,), jnp.int32),
+        "edge_mask": sds((e,), jnp.float32),
+        "graph_id": sds((n,), jnp.int32),
+        "node_mask": sds((n,), jnp.float32),
+        "target": sds((g,), jnp.float32),
+        "graph_mask": sds((g,), jnp.float32),
+    }
+    fields = BATCH_TRAIN_FIELDS if train else BATCH_FWD_FIELDS
+    return [shapes[f] for f in fields]
+
+
+def train_step_example_args(cfg: CompileConfig):
+    p = param_count(cfg)
+    sds = jax.ShapeDtypeStruct
+    state = [
+        sds((p,), jnp.float32),  # params
+        sds((p,), jnp.float32),  # adam m
+        sds((p,), jnp.float32),  # adam v
+        sds((), jnp.float32),    # step counter
+    ]
+    return state + batch_shape_structs(cfg, train=True)
+
+
+def predict_example_args(cfg: CompileConfig):
+    p = param_count(cfg)
+    return [jax.ShapeDtypeStruct((p,), jnp.float32)] + batch_shape_structs(
+        cfg, train=False
+    )
+
+
+def grad_step_example_args(cfg: CompileConfig):
+    p = param_count(cfg)
+    return [jax.ShapeDtypeStruct((p,), jnp.float32)] + batch_shape_structs(
+        cfg, train=True
+    )

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Allow `pytest tests/` from python/ and `pytest python/tests/` from repo root.
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_PY = os.path.dirname(_HERE)
+if _PY not in sys.path:
+    sys.path.insert(0, _PY)

@@ -1,0 +1,231 @@
+"""L1 correctness: every Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps the shape space (edge counts, block sizes, feature and
+basis dims) and asserts allclose for both the forward values and the
+hand-written backward kernels (via jax.grad of a scalarized output).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import filter_messages, rbf_expand, scatter_add, ref
+from compile.kernels.scatter_add import gather_rows
+
+SETTINGS = dict(deadline=None, max_examples=15)
+
+
+def rand(key, *shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# softplus / ssp (paper Eqs. 10-11)
+# ---------------------------------------------------------------------------
+
+
+@given(st.floats(-100.0, 100.0))
+@settings(**SETTINGS)
+def test_softplus_opt_matches_naive(x):
+    a = float(ref.softplus_naive(jnp.float32(x)))
+    b = float(ref.softplus_opt(jnp.float32(x)))
+    assert abs(a - b) < 1e-5
+
+
+def test_softplus_opt_extremes_stable():
+    for x in [-1e4, -50.0, 0.0, 50.0, 1e4]:
+        v = float(ref.softplus_opt(jnp.float32(x)))
+        assert np.isfinite(v)
+        assert v >= 0.0
+    # saturates to identity for large x
+    assert abs(float(ref.softplus_opt(jnp.float32(100.0))) - 100.0) < 1e-5
+
+
+def test_ssp_zero_is_zero():
+    # shifted softplus is 0 at 0: softplus(0) = log 2
+    assert abs(float(ref.ssp(jnp.float32(0.0)))) < 1e-7
+
+
+# ---------------------------------------------------------------------------
+# RBF expansion (paper Eq. 2)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    blocks=st.integers(1, 6),
+    block_e=st.sampled_from([8, 16, 32]),
+    n_rbf=st.integers(2, 32),
+    r_cut=st.floats(2.0, 10.0),
+    seed=st.integers(0, 2**31),
+)
+@settings(**SETTINGS)
+def test_rbf_matches_ref(blocks, block_e, n_rbf, r_cut, seed):
+    e = blocks * block_e
+    d = rand(seed, e, lo=0.0, hi=r_cut + 1.0)
+    out = rbf_expand(d, n_rbf=n_rbf, r_cut=r_cut, block_e=block_e)
+    want = ref.rbf_expand(d, n_rbf, r_cut)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-6)
+
+
+@given(
+    block_e=st.sampled_from([8, 32]),
+    n_rbf=st.integers(3, 25),
+    seed=st.integers(0, 2**31),
+)
+@settings(**SETTINGS)
+def test_rbf_grad_matches_ref(block_e, n_rbf, seed):
+    e = 2 * block_e
+    d = rand(seed, e, lo=0.1, hi=6.0)
+
+    def f_kernel(d):
+        return jnp.sum(jnp.sin(rbf_expand(d, n_rbf=n_rbf, r_cut=6.0, block_e=block_e)))
+
+    def f_ref(d):
+        return jnp.sum(jnp.sin(ref.rbf_expand(d, n_rbf, 6.0)))
+
+    g1 = jax.grad(f_kernel)(d)
+    g2 = jax.grad(f_ref)(d)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4, rtol=1e-4)
+
+
+def test_rbf_peak_at_center():
+    # d exactly on a Gaussian center gives 1.0 in that column.
+    n_rbf, r_cut = 25, 6.0
+    dmu = r_cut / (n_rbf - 1)
+    d = jnp.full((8,), 3 * dmu, jnp.float32)
+    out = np.asarray(rbf_expand(d, n_rbf=n_rbf, r_cut=r_cut, block_e=8))
+    np.testing.assert_allclose(out[:, 3], 1.0, atol=1e-6)
+    # far-off Gaussians may underflow to exactly 0 in f32
+    assert (out <= 1.0 + 1e-6).all() and (out >= 0.0).all()
+
+
+def test_rbf_rejects_indivisible_edges():
+    with pytest.raises(AssertionError):
+        rbf_expand(jnp.ones((100,)), n_rbf=8, r_cut=6.0, block_e=64)
+
+
+# ---------------------------------------------------------------------------
+# Fused filter MLP
+# ---------------------------------------------------------------------------
+
+
+@given(
+    blocks=st.integers(1, 4),
+    block_e=st.sampled_from([8, 16]),
+    k=st.integers(2, 25),
+    f_dim=st.sampled_from([4, 8, 32]),
+    seed=st.integers(0, 2**31),
+)
+@settings(**SETTINGS)
+def test_filter_matches_ref(blocks, block_e, k, f_dim, seed):
+    e = blocks * block_e
+    rbf = rand(seed, e, k, lo=0.0, hi=1.0)
+    hsrc = rand(seed + 1, e, f_dim)
+    cut = rand(seed + 2, e, lo=0.0, hi=1.0)
+    w1 = rand(seed + 3, k, f_dim)
+    b1 = rand(seed + 4, f_dim)
+    w2 = rand(seed + 5, f_dim, f_dim)
+    b2 = rand(seed + 6, f_dim)
+    out = filter_messages(rbf, hsrc, cut, w1, b1, w2, b2, block_e=block_e)
+    want = ref.filter_messages(rbf, hsrc, cut, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5, rtol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31))
+@settings(deadline=None, max_examples=8)
+def test_filter_grads_match_ref(seed):
+    e, k, f_dim, block_e = 32, 7, 8, 16
+    args = (
+        rand(seed, e, k, lo=0.0, hi=1.0),
+        rand(seed + 1, e, f_dim),
+        rand(seed + 2, e, lo=0.0, hi=1.0),
+        rand(seed + 3, k, f_dim),
+        rand(seed + 4, f_dim),
+        rand(seed + 5, f_dim, f_dim),
+        rand(seed + 6, f_dim),
+    )
+
+    def f_kernel(*a):
+        return jnp.sum(jnp.tanh(filter_messages(*a, block_e=block_e)))
+
+    def f_ref(*a):
+        return jnp.sum(jnp.tanh(ref.filter_messages(*a)))
+
+    g1 = jax.grad(f_kernel, argnums=tuple(range(7)))(*args)
+    g2 = jax.grad(f_ref, argnums=tuple(range(7)))(*args)
+    for i, (a, b) in enumerate(zip(g1, g2)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=2e-4, rtol=2e-4,
+            err_msg=f"grad argnum {i}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Scatter-add (one-hot matmul) + gather backward
+# ---------------------------------------------------------------------------
+
+
+@given(
+    blocks=st.integers(1, 4),
+    block_e=st.sampled_from([8, 16, 32]),
+    n_nodes=st.integers(1, 64),
+    f_dim=st.sampled_from([4, 8, 32]),
+    seed=st.integers(0, 2**31),
+)
+@settings(**SETTINGS)
+def test_scatter_matches_ref(blocks, block_e, n_nodes, f_dim, seed):
+    e = blocks * block_e
+    msg = rand(seed, e, f_dim)
+    dst = jax.random.randint(jax.random.PRNGKey(seed + 1), (e,), 0, n_nodes)
+    out = scatter_add(msg, dst, n_nodes=n_nodes, block_e=block_e)
+    want = ref.scatter_add(msg, dst, n_nodes)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+def test_scatter_all_to_one_node():
+    e, f_dim, n = 64, 8, 10
+    msg = jnp.ones((e, f_dim))
+    dst = jnp.full((e,), 3, jnp.int32)
+    out = np.asarray(scatter_add(msg, dst, n_nodes=n, block_e=16))
+    np.testing.assert_allclose(out[3], e * np.ones(f_dim), atol=1e-4)
+    assert np.abs(np.delete(out, 3, axis=0)).max() == 0.0
+
+
+@given(seed=st.integers(0, 2**31))
+@settings(deadline=None, max_examples=10)
+def test_scatter_grad_is_gather(seed):
+    e, f_dim, n, block_e = 32, 8, 12, 16
+    msg = rand(seed, e, f_dim)
+    dst = jax.random.randint(jax.random.PRNGKey(seed + 1), (e,), 0, n)
+    w = rand(seed + 2, n, f_dim)
+
+    def f_kernel(m):
+        return jnp.sum(w * scatter_add(m, dst, n_nodes=n, block_e=block_e))
+
+    g = jax.grad(f_kernel)(msg)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(w)[np.asarray(dst)], atol=1e-5)
+
+
+@given(
+    n=st.integers(1, 40),
+    f_dim=st.sampled_from([4, 16]),
+    seed=st.integers(0, 2**31),
+)
+@settings(**SETTINGS)
+def test_gather_rows_matches_ref(n, f_dim, seed):
+    e, block_e = 32, 16
+    table = rand(seed, n, f_dim)
+    idx = jax.random.randint(jax.random.PRNGKey(seed + 1), (e,), 0, n)
+    out = gather_rows(table, idx, block_e=block_e)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(table)[np.asarray(idx)])
+
+
+def test_scatter_gather_roundtrip_identity():
+    # scatter with a permutation then gather back is the identity.
+    n = f_dim = 16
+    perm = np.random.default_rng(0).permutation(n)
+    msg = np.asarray(rand(0, n, f_dim))
+    out = np.asarray(scatter_add(jnp.asarray(msg), jnp.asarray(perm), n_nodes=n, block_e=16))
+    np.testing.assert_allclose(out[perm], msg, atol=1e-6)

@@ -1,0 +1,257 @@
+"""L2 correctness: SchNet model invariants on the packed batch format."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.config import BatchConfig, CompileConfig, ModelConfig
+
+# Small config so each jit is fast on CPU.
+CFG = CompileConfig(
+    model=ModelConfig(hidden=16, n_rbf=8, n_interactions=2, r_cut=6.0, z_max=16),
+    batch=BatchConfig(
+        packs_per_batch=2, nodes_per_pack=32, edges_per_pack=128, graphs_per_pack=4
+    ),
+)
+
+
+def make_batch(cfg=CFG, seed=0, atoms_per_pack=(12, 20)):
+    """Synthetic packed batch: one molecule per pack, radius-graph edges."""
+    rng = np.random.default_rng(seed)
+    b = cfg.batch
+    N, E, G = b.n_nodes, b.n_edges, b.n_graphs
+    z = np.zeros(N, np.int32)
+    pos = np.zeros((N, 3), np.float32)
+    gid = np.full(N, G - 1, np.int32)  # dump slot for padding
+    nmask = np.zeros(N, np.float32)
+    src = np.zeros(E, np.int32)
+    dst = np.zeros(E, np.int32)
+    emask = np.zeros(E, np.float32)
+    tgt = np.zeros(G, np.float32)
+    gmask = np.zeros(G, np.float32)
+    for p in range(b.packs_per_batch):
+        na = atoms_per_pack[p % len(atoms_per_pack)]
+        n0, e0 = p * b.nodes_per_pack, p * b.edges_per_pack
+        z[n0 : n0 + na] = rng.integers(1, 9, na)
+        pos[n0 : n0 + na] = rng.uniform(0, 5.0, (na, 3)).astype(np.float32)
+        gid[n0 : n0 + na] = p * b.graphs_per_pack
+        nmask[n0 : n0 + na] = 1
+        k = 0
+        for i in range(na):
+            for j in range(na):
+                dij = np.linalg.norm(pos[n0 + i] - pos[n0 + j])
+                if i != j and dij < cfg.model.r_cut and k < b.edges_per_pack:
+                    src[e0 + k], dst[e0 + k], emask[e0 + k] = n0 + i, n0 + j, 1
+                    k += 1
+        # padding edges: dump self-loops within the pack
+        src[e0 + k : e0 + b.edges_per_pack] = n0 + na
+        dst[e0 + k : e0 + b.edges_per_pack] = n0 + na
+        tgt[p * b.graphs_per_pack] = 0.1 * z[n0 : n0 + na].sum()
+        gmask[p * b.graphs_per_pack] = 1
+    names = model.BATCH_TRAIN_FIELDS
+    arrs = (z, pos, src, dst, emask, gid, nmask, tgt, gmask)
+    return dict(zip(names, [jnp.asarray(a) for a in arrs]))
+
+
+def fwd_energies(cfg, flat, batch):
+    p = model.unflatten(cfg, flat)
+    return model.forward(cfg, p, *[batch[f] for f in model.BATCH_FWD_FIELDS])
+
+
+# ---------------------------------------------------------------------------
+# Parameter plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_flatten_unflatten_roundtrip():
+    params = model.init_params(CFG)
+    flat = model.flatten(CFG, params)
+    assert flat.shape == (model.param_count(CFG),)
+    back = model.unflatten(CFG, flat)
+    for name, _ in model.param_specs(CFG):
+        np.testing.assert_array_equal(np.asarray(params[name]), np.asarray(back[name]))
+
+
+def test_param_count_matches_specs():
+    total = sum(int(np.prod(s)) for _, s in model.param_specs(CFG))
+    assert model.param_count(CFG) == total
+
+
+def test_init_deterministic_in_seed():
+    a = model.flatten(CFG, model.init_params(CFG))
+    b = model.flatten(CFG, model.init_params(CFG))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = model.flatten(
+        CFG, model.init_params(dataclasses.replace(CFG, seed=CFG.seed + 1))
+    )
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+# ---------------------------------------------------------------------------
+# Forward invariants
+# ---------------------------------------------------------------------------
+
+
+def test_forward_shapes_and_finite():
+    batch = make_batch()
+    flat = model.flatten(CFG, model.init_params(CFG))
+    e = fwd_energies(CFG, flat, batch)
+    assert e.shape == (CFG.batch.n_graphs,)
+    assert np.isfinite(np.asarray(e)).all()
+
+
+def test_padding_nodes_do_not_leak():
+    """Garbage in the padded region must not change real-graph energies."""
+    batch = make_batch()
+    flat = model.flatten(CFG, model.init_params(CFG))
+    e1 = np.asarray(fwd_energies(CFG, flat, batch))
+
+    poisoned = dict(batch)
+    pos = np.asarray(batch["pos"]).copy()
+    nmask = np.asarray(batch["node_mask"])
+    pos[nmask == 0] = 777.0  # far away so no spurious edges anyway
+    z = np.asarray(batch["z"]).copy()
+    z[nmask == 0] = 9
+    poisoned["pos"] = jnp.asarray(pos)
+    poisoned["z"] = jnp.asarray(z)
+    e2 = np.asarray(fwd_energies(CFG, flat, poisoned))
+
+    real = np.asarray(batch["graph_mask"]) == 1
+    np.testing.assert_allclose(e1[real], e2[real], atol=1e-5)
+
+
+def test_pack_independence():
+    """Graphs packed together must not interact (no cross-contamination).
+
+    Energy of pack-0's molecule is identical whether pack 1 holds a
+    molecule or is empty -- the packing analogue of the paper's claim that
+    packs are disconnected components.
+    """
+    flat = model.flatten(CFG, model.init_params(CFG))
+    full = make_batch(atoms_per_pack=(12, 20))
+    solo = make_batch(atoms_per_pack=(12, 0))
+    e_full = np.asarray(fwd_energies(CFG, flat, full))
+    e_solo = np.asarray(fwd_energies(CFG, flat, solo))
+    np.testing.assert_allclose(e_full[0], e_solo[0], atol=1e-5)
+
+
+def test_atom_permutation_invariance():
+    """Relabeling atoms within a molecule leaves its energy unchanged."""
+    batch = make_batch(atoms_per_pack=(12, 20))
+    flat = model.flatten(CFG, model.init_params(CFG))
+    e1 = np.asarray(fwd_energies(CFG, flat, batch))
+
+    rng = np.random.default_rng(3)
+    na = 12
+    perm = rng.permutation(na)  # permute atoms of pack 0's molecule
+    inv = np.argsort(perm)
+    z = np.asarray(batch["z"]).copy()
+    pos = np.asarray(batch["pos"]).copy()
+    z[:na] = z[:na][perm]
+    pos[:na] = pos[:na][perm]
+    src = np.asarray(batch["src"]).copy()
+    dst = np.asarray(batch["dst"]).copy()
+    sel = (src < na) & (np.asarray(batch["edge_mask"]) == 1)
+    src[sel] = inv[src[sel]]
+    dst[sel] = inv[dst[sel]]
+    b2 = dict(batch)
+    b2.update(
+        z=jnp.asarray(z), pos=jnp.asarray(pos), src=jnp.asarray(src), dst=jnp.asarray(dst)
+    )
+    e2 = np.asarray(fwd_energies(CFG, flat, b2))
+    np.testing.assert_allclose(e1[0], e2[0], atol=1e-4)
+
+
+def test_translation_invariance():
+    """Energies depend on distances only: rigid translation changes nothing."""
+    batch = make_batch()
+    flat = model.flatten(CFG, model.init_params(CFG))
+    e1 = np.asarray(fwd_energies(CFG, flat, batch))
+    b2 = dict(batch)
+    b2["pos"] = batch["pos"] + jnp.asarray([10.0, -5.0, 3.0])
+    e2 = np.asarray(fwd_energies(CFG, flat, b2))
+    np.testing.assert_allclose(e1, e2, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+
+def test_train_step_reduces_loss():
+    batch = make_batch()
+    flat = model.flatten(CFG, model.init_params(CFG))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    step = jnp.float32(0)
+    ts = jax.jit(model.make_train_step(CFG))
+    args = [batch[f] for f in model.BATCH_TRAIN_FIELDS]
+    losses = []
+    for _ in range(15):
+        flat, m, v, step, loss = ts(flat, m, v, step, *args)
+        losses.append(float(loss))
+    assert losses[-1] < 0.5 * losses[0], losses
+    assert float(step) == 15.0
+
+
+def test_train_step_grad_only_touches_params():
+    """Pad-masked batches give finite loss/grads (no NaN from d=0 edges)."""
+    batch = make_batch(atoms_per_pack=(0, 0))  # fully padded batch
+    flat = model.flatten(CFG, model.init_params(CFG))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    ts = jax.jit(model.make_train_step(CFG))
+    args = [batch[f] for f in model.BATCH_TRAIN_FIELDS]
+    flat2, m2, v2, step2, loss = ts(flat, m, v, jnp.float32(0), *args)
+    assert np.isfinite(float(loss))
+    assert np.isfinite(np.asarray(flat2)).all()
+
+
+def test_grad_step_matches_autodiff_of_loss():
+    """The data-parallel artifact's gradient is exactly grad(loss)."""
+    batch = make_batch()
+    flat = model.flatten(CFG, model.init_params(CFG))
+    args = [batch[f] for f in model.BATCH_TRAIN_FIELDS]
+    loss, grad = jax.jit(model.make_grad_step(CFG))(flat, *args)
+    want_loss = model.loss_fn(CFG, flat, batch)
+    want_grad = jax.grad(lambda w: model.loss_fn(CFG, w, batch))(flat)
+    assert abs(float(loss) - float(want_loss)) < 1e-4 * max(1.0, abs(float(want_loss)))
+    np.testing.assert_allclose(
+        np.asarray(grad), np.asarray(want_grad), atol=1e-5, rtol=1e-4
+    )
+
+
+def test_grad_step_plus_manual_adam_tracks_train_step():
+    """One fused train_step == one grad_step + a hand-rolled Adam update
+    (the contract the Rust optim::Adam relies on)."""
+    batch = make_batch()
+    o = CFG.opt
+    flat = model.flatten(CFG, model.init_params(CFG))
+    args = [batch[f] for f in model.BATCH_TRAIN_FIELDS]
+
+    new_flat, *_ = jax.jit(model.make_train_step(CFG))(
+        flat, jnp.zeros_like(flat), jnp.zeros_like(flat), jnp.float32(0), *args
+    )
+
+    _, grad = jax.jit(model.make_grad_step(CFG))(flat, *args)
+    m = (1.0 - o.beta1) * grad
+    v = (1.0 - o.beta2) * grad * grad
+    m_hat = m / (1.0 - o.beta1)
+    v_hat = v / (1.0 - o.beta2)
+    manual = flat - o.lr * m_hat / (jnp.sqrt(v_hat) + o.eps)
+    np.testing.assert_allclose(np.asarray(new_flat), np.asarray(manual), atol=1e-6)
+
+
+def test_loss_fn_matches_mse_definition():
+    batch = make_batch()
+    flat = model.flatten(CFG, model.init_params(CFG))
+    pred = np.asarray(fwd_energies(CFG, flat, batch))
+    gm = np.asarray(batch["graph_mask"])
+    tgt = np.asarray(batch["target"])
+    want = float((((pred - tgt) * gm) ** 2).sum() / gm.sum())
+    got = float(model.loss_fn(CFG, flat, batch))
+    assert abs(got - want) < 1e-4 * max(1.0, abs(want))

@@ -1,0 +1,94 @@
+//! Host-I/O pipeline bench (paper section 4.2.3 / Fig. 7b): batch
+//! preparation throughput for the sync baseline vs multi-worker async
+//! loading, the effect of prefetch depth, and the two-level cache hit
+//! behavior over the disk store. `cargo bench --bench bench_loader`.
+
+use std::sync::Arc;
+
+use molpack::coordinator::{stream_epoch, Batcher, PipelineConfig};
+use molpack::datasets::{write_store, CachedSource, HydroNet, MoleculeSource, Store};
+use molpack::runtime::BatchGeometry;
+
+fn geometry() -> BatchGeometry {
+    BatchGeometry {
+        n_nodes: 384,
+        n_edges: 4608,
+        n_graphs: 48,
+        packs_per_batch: 4,
+        nodes_per_pack: 96,
+        edges_per_pack: 1152,
+        graphs_per_pack: 12,
+    }
+}
+
+fn bench_pipeline<S: MoleculeSource + 'static>(src: Arc<S>, workers: usize, depth: usize) -> (f64, usize) {
+    let batcher = Batcher::new(geometry(), 6.0);
+    let cfg = PipelineConfig { workers, prefetch_depth: depth, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let stream = stream_epoch(src, batcher, &cfg, 0);
+    let mut graphs = 0;
+    for b in stream.batches.iter() {
+        graphs += b.unwrap().real_graphs();
+    }
+    (t0.elapsed().as_secs_f64(), graphs)
+}
+
+fn main() {
+    let n = 3000;
+    println!("loader benchmark — {n} water clusters per epoch\n");
+
+    // (a) sync vs async workers (generator-backed source)
+    println!("{:>8} {:>7} | {:>9} {:>11}", "workers", "depth", "secs", "graphs/s");
+    for workers in [1usize, 2, 4, 8] {
+        let src = Arc::new(HydroNet::new(n, 1));
+        let (secs, graphs) = bench_pipeline(src, workers, 4);
+        println!(
+            "{:>8} {:>7} | {:>9.2} {:>11.0}",
+            workers,
+            4,
+            secs,
+            graphs as f64 / secs
+        );
+    }
+
+    // (b) prefetch depth sweep
+    for depth in [1usize, 2, 4, 8] {
+        let src = Arc::new(HydroNet::new(n, 1));
+        let (secs, graphs) = bench_pipeline(src, 4, depth);
+        println!(
+            "{:>8} {:>7} | {:>9.2} {:>11.0}",
+            4,
+            depth,
+            secs,
+            graphs as f64 / secs
+        );
+    }
+
+    // (c) disk store + two-level cache: hit rate across epochs
+    let dir = std::env::temp_dir().join("molpack-bench");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bench.mpks");
+    let gen = HydroNet::new(1000, 2);
+    let mols: Vec<_> = (0..1000).map(|i| gen.get(i)).collect();
+    write_store(&path, &mols).unwrap();
+    let cached = Arc::new(CachedSource::new(Store::open(&path).unwrap(), 1000));
+    println!("\ndisk store + LRU cache (capacity = dataset):");
+    for epoch in 0..3 {
+        let t0 = std::time::Instant::now();
+        let batcher = Batcher::new(geometry(), 6.0);
+        let cfg = PipelineConfig { workers: 4, prefetch_depth: 4, ..Default::default() };
+        let stream = stream_epoch(Arc::clone(&cached), batcher, &cfg, epoch);
+        let mut graphs = 0;
+        for b in stream.batches.iter() {
+            graphs += b.unwrap().real_graphs();
+        }
+        let stats = cached.stats();
+        println!(
+            "  epoch {epoch}: {:.2}s, {graphs} graphs, cumulative hit rate {:.1}%",
+            t0.elapsed().as_secs_f64(),
+            stats.hit_rate() * 100.0
+        );
+    }
+    std::fs::remove_file(&path).ok();
+    println!("\nbench_loader OK");
+}

@@ -1,0 +1,60 @@
+//! Packing bench (paper section 4.1 / Fig. 8 support): algorithm latency
+//! and packing quality for LPFHP vs the classic baselines over real
+//! dataset size columns. `cargo bench --bench bench_packing`.
+//!
+//! LPFHP's selling point is histogram-level complexity: throughput
+//! (graphs/s packed) should stay ~flat as the sample grows, while FFD/BFD
+//! degrade.
+
+use molpack::datasets::PaperDataset;
+use molpack::packing::Packer;
+use molpack::util::stats::{summarize, time_it};
+
+fn main() {
+    println!("packer benchmark — latency + quality\n");
+    println!(
+        "{:>6} {:>8} {:>10} | {:>10} {:>12} {:>10}",
+        "ds", "graphs", "packer", "ms/run", "graphs/ms", "padding%"
+    );
+    for ds in [PaperDataset::Qm9, PaperDataset::Water4_5m] {
+        for sample in [10_000usize, 100_000] {
+            let src = ds.source((ds.full_len() / sample).max(1), 3);
+            let n = src.len().min(sample);
+            let sizes: Vec<usize> = (0..n).map(|i| src.n_atoms(i)).collect();
+            let max = *sizes.iter().max().unwrap();
+            for p in [
+                Packer::NextFit,
+                Packer::FirstFitDecreasing,
+                Packer::BestFitDecreasing,
+                Packer::Lpfhp,
+            ] {
+                // FFD/BFD are O(n^2)-ish with our simple pack scan; cap them
+                let iters = if sample > 10_000 && p != Packer::Lpfhp && p != Packer::NextFit {
+                    1
+                } else {
+                    5
+                };
+                let mut padding = 0.0;
+                let times = time_it(
+                    || {
+                        let packing = p.run(&sizes, max, None);
+                        padding = packing.padding_fraction();
+                    },
+                    1,
+                    iters,
+                );
+                let s = summarize(&times);
+                println!(
+                    "{:>6} {:>8} {:>10} | {:>10.2} {:>12.0} {:>9.2}%",
+                    ds.name(),
+                    n,
+                    p.name(),
+                    s.p50 * 1e3,
+                    n as f64 / (s.p50 * 1e3),
+                    padding * 100.0
+                );
+            }
+        }
+    }
+    println!("\nbench_packing OK");
+}

@@ -1,0 +1,44 @@
+//! Scatter/gather planner bench (paper section 4.2.2): plan-search latency
+//! (it runs on the host at compile time, but must stay interactive) and
+//! the quality of the chosen plans vs naive partitionings across the op
+//! shapes SchNet produces. `cargo bench --bench bench_planner`.
+
+use molpack::ipu::IpuArch;
+use molpack::planner::{gather_cost, plan_gather, plan_scatter, OpDims, PartitionFactors};
+use molpack::util::stats::{summarize, time_it};
+
+fn main() {
+    let arch = IpuArch::bow();
+    println!("planner benchmark\n");
+    println!(
+        "{:>22} | {:>9} {:>9} | {:>12} {:>12} {:>9}",
+        "op dims (I,M,N)", "plan ms", "factors", "plan cycles", "unit cycles", "speedup"
+    );
+    for dims in [
+        OpDims { i: 1152, m: 96, n: 64 },    // one pack, small model
+        OpDims { i: 4608, m: 384, n: 64 },   // default batch
+        OpDims { i: 4608, m: 384, n: 100 },  // paper hidden=100
+        OpDims { i: 36_864, m: 3072, n: 128 }, // big batch, wide model
+        OpDims { i: 147_456, m: 12_288, n: 256 }, // stress
+    ] {
+        let mut plan = plan_gather(dims, &arch);
+        let times = time_it(|| plan = plan_gather(dims, &arch), 1, 5);
+        let s = summarize(&times);
+        let unit = gather_cost(dims, PartitionFactors::UNIT, &arch);
+        println!(
+            "{:>22} | {:>9.2} {:>3},{:>3},{:>2} | {:>12.0} {:>12.0} {:>8.1}x",
+            format!("({},{},{})", dims.i, dims.m, dims.n),
+            s.p50 * 1e3,
+            plan.factors.p_i,
+            plan.factors.p_m,
+            plan.factors.p_n,
+            plan.cycles,
+            unit,
+            unit / plan.cycles
+        );
+        // scatter plan sanity at the same dims
+        let sp = plan_scatter(dims, &arch);
+        assert!(sp.cycles.is_finite());
+    }
+    println!("\nbench_planner OK");
+}

@@ -1,0 +1,26 @@
+//! End-to-end table/figure regeneration bench: produces every model-driven
+//! exhibit of the paper's evaluation (Table 1 and Figs. 6/7/9/10/12) in
+//! one run — the `cargo bench` entry point that corresponds to "run the
+//! paper's evaluation section". Figs. 5/8 (data-driven) are in
+//! `molpack figures` / `examples/packing_analysis`; Fig. 11 (real
+//! training) is `examples/train_hydronet`.
+
+use molpack::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    for (name, text) in [
+        ("fig6", figures::fig6()),
+        ("fig7", figures::fig7()),
+        ("fig9", figures::fig9()),
+        ("fig10", figures::fig10()),
+        ("fig12", figures::fig12()),
+        ("table1+fig13", figures::table1()),
+    ] {
+        println!("===== {name} =====\n{text}\n");
+    }
+    println!(
+        "bench_tables OK ({:.1}s for all model-driven exhibits)",
+        t0.elapsed().as_secs_f64()
+    );
+}

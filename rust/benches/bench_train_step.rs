@@ -1,0 +1,94 @@
+//! L3 hot-path bench: real PJRT train-step latency through the AOT
+//! artifacts, broken into marshal / execute / readback, plus the predict
+//! path. Skips gracefully when `make artifacts` hasn't run.
+//! `cargo bench --bench bench_train_step`.
+
+use std::sync::Arc;
+
+use molpack::coordinator::{plan_epoch, Batcher, PipelineConfig};
+use molpack::datasets::HydroNet;
+use molpack::runtime::Engine;
+use molpack::util::stats::{summarize, time_it};
+
+fn main() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        println!("bench_train_step SKIPPED: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::load(dir).unwrap();
+    let g = engine.manifest.batch;
+    println!(
+        "train-step benchmark — batch(N={}, E={}, G={}), params={}\n",
+        g.n_nodes, g.n_edges, g.n_graphs, engine.manifest.param_count
+    );
+
+    // assemble one real packed batch
+    let source = Arc::new(HydroNet::new(64, 5));
+    let batcher = Batcher::new(g, engine.manifest.model.r_cut as f32);
+    let plan = plan_epoch(source.as_ref(), &batcher, &PipelineConfig::default(), 0);
+    let batch = batcher.assemble(&plan[0], source.as_ref()).unwrap();
+    println!(
+        "batch: {} graphs, {} real nodes ({:.0}% of slots), {} real edges",
+        batch.real_graphs(),
+        batch.real_nodes(),
+        100.0 * batch.real_nodes() as f64 / g.n_nodes as f64,
+        batch.real_edges()
+    );
+
+    let mut state = engine.init_state().unwrap();
+    let times = time_it(
+        || {
+            engine.train_step(&mut state, &batch).unwrap();
+        },
+        3,
+        20,
+    );
+    let s = summarize(&times);
+    println!(
+        "\ntrain_step ms: mean {:.1} p50 {:.1} p95 {:.1} (throughput {:.1} graphs/s)",
+        s.mean * 1e3,
+        s.p50 * 1e3,
+        s.p95 * 1e3,
+        batch.real_graphs() as f64 / s.mean
+    );
+    let es = engine.stats();
+    println!(
+        "breakdown/step: marshal {:.3} ms | execute {:.1} ms | readback {:.3} ms",
+        1e3 * es.marshal_secs / es.steps as f64,
+        1e3 * es.execute_secs / es.steps as f64,
+        1e3 * es.readback_secs / es.steps as f64,
+    );
+
+    let times = time_it(
+        || {
+            engine.predict(&state.params, &batch).unwrap();
+        },
+        3,
+        20,
+    );
+    let s = summarize(&times);
+    println!(
+        "predict    ms: mean {:.1} p50 {:.1} p95 {:.1}",
+        s.mean * 1e3,
+        s.p50 * 1e3,
+        s.p95 * 1e3
+    );
+
+    // batch assembly cost (the host-side hot path the pipeline overlaps)
+    let times = time_it(
+        || {
+            batcher.assemble(&plan[0], source.as_ref()).unwrap();
+        },
+        3,
+        30,
+    );
+    let s = summarize(&times);
+    println!(
+        "assemble   ms: mean {:.2} p50 {:.2} p95 {:.2}",
+        s.mean * 1e3,
+        s.p50 * 1e3,
+        s.p95 * 1e3
+    );
+    println!("\nbench_train_step OK");
+}

@@ -1,0 +1,233 @@
+//! GPU baseline model: the out-of-the-box PyG SchNet on 8×A100 with
+//! PyTorch DDP (paper section 5.7, the Table 1 "8GPUs" column).
+//!
+//! The model captures *why* the unoptimized GPU path loses on this
+//! workload class, per the paper's own analysis (appendix A.2.1 and the
+//! Hosseini et al. profiling it cites): memory-bound gather/scatter,
+//! per-kernel launch overhead multiplied by many small ops, padding waste
+//! in node-wise compute, NCCL all-reduce, and a Python dataloader on the
+//! host. Constants are A100 datasheet numbers with utilization factors
+//! typical for PyG message passing.
+
+use crate::perfmodel::{SchNetDims, WorkloadProfile};
+
+/// A100 SXM4 40GB + host, DDP over NVLink/NCCL.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuArch {
+    /// Usable f32 FLOP/s (CUDA cores; PyG SchNet runs f32, no tensor cores
+    /// for the scatter-heavy path).
+    pub flops: f64,
+    /// HBM bandwidth bytes/s.
+    pub hbm_bps: f64,
+    /// Achievable fraction of HBM bandwidth for gather/scatter kernels.
+    pub scatter_bw_util: f64,
+    /// Dense matmul utilization for small GNN GEMMs.
+    pub matmul_util: f64,
+    /// CUDA kernel launch + framework dispatch overhead per op, seconds.
+    pub launch_overhead_s: f64,
+    /// NCCL all-reduce: per-call latency and per-direction bus bandwidth.
+    pub nccl_latency_s: f64,
+    pub nccl_bus_bps: f64,
+    /// Python dataloader cost per graph on the host, seconds.
+    pub host_prep_per_graph_s: f64,
+    /// DDP prepares batches with multiple workers.
+    pub loader_workers: usize,
+}
+
+impl GpuArch {
+    pub fn a100() -> GpuArch {
+        GpuArch {
+            flops: 19.5e12,
+            hbm_bps: 1.555e12,
+            scatter_bw_util: 0.70,
+            matmul_util: 0.50,
+            launch_overhead_s: 25e-6,
+            nccl_latency_s: 25e-6,
+            nccl_bus_bps: 150e9,
+            host_prep_per_graph_s: 55e-6,
+            loader_workers: 4,
+        }
+    }
+}
+
+/// Per-epoch estimate for DDP training on `n_gpus` GPUs.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuEpochEstimate {
+    pub epoch_secs: f64,
+    pub throughput_graphs_per_s: f64,
+    pub step_secs: f64,
+    pub steps_per_epoch: f64,
+}
+
+/// Graphs per device batch in the out-of-the-box PyG loader.
+const GRAPHS_PER_BATCH: f64 = 128.0;
+
+/// Small-kernel efficiency: GEMMs/scatters over few edges underutilize an
+/// A100 (wave quantization + launch-bound tails). Scales the achievable
+/// utilization by problem size — the key reason the paper's QM9 speedup
+/// (2.58x) exceeds the water-cluster ones (1.28-1.71x).
+fn size_efficiency(edges: f64) -> f64 {
+    (edges / 100_000.0).clamp(0.25, 1.0)
+}
+
+pub fn estimate_gpu_epoch(
+    w: &WorkloadProfile,
+    model: &SchNetDims,
+    n_gpus: usize,
+    gpu: &GpuArch,
+) -> GpuEpochEstimate {
+    let f = model.hidden as f64;
+    let k = model.n_rbf as f64;
+    let t_blocks = model.n_interactions as f64;
+    let g = GRAPHS_PER_BATCH;
+
+    // PyG batches concatenate graphs without fixed shapes (dynamic), so
+    // compute follows *real* sizes — the GPU pays no padding flops, but
+    // pays dispatch overhead for every one of the many small kernels.
+    let nodes = g * w.avg_nodes;
+    let edges = nodes * w.avg_degree;
+
+    // Dense work (fwd + bwd ≈ 3x).
+    let edge_flops = edges * 2.0 * (k * f + f * f + 3.0 * f) * t_blocks * 3.0;
+    let node_flops = nodes * 2.0 * (3.0 * f * f) * t_blocks * 3.0 + nodes * 2.0 * f * (f / 2.0) * 3.0;
+    let eff = size_efficiency(edges);
+    let matmul_secs = (edge_flops + node_flops) / (gpu.flops * gpu.matmul_util * eff);
+
+    // Gather + scatter are HBM-bound: each moves ~3 × E × F × 4 bytes
+    // (read source rows, read/write destination) per direction per block.
+    let gs_bytes = 3.0 * edges * f * 4.0 * t_blocks * 2.0 * 2.0; // ops × fwd+bwd
+    let gs_secs = gs_bytes / (gpu.hbm_bps * gpu.scatter_bw_util * eff);
+
+    // Kernel launches: PyG SchNet issues ~25 ops per interaction block
+    // plus ~40 for embedding/readout/optimizer, fwd + bwd.
+    let n_kernels = (25.0 * t_blocks + 40.0) * 2.0;
+    let launch_secs = n_kernels * gpu.launch_overhead_s;
+
+    let step_compute = matmul_secs + gs_secs + launch_secs;
+
+    // DDP all-reduce (ring over NVLink) once per step.
+    let grad_bytes = 4.0 * model.param_count() as f64;
+    let r = n_gpus as f64;
+    let allreduce = if n_gpus > 1 {
+        gpu.nccl_latency_s * (1.0 + r.log2()) + 2.0 * (r - 1.0) / r * grad_bytes / gpu.nccl_bus_bps
+    } else {
+        0.0
+    };
+
+    // Host dataloader (per replica, workers overlap with compute).
+    let host = g * gpu.host_prep_per_graph_s / gpu.loader_workers as f64;
+
+    let step_secs = (step_compute + allreduce).max(host) + 0.1 * host;
+    let steps = (w.n_graphs as f64 / (g * r)).ceil();
+    let epoch_secs = steps * step_secs + 0.5; // CUDA context + epoch setup
+    GpuEpochEstimate {
+        epoch_secs,
+        throughput_graphs_per_s: w.n_graphs as f64 / epoch_secs,
+        step_secs,
+        steps_per_epoch: steps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ipu::IpuArch;
+    use crate::perfmodel::{estimate_epoch, OptFlags, TrainSetup};
+
+    fn qm9() -> WorkloadProfile {
+        WorkloadProfile {
+            name: "QM9".into(),
+            n_graphs: 134_000,
+            avg_nodes: 18.0,
+            max_nodes: 29,
+            avg_degree: 12.0,
+            packing_efficiency: 0.98,
+        }
+    }
+
+    fn water(n: usize, avg: f64, max: usize) -> WorkloadProfile {
+        WorkloadProfile {
+            name: "water".into(),
+            n_graphs: n,
+            avg_nodes: avg,
+            max_nodes: max,
+            avg_degree: 14.0,
+            packing_efficiency: 0.97,
+        }
+    }
+
+    #[test]
+    fn sixteen_ipus_beat_eight_gpus() {
+        // Table 1's headline: 16 IPUs vs 8 A100s, speedup 1.28-2.58x.
+        let ipu = IpuArch::bow();
+        let gpu = GpuArch::a100();
+        let model = SchNetDims::default();
+        for w in [qm9(), water(4_500_000, 60.0, 90)] {
+            let i = estimate_epoch(
+                &w,
+                &TrainSetup { n_ipus: 16, opts: OptFlags::ALL, ..Default::default() },
+                &ipu,
+            );
+            let g = estimate_gpu_epoch(&w, &model, 8, &gpu);
+            let speedup = g.epoch_secs / i.epoch_secs;
+            assert!(
+                (1.05..=4.0).contains(&speedup),
+                "{}: speedup {speedup} (ipu {} vs gpu {})",
+                w.name,
+                i.epoch_secs,
+                g.epoch_secs
+            );
+        }
+    }
+
+    #[test]
+    fn qm9_speedup_exceeds_water_speedup() {
+        // Paper: 2.58x on QM9 vs 1.71x on 4.5M — small dense graphs hurt
+        // the GPU (launch overhead per tiny kernel) more than big ones.
+        let ipu = IpuArch::bow();
+        let gpu = GpuArch::a100();
+        let model = SchNetDims::default();
+        let s = |w: &WorkloadProfile| {
+            let i = estimate_epoch(
+                w,
+                &TrainSetup { n_ipus: 16, opts: OptFlags::ALL, ..Default::default() },
+                &ipu,
+            );
+            estimate_gpu_epoch(w, &model, 8, &gpu).epoch_secs / i.epoch_secs
+        };
+        assert!(s(&qm9()) > s(&water(4_500_000, 60.0, 90)));
+    }
+
+    #[test]
+    fn gpu_epoch_scales_with_dataset_size() {
+        let gpu = GpuArch::a100();
+        let model = SchNetDims::default();
+        let small = estimate_gpu_epoch(&water(500_000, 45.0, 75), &model, 8, &gpu);
+        let big = estimate_gpu_epoch(&water(4_500_000, 60.0, 90), &model, 8, &gpu);
+        assert!(big.epoch_secs > 4.0 * small.epoch_secs);
+    }
+
+    #[test]
+    fn more_gpus_reduce_epoch_time() {
+        let gpu = GpuArch::a100();
+        let model = SchNetDims::default();
+        let w = water(4_500_000, 60.0, 90);
+        let one = estimate_gpu_epoch(&w, &model, 1, &gpu);
+        let eight = estimate_gpu_epoch(&w, &model, 8, &gpu);
+        assert!(eight.epoch_secs < one.epoch_secs / 4.0);
+    }
+
+    #[test]
+    fn gpu_single_epoch_magnitude_sane() {
+        // Paper reports 2.7 days for ~1000 epochs-ish single-GPU training
+        // runs; one 4.5M epoch on 8 GPUs is ~60s. Accept the right order
+        // of magnitude (this is a model, not a measurement).
+        let gpu = GpuArch::a100();
+        let e = estimate_gpu_epoch(&water(4_500_000, 60.0, 90), &SchNetDims::default(), 8, &gpu);
+        assert!(
+            (10.0..=600.0).contains(&e.epoch_secs),
+            "epoch {}s",
+            e.epoch_secs
+        );
+    }
+}

@@ -1,0 +1,222 @@
+//! Batch assembly: materialize LPFHP packs into the fixed-shape
+//! `HostBatch` tensors the AOT executables expect (DESIGN.md §5).
+//!
+//! Each pack occupies a fixed node/edge/graph-slot window; edges are built
+//! per molecule (KNN within the radius cutoff, capped by the compiled
+//! k_max), so packs are disconnected components and cross-contamination is
+//! structurally impossible. Padding edges are self-loops on a dump node
+//! with `edge_mask = 0`; padding nodes route to the batch's last graph
+//! slot with `node_mask = 0`.
+
+use anyhow::{bail, Result};
+
+use crate::datasets::MoleculeSource;
+use crate::graph::{knn_edges, Molecule};
+use crate::packing::Pack;
+use crate::runtime::{BatchGeometry, HostBatch};
+
+/// Assembles packs into batches for a fixed geometry.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    pub geometry: BatchGeometry,
+    pub r_cut: f32,
+}
+
+impl Batcher {
+    pub fn new(geometry: BatchGeometry, r_cut: f32) -> Self {
+        Batcher { geometry, r_cut }
+    }
+
+    /// Build one `HostBatch` from up to `packs_per_batch` packs. Fewer
+    /// packs leave fully padded windows (end of epoch).
+    pub fn assemble(
+        &self,
+        packs: &[Pack],
+        source: &dyn MoleculeSource,
+    ) -> Result<HostBatch> {
+        let g = self.geometry;
+        if packs.len() > g.packs_per_batch {
+            bail!("{} packs exceed batch capacity {}", packs.len(), g.packs_per_batch);
+        }
+        let mut b = HostBatch::empty(&g);
+        for (pi, pack) in packs.iter().enumerate() {
+            self.fill_pack(&mut b, pi, pack, source)?;
+        }
+        debug_assert!(b.validate(&g).is_ok());
+        Ok(b)
+    }
+
+    /// Place one pack into window `pi` of the batch.
+    fn fill_pack(
+        &self,
+        b: &mut HostBatch,
+        pi: usize,
+        pack: &Pack,
+        source: &dyn MoleculeSource,
+    ) -> Result<()> {
+        let g = self.geometry;
+        let n0 = pi * g.nodes_per_pack;
+        let e0 = pi * g.edges_per_pack;
+        let g0 = pi * g.graphs_per_pack;
+        if pack.items.len() > g.graphs_per_pack {
+            bail!(
+                "pack holds {} graphs, geometry allows {} per pack",
+                pack.items.len(),
+                g.graphs_per_pack
+            );
+        }
+        if pack.used_nodes > g.nodes_per_pack {
+            bail!("pack uses {} nodes > budget {}", pack.used_nodes, g.nodes_per_pack);
+        }
+
+        let mut node_cursor = n0;
+        let mut edge_cursor = e0;
+        for (slot, &item) in pack.items.iter().enumerate() {
+            let mol: Molecule = source.get(item as usize);
+            let base = node_cursor;
+            for a in 0..mol.n_atoms() {
+                b.z[base + a] = mol.z[a] as i32;
+                b.pos[(base + a) * 3..(base + a) * 3 + 3].copy_from_slice(&mol.pos[a]);
+                b.graph_id[base + a] = (g0 + slot) as i32;
+                b.node_mask[base + a] = 1.0;
+            }
+            node_cursor += mol.n_atoms();
+
+            let edges = knn_edges(&mol, self.r_cut, g.k_max());
+            let budget_left = e0 + g.edges_per_pack - edge_cursor;
+            if edges.len() > budget_left {
+                bail!(
+                    "graph {item} needs {} edges, only {budget_left} left in pack budget",
+                    edges.len()
+                );
+            }
+            for (s, d) in edges.src.iter().zip(&edges.dst) {
+                b.src[edge_cursor] = (base + *s as usize) as i32;
+                b.dst[edge_cursor] = (base + *d as usize) as i32;
+                b.edge_mask[edge_cursor] = 1.0;
+                edge_cursor += 1;
+            }
+
+            b.target[g0 + slot] = mol.energy;
+            b.graph_mask[g0 + slot] = 1.0;
+        }
+
+        // Padding: route leftover edge slots to the pack's dump node (the
+        // first padded node slot, or the last node of the pack when full).
+        let dump = node_cursor.min(n0 + g.nodes_per_pack - 1) as i32;
+        for e in edge_cursor..e0 + g.edges_per_pack {
+            b.src[e] = dump;
+            b.dst[e] = dump;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::HydroNet;
+    use crate::packing::{lpfhp, Packing};
+
+    fn geometry() -> BatchGeometry {
+        BatchGeometry {
+            n_nodes: 192,
+            n_edges: 2304,
+            n_graphs: 8,
+            packs_per_batch: 2,
+            nodes_per_pack: 96,
+            edges_per_pack: 1152,
+            graphs_per_pack: 4,
+        }
+    }
+
+    fn packed(ds: &HydroNet, n: usize) -> Packing {
+        let sizes: Vec<usize> = (0..n).map(|i| ds.n_atoms(i)).collect();
+        lpfhp(&sizes, 96, Some(4))
+    }
+
+    #[test]
+    fn assembled_batch_is_valid_and_masks_consistent() {
+        let ds = HydroNet::new(20, 3);
+        let packing = packed(&ds, 20);
+        let batcher = Batcher::new(geometry(), 6.0);
+        let b = batcher.assemble(&packing.packs[0..2], &ds).unwrap();
+        b.validate(&geometry()).unwrap();
+        // real node count matches the packs' used nodes
+        let want: usize = packing.packs[0..2].iter().map(|p| p.used_nodes).sum();
+        assert_eq!(b.real_nodes(), want);
+        assert_eq!(
+            b.real_graphs(),
+            packing.packs[0..2].iter().map(|p| p.items.len()).sum::<usize>()
+        );
+        assert!(b.real_edges() > 0);
+    }
+
+    #[test]
+    fn graph_ids_partition_nodes_by_molecule() {
+        let ds = HydroNet::new(20, 5);
+        let packing = packed(&ds, 20);
+        let batcher = Batcher::new(geometry(), 6.0);
+        let b = batcher.assemble(&packing.packs[0..1], &ds).unwrap();
+        // each real graph id's node count equals its molecule's atom count
+        for (slot, &item) in packing.packs[0].items.iter().enumerate() {
+            let gid = slot as i32;
+            let nodes = b
+                .graph_id
+                .iter()
+                .zip(&b.node_mask)
+                .filter(|(&g, &m)| g == gid && m == 1.0)
+                .count();
+            assert_eq!(nodes, ds.n_atoms(item as usize), "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn targets_match_molecule_energies() {
+        let ds = HydroNet::new(10, 7);
+        let packing = packed(&ds, 10);
+        let batcher = Batcher::new(geometry(), 6.0);
+        let b = batcher.assemble(&packing.packs[0..1], &ds).unwrap();
+        for (slot, &item) in packing.packs[0].items.iter().enumerate() {
+            assert_eq!(b.target[slot], ds.get(item as usize).energy);
+            assert_eq!(b.graph_mask[slot], 1.0);
+        }
+    }
+
+    #[test]
+    fn partial_batch_leaves_padded_window() {
+        let ds = HydroNet::new(10, 9);
+        let packing = packed(&ds, 10);
+        let batcher = Batcher::new(geometry(), 6.0);
+        let b = batcher.assemble(&packing.packs[0..1], &ds).unwrap();
+        b.validate(&geometry()).unwrap();
+        // second window entirely padding
+        let g = geometry();
+        assert!(b.node_mask[g.nodes_per_pack..].iter().all(|&m| m == 0.0));
+        assert!(b.graph_mask[g.graphs_per_pack..].iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn rejects_oversized_pack_lists() {
+        let ds = HydroNet::new(30, 1);
+        let packing = packed(&ds, 30);
+        let batcher = Batcher::new(geometry(), 6.0);
+        if packing.packs.len() >= 3 {
+            assert!(batcher.assemble(&packing.packs[0..3], &ds).is_err());
+        }
+    }
+
+    #[test]
+    fn edges_stay_within_pack_windows() {
+        let ds = HydroNet::new(20, 11);
+        let packing = packed(&ds, 20);
+        let batcher = Batcher::new(geometry(), 6.0);
+        let b = batcher.assemble(&packing.packs[0..2], &ds).unwrap();
+        let npp = geometry().nodes_per_pack as i32;
+        for (e, (&s, &d)) in b.src.iter().zip(&b.dst).enumerate() {
+            if b.edge_mask[e] == 1.0 {
+                assert_eq!(s / npp, d / npp, "edge {e} crosses packs");
+            }
+        }
+    }
+}

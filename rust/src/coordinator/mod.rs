@@ -1,0 +1,10 @@
+//! L3 coordinator: pack-aware batch assembly and the asynchronous
+//! host-side pipeline (paper sections 4.1 and 4.2.3 made executable).
+
+pub mod batcher;
+pub mod pipeline;
+pub mod replicas;
+
+pub use batcher::Batcher;
+pub use pipeline::{plan_epoch, stream_epoch, EpochStream, PipelineConfig};
+pub use replicas::{CollectiveStats, DataParallel};

@@ -1,0 +1,295 @@
+//! Asynchronous batch-preparation pipeline (paper section 4.2.3):
+//! multi-worker batch assembly feeding a bounded prefetch queue that
+//! overlaps host-side preparation with device execution.
+//!
+//! Epoch flow: shuffle → LPFHP over the size column → group packs into
+//! batches → a work queue of batch descriptors → N worker threads
+//! materialize `HostBatch`es (through the two-level cache) → a bounded
+//! `sync_channel` whose capacity is the *prefetch depth* (backpressure:
+//! workers block when the device falls behind).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::Batcher;
+use crate::datasets::MoleculeSource;
+use crate::packing::{Pack, Packer};
+use crate::runtime::HostBatch;
+use crate::util::Rng;
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub packer: Packer,
+    /// Worker threads preparing batches (1 = the paper's sync baseline).
+    pub workers: usize,
+    /// Bounded queue capacity — the paper's pre-fetch depth (4 by default).
+    pub prefetch_depth: usize,
+    pub shuffle_seed: u64,
+    /// Deliver batches in plan order regardless of worker completion
+    /// order — makes multi-worker training bitwise reproducible (a
+    /// sequencer thread reorders in-flight batches).
+    pub ordered: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            packer: Packer::Lpfhp,
+            workers: 4,
+            prefetch_depth: 4,
+            shuffle_seed: 0,
+            ordered: true,
+        }
+    }
+}
+
+/// Plan one epoch: shuffle the dataset, pack it, group packs into batches.
+/// Returns batch descriptors (each a Vec of packs).
+pub fn plan_epoch(
+    source: &dyn MoleculeSource,
+    batcher: &Batcher,
+    cfg: &PipelineConfig,
+    epoch: u64,
+) -> Vec<Vec<Pack>> {
+    let n = source.len();
+    let sizes: Vec<usize> = (0..n).map(|i| source.n_atoms(i)).collect();
+    let g = batcher.geometry;
+    let mut packing = cfg.packer.run(&sizes, g.nodes_per_pack, Some(g.graphs_per_pack));
+    // Shuffle pack order each epoch for SGD; pack composition stays optimal.
+    let mut rng = Rng::new(cfg.shuffle_seed ^ epoch.wrapping_mul(0x9E37_79B9));
+    rng.shuffle(&mut packing.packs);
+    packing
+        .packs
+        .chunks(g.packs_per_batch)
+        .map(|c| c.to_vec())
+        .collect()
+}
+
+/// Handle to a running epoch pipeline.
+pub struct EpochStream {
+    pub batches: Receiver<Result<HostBatch>>,
+    pub n_batches: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl EpochStream {
+    /// Drain and join (for clean shutdown mid-epoch).
+    pub fn join(self) {
+        drop(self.batches);
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Spawn the worker pool for one epoch over `source`.
+///
+/// `source` must be shareable across threads; the synthetic generators are
+/// stateless and the disk store uses an internal mutex + cache.
+pub fn stream_epoch<S: MoleculeSource + 'static>(
+    source: Arc<S>,
+    batcher: Batcher,
+    cfg: &PipelineConfig,
+    epoch: u64,
+) -> EpochStream {
+    let plan = plan_epoch(source.as_ref(), &batcher, cfg, epoch);
+    let n_batches = plan.len();
+    let plan = Arc::new(plan);
+    let next = Arc::new(AtomicUsize::new(0));
+    // workers emit (plan index, batch); an optional sequencer restores
+    // plan order before the consumer sees them
+    let (wtx, wrx) = sync_channel::<(usize, Result<HostBatch>)>(cfg.prefetch_depth.max(1));
+
+    let mut handles = Vec::new();
+    for _w in 0..cfg.workers.max(1) {
+        let plan = Arc::clone(&plan);
+        let next = Arc::clone(&next);
+        let wtx = wtx.clone();
+        let source = Arc::clone(&source);
+        let batcher = batcher.clone();
+        handles.push(std::thread::spawn(move || {
+            loop {
+                let idx = next.fetch_add(1, Ordering::Relaxed);
+                if idx >= plan.len() {
+                    break;
+                }
+                let result = batcher.assemble(&plan[idx], source.as_ref());
+                // receiver hung up -> device stopped, exit quietly
+                if wtx.send((idx, result)).is_err() {
+                    break;
+                }
+            }
+        }));
+    }
+    drop(wtx);
+
+    if !cfg.ordered {
+        // unordered fast path: strip indices inline via a forwarder thread
+        let (tx, rx) = sync_channel::<Result<HostBatch>>(cfg.prefetch_depth.max(1));
+        handles.push(std::thread::spawn(move || {
+            for (_, b) in wrx.iter() {
+                if tx.send(b).is_err() {
+                    break;
+                }
+            }
+        }));
+        return EpochStream { batches: rx, n_batches, handles };
+    }
+
+    // sequencer: reorder by plan index (holds at most ~workers +
+    // prefetch_depth batches, since workers claim indices in order)
+    let (tx, rx) = sync_channel::<Result<HostBatch>>(cfg.prefetch_depth.max(1));
+    handles.push(std::thread::spawn(move || {
+        let mut pending: std::collections::BTreeMap<usize, Result<HostBatch>> =
+            Default::default();
+        let mut want = 0usize;
+        for (idx, b) in wrx.iter() {
+            pending.insert(idx, b);
+            while let Some(b) = pending.remove(&want) {
+                if tx.send(b).is_err() {
+                    return;
+                }
+                want += 1;
+            }
+        }
+        // flush any stragglers (send errors mean the consumer is gone)
+        while let Some(b) = pending.remove(&want) {
+            if tx.send(b).is_err() {
+                return;
+            }
+            want += 1;
+        }
+    }));
+    EpochStream { batches: rx, n_batches, handles }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::HydroNet;
+    use crate::runtime::BatchGeometry;
+
+    fn geometry() -> BatchGeometry {
+        BatchGeometry {
+            n_nodes: 192,
+            n_edges: 2304,
+            n_graphs: 8,
+            packs_per_batch: 2,
+            nodes_per_pack: 96,
+            edges_per_pack: 1152,
+            graphs_per_pack: 4,
+        }
+    }
+
+    #[test]
+    fn plan_covers_every_graph_exactly_once() {
+        let ds = HydroNet::new(50, 3);
+        let batcher = Batcher::new(geometry(), 6.0);
+        let plan = plan_epoch(&ds, &batcher, &PipelineConfig::default(), 0);
+        let mut seen = vec![false; 50];
+        for batch in &plan {
+            assert!(batch.len() <= 2);
+            for pack in batch {
+                for &i in &pack.items {
+                    assert!(!seen[i as usize], "graph {i} twice");
+                    seen[i as usize] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn epochs_shuffle_differently() {
+        let ds = HydroNet::new(60, 4);
+        let batcher = Batcher::new(geometry(), 6.0);
+        let cfg = PipelineConfig::default();
+        let a = plan_epoch(&ds, &batcher, &cfg, 0);
+        let b = plan_epoch(&ds, &batcher, &cfg, 1);
+        assert_eq!(a.len(), b.len());
+        let first_items =
+            |p: &Vec<Vec<Pack>>| p[0].iter().flat_map(|k| k.items.clone()).collect::<Vec<_>>();
+        assert_ne!(first_items(&a), first_items(&b), "epoch order should differ");
+    }
+
+    #[test]
+    fn stream_delivers_all_planned_batches() {
+        let ds = Arc::new(HydroNet::new(40, 5));
+        let batcher = Batcher::new(geometry(), 6.0);
+        let cfg = PipelineConfig { workers: 3, prefetch_depth: 2, ..Default::default() };
+        let stream = stream_epoch(Arc::clone(&ds), batcher, &cfg, 0);
+        let expect = stream.n_batches;
+        let mut graphs = 0;
+        let mut count = 0;
+        for b in stream.batches.iter() {
+            let b = b.unwrap();
+            b.validate(&geometry()).unwrap();
+            graphs += b.real_graphs();
+            count += 1;
+        }
+        assert_eq!(count, expect);
+        assert_eq!(graphs, 40, "every molecule delivered exactly once");
+    }
+
+    #[test]
+    fn ordered_delivery_matches_plan_order() {
+        // With ordered=true, batch k's graphs are exactly plan[k]'s packs
+        // regardless of worker count.
+        let ds = Arc::new(HydroNet::new(48, 8));
+        let batcher = Batcher::new(geometry(), 6.0);
+        let cfg = PipelineConfig { workers: 4, ordered: true, ..Default::default() };
+        let plan = plan_epoch(ds.as_ref(), &batcher, &cfg, 3);
+        let stream = stream_epoch(Arc::clone(&ds), batcher, &cfg, 3);
+        for (k, b) in stream.batches.iter().enumerate() {
+            let b = b.unwrap();
+            let want: usize = plan[k].iter().map(|p| p.items.len()).sum();
+            assert_eq!(b.real_graphs(), want, "batch {k} out of order");
+        }
+    }
+
+    #[test]
+    fn unordered_mode_still_delivers_everything() {
+        let ds = Arc::new(HydroNet::new(40, 9));
+        let batcher = Batcher::new(geometry(), 6.0);
+        let cfg = PipelineConfig { workers: 4, ordered: false, ..Default::default() };
+        let stream = stream_epoch(Arc::clone(&ds), batcher, &cfg, 0);
+        let graphs: usize = stream.batches.iter().map(|b| b.unwrap().real_graphs()).sum();
+        assert_eq!(graphs, 40);
+    }
+
+    #[test]
+    fn single_worker_matches_multi_worker_coverage() {
+        let ds = Arc::new(HydroNet::new(30, 6));
+        let batcher = Batcher::new(geometry(), 6.0);
+        for workers in [1usize, 4] {
+            let cfg = PipelineConfig { workers, ..Default::default() };
+            let stream = stream_epoch(Arc::clone(&ds), batcher.clone(), &cfg, 2);
+            let graphs: usize =
+                stream.batches.iter().map(|b| b.unwrap().real_graphs()).sum();
+            assert_eq!(graphs, 30, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn backpressure_bounds_memory() {
+        // With prefetch_depth=1 workers must block rather than buffer the
+        // whole epoch: after sleeping, at most depth + workers batches were
+        // materialized ahead of consumption.
+        let ds = Arc::new(HydroNet::new(64, 7));
+        let batcher = Batcher::new(geometry(), 6.0);
+        let cfg = PipelineConfig { workers: 2, prefetch_depth: 1, ..Default::default() };
+        let stream = stream_epoch(Arc::clone(&ds), batcher, &cfg, 0);
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        // consume one batch; the rest must still arrive intact
+        let mut count = 0;
+        for b in stream.batches.iter() {
+            b.unwrap();
+            count += 1;
+        }
+        assert_eq!(count, stream.n_batches);
+    }
+}

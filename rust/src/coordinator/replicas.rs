@@ -1,0 +1,174 @@
+//! Data-parallel training coordinator: R logical replicas each compute
+//! gradients for their own packed batch via the `grad_step` artifact; the
+//! coordinator all-reduces the gradients (merged or per-tensor — the
+//! paper's section 4.3 optimization, here measurable on real gradients)
+//! and applies a native Adam update shared by all replicas.
+//!
+//! On this single-CPU testbed the replicas execute sequentially against
+//! one PJRT executable; the gradient math, the collective, and the
+//! optimizer are exactly the distributed algorithm, so convergence
+//! semantics (global batch = R × local batch) and collective costs are
+//! real even though replica *compute* is serialized.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use crate::optim::{allreduce_mean_merged, allreduce_mean_per_tensor, Adam, AdamConfig};
+use crate::runtime::{Engine, HostBatch};
+
+/// Timing counters for the collective comparison.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CollectiveStats {
+    pub steps: u64,
+    pub grad_secs: f64,
+    pub allreduce_secs: f64,
+    pub optimizer_secs: f64,
+}
+
+/// Data-parallel trainer state.
+pub struct DataParallel {
+    pub replicas: usize,
+    /// Merge all gradients into one collective (paper's optimization)?
+    pub merged: bool,
+    pub params: Vec<f32>,
+    adam: Adam,
+    pub stats: CollectiveStats,
+}
+
+impl DataParallel {
+    pub fn new(engine: &Engine, replicas: usize, merged: bool) -> Result<Self> {
+        if replicas == 0 {
+            bail!("need at least one replica");
+        }
+        if engine.manifest.grad_step.is_none() {
+            bail!("artifacts lack grad_step — re-run make artifacts");
+        }
+        let params = engine.manifest.load_init_params()?;
+        let adam = Adam::new(AdamConfig::default(), params.len());
+        Ok(DataParallel { replicas, merged, params, adam, stats: CollectiveStats::default() })
+    }
+
+    /// One synchronous data-parallel step over `batches` (one per
+    /// replica). Returns the mean replica loss.
+    pub fn step(&mut self, engine: &Engine, batches: &[HostBatch]) -> Result<f32> {
+        if batches.len() != self.replicas {
+            bail!("expected {} batches, got {}", self.replicas, batches.len());
+        }
+        let t0 = Instant::now();
+        let params_lit = Literal::vec1(&self.params);
+        let mut grads = Vec::with_capacity(self.replicas);
+        let mut loss_sum = 0.0f32;
+        for b in batches {
+            let (loss, grad) = engine.grad_step(&params_lit, b)?;
+            loss_sum += loss;
+            grads.push(grad);
+        }
+        let t1 = Instant::now();
+        let mean_grad = if self.merged {
+            allreduce_mean_merged(&grads)
+        } else {
+            allreduce_mean_per_tensor(&grads, &engine.manifest.param_layout)
+        };
+        let t2 = Instant::now();
+        self.adam.step(&mut self.params, &mean_grad);
+        let t3 = Instant::now();
+
+        self.stats.steps += 1;
+        self.stats.grad_secs += (t1 - t0).as_secs_f64();
+        self.stats.allreduce_secs += (t2 - t1).as_secs_f64();
+        self.stats.optimizer_secs += (t3 - t2).as_secs_f64();
+        Ok(loss_sum / self.replicas as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{plan_epoch, Batcher, PipelineConfig};
+    use crate::datasets::HydroNet;
+
+    fn engine() -> Option<Engine> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return None;
+        }
+        Engine::load(dir).ok()
+    }
+
+    fn batches(engine: &Engine, n: usize, seed: u64) -> Vec<HostBatch> {
+        let ds = HydroNet::new(n * 12, seed);
+        let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
+        let plan = plan_epoch(&ds, &batcher, &PipelineConfig::default(), 0);
+        plan.iter()
+            .take(n)
+            .map(|p| batcher.assemble(p, &ds).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn single_replica_matches_fused_train_step() {
+        // grad_step + Rust Adam must track the in-graph fused Adam closely
+        // (same math, different execution order => small float drift).
+        let Some(engine) = engine() else { return };
+        let bs = batches(&engine, 1, 3);
+
+        let mut dp = DataParallel::new(&engine, 1, true).unwrap();
+        let mut fused = engine.init_state().unwrap();
+        for _ in 0..3 {
+            dp.step(&engine, &bs).unwrap();
+            engine.train_step(&mut fused, &bs[0]).unwrap();
+        }
+        let fused_params = engine.params_to_host(&fused).unwrap();
+        let max_rel: f32 = dp
+            .params
+            .iter()
+            .zip(&fused_params)
+            .map(|(a, b)| (a - b).abs() / (b.abs() + 1e-3))
+            .fold(0.0, f32::max);
+        assert!(max_rel < 5e-3, "paths diverged: max rel err {max_rel}");
+    }
+
+    #[test]
+    fn two_replicas_reduce_loss() {
+        let Some(engine) = engine() else { return };
+        let bs = batches(&engine, 2, 7);
+        let mut dp = DataParallel::new(&engine, 2, true).unwrap();
+        let first = dp.step(&engine, &bs).unwrap();
+        let mut last = first;
+        for _ in 0..8 {
+            last = dp.step(&engine, &bs).unwrap();
+        }
+        assert!(last < 0.5 * first, "loss {first} -> {last}");
+        assert_eq!(dp.stats.steps, 9);
+    }
+
+    #[test]
+    fn merged_and_per_tensor_agree_numerically() {
+        let Some(engine) = engine() else { return };
+        let bs = batches(&engine, 2, 11);
+        let mut a = DataParallel::new(&engine, 2, true).unwrap();
+        let mut b = DataParallel::new(&engine, 2, false).unwrap();
+        for _ in 0..2 {
+            a.step(&engine, &bs).unwrap();
+            b.step(&engine, &bs).unwrap();
+        }
+        let max_abs: f32 = a
+            .params
+            .iter()
+            .zip(&b.params)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max);
+        assert!(max_abs < 1e-5, "collectives disagree by {max_abs}");
+    }
+
+    #[test]
+    fn wrong_batch_count_errors() {
+        let Some(engine) = engine() else { return };
+        let bs = batches(&engine, 1, 13);
+        let mut dp = DataParallel::new(&engine, 2, true).unwrap();
+        assert!(dp.step(&engine, &bs).is_err());
+    }
+}

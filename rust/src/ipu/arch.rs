@@ -1,0 +1,99 @@
+//! Graphcore Bow IPU architecture constants (paper section 3 + the
+//! Jia et al. 2019 microbenchmark whitepaper the paper cites).
+
+/// Tile-machine description used by the planner and the performance model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IpuArch {
+    /// Processing tiles per IPU (Bow: 1,472).
+    pub tiles: usize,
+    /// Local SRAM per tile in bytes (~624 KB; 900 MB total per IPU).
+    pub sram_per_tile: usize,
+    /// Core clock in Hz (Bow: 1.85 GHz boosted; classic Mk2 1.33 GHz).
+    pub clock_hz: f64,
+    /// Tile load/store/accumulate bytes per cycle (B_vwidth in Eqs. 8-9).
+    pub bytes_vwidth: usize,
+    /// Exchange send/receive bytes per cycle per tile (the e(b) rate).
+    pub exchange_bytes_per_cycle: f64,
+    /// Hardware worker threads per tile (W = 6).
+    pub worker_threads: usize,
+    /// f32 FLOPs per tile per cycle through the AMP units.
+    pub flops_per_tile_cycle: f64,
+    /// Inter-IPU link bandwidth per direction, bytes/s (Bow-2000: 320 GB/s).
+    pub ipu_link_bps: f64,
+    /// Host PCIe bandwidth bytes/s shared by 4 IPUs in a Bow-2000 (64 GB/s).
+    pub host_pcie_bps: f64,
+    /// Per-collective fixed latency in seconds (sync + program overhead).
+    pub collective_latency_s: f64,
+    /// Bytes per data / index element (f32 / i32 everywhere here).
+    pub bytes_data: usize,
+    pub bytes_index: usize,
+}
+
+impl IpuArch {
+    /// The Bow IPU of the paper's Pod64 testbed.
+    pub fn bow() -> IpuArch {
+        IpuArch {
+            tiles: 1472,
+            sram_per_tile: 624 * 1024,
+            clock_hz: 1.85e9,
+            bytes_vwidth: 16,
+            exchange_bytes_per_cycle: 4.0,
+            worker_threads: 6,
+            flops_per_tile_cycle: 32.0,
+            ipu_link_bps: 320.0e9,
+            host_pcie_bps: 64.0e9,
+            collective_latency_s: 3.0e-6,
+            bytes_data: 4,
+            bytes_index: 4,
+        }
+    }
+
+    /// Aggregate SRAM bandwidth, bytes/s (paper: "65 TB/s total").
+    pub fn total_sram_bw(&self) -> f64 {
+        self.tiles as f64 * self.bytes_vwidth as f64 * self.clock_hz
+    }
+
+    /// Peak f32 FLOP/s of one IPU.
+    pub fn peak_flops(&self) -> f64 {
+        self.tiles as f64 * self.flops_per_tile_cycle * self.clock_hz
+    }
+
+    /// Total on-chip memory (paper: ~900 MB).
+    pub fn total_sram(&self) -> usize {
+        self.tiles * self.sram_per_tile
+    }
+
+    /// Seconds for `cycles` machine cycles.
+    pub fn cycles_to_secs(&self, cycles: f64) -> f64 {
+        cycles / self.clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bow_matches_paper_figures() {
+        let a = IpuArch::bow();
+        // paper section 3: 1,472 tiles, ~900MB, 65 TB/s aggregate
+        assert_eq!(a.tiles, 1472);
+        let total_mb = a.total_sram() as f64 / (1024.0 * 1024.0);
+        assert!((890.0..=920.0).contains(&total_mb), "{total_mb} MB");
+        let bw_tb = a.total_sram_bw() / 1e12;
+        assert!((40.0..=70.0).contains(&bw_tb), "{bw_tb} TB/s");
+    }
+
+    #[test]
+    fn peak_flops_order_of_magnitude() {
+        // Bow quotes ~87 TFLOP/s f32-ish mixed precision
+        let pf = IpuArch::bow().peak_flops() / 1e12;
+        assert!((50.0..=120.0).contains(&pf), "{pf} TFLOP/s");
+    }
+
+    #[test]
+    fn cycles_conversion() {
+        let a = IpuArch::bow();
+        assert!((a.cycles_to_secs(a.clock_hz) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,227 @@
+//! BSP superstep simulator (paper section 3: compute / sync / exchange at
+//! the hardware level). Produces per-tile busy timelines — the data behind
+//! the profiler screenshots of paper Fig. 12 (merged vs per-tensor
+//! all-reduce tails).
+//!
+//! The simulation is phase-accurate, not instruction-accurate: each
+//! superstep assigns every tile a compute duration (with configurable
+//! imbalance), then a global sync (all tiles wait for the slowest), then
+//! an exchange window. That is exactly the structure whose *tail* the
+//! paper's optimization shortens.
+
+use crate::util::Rng;
+
+/// One phase on one tile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Phase {
+    Compute,
+    Sync,
+    Exchange,
+}
+
+/// Busy/idle intervals for one tile: (start, end, phase).
+#[derive(Debug, Clone, Default)]
+pub struct TileTimeline {
+    pub segments: Vec<(f64, f64, Phase)>,
+}
+
+impl TileTimeline {
+    pub fn busy_time(&self) -> f64 {
+        self.segments
+            .iter()
+            .filter(|(_, _, p)| *p != Phase::Sync)
+            .map(|(s, e, _)| e - s)
+            .sum()
+    }
+
+    pub fn end(&self) -> f64 {
+        self.segments.last().map(|&(_, e, _)| e).unwrap_or(0.0)
+    }
+}
+
+/// A BSP machine of `tiles` tiles.
+pub struct BspSim {
+    pub tiles: usize,
+    pub timelines: Vec<TileTimeline>,
+    now: f64,
+    rng: Rng,
+}
+
+impl BspSim {
+    pub fn new(tiles: usize, seed: u64) -> Self {
+        BspSim {
+            tiles,
+            timelines: vec![TileTimeline::default(); tiles],
+            now: 0.0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// One compute superstep: every tile works `mean` seconds with
+    /// multiplicative jitter `imbalance` (0 = perfectly balanced), then a
+    /// global sync to the slowest tile.
+    pub fn compute_step(&mut self, mean: f64, imbalance: f64) {
+        let start = self.now;
+        let mut latest: f64 = start;
+        let durations: Vec<f64> = (0..self.tiles)
+            .map(|_| mean * (1.0 + imbalance * (self.rng.f64() * 2.0 - 1.0)).max(0.01))
+            .collect();
+        for (t, d) in durations.iter().enumerate() {
+            self.timelines[t].segments.push((start, start + d, Phase::Compute));
+            latest = latest.max(start + d);
+        }
+        for (t, d) in durations.iter().enumerate() {
+            if start + d < latest {
+                self.timelines[t].segments.push((start + d, latest, Phase::Sync));
+            }
+        }
+        self.now = latest;
+    }
+
+    /// One exchange superstep engaging a fraction of tiles for `dur`
+    /// seconds (collectives engage all tiles; partial exchanges fewer —
+    /// idle tiles show the Fig. 12 "waiting" stripes).
+    pub fn exchange_step(&mut self, dur: f64, participating: f64) {
+        let start = self.now;
+        let cut = ((self.tiles as f64) * participating).round() as usize;
+        for t in 0..self.tiles {
+            if t < cut {
+                self.timelines[t].segments.push((start, start + dur, Phase::Exchange));
+            } else {
+                self.timelines[t].segments.push((start, start + dur, Phase::Sync));
+            }
+        }
+        self.now = start + dur;
+    }
+
+    /// Machine utilization: busy tile-seconds / (tiles × makespan).
+    pub fn utilization(&self) -> f64 {
+        let total: f64 = self.timelines.iter().map(|t| t.busy_time()).sum();
+        let makespan = self.now;
+        if makespan == 0.0 {
+            return 0.0;
+        }
+        total / (self.tiles as f64 * makespan)
+    }
+
+    /// Fraction of tiles busy at time `t` (one sample column of Fig. 12).
+    pub fn busy_fraction_at(&self, t: f64) -> f64 {
+        let busy = self
+            .timelines
+            .iter()
+            .filter(|tl| {
+                tl.segments
+                    .iter()
+                    .any(|&(s, e, p)| p != Phase::Sync && s <= t && t < e)
+            })
+            .count();
+        busy as f64 / self.tiles as f64
+    }
+
+    /// Sampled busy-fraction curve over the full run.
+    pub fn busy_curve(&self, samples: usize) -> Vec<(f64, f64)> {
+        let end = self.now;
+        (0..samples)
+            .map(|i| {
+                let t = end * (i as f64 + 0.5) / samples as f64;
+                (t, self.busy_fraction_at(t))
+            })
+            .collect()
+    }
+}
+
+/// Simulate the tail of a backward pass followed by the weight-update
+/// all-reduce(s): the Fig. 12 scenario. Returns the simulator for
+/// inspection. `merged` controls whether gradients go in one collective or
+/// `n_tensors` small ones with per-collective sync overhead.
+pub fn simulate_weight_update_tail(
+    tiles: usize,
+    n_tensors: usize,
+    merged: bool,
+    seed: u64,
+) -> BspSim {
+    let mut sim = BspSim::new(tiles, seed);
+    // trailing compute of the backward pass (imbalanced)
+    sim.compute_step(80e-6, 0.35);
+    if merged {
+        // one big exchange engaging every tile
+        sim.exchange_step(40e-6, 1.0);
+    } else {
+        // many small collectives: each engages a slice of tiles and pays
+        // sync latency; the rest wait — the long tail
+        for i in 0..n_tensors {
+            let frac = 0.25 + 0.5 * ((i % 3) as f64) / 3.0;
+            sim.exchange_step(40e-6 / n_tensors as f64 + 8e-6, frac);
+        }
+    }
+    // the optimizer step itself
+    sim.compute_step(12e-6, 0.1);
+    sim
+}
+
+/// Fig. 12 helper: run the weight-update tail scenario and return
+/// (makespan seconds, busy-fraction curve, utilization).
+pub fn simulate_weight_update_tail_curve(merged: bool) -> (f64, Vec<f64>, f64) {
+    let sim = simulate_weight_update_tail(256, 40, merged, 12);
+    let curve = sim.busy_curve(60).into_iter().map(|(_, f)| f).collect();
+    (sim.now(), curve, sim.utilization())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_step_syncs_to_slowest() {
+        let mut sim = BspSim::new(8, 1);
+        sim.compute_step(1.0, 0.5);
+        let end = sim.now();
+        for tl in &sim.timelines {
+            assert!((tl.end() - end).abs() < 1e-12, "all tiles aligned after sync");
+        }
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let mut sim = BspSim::new(16, 2);
+        sim.compute_step(1.0, 0.0);
+        assert!((sim.utilization() - 1.0).abs() < 1e-9, "balanced = full util");
+        sim.exchange_step(1.0, 0.5);
+        let u = sim.utilization();
+        assert!(u < 1.0 && u > 0.5);
+    }
+
+    #[test]
+    fn busy_fraction_during_partial_exchange() {
+        let mut sim = BspSim::new(100, 3);
+        sim.exchange_step(1.0, 0.3);
+        assert!((sim.busy_fraction_at(0.5) - 0.3).abs() < 0.02);
+    }
+
+    #[test]
+    fn merged_tail_is_shorter_and_busier() {
+        // The Fig. 12 claim, quantitatively: merging the all-reduces both
+        // shortens the makespan and raises utilization.
+        let merged = simulate_weight_update_tail(256, 40, true, 7);
+        let unmerged = simulate_weight_update_tail(256, 40, false, 7);
+        assert!(
+            merged.now() < 0.7 * unmerged.now(),
+            "merged {} vs unmerged {}",
+            merged.now(),
+            unmerged.now()
+        );
+        assert!(merged.utilization() > unmerged.utilization());
+    }
+
+    #[test]
+    fn busy_curve_has_requested_samples() {
+        let sim = simulate_weight_update_tail(64, 10, true, 5);
+        let curve = sim.busy_curve(32);
+        assert_eq!(curve.len(), 32);
+        assert!(curve.iter().all(|&(_, f)| (0.0..=1.0).contains(&f)));
+    }
+}

@@ -1,0 +1,103 @@
+//! All-reduce cost model for data-parallel gradient combination
+//! (paper section 4.3, "Merged Communication Collectives").
+//!
+//! Ring all-reduce over IPU links: 2·(R-1)/R of the payload crosses each
+//! link, plus a fixed per-collective latency (sync + program switch).
+//! Merging all weight tensors into one collective pays that latency once;
+//! per-tensor collectives pay it per tensor — the tail Fig. 12 shows.
+
+use super::IpuArch;
+
+#[derive(Debug, Clone, Copy)]
+pub struct AllReduceConfig {
+    /// Number of replicas (IPUs).
+    pub replicas: usize,
+    /// Total gradient payload in bytes.
+    pub total_bytes: usize,
+    /// Number of weight tensors (≈ collectives when unmerged).
+    pub n_tensors: usize,
+    /// Merge all tensors into one collective (the paper's optimization)?
+    pub merged: bool,
+}
+
+/// Seconds for one gradient all-reduce across replicas.
+///
+/// Three terms: (1) a pod-wide BSP sync whose cost grows superlinearly
+/// with replica count — above 16 IPUs the ring spans gateway links between
+/// Bow-2000 units, and the paper's Table 1 shows exactly this sublinear
+/// strong-scaling (and QM9's regression at 64); (2) a per-collective
+/// program-switch latency — paid once when merged, once per weight tensor
+/// when not (Fig. 12's tail); (3) ring bandwidth over IPU links.
+pub fn allreduce_time(cfg: AllReduceConfig, arch: &IpuArch) -> f64 {
+    assert!(cfg.replicas >= 1);
+    if cfg.replicas == 1 {
+        return 0.0;
+    }
+    let r = cfg.replicas as f64;
+    let ring_factor = 2.0 * (r - 1.0) / r;
+    let collectives = if cfg.merged { 1 } else { cfg.n_tensors.max(1) };
+    let pod_sync = 3.75e-6 * r.powf(1.5);
+    let latency = arch.collective_latency_s * (1.0 + r.log2());
+    let bw_time = ring_factor * cfg.total_bytes as f64 / arch.ipu_link_bps;
+    pod_sync + collectives as f64 * latency + bw_time
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> IpuArch {
+        IpuArch::bow()
+    }
+
+    fn cfg(replicas: usize, merged: bool) -> AllReduceConfig {
+        AllReduceConfig {
+            replicas,
+            total_bytes: 4 * 233_000, // ~SchNet-100 gradient payload
+            n_tensors: 40,
+            merged,
+        }
+    }
+
+    #[test]
+    fn single_replica_is_free() {
+        assert_eq!(allreduce_time(cfg(1, true), &arch()), 0.0);
+    }
+
+    #[test]
+    fn merged_beats_unmerged() {
+        let a = arch();
+        for r in [2, 4, 8, 16, 32, 64] {
+            let merged = allreduce_time(cfg(r, true), &a);
+            let unmerged = allreduce_time(cfg(r, false), &a);
+            // the pod-sync term is shared; the per-collective latency is
+            // what merging eliminates
+            assert!(
+                unmerged > 1.4 * merged,
+                "r={r}: merged {merged}, unmerged {unmerged}"
+            );
+        }
+    }
+
+    #[test]
+    fn cost_grows_with_replicas() {
+        let a = arch();
+        let t8 = allreduce_time(cfg(8, true), &a);
+        let t64 = allreduce_time(cfg(64, true), &a);
+        assert!(t64 > t8);
+    }
+
+    #[test]
+    fn bandwidth_term_scales_with_payload() {
+        let a = arch();
+        let small = allreduce_time(
+            AllReduceConfig { replicas: 16, total_bytes: 1 << 10, n_tensors: 1, merged: true },
+            &a,
+        );
+        let big = allreduce_time(
+            AllReduceConfig { replicas: 16, total_bytes: 1 << 30, n_tensors: 1, merged: true },
+            &a,
+        );
+        assert!(big > 5.0 * small);
+    }
+}

@@ -1,0 +1,14 @@
+//! IPU machine model (DESIGN.md §2 substitution for real Bow Pod hardware):
+//! architecture constants, collective cost models (merged vs per-tensor
+//! all-reduce), and a BSP superstep simulator that produces the tile-busy
+//! timelines of paper Fig. 12.
+
+pub mod arch;
+pub mod bsp;
+pub mod collectives;
+
+pub use arch::IpuArch;
+pub use bsp::{
+    simulate_weight_update_tail, simulate_weight_update_tail_curve, BspSim, Phase, TileTimeline,
+};
+pub use collectives::{allreduce_time, AllReduceConfig};

@@ -1,0 +1,32 @@
+//! molpack — hardware/software co-design for molecular GNN training.
+//!
+//! Rust reproduction of "Extreme Acceleration of Graph Neural Network-based
+//! Prediction Models for Quantum Chemistry" (Graphcore/PNNL, 2022).
+//!
+//! Three-layer architecture:
+//! * **L3 (this crate)** — coordinator: datasets, batch packing (LPFHP),
+//!   scatter/gather planner, BSP tile-machine performance model, async
+//!   dataloader with prefetching, data-parallel training orchestrator.
+//! * **L2 (python/compile/model.py)** — SchNet forward/backward in JAX,
+//!   AOT-lowered to HLO text artifacts at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot spots (RBF expansion, fused continuous-filter MLP, scatter-add
+//!   as one-hot matmul), checked against a pure-jnp oracle.
+//!
+//! Python never runs on the training path: the Rust binary loads
+//! `artifacts/*.hlo.txt` via the PJRT C API (`xla` crate) and drives the
+//! whole training loop natively.
+
+pub mod baseline;
+pub mod coordinator;
+pub mod datasets;
+pub mod figures;
+pub mod graph;
+pub mod ipu;
+pub mod optim;
+pub mod packing;
+pub mod perfmodel;
+pub mod planner;
+pub mod runtime;
+pub mod train;
+pub mod util;

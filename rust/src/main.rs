@@ -1,0 +1,270 @@
+//! molpack CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   figures [--fig N | --table 1 | --all]   regenerate paper exhibits
+//!   train [--graphs N] [--epochs E] [--workers W] [--prefetch D]
+//!                                            real PJRT training run
+//!   characterize                             Fig. 5 dataset profiles
+//!   pack [--dataset NAME] [--s-m N]          run LPFHP + baselines once
+//!   plan [--edges E] [--nodes N] [--feat F]  scatter/gather planner demo
+//!
+//! (Hand-rolled argument parsing: the offline crate set has no clap.)
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+use molpack::coordinator::PipelineConfig;
+use molpack::datasets::{HydroNet, PaperDataset};
+use molpack::ipu::IpuArch;
+use molpack::packing::Packer;
+use molpack::planner::{plan_gather, plan_scatter, OpDims};
+use molpack::runtime::Engine;
+use molpack::train::{train, TrainConfig};
+use molpack::{figures, perfmodel};
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                let val = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    i += 1;
+                    argv[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                flags.push((key.to_string(), val));
+            }
+            i += 1;
+        }
+        Args { flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let out = if args.get("all").is_some() {
+        figures::all()
+    } else if args.get("table") == Some("1") {
+        figures::table1()
+    } else {
+        match args.get("fig") {
+            Some("5") => figures::fig5(),
+            Some("6") => figures::fig6(),
+            Some("7") => figures::fig7(),
+            Some("8") => figures::fig8(),
+            Some("9") => figures::fig9(),
+            Some("10") => figures::fig10(),
+            Some("11") => figures::fig11(),
+            Some("12") => figures::fig12(),
+            Some("13") => figures::table1(),
+            Some(other) => bail!("unknown figure {other}"),
+            None => figures::all(),
+        }
+    };
+    println!("{out}");
+    Ok(())
+}
+
+/// Data-parallel mode: R logical replicas, gradient all-reduce in Rust
+/// (merged or per-tensor), native Adam (paper section 4.3 made real).
+fn cmd_train_dp(args: &Args, engine: &Engine, graphs: usize, epochs: u64) -> Result<()> {
+    use molpack::coordinator::{plan_epoch, Batcher, DataParallel};
+    let replicas = args.usize_or("replicas", 2);
+    let merged = args.get("no-merged").is_none();
+    let source = HydroNet::new(graphs, 42);
+    let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
+    let mut dp = DataParallel::new(engine, replicas, merged)?;
+    println!("data-parallel: {replicas} replicas, merged_collective={merged}");
+    for epoch in 0..epochs {
+        let plan = plan_epoch(&source, &batcher, &PipelineConfig::default(), epoch);
+        let mut losses = Vec::new();
+        for group in plan.chunks(replicas) {
+            if group.len() < replicas {
+                break; // drop the ragged tail group
+            }
+            let batches: Vec<_> = group
+                .iter()
+                .map(|p| batcher.assemble(p, &source))
+                .collect::<Result<_>>()?;
+            losses.push(dp.step(engine, &batches)? as f64);
+        }
+        let mean = losses.iter().sum::<f64>() / losses.len().max(1) as f64;
+        println!("epoch {epoch}: mean loss {mean:.5} over {} dp-steps", losses.len());
+    }
+    let s = dp.stats;
+    println!(
+        "\ncollective stats: {} steps | grad {:.1} ms/step | allreduce {:.3} ms/step | adam {:.3} ms/step",
+        s.steps,
+        1e3 * s.grad_secs / s.steps as f64,
+        1e3 * s.allreduce_secs / s.steps as f64,
+        1e3 * s.optimizer_secs / s.steps as f64,
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let graphs = args.usize_or("graphs", 2000);
+    let epochs = args.usize_or("epochs", 3) as u64;
+    let engine = Engine::load("artifacts")?;
+    println!(
+        "engine up: platform={} params={}",
+        engine.platform(),
+        engine.manifest.param_count
+    );
+    if args.get("replicas").is_some() {
+        return cmd_train_dp(args, &engine, graphs, epochs);
+    }
+    let mut state = engine.init_state()?;
+    let source = Arc::new(HydroNet::new(graphs, 42));
+    let cfg = TrainConfig {
+        epochs,
+        pipeline: PipelineConfig {
+            workers: args.usize_or("workers", 4),
+            prefetch_depth: args.usize_or("prefetch", 4),
+            packer: Packer::Lpfhp,
+            shuffle_seed: 42,
+            ordered: true,
+        },
+        max_batches_per_epoch: args.usize_or("max-batches", 0),
+        log_every: 50,
+    };
+    let records = train(&engine, &mut state, source, &cfg, |e, b, l| {
+        println!("  epoch {e} batch {b}: loss {l:.5}");
+    })?;
+    println!("\nepoch | mean MSE | graphs/s");
+    for r in &records {
+        println!("{:5} | {:8.5} | {:8.1}", r.epoch, r.mean_loss, r.graphs_per_sec);
+    }
+    let s = engine.stats();
+    println!(
+        "\nengine: {} steps, {:.1}ms execute/step, {:.2}ms marshal/step",
+        s.steps,
+        1e3 * s.execute_secs / s.steps.max(1) as f64,
+        1e3 * s.marshal_secs / s.steps.max(1) as f64
+    );
+    Ok(())
+}
+
+fn cmd_pack(args: &Args) -> Result<()> {
+    let name = args.get("dataset").unwrap_or("4.5M");
+    let ds = PaperDataset::all()
+        .into_iter()
+        .find(|d| d.name() == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name} (QM9/500K/2.7M/4.5M)"))?;
+    let sample = args.usize_or("sample", 20_000);
+    let src = ds.source((ds.full_len() / sample).max(1), 3);
+    let sizes: Vec<usize> = (0..src.len().min(sample)).map(|i| src.n_atoms(i)).collect();
+    let max = *sizes.iter().max().unwrap();
+    let s_m = args.usize_or("s-m", max);
+    println!(
+        "{name}: {} graphs sampled, sizes {}..{max}, s_m={s_m}",
+        sizes.len(),
+        sizes.iter().min().unwrap()
+    );
+    println!("{:>10} | {:>8} | {:>10} | {:>8}", "packer", "packs", "padding", "time");
+    for p in [
+        Packer::Padding,
+        Packer::NextFit,
+        Packer::FirstFitDecreasing,
+        Packer::BestFitDecreasing,
+        Packer::Lpfhp,
+    ] {
+        let t0 = std::time::Instant::now();
+        let packing = p.run(&sizes, s_m, None);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:>10} | {:>8} | {:>9.2}% | {:>7.1}ms",
+            p.name(),
+            packing.n_packs(),
+            packing.padding_fraction() * 100.0,
+            dt * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let d = OpDims {
+        i: args.usize_or("edges", 4608),
+        m: args.usize_or("nodes", 384),
+        n: args.usize_or("feat", 64),
+    };
+    let arch = IpuArch::bow();
+    let g = plan_gather(d, &arch);
+    let s = plan_scatter(d, &arch);
+    println!("op dims: I={} M={} N={}", d.i, d.m, d.n);
+    println!(
+        "gather : P=({},{},{}) tiles={} cycles={:.0} sram/tile={}B",
+        g.factors.p_i,
+        g.factors.p_m,
+        g.factors.p_n,
+        g.factors.tiles_used(),
+        g.cycles,
+        g.sram_bytes
+    );
+    println!(
+        "scatter: P=({},{},{}) tiles={} cycles={:.0} sram/tile={}B",
+        s.factors.p_i,
+        s.factors.p_m,
+        s.factors.p_n,
+        s.factors.tiles_used(),
+        s.cycles,
+        s.sram_bytes
+    );
+    Ok(())
+}
+
+fn cmd_characterize() -> Result<()> {
+    println!("{}", figures::fig5());
+    for ds in PaperDataset::all() {
+        let w = perfmodel::WorkloadProfile::measure(ds, 2000, 6.0, 1);
+        println!(
+            "{:>5}: avg_nodes {:.1}, max {}, avg_degree {:.1}, lpfhp_eff {:.3}, pad_eff {:.3}",
+            w.name,
+            w.avg_nodes,
+            w.max_nodes,
+            w.avg_degree,
+            w.packing_efficiency,
+            w.padding_efficiency()
+        );
+    }
+    Ok(())
+}
+
+const USAGE: &str = "usage: molpack <figures|train|pack|plan|characterize> [flags]\n\
+  figures [--fig 5..13 | --table 1 | --all]\n\
+  train [--graphs N] [--epochs E] [--workers W] [--prefetch D] [--max-batches B]\n\
+  pack [--dataset QM9|500K|2.7M|4.5M] [--s-m N] [--sample N]\n\
+  plan [--edges I] [--nodes M] [--feat N]\n\
+  characterize";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "figures" => cmd_figures(&args),
+        "train" => cmd_train(&args),
+        "pack" => cmd_pack(&args),
+        "plan" => cmd_plan(&args),
+        "characterize" => cmd_characterize(),
+        other => bail!("unknown command {other}\n{USAGE}"),
+    }
+}

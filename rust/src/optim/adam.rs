@@ -1,0 +1,102 @@
+//! Adam (Kingma & Ba) over a flat f32 parameter vector — the Rust-side
+//! twin of the in-graph optimizer baked into `train_step.hlo.txt`. Uses
+//! the same hyperparameters as `python/compile/config.py::OptimizerConfig`
+//! so the two paths are numerically interchangeable.
+
+/// Hyperparameters (paper section 5.1.2: Adam, lr 1e-3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdamConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+/// Optimizer state: first/second moments + step counter.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub cfg: AdamConfig,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: u32,
+}
+
+impl Adam {
+    pub fn new(cfg: AdamConfig, n_params: usize) -> Self {
+        Adam { cfg, m: vec![0.0; n_params], v: vec![0.0; n_params], t: 0 }
+    }
+
+    /// One update step: params <- params - lr * m_hat / (sqrt(v_hat) + eps).
+    /// Matches the in-graph formulation (bias correction via beta^t).
+    pub fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), self.m.len(), "param count mismatch");
+        assert_eq!(grad.len(), self.m.len(), "grad count mismatch");
+        self.t += 1;
+        let c = self.cfg;
+        let bc1 = 1.0 - c.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - c.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = c.beta1 * self.m[i] + (1.0 - c.beta1) * g;
+            self.v[i] = c.beta2 * self.v[i] + (1.0 - c.beta2) * g * g;
+            let m_hat = self.m[i] / bc1;
+            let v_hat = self.v[i] / bc2;
+            params[i] -= c.lr * m_hat / (v_hat.sqrt() + c.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_moves_by_lr_in_grad_direction() {
+        // with bias correction, the very first Adam step is ~lr * sign(g)
+        let mut adam = Adam::new(AdamConfig::default(), 3);
+        let mut p = vec![1.0f32, 2.0, 3.0];
+        adam.step(&mut p, &[0.5, -0.5, 0.0]);
+        assert!((p[0] - (1.0 - 1e-3)).abs() < 1e-5);
+        assert!((p[1] - (2.0 + 1e-3)).abs() < 1e-5);
+        assert_eq!(p[2], 3.0);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize 0.5*(x-3)^2 — Adam should get close in a few hundred steps
+        let mut adam = Adam::new(AdamConfig { lr: 0.05, ..Default::default() }, 1);
+        let mut x = vec![0.0f32];
+        for _ in 0..500 {
+            let g = x[0] - 3.0;
+            adam.step(&mut x, &[g]);
+        }
+        assert!((x[0] - 3.0).abs() < 0.05, "x = {}", x[0]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let run = || {
+            let mut adam = Adam::new(AdamConfig::default(), 4);
+            let mut p = vec![0.1f32; 4];
+            for i in 0..10 {
+                let g: Vec<f32> = (0..4).map(|j| ((i + j) as f32).sin()).collect();
+                adam.step(&mut p, &g);
+            }
+            p
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    #[should_panic(expected = "grad count mismatch")]
+    fn rejects_mismatched_grad() {
+        let mut adam = Adam::new(AdamConfig::default(), 2);
+        adam.step(&mut [0.0, 0.0], &[1.0]);
+    }
+}

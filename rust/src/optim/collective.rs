@@ -1,0 +1,105 @@
+//! Gradient all-reduce (mean) across replicas — the Rust realization of
+//! the paper's merged vs per-tensor weight-update collectives
+//! (section 4.3 / Fig. 12), measurable on real gradients.
+
+use crate::runtime::ParamEntry;
+
+/// Merged collective: one pass over the full flat gradient vectors.
+/// Averages `grads[1..]` into `grads[0]`'s buffer and returns it.
+pub fn allreduce_mean_merged(grads: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!grads.is_empty());
+    let n = grads[0].len();
+    assert!(grads.iter().all(|g| g.len() == n), "ragged gradient set");
+    let scale = 1.0 / grads.len() as f32;
+    let mut out = vec![0.0f32; n];
+    for g in grads {
+        for (o, x) in out.iter_mut().zip(g) {
+            *o += x;
+        }
+    }
+    for o in &mut out {
+        *o *= scale;
+    }
+    out
+}
+
+/// Per-tensor collectives: one reduction call per named parameter slice —
+/// the unmerged baseline. Numerically identical; the difference is the
+/// per-call overhead (visible in the bench as many small passes instead of
+/// one long one, and on real hardware as Fig. 12's sync tail).
+pub fn allreduce_mean_per_tensor(grads: &[Vec<f32>], layout: &[ParamEntry]) -> Vec<f32> {
+    assert!(!grads.is_empty());
+    let n = grads[0].len();
+    let mut out = vec![0.0f32; n];
+    let scale = 1.0 / grads.len() as f32;
+    for entry in layout {
+        let lo = entry.offset;
+        let hi = entry.offset + entry.size;
+        for g in grads {
+            for i in lo..hi {
+                out[i] += g[i];
+            }
+        }
+        for o in &mut out[lo..hi] {
+            *o *= scale;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout(sizes: &[usize]) -> Vec<ParamEntry> {
+        let mut off = 0;
+        sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| {
+                let e = ParamEntry {
+                    name: format!("p{i}"),
+                    shape: vec![s],
+                    offset: off,
+                    size: s,
+                };
+                off += s;
+                e
+            })
+            .collect()
+    }
+
+    #[test]
+    fn merged_mean_is_elementwise_average() {
+        let grads = vec![vec![1.0, 2.0, 3.0], vec![3.0, 2.0, 1.0]];
+        assert_eq!(allreduce_mean_merged(&grads), vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn single_replica_is_identity() {
+        let g = vec![vec![0.5, -0.5]];
+        assert_eq!(allreduce_mean_merged(&g), g[0]);
+    }
+
+    #[test]
+    fn per_tensor_matches_merged() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(4);
+        let sizes = [10usize, 3, 25, 1, 61];
+        let n: usize = sizes.iter().sum();
+        let grads: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..n).map(|_| rng.f32() - 0.5).collect())
+            .collect();
+        let a = allreduce_mean_merged(&grads);
+        let b = allreduce_mean_per_tensor(&grads, &layout(&sizes));
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn rejects_ragged_grads() {
+        allreduce_mean_merged(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+}

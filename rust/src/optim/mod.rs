@@ -1,0 +1,14 @@
+//! Native optimizer + gradient collectives for the data-parallel path.
+//!
+//! When the coordinator runs R replicas, each executes the `grad_step`
+//! artifact (loss + flat gradient); the gradients are combined with
+//! `allreduce_mean` — merged into one pass over the full vector, like the
+//! paper's merged communication collectives (section 4.3) — and the
+//! update is applied by this Rust Adam, bit-compatible with the fused
+//! in-graph Adam of `train_step`.
+
+pub mod adam;
+pub mod collective;
+
+pub use adam::{Adam, AdamConfig};
+pub use collective::{allreduce_mean_merged, allreduce_mean_per_tensor};

@@ -1,0 +1,189 @@
+//! Baseline packers the paper compares against (section 4.1 + the classic
+//! bin-packing literature it cites): naive padding, next-fit, first-fit
+//! decreasing, and best-fit decreasing.
+
+use super::pack::{Pack, Packing};
+
+/// Naive padding (paper Fig. 4a): one graph per pack, padded to `s_m`.
+/// This is the "pad to max vertices" IPU baseline, and also the shape of
+/// the out-of-the-box GPU implementation's batches.
+pub fn padding(sizes: &[usize], s_m: usize) -> Packing {
+    let packs = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| {
+            assert!(s <= s_m, "graph of size {s} exceeds budget {s_m}");
+            Pack { items: vec![i as u32], used_nodes: s }
+        })
+        .collect();
+    Packing { packs, s_m }
+}
+
+/// Next-fit (Johnson 1973): keep a single open pack; if the next item
+/// doesn't fit, close it and open a new one. O(n), worst quality.
+pub fn next_fit(sizes: &[usize], s_m: usize, max_items: Option<usize>) -> Packing {
+    let cap = max_items.unwrap_or(usize::MAX);
+    let mut packs: Vec<Pack> = Vec::new();
+    let mut open = Pack::default();
+    for (i, &s) in sizes.iter().enumerate() {
+        assert!(s <= s_m, "graph of size {s} exceeds budget {s_m}");
+        if open.used_nodes + s > s_m || open.items.len() >= cap {
+            if !open.items.is_empty() {
+                packs.push(std::mem::take(&mut open));
+            }
+        }
+        open.items.push(i as u32);
+        open.used_nodes += s;
+    }
+    if !open.items.is_empty() {
+        packs.push(open);
+    }
+    Packing { packs, s_m }
+}
+
+/// First-fit decreasing: sort by size descending, place each item in the
+/// first pack where it fits. The O(n log n) classic with the 11/9 OPT + 1
+/// guarantee.
+pub fn first_fit_decreasing(sizes: &[usize], s_m: usize, max_items: Option<usize>) -> Packing {
+    let cap = max_items.unwrap_or(usize::MAX);
+    let mut order: Vec<u32> = (0..sizes.len() as u32).collect();
+    order.sort_by(|&a, &b| sizes[b as usize].cmp(&sizes[a as usize]).then(a.cmp(&b)));
+    let mut packs: Vec<Pack> = Vec::new();
+    for i in order {
+        let s = sizes[i as usize];
+        assert!(s <= s_m, "graph of size {s} exceeds budget {s_m}");
+        let slot = packs
+            .iter_mut()
+            .find(|p| p.used_nodes + s <= s_m && p.items.len() < cap);
+        match slot {
+            Some(p) => {
+                p.items.push(i);
+                p.used_nodes += s;
+            }
+            None => packs.push(Pack { items: vec![i], used_nodes: s }),
+        }
+    }
+    Packing { packs, s_m }
+}
+
+/// Best-fit decreasing: like FFD but choose the pack with minimal residual
+/// space — the per-item analogue of what LPFHP does on histograms.
+pub fn best_fit_decreasing(sizes: &[usize], s_m: usize, max_items: Option<usize>) -> Packing {
+    let cap = max_items.unwrap_or(usize::MAX);
+    let mut order: Vec<u32> = (0..sizes.len() as u32).collect();
+    order.sort_by(|&a, &b| sizes[b as usize].cmp(&sizes[a as usize]).then(a.cmp(&b)));
+    let mut packs: Vec<Pack> = Vec::new();
+    for i in order {
+        let s = sizes[i as usize];
+        assert!(s <= s_m, "graph of size {s} exceeds budget {s_m}");
+        let slot = packs
+            .iter_mut()
+            .filter(|p| p.used_nodes + s <= s_m && p.items.len() < cap)
+            .min_by_key(|p| s_m - p.used_nodes - s);
+        match slot {
+            Some(p) => {
+                p.items.push(i);
+                p.used_nodes += s;
+            }
+            None => packs.push(Pack { items: vec![i], used_nodes: s }),
+        }
+    }
+    Packing { packs, s_m }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::lpfhp::lpfhp;
+    use crate::packing::pack::lower_bound_packs;
+    use crate::util::proptest::{check, gen_sizes};
+
+    #[test]
+    fn padding_uses_one_pack_per_graph() {
+        let sizes = [10, 20, 30];
+        let p = padding(&sizes, 90);
+        p.assert_valid(&sizes, Some(1));
+        assert_eq!(p.n_packs(), 3);
+        assert!((p.padding_fraction() - (1.0 - 60.0 / 270.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn next_fit_is_valid_but_weak() {
+        let sizes = [50, 60, 50, 60]; // NF wastes: 50|60|50|60
+        let p = next_fit(&sizes, 100, None);
+        p.assert_valid(&sizes, None);
+        assert_eq!(p.n_packs(), 4);
+        let ffd = first_fit_decreasing(&sizes, 100, None);
+        assert!(ffd.n_packs() <= p.n_packs());
+    }
+
+    #[test]
+    fn ffd_respects_guarantee() {
+        check(150, |rng| {
+            let s_m = rng.range(20, 120);
+            let sizes = gen_sizes(rng, 1, s_m, 200);
+            let p = first_fit_decreasing(&sizes, s_m, None);
+            p.assert_valid(&sizes, None);
+            let opt_lb = lower_bound_packs(&sizes, s_m);
+            // FFD <= 11/9 OPT + 1, and OPT >= lower bound is unusable
+            // directly; check the (weaker) volume-based form.
+            assert!(p.n_packs() as f64 <= (11.0 / 9.0) * opt_lb.max(1) as f64 + 6.0);
+        });
+    }
+
+    #[test]
+    fn bfd_never_worse_than_ffd_on_these() {
+        check(100, |rng| {
+            let s_m = rng.range(20, 120);
+            let sizes = gen_sizes(rng, 1, s_m, 200);
+            let bfd = best_fit_decreasing(&sizes, s_m, None);
+            bfd.assert_valid(&sizes, None);
+        });
+    }
+
+    #[test]
+    fn all_heuristics_beat_padding() {
+        check(100, |rng| {
+            let s_m = rng.range(30, 120);
+            let sizes = gen_sizes(rng, 1, s_m / 2, 200); // small graphs
+            let pad = padding(&sizes, s_m).n_packs();
+            for p in [
+                next_fit(&sizes, s_m, None),
+                first_fit_decreasing(&sizes, s_m, None),
+                best_fit_decreasing(&sizes, s_m, None),
+                lpfhp(&sizes, s_m, None),
+            ] {
+                p.assert_valid(&sizes, None);
+                assert!(p.n_packs() <= pad);
+            }
+        });
+    }
+
+    #[test]
+    fn lpfhp_matches_bfd_quality_class() {
+        // LPFHP is histogram-level best-fit; on large inputs its pack count
+        // should be within a whisker of per-item BFD.
+        let mut rng = crate::util::Rng::new(3);
+        let sizes: Vec<usize> = (0..10_000).map(|_| rng.range(9, 91)).collect();
+        let a = lpfhp(&sizes, 96, None).n_packs();
+        let b = best_fit_decreasing(&sizes, 96, None).n_packs();
+        let ratio = a as f64 / b as f64;
+        assert!(ratio < 1.02, "lpfhp {a} vs bfd {b}");
+    }
+
+    #[test]
+    fn item_caps_hold_for_all() {
+        check(80, |rng| {
+            let s_m = rng.range(20, 80);
+            let cap = rng.range(1, 6);
+            let sizes = gen_sizes(rng, 1, s_m, 120);
+            for p in [
+                next_fit(&sizes, s_m, Some(cap)),
+                first_fit_decreasing(&sizes, s_m, Some(cap)),
+                best_fit_decreasing(&sizes, s_m, Some(cap)),
+            ] {
+                p.assert_valid(&sizes, Some(cap));
+            }
+        });
+    }
+}

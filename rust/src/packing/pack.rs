@@ -1,0 +1,155 @@
+//! Pack types and packing-quality metrics (paper section 4.1, Eq. 4).
+
+/// One pack: a set of graph indices whose node counts sum to ≤ the node
+/// budget `s_m`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Pack {
+    pub items: Vec<u32>,
+    pub used_nodes: usize,
+}
+
+impl Pack {
+    pub fn slack(&self, s_m: usize) -> usize {
+        s_m - self.used_nodes
+    }
+}
+
+/// Result of a packing run over a dataset's size profile.
+#[derive(Debug, Clone, Default)]
+pub struct Packing {
+    pub packs: Vec<Pack>,
+    /// Node budget per pack the packing was computed for.
+    pub s_m: usize,
+}
+
+impl Packing {
+    pub fn n_packs(&self) -> usize {
+        self.packs.len()
+    }
+
+    pub fn total_real_nodes(&self) -> usize {
+        self.packs.iter().map(|p| p.used_nodes).sum()
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.packs.len() * self.s_m
+    }
+
+    /// Fraction of node slots wasted on padding, in [0, 1). The paper's
+    /// Fig. 8 "efficiency" is `1 - padding_fraction` relative to the naive
+    /// padding baseline.
+    pub fn padding_fraction(&self) -> f64 {
+        if self.packs.is_empty() {
+            return 0.0;
+        }
+        1.0 - self.total_real_nodes() as f64 / self.total_slots() as f64
+    }
+
+    /// Node-slot utilization in (0, 1].
+    pub fn efficiency(&self) -> f64 {
+        1.0 - self.padding_fraction()
+    }
+
+    /// Sanity check: every graph of `sizes` appears exactly once and every
+    /// pack respects the node budget (and optional item cap). Used by unit
+    /// and property tests of every packer.
+    pub fn assert_valid(&self, sizes: &[usize], max_items: Option<usize>) {
+        let mut seen = vec![false; sizes.len()];
+        for (pi, p) in self.packs.iter().enumerate() {
+            assert!(!p.items.is_empty(), "pack {pi} is empty");
+            let mut used = 0;
+            for &it in &p.items {
+                let idx = it as usize;
+                assert!(idx < sizes.len(), "pack {pi} references bogus item {idx}");
+                assert!(!seen[idx], "item {idx} assigned twice");
+                seen[idx] = true;
+                used += sizes[idx];
+            }
+            assert_eq!(used, p.used_nodes, "pack {pi} used_nodes wrong");
+            assert!(
+                used <= self.s_m,
+                "pack {pi} overflows: {used} > {}",
+                self.s_m
+            );
+            if let Some(cap) = max_items {
+                assert!(p.items.len() <= cap, "pack {pi} has too many items");
+            }
+        }
+        if let Some(missing) = seen.iter().position(|&s| !s) {
+            panic!("item {missing} not packed");
+        }
+    }
+}
+
+/// Lower bound on pack count: ceil(total_nodes / s_m). No packing can beat
+/// this; LPFHP typically lands within a few percent of it.
+pub fn lower_bound_packs(sizes: &[usize], s_m: usize) -> usize {
+    let total: usize = sizes.iter().sum();
+    total.div_ceil(s_m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn packing_of(sizes: &[usize], groups: &[&[u32]], s_m: usize) -> Packing {
+        Packing {
+            packs: groups
+                .iter()
+                .map(|g| Pack {
+                    items: g.to_vec(),
+                    used_nodes: g.iter().map(|&i| sizes[i as usize]).sum(),
+                })
+                .collect(),
+            s_m,
+        }
+    }
+
+    #[test]
+    fn metrics_on_perfect_packing() {
+        let sizes = [50, 50, 100];
+        let p = packing_of(&sizes, &[&[0, 1], &[2]], 100);
+        p.assert_valid(&sizes, None);
+        assert_eq!(p.padding_fraction(), 0.0);
+        assert_eq!(p.efficiency(), 1.0);
+        assert_eq!(p.n_packs(), lower_bound_packs(&sizes, 100));
+    }
+
+    #[test]
+    fn metrics_on_half_empty_packing() {
+        let sizes = [50];
+        let p = packing_of(&sizes, &[&[0]], 100);
+        assert!((p.padding_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "assigned twice")]
+    fn validation_catches_duplicates() {
+        let sizes = [10, 10];
+        let p = packing_of(&sizes, &[&[0, 0], &[1]], 100);
+        p.assert_valid(&sizes, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "not packed")]
+    fn validation_catches_missing_items() {
+        let sizes = [10, 10];
+        let p = packing_of(&sizes, &[&[0]], 100);
+        p.assert_valid(&sizes, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows")]
+    fn validation_catches_overflow() {
+        let sizes = [60, 60];
+        let p = packing_of(&sizes, &[&[0, 1]], 100);
+        p.assert_valid(&sizes, None);
+    }
+
+    #[test]
+    fn lower_bound_is_ceiling() {
+        assert_eq!(lower_bound_packs(&[30, 30, 30], 90), 1);
+        assert_eq!(lower_bound_packs(&[30, 30, 31], 90), 2);
+        assert_eq!(lower_bound_packs(&[], 90), 0);
+    }
+}

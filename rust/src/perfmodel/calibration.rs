@@ -1,0 +1,94 @@
+//! Calibration check: regenerate Table 1 from the model and compare the
+//! *shape* against the paper (who wins, roughly by how much, where the
+//! knees fall). Run with `cargo test --release calibration -- --nocapture`
+//! to print the table while tuning constants.
+
+use crate::perfmodel::WorkloadProfile;
+
+/// Paper Table 1 (seconds/epoch): rows QM9, 500K, 2.7M, 4.5M; columns
+/// 8/16/32/64 IPUs and 8 GPUs.
+pub const PAPER_TABLE1: [(&str, [f64; 4], f64); 4] = [
+    ("QM9", [0.91, 0.72, 0.68, 0.9], 1.86),
+    ("500K", [8.39, 5.36, 5.0, 5.57], 6.87),
+    ("2.7M", [35.07, 21.37, 14.81, 11.74], 34.36),
+    ("4.5M", [62.56, 35.0, 27.03, 19.38], 60.0),
+];
+
+/// Synthetic workload profiles with the paper's published statistics
+/// (measured profiles from the generators are used by the figure harness;
+/// these fixed ones keep calibration deterministic).
+pub fn paper_profiles() -> Vec<WorkloadProfile> {
+    vec![
+        WorkloadProfile {
+            name: "QM9".into(),
+            n_graphs: 134_000,
+            avg_nodes: 18.0,
+            max_nodes: 29,
+            avg_degree: 12.0,
+            packing_efficiency: 0.97,
+        },
+        WorkloadProfile {
+            name: "500K".into(),
+            n_graphs: 500_000,
+            avg_nodes: 52.0,
+            max_nodes: 75,
+            avg_degree: 18.0,
+            packing_efficiency: 0.90,
+        },
+        WorkloadProfile {
+            name: "2.7M".into(),
+            n_graphs: 2_700_000,
+            avg_nodes: 52.0,
+            max_nodes: 75,
+            avg_degree: 18.0,
+            packing_efficiency: 0.90,
+        },
+        WorkloadProfile {
+            name: "4.5M".into(),
+            n_graphs: 4_500_000,
+            avg_nodes: 60.0,
+            max_nodes: 90,
+            avg_degree: 20.0,
+            packing_efficiency: 0.85,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::{estimate_gpu_epoch, GpuArch};
+    use crate::ipu::IpuArch;
+    use crate::perfmodel::{estimate_epoch, OptFlags, SchNetDims, TrainSetup};
+
+    #[test]
+    fn calibration_table() {
+        let ipu = IpuArch::bow();
+        let gpu = GpuArch::a100();
+        let model = SchNetDims::default();
+        println!(
+            "{:>6} | {:>8} {:>8} {:>8} {:>8} | {:>8} | paper-ipu16 paper-gpu speedup(model/paper)",
+            "ds", "8", "16", "32", "64", "8GPU"
+        );
+        for (w, (name, paper_ipu, paper_gpu)) in
+            paper_profiles().iter().zip(PAPER_TABLE1.iter())
+        {
+            let mut row = Vec::new();
+            for r in [8usize, 16, 32, 64] {
+                let e = estimate_epoch(
+                    w,
+                    &TrainSetup { n_ipus: r, opts: OptFlags::ALL, ..Default::default() },
+                    &ipu,
+                );
+                row.push(e.epoch_secs);
+            }
+            let g = estimate_gpu_epoch(w, &model, 8, &gpu);
+            let model_speedup = g.epoch_secs / row[1];
+            let paper_speedup = paper_gpu / paper_ipu[1];
+            println!(
+                "{name:>6} | {:8.2} {:8.2} {:8.2} {:8.2} | {:8.2} | model x{model_speedup:.2} paper x{paper_speedup:.2}",
+                row[0], row[1], row[2], row[3], g.epoch_secs
+            );
+        }
+    }
+}

@@ -1,0 +1,412 @@
+//! SchNet-on-IPU performance model: composes the planner (Eqs. 8–9), the
+//! collective model and host-I/O overlap into per-epoch time / throughput
+//! for a dataset × replica-count × optimization-flag setting.
+//!
+//! This is the figure engine for Table 1 and Figs. 6/7/9/10/13. Absolute
+//! times are estimates (our substrate is a model, not a Pod64 — DESIGN.md
+//! §2); the *shapes* the paper reports are what the model must reproduce:
+//! packing ≥ padding and growing with scale, QM9 throughput peaking at 32
+//! IPUs, water clusters scaling through 64, merged collectives and
+//! optimized softplus shaving per-step time, prefetch helping the big
+//! dataset and hurting the small one.
+
+pub mod calibration;
+pub mod workload;
+
+pub use workload::WorkloadProfile;
+
+use crate::ipu::{allreduce_time, AllReduceConfig, IpuArch};
+use crate::planner::{plan_gather, plan_scatter, OpDims};
+
+/// SchNet dimensions for the performance model (paper defaults: hidden
+/// 100, 25 Gaussians, 4 interaction blocks).
+#[derive(Debug, Clone, Copy)]
+pub struct SchNetDims {
+    pub hidden: usize,
+    pub n_rbf: usize,
+    pub n_interactions: usize,
+}
+
+impl Default for SchNetDims {
+    fn default() -> Self {
+        SchNetDims { hidden: 100, n_rbf: 25, n_interactions: 4 }
+    }
+}
+
+impl SchNetDims {
+    /// Approximate parameter count (embedding + blocks + readout).
+    pub fn param_count(&self) -> usize {
+        let f = self.hidden;
+        let k = self.n_rbf;
+        100 * f + self.n_interactions * (f * f + k * f + f + f * f + f + 2 * (f * f + f))
+            + f * (f / 2)
+            + f / 2
+            + f / 2
+            + 1
+    }
+}
+
+/// The paper's optimization switches (Fig. 6 legend, applied left to
+/// right: packing, async I/O, optimized softplus, merged all-reduce,
+/// prefetch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OptFlags {
+    pub packing: bool,
+    pub async_io: bool,
+    pub opt_softplus: bool,
+    pub merged_allreduce: bool,
+    pub prefetch: bool,
+}
+
+impl OptFlags {
+    pub const NONE: OptFlags = OptFlags {
+        packing: false,
+        async_io: false,
+        opt_softplus: false,
+        merged_allreduce: false,
+        prefetch: false,
+    };
+    pub const ALL: OptFlags = OptFlags {
+        packing: true,
+        async_io: true,
+        opt_softplus: true,
+        merged_allreduce: true,
+        prefetch: true,
+    };
+
+    /// The Fig. 6 progression: each step enables one more optimization.
+    pub fn progression() -> Vec<(&'static str, OptFlags)> {
+        let mut f = OptFlags::NONE;
+        let mut out = vec![];
+        f.packing = true;
+        out.push(("Packing", f));
+        f.async_io = true;
+        out.push(("Async I/O", f));
+        f.opt_softplus = true;
+        out.push(("Opt. softplus", f));
+        f.merged_allreduce = true;
+        out.push(("Merged allreduce", f));
+        f.prefetch = true;
+        out.push(("Prefetch", f));
+        out
+    }
+}
+
+/// A full training setup to evaluate.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainSetup {
+    pub model: SchNetDims,
+    /// Packs (or padded graph slots) per device batch.
+    pub packs_per_batch: usize,
+    pub n_ipus: usize,
+    pub opts: OptFlags,
+    /// Host-side per-graph batch preparation cost, seconds (disk decode +
+    /// collation). Two-level caching is folded in here.
+    pub host_prep_per_graph_s: f64,
+    /// Number of asynchronous dataloader workers when async_io is on.
+    pub io_workers: usize,
+}
+
+impl Default for TrainSetup {
+    fn default() -> Self {
+        TrainSetup {
+            model: SchNetDims::default(),
+            packs_per_batch: 8,
+            n_ipus: 16,
+            opts: OptFlags::ALL,
+            host_prep_per_graph_s: 24e-6,
+            io_workers: 8,
+        }
+    }
+}
+
+/// Model output for one (dataset, setup) evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct EpochEstimate {
+    pub epoch_secs: f64,
+    pub throughput_graphs_per_s: f64,
+    pub steps_per_epoch: f64,
+    pub graphs_per_step: f64,
+    pub step_device_secs: f64,
+    pub step_allreduce_secs: f64,
+    pub step_host_secs: f64,
+}
+
+/// Matmul efficiency for dense blocks (AMP utilization on realistic tile
+/// mappings; GNN workloads don't hit peak).
+const MXU_UTIL: f64 = 0.15;
+/// Elementwise VPU ops per element for the two softplus variants: the
+/// branchy Eq. 10 form costs a select + exp + log + compare chain; the
+/// branch-free Eq. 11 form vectorizes tighter.
+const SOFTPLUS_OPS_NAIVE: f64 = 10.0;
+const SOFTPLUS_OPS_OPT: f64 = 6.0;
+/// Per-step framework overhead on device: fixed program-switch/host-sync
+/// cost plus a per-node-slot program-size term (larger static batches make
+/// longer compiled programs).
+const STEP_OVERHEAD_BASE_S: f64 = 250e-6;
+const STEP_OVERHEAD_PER_SLOT_S: f64 = 0.4e-6;
+/// Per-step host round-trip latency hidden by prefetching.
+const HOST_LATENCY_S: f64 = 450e-6;
+/// Managing the depth-4 prefetch queue costs buffer bookkeeping + an
+/// extra staging copy per step.
+const PREFETCH_OVERHEAD_S: f64 = 250e-6;
+/// Prefetch slots pin batch buffers; re-filling the pipeline at each epoch
+/// boundary costs this many steps.
+const PREFETCH_DEPTH: f64 = 4.0;
+
+/// Estimate one epoch of data-parallel SchNet training.
+pub fn estimate_epoch(
+    w: &WorkloadProfile,
+    setup: &TrainSetup,
+    arch: &IpuArch,
+) -> EpochEstimate {
+    let f = setup.model.hidden as f64;
+    let k = setup.model.n_rbf as f64;
+    let t_blocks = setup.model.n_interactions as f64;
+    let s_m = w.max_nodes as f64; // pack budget = max graph size
+    let b = setup.packs_per_batch as f64;
+    let r = setup.n_ipus as f64;
+
+    // --- batch composition --------------------------------------------------
+    // packing: LPFHP fills ~packing_efficiency of every node slot;
+    // padding: each slot holds one graph (avg_nodes of s_m used).
+    let eff = if setup.opts.packing { w.packing_efficiency } else { w.avg_nodes / s_m };
+    let node_slots = b * s_m;
+    let real_nodes = node_slots * eff;
+    let graphs_per_step = real_nodes / w.avg_nodes;
+    // static edge budget: k_max per node slot; real edges follow the data
+    let edge_budget = node_slots * w.avg_degree * 1.3; // headroom like ours
+    let real_edges = real_nodes * w.avg_degree;
+
+    // --- device compute per step -------------------------------------------
+    // Edge-wise dense work (filter MLP + modulation), fwd + bwd ≈ 3x fwd.
+    let edge_flops = real_edges * 2.0 * (k * f + f * f + 3.0 * f) * t_blocks * 3.0;
+    // Node-wise dense work runs over every slot (padding wastes it here).
+    let node_flops =
+        node_slots * 2.0 * (3.0 * f * f) * t_blocks * 3.0 + node_slots * 2.0 * f * (f / 2.0) * 3.0;
+    let matmul_secs = (edge_flops + node_flops) / (arch.peak_flops() * MXU_UTIL);
+
+    // Gather/scatter via the planner (2 ops per block, fwd + bwd ≈ 2x).
+    let dims = OpDims {
+        i: edge_budget as usize,
+        m: node_slots as usize,
+        n: setup.model.hidden,
+    };
+    let gather = plan_gather(dims, arch).cycles;
+    let scatter = plan_scatter(dims, arch).cycles;
+    let gs_secs = arch.cycles_to_secs((gather + scatter) * t_blocks * 2.0);
+
+    // Softplus activations: edge budget × F per block plus node MLPs.
+    let act_elems = (edge_budget * f + node_slots * f) * t_blocks * 2.0;
+    let ops = if setup.opts.opt_softplus { SOFTPLUS_OPS_OPT } else { SOFTPLUS_OPS_NAIVE };
+    let vpu_rate = arch.tiles as f64 * arch.clock_hz * 2.0; // elem-ops/s
+    let act_secs = act_elems * ops / vpu_rate;
+
+    let step_overhead = STEP_OVERHEAD_BASE_S + node_slots * STEP_OVERHEAD_PER_SLOT_S;
+    let step_device = matmul_secs + gs_secs + act_secs + step_overhead;
+
+    // --- gradient all-reduce -------------------------------------------------
+    let step_allreduce = allreduce_time(
+        AllReduceConfig {
+            replicas: setup.n_ipus,
+            total_bytes: 4 * setup.model.param_count(),
+            n_tensors: 9 * setup.model.n_interactions + 4,
+            merged: setup.opts.merged_allreduce,
+        },
+        arch,
+    );
+
+    // --- host I/O -------------------------------------------------------------
+    // Preparing one batch costs prep_per_graph × graphs (+ packing lookup,
+    // folded in). Sync loader serializes this with the device; async
+    // workers divide it; prefetch hides the transfer latency.
+    let prep = graphs_per_step * w.avg_nodes / 20.0 * setup.host_prep_per_graph_s;
+    let host_per_step = if setup.opts.async_io {
+        prep / setup.io_workers as f64
+    } else {
+        prep
+    };
+    // Prefetch (paper section 5.3.3): the queue hides host→device latency,
+    // but only as much of it as the running device step can cover — with a
+    // short step (QM9's s_m = 29 batches) the DMA for the depth-4 buffers
+    // contends with the step itself and little latency is actually hidden,
+    // while the queue bookkeeping is still paid. This is the mechanism
+    // behind the paper's observation that prefetch helps 4.5M and *hurts*
+    // QM9.
+    let latency = if setup.opts.prefetch {
+        let hidden = HOST_LATENCY_S.min(0.3 * step_device);
+        HOST_LATENCY_S - hidden + PREFETCH_OVERHEAD_S
+    } else {
+        HOST_LATENCY_S
+    };
+
+    // --- epoch ----------------------------------------------------------------
+    let graphs_per_parallel_step = graphs_per_step * r;
+    let steps = (w.n_graphs as f64 / graphs_per_parallel_step).ceil();
+    let device_path = step_device + step_allreduce + latency;
+    // async I/O overlaps with compute; sync I/O serializes
+    let step_total = if setup.opts.async_io {
+        device_path.max(host_per_step) + 0.05 * host_per_step
+    } else {
+        device_path + host_per_step
+    };
+    // pipeline fill cost at epoch boundaries
+    let fill = if setup.opts.prefetch { PREFETCH_DEPTH * step_total } else { 0.0 };
+    // per-epoch fixed cost growing with replicas (engage/sync the pod)
+    let epoch_fixed = 0.05 + 0.003 * r;
+
+    let epoch_secs = steps * step_total + fill + epoch_fixed;
+    EpochEstimate {
+        epoch_secs,
+        throughput_graphs_per_s: w.n_graphs as f64 / epoch_secs,
+        steps_per_epoch: steps,
+        graphs_per_step: graphs_per_parallel_step,
+        step_device_secs: step_device,
+        step_allreduce_secs: step_allreduce,
+        step_host_secs: host_per_step,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ipu::IpuArch;
+
+    fn qm9() -> WorkloadProfile {
+        WorkloadProfile {
+            name: "QM9".into(),
+            n_graphs: 134_000,
+            avg_nodes: 18.0,
+            max_nodes: 29,
+            avg_degree: 12.0,
+            packing_efficiency: 0.98,
+        }
+    }
+
+    fn water45() -> WorkloadProfile {
+        WorkloadProfile {
+            name: "4.5M".into(),
+            n_graphs: 4_500_000,
+            avg_nodes: 60.0,
+            max_nodes: 90,
+            avg_degree: 14.0,
+            packing_efficiency: 0.97,
+        }
+    }
+
+    fn setup(n_ipus: usize, opts: OptFlags) -> TrainSetup {
+        TrainSetup { n_ipus, opts, ..Default::default() }
+    }
+
+    #[test]
+    fn packing_beats_padding_everywhere() {
+        let arch = IpuArch::bow();
+        for w in [qm9(), water45()] {
+            for r in [1, 8, 16, 32, 64] {
+                let mut pad = OptFlags::ALL;
+                pad.packing = false;
+                let tp_pack = estimate_epoch(&w, &setup(r, OptFlags::ALL), &arch)
+                    .throughput_graphs_per_s;
+                let tp_pad =
+                    estimate_epoch(&w, &setup(r, pad), &arch).throughput_graphs_per_s;
+                assert!(
+                    tp_pack >= tp_pad,
+                    "{} at {r} IPUs: pack {tp_pack} < pad {tp_pad}",
+                    w.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn each_fig6_optimization_helps_water() {
+        // Fig. 6: progressive optimizations each improve (prefetch may
+        // regress QM9 but helps the 4.5M set).
+        let arch = IpuArch::bow();
+        let w = water45();
+        let mut last = f64::INFINITY;
+        for (name, opts) in OptFlags::progression() {
+            let e = estimate_epoch(&w, &setup(16, opts), &arch).epoch_secs;
+            assert!(e <= last * 1.001, "{name} regressed: {e} > {last}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn prefetch_hurts_qm9_but_helps_water() {
+        // Paper section 5.3.3 (Fig. 6, 16 IPUs): prefetching improves the
+        // 4.5M water set but negatively impacts QM9.
+        let arch = IpuArch::bow();
+        let mut no_pf = OptFlags::ALL;
+        no_pf.prefetch = false;
+        let delta = |w: &WorkloadProfile| {
+            let with = estimate_epoch(w, &setup(16, OptFlags::ALL), &arch).epoch_secs;
+            let without = estimate_epoch(w, &setup(16, no_pf), &arch).epoch_secs;
+            without - with // positive = prefetch helps
+        };
+        assert!(delta(&qm9()) < 0.0, "prefetch should cost QM9");
+        assert!(delta(&water45()) > 0.0, "prefetch should help 4.5M");
+    }
+
+    #[test]
+    fn qm9_throughput_peaks_before_64() {
+        // Paper Fig. 9 / Table 1: QM9 peaks at 16-32 IPUs then degrades.
+        let arch = IpuArch::bow();
+        let w = qm9();
+        let tp: Vec<f64> = [8usize, 16, 32, 64]
+            .iter()
+            .map(|&r| estimate_epoch(&w, &setup(r, OptFlags::ALL), &arch).throughput_graphs_per_s)
+            .collect();
+        let peak = tp
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(peak == 1 || peak == 2, "peak at index {peak}, tp={tp:?}");
+        assert!(tp[3] < tp[peak], "64 IPUs should be past the knee");
+    }
+
+    #[test]
+    fn water_scales_through_64() {
+        // Paper Fig. 9: 2.7M/4.5M keep gaining up to 64 IPUs.
+        let arch = IpuArch::bow();
+        let w = water45();
+        let mut last = 0.0;
+        for r in [8usize, 16, 32, 64] {
+            let tp = estimate_epoch(&w, &setup(r, OptFlags::ALL), &arch)
+                .throughput_graphs_per_s;
+            assert!(tp > last, "throughput must grow at {r} IPUs");
+            last = tp;
+        }
+    }
+
+    #[test]
+    fn merged_allreduce_helps_more_at_scale() {
+        let arch = IpuArch::bow();
+        let w = water45();
+        let gain = |r: usize| {
+            let mut un = OptFlags::ALL;
+            un.merged_allreduce = false;
+            let a = estimate_epoch(&w, &setup(r, OptFlags::ALL), &arch).epoch_secs;
+            let b = estimate_epoch(&w, &setup(r, un), &arch).epoch_secs;
+            b / a
+        };
+        assert!(gain(64) > gain(2));
+    }
+
+    #[test]
+    fn bigger_model_costs_more() {
+        // Fig. 10: epoch time grows with embedding size and blocks.
+        let arch = IpuArch::bow();
+        let w = water45();
+        let mut s = setup(16, OptFlags::ALL);
+        let base = estimate_epoch(&w, &s, &arch).epoch_secs;
+        s.model.hidden = 256;
+        let wide = estimate_epoch(&w, &s, &arch).epoch_secs;
+        s.model.hidden = 100;
+        s.model.n_interactions = 8;
+        let deep = estimate_epoch(&w, &s, &arch).epoch_secs;
+        assert!(wide > base && deep > base);
+    }
+}

@@ -1,0 +1,13 @@
+//! The scatter/gather planner (paper section 4.2.2).
+//!
+//! Gather/scatter dominate message passing; on a tiled machine their cost
+//! depends on how the (I, M, N) iteration space is partitioned across
+//! tiles. The planner minimizes the paper's cycle-cost model (Eqs. 8–9) by
+//! exhaustive search over partition factors (P_I, P_M, P_N), subject to
+//! per-tile SRAM capacity.
+
+pub mod cost;
+pub mod search;
+
+pub use cost::{gather_cost, scatter_cost, OpDims, PartitionFactors};
+pub use search::{plan_gather, plan_scatter, Plan};

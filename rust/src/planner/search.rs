@@ -1,0 +1,188 @@
+//! Exhaustive plan search (paper: "a minimum is found by exhaustive search
+//! of valid implementation parameter settings").
+//!
+//! Candidate partition factors per dimension are 1, 2, 3, ... up to the
+//! dimension size, thinned to divisor-like values so the search space
+//! stays ~10^4 while covering every distinct ceil-partition shape that
+//! matters. Validity: tiles_used ≤ tile count and the per-tile working set
+//! fits the SRAM budget.
+
+use super::cost::{gather_cost, scatter_cost, OpDims, PartitionFactors};
+use crate::ipu::IpuArch;
+
+/// The planner's output for one operation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Plan {
+    pub factors: PartitionFactors,
+    pub cycles: f64,
+    pub sram_bytes: usize,
+}
+
+/// Candidate factors for one dimension: every value in [1, 16], then
+/// geometrically spaced values up to min(dim, tiles). Distinct ceil
+/// partitions repeat heavily above 16, so this loses nothing measurable.
+fn candidates(dim: usize, tiles: usize) -> Vec<usize> {
+    let hi = dim.min(tiles).max(1);
+    let mut out: Vec<usize> = (1..=hi.min(16)).collect();
+    let mut v = 16usize;
+    while v < hi {
+        v = (v * 3) / 2;
+        out.push(v.min(hi));
+    }
+    out.dedup();
+    out
+}
+
+/// Fraction of tile SRAM the planner may budget for one op's operands.
+const SRAM_BUDGET: f64 = 0.5;
+
+fn search(
+    d: OpDims,
+    arch: &IpuArch,
+    cost: impl Fn(OpDims, PartitionFactors, &IpuArch) -> f64,
+) -> Plan {
+    let mut best: Option<Plan> = None;
+    let mut fallback: Option<Plan> = None; // min-SRAM plan if none fits
+    for &p_i in &candidates(d.i, arch.tiles) {
+        for &p_m in &candidates(d.m, arch.tiles) {
+            if p_i * p_m > arch.tiles {
+                break;
+            }
+            for &p_n in &candidates(d.n, arch.tiles) {
+                let f = PartitionFactors { p_i, p_m, p_n };
+                if f.tiles_used() > arch.tiles {
+                    break;
+                }
+                let sram = f.sram_bytes(d, arch);
+                let plan = Plan { factors: f, cycles: cost(d, f, arch), sram_bytes: sram };
+                if (sram as f64) <= SRAM_BUDGET * arch.sram_per_tile as f64 {
+                    if best.map_or(true, |b| plan.cycles < b.cycles) {
+                        best = Some(plan);
+                    }
+                } else if fallback.map_or(true, |fb| sram < fb.sram_bytes) {
+                    fallback = Some(plan);
+                }
+            }
+        }
+    }
+    best.or(fallback).expect("search space non-empty")
+}
+
+/// Plan the gather(A[M,N], i[I]) op (paper Eq. 8).
+pub fn plan_gather(d: OpDims, arch: &IpuArch) -> Plan {
+    search(d, arch, gather_cost)
+}
+
+/// Plan the scatter(A[M,N], i[I], V[I,N]) op (paper Eq. 9).
+pub fn plan_scatter(d: OpDims, arch: &IpuArch) -> Plan {
+    search(d, arch, scatter_cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn arch() -> IpuArch {
+        IpuArch::bow()
+    }
+
+    fn schnet_dims() -> OpDims {
+        OpDims { i: 4608, m: 384, n: 64 }
+    }
+
+    #[test]
+    fn plan_beats_unit_partition() {
+        let d = schnet_dims();
+        let a = arch();
+        let plan = plan_gather(d, &a);
+        let unit = gather_cost(d, PartitionFactors::UNIT, &a);
+        assert!(
+            plan.cycles < unit / 4.0,
+            "planned {} vs unit {unit}",
+            plan.cycles
+        );
+    }
+
+    #[test]
+    fn plan_respects_tile_budget_and_sram() {
+        let d = schnet_dims();
+        let a = arch();
+        for plan in [plan_gather(d, &a), plan_scatter(d, &a)] {
+            assert!(plan.factors.tiles_used() <= a.tiles);
+            assert!((plan.sram_bytes as f64) <= 0.5 * a.sram_per_tile as f64);
+        }
+    }
+
+    #[test]
+    fn plan_is_optimal_within_candidates() {
+        // no candidate combination beats the returned plan
+        let d = OpDims { i: 512, m: 128, n: 32 };
+        let a = arch();
+        let plan = plan_gather(d, &a);
+        for p_i in 1..=32usize {
+            for p_m in 1..=16usize {
+                for p_n in 1..=8usize {
+                    let f = PartitionFactors { p_i, p_m, p_n };
+                    if f.tiles_used() > a.tiles
+                        || !f.fits_sram(d, &a, 0.5)
+                    {
+                        continue;
+                    }
+                    assert!(
+                        plan.cycles <= gather_cost(d, f, &a) + 1e-9,
+                        "beaten by {f:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn planner_finds_sweet_spot_not_extremes() {
+        // The paper's point: neither serialize (1 tile) nor shard to all
+        // 1472 tiles — there is a middle optimum once exchange costs bite.
+        let d = schnet_dims();
+        let a = arch();
+        let plan = plan_scatter(d, &a);
+        assert!(plan.factors.tiles_used() > 1, "should parallelize");
+        let max_split = PartitionFactors { p_i: 16, p_m: 12, p_n: 7 };
+        assert!(max_split.tiles_used() <= a.tiles);
+        let shattered = scatter_cost(d, max_split, &a);
+        assert!(plan.cycles <= shattered);
+    }
+
+    #[test]
+    fn tiny_ops_prefer_few_tiles() {
+        // a tiny op can never use more tiles than it has elements to split
+        let d = OpDims { i: 8, m: 8, n: 4 };
+        let plan = plan_gather(d, &arch());
+        assert!(plan.factors.tiles_used() <= 8 * 8 * 4);
+    }
+
+    #[test]
+    fn property_plans_always_valid() {
+        let a = arch();
+        check(60, |rng| {
+            let d = OpDims {
+                i: rng.range(1, 10_000),
+                m: rng.range(1, 2_000),
+                n: rng.range(1, 256),
+            };
+            for plan in [plan_gather(d, &a), plan_scatter(d, &a)] {
+                assert!(plan.cycles.is_finite() && plan.cycles > 0.0);
+                assert!(plan.factors.tiles_used() <= a.tiles);
+                let (i_t, m_t, n_t) = plan.factors.tile_dims(d);
+                assert!(i_t >= 1 && m_t >= 1 && n_t >= 1);
+            }
+        });
+    }
+
+    #[test]
+    fn bigger_feature_dim_costs_more() {
+        let a = arch();
+        let small = plan_gather(OpDims { i: 4096, m: 512, n: 32 }, &a);
+        let large = plan_gather(OpDims { i: 4096, m: 512, n: 128 }, &a);
+        assert!(large.cycles > small.cycles);
+    }
+}

@@ -1,0 +1,290 @@
+//! Artifact manifest: the contract between the Python compile path and the
+//! Rust runtime. Parses `artifacts/manifest.json` (emitted by
+//! `python/compile/aot.py`) into typed structs.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an artifact input tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype in manifest: {other}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled computation (train_step / predict).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub input_names: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// Named slice of the flat parameter vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Fixed batch geometry the executables were compiled for (DESIGN.md §5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchGeometry {
+    pub n_nodes: usize,
+    pub n_edges: usize,
+    pub n_graphs: usize,
+    pub packs_per_batch: usize,
+    pub nodes_per_pack: usize,
+    pub edges_per_pack: usize,
+    pub graphs_per_pack: usize,
+}
+
+impl BatchGeometry {
+    /// Maximum (directed) edges budgeted per node.
+    pub fn k_max(&self) -> usize {
+        self.edges_per_pack / self.nodes_per_pack
+    }
+}
+
+/// SchNet hyperparameters baked into the artifacts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelInfo {
+    pub hidden: usize,
+    pub n_rbf: usize,
+    pub n_interactions: usize,
+    pub r_cut: f64,
+    pub z_max: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub param_count: usize,
+    pub param_layout: Vec<ParamEntry>,
+    pub batch: BatchGeometry,
+    pub model: ModelInfo,
+    pub train_step: ArtifactSpec,
+    pub predict: ArtifactSpec,
+    /// Loss+gradient artifact for the Rust-side data-parallel path
+    /// (absent in older artifact sets).
+    pub grad_step: Option<ArtifactSpec>,
+    pub init_params_file: String,
+}
+
+fn parse_artifact(v: &Json) -> Result<ArtifactSpec> {
+    let inputs = v
+        .get("inputs")?
+        .as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                shape: t.get("shape")?.as_usize_arr()?,
+                dtype: DType::parse(t.get("dtype")?.as_str()?)?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let names = |key: &str| -> Result<Vec<String>> {
+        Ok(v.get(key)?
+            .as_arr()?
+            .iter()
+            .map(|s| s.as_str().map(str::to_string))
+            .collect::<Result<Vec<_>, _>>()?)
+    };
+    Ok(ArtifactSpec {
+        file: v.get("file")?.as_str()?.to_string(),
+        inputs,
+        input_names: names("input_names")?,
+        outputs: names("outputs")?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+
+        let b = v.get("batch")?;
+        let u = |k: &str| -> Result<usize> { Ok(b.get(k)?.as_usize()?) };
+        let batch = BatchGeometry {
+            n_nodes: u("n_nodes")?,
+            n_edges: u("n_edges")?,
+            n_graphs: u("n_graphs")?,
+            packs_per_batch: u("packs_per_batch")?,
+            nodes_per_pack: u("nodes_per_pack")?,
+            edges_per_pack: u("edges_per_pack")?,
+            graphs_per_pack: u("graphs_per_pack")?,
+        };
+
+        let mc = v.get("config")?.get("model")?;
+        let model = ModelInfo {
+            hidden: mc.get("hidden")?.as_usize()?,
+            n_rbf: mc.get("n_rbf")?.as_usize()?,
+            n_interactions: mc.get("n_interactions")?.as_usize()?,
+            r_cut: mc.get("r_cut")?.as_f64()?,
+            z_max: mc.get("z_max")?.as_usize()?,
+        };
+
+        let param_layout = v
+            .get("param_layout")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(ParamEntry {
+                    name: e.get("name")?.as_str()?.to_string(),
+                    shape: e.get("shape")?.as_usize_arr()?,
+                    offset: e.get("offset")?.as_usize()?,
+                    size: e.get("size")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let arts = v.get("artifacts")?;
+        let manifest = Manifest {
+            dir,
+            param_count: v.get("param_count")?.as_usize()?,
+            param_layout,
+            batch,
+            model,
+            train_step: parse_artifact(arts.get("train_step")?)?,
+            predict: parse_artifact(arts.get("predict")?)?,
+            grad_step: arts.opt("grad_step").map(parse_artifact).transpose()?,
+            init_params_file: v.get("init_params")?.get("file")?.as_str()?.to_string(),
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    /// Internal consistency checks (the compile-path contract).
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0;
+        for e in &self.param_layout {
+            if e.offset != off {
+                bail!("param layout not contiguous at {}", e.name);
+            }
+            let expect: usize = e.shape.iter().product::<usize>().max(1);
+            if e.size != expect {
+                bail!("param {} size {} != shape product {}", e.name, e.size, expect);
+            }
+            off += e.size;
+        }
+        if off != self.param_count {
+            bail!("param layout sums to {off}, manifest says {}", self.param_count);
+        }
+        let b = &self.batch;
+        if b.n_nodes != b.packs_per_batch * b.nodes_per_pack
+            || b.n_edges != b.packs_per_batch * b.edges_per_pack
+            || b.n_graphs != b.packs_per_batch * b.graphs_per_pack
+        {
+            bail!("batch geometry inconsistent: {b:?}");
+        }
+        // train_step leads with params/m/v/step, all param-count sized.
+        for i in 0..3 {
+            let t = &self.train_step.inputs[i];
+            if t.shape != vec![self.param_count] || t.dtype != DType::F32 {
+                bail!("train_step input {i} should be f32[{}]", self.param_count);
+            }
+        }
+        if self.train_step.inputs.len() != self.train_step.input_names.len() {
+            bail!("train_step inputs / names length mismatch");
+        }
+        Ok(())
+    }
+
+    /// Read `init_params.bin` (little-endian f32) into a vector.
+    pub fn load_init_params(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join(&self.init_params_file);
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != 4 * self.param_count {
+            bail!(
+                "init_params.bin has {} bytes, expected {}",
+                bytes.len(),
+                4 * self.param_count
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Look up a parameter slice by name.
+    pub fn param(&self, name: &str) -> Option<&ParamEntry> {
+        self.param_layout.iter().find(|e| e.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.param_count > 0);
+        assert_eq!(m.batch.n_nodes, m.batch.packs_per_batch * m.batch.nodes_per_pack);
+        assert_eq!(m.train_step.input_names[0], "params");
+        assert!(m.param("embedding").is_some());
+        let p = m.load_init_params().unwrap();
+        assert_eq!(p.len(), m.param_count);
+        assert!(p.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn dtype_parse_rejects_unknown() {
+        assert!(DType::parse("bfloat16").is_err());
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+    }
+
+    #[test]
+    fn k_max_from_geometry() {
+        let g = BatchGeometry {
+            n_nodes: 384,
+            n_edges: 4608,
+            n_graphs: 48,
+            packs_per_batch: 4,
+            nodes_per_pack: 96,
+            edges_per_pack: 1152,
+            graphs_per_pack: 12,
+        };
+        assert_eq!(g.k_max(), 12);
+    }
+}

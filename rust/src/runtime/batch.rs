@@ -1,0 +1,149 @@
+//! Host-side packed batch: the fixed-shape tensor set fed to the AOT
+//! executables (DESIGN.md §5). The coordinator's batcher fills this in from
+//! packs; the runtime marshals it into PJRT literals.
+
+use anyhow::{bail, Result};
+
+use super::artifact::BatchGeometry;
+
+/// A fully assembled fixed-shape batch (host memory, flat row-major).
+#[derive(Debug, Clone)]
+pub struct HostBatch {
+    pub z: Vec<i32>,          // [N] atomic numbers, 0 = padding
+    pub pos: Vec<f32>,        // [N*3]
+    pub src: Vec<i32>,        // [E]
+    pub dst: Vec<i32>,        // [E]
+    pub edge_mask: Vec<f32>,  // [E]
+    pub graph_id: Vec<i32>,   // [N]
+    pub node_mask: Vec<f32>,  // [N]
+    pub target: Vec<f32>,     // [G]
+    pub graph_mask: Vec<f32>, // [G]
+}
+
+impl HostBatch {
+    /// An all-padding batch for the given geometry (every node is a pad
+    /// node assigned to the dump graph slot, every edge a self-loop).
+    pub fn empty(g: &BatchGeometry) -> Self {
+        HostBatch {
+            z: vec![0; g.n_nodes],
+            pos: vec![0.0; g.n_nodes * 3],
+            src: vec![0; g.n_edges],
+            dst: vec![0; g.n_edges],
+            edge_mask: vec![0.0; g.n_edges],
+            graph_id: vec![(g.n_graphs - 1) as i32; g.n_nodes],
+            node_mask: vec![0.0; g.n_nodes],
+            target: vec![0.0; g.n_graphs],
+            graph_mask: vec![0.0; g.n_graphs],
+        }
+    }
+
+    /// Number of real (unmasked) graphs in the batch.
+    pub fn real_graphs(&self) -> usize {
+        self.graph_mask.iter().filter(|&&m| m == 1.0).count()
+    }
+
+    /// Number of real nodes / edges (packing-efficiency accounting).
+    pub fn real_nodes(&self) -> usize {
+        self.node_mask.iter().filter(|&&m| m == 1.0).count()
+    }
+
+    pub fn real_edges(&self) -> usize {
+        self.edge_mask.iter().filter(|&&m| m == 1.0).count()
+    }
+
+    /// Structural validation against the compiled geometry. Called on the
+    /// hot path only in debug builds; always by tests.
+    pub fn validate(&self, g: &BatchGeometry) -> Result<()> {
+        if self.z.len() != g.n_nodes
+            || self.pos.len() != g.n_nodes * 3
+            || self.graph_id.len() != g.n_nodes
+            || self.node_mask.len() != g.n_nodes
+        {
+            bail!("node tensors do not match geometry N={}", g.n_nodes);
+        }
+        if self.src.len() != g.n_edges
+            || self.dst.len() != g.n_edges
+            || self.edge_mask.len() != g.n_edges
+        {
+            bail!("edge tensors do not match geometry E={}", g.n_edges);
+        }
+        if self.target.len() != g.n_graphs || self.graph_mask.len() != g.n_graphs {
+            bail!("graph tensors do not match geometry G={}", g.n_graphs);
+        }
+        let n = g.n_nodes as i32;
+        for (&s, &d) in self.src.iter().zip(&self.dst) {
+            if s < 0 || s >= n || d < 0 || d >= n {
+                bail!("edge index out of range: {s}->{d} (N={n})");
+            }
+        }
+        let gmax = g.n_graphs as i32;
+        for &gi in &self.graph_id {
+            if gi < 0 || gi >= gmax {
+                bail!("graph id {gi} out of range (G={gmax})");
+            }
+        }
+        // Edges must stay within one pack (no cross-contamination).
+        let npp = g.nodes_per_pack as i32;
+        for (e, (&s, &d)) in self.src.iter().zip(&self.dst).enumerate() {
+            if self.edge_mask[e] == 1.0 && s / npp != d / npp {
+                bail!("edge {e} crosses pack boundary: {s} -> {d}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> BatchGeometry {
+        BatchGeometry {
+            n_nodes: 8,
+            n_edges: 12,
+            n_graphs: 4,
+            packs_per_batch: 2,
+            nodes_per_pack: 4,
+            edges_per_pack: 6,
+            graphs_per_pack: 2,
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_valid_and_fully_padded() {
+        let g = geom();
+        let b = HostBatch::empty(&g);
+        b.validate(&g).unwrap();
+        assert_eq!(b.real_graphs(), 0);
+        assert_eq!(b.real_nodes(), 0);
+        assert_eq!(b.real_edges(), 0);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_edges() {
+        let g = geom();
+        let mut b = HostBatch::empty(&g);
+        b.src[0] = 99;
+        assert!(b.validate(&g).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_cross_pack_edges() {
+        let g = geom();
+        let mut b = HostBatch::empty(&g);
+        b.src[0] = 1; // pack 0
+        b.dst[0] = 5; // pack 1
+        b.edge_mask[0] = 1.0;
+        assert!(b.validate(&g).is_err());
+        b.edge_mask[0] = 0.0; // masked cross edges are tolerated (padding)
+        b.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_graph_id() {
+        let g = geom();
+        let mut b = HostBatch::empty(&g);
+        b.graph_id[3] = 4;
+        assert!(b.validate(&g).is_err());
+    }
+}

@@ -1,0 +1,104 @@
+//! Parameter checkpointing: flat f32 vector + JSON metadata, resumable by
+//! `Engine::state_from_params` and the data-parallel coordinator.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{arr, num, obj, Json};
+
+/// Checkpoint metadata written alongside the weights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointMeta {
+    pub param_count: usize,
+    pub steps_done: u64,
+    pub mean_loss: f64,
+}
+
+/// Write `params` (+ meta) to `path` (.bin) and `path`.json.
+pub fn save(path: impl AsRef<Path>, params: &[f32], meta: &CheckpointMeta) -> Result<()> {
+    if params.len() != meta.param_count {
+        bail!("meta.param_count {} != params.len {}", meta.param_count, params.len());
+    }
+    let path = path.as_ref();
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for p in params {
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+    std::fs::write(path, &bytes).with_context(|| format!("writing {path:?}"))?;
+    let meta_json = obj(vec![
+        ("param_count", num(meta.param_count as f64)),
+        ("steps_done", num(meta.steps_done as f64)),
+        ("mean_loss", num(meta.mean_loss)),
+        ("format", Json::Str("f32-le".into())),
+        ("layout", arr(std::iter::empty())),
+    ]);
+    std::fs::write(path.with_extension("json"), meta_json.to_string())
+        .context("writing checkpoint meta")?;
+    Ok(())
+}
+
+/// Load a checkpoint written by [`save`].
+pub fn load(path: impl AsRef<Path>) -> Result<(Vec<f32>, CheckpointMeta)> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("checkpoint size {} not a multiple of 4", bytes.len());
+    }
+    let params: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let meta_text = std::fs::read_to_string(path.with_extension("json"))
+        .context("reading checkpoint meta")?;
+    let v = Json::parse(&meta_text)?;
+    let meta = CheckpointMeta {
+        param_count: v.get("param_count")?.as_usize()?,
+        steps_done: v.get("steps_done")?.as_usize()? as u64,
+        mean_loss: v.get("mean_loss")?.as_f64()?,
+    };
+    if meta.param_count != params.len() {
+        bail!(
+            "meta says {} params, file holds {}",
+            meta.param_count,
+            params.len()
+        );
+    }
+    Ok((params, meta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("molpack-ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}.bin", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let params: Vec<f32> = (0..100).map(|i| (i as f32).sin()).collect();
+        let meta = CheckpointMeta { param_count: 100, steps_done: 42, mean_loss: 0.25 };
+        let p = tmp("roundtrip");
+        save(&p, &params, &meta).unwrap();
+        let (back, meta2) = load(&p).unwrap();
+        assert_eq!(params, back);
+        assert_eq!(meta, meta2);
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(p.with_extension("json")).ok();
+    }
+
+    #[test]
+    fn detects_count_mismatch() {
+        let p = tmp("mismatch");
+        let meta = CheckpointMeta { param_count: 5, steps_done: 0, mean_loss: 0.0 };
+        assert!(save(&p, &[0.0; 4], &meta).is_err());
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load(tmp("nonexistent-xyz")).is_err());
+    }
+}

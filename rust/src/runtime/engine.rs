@@ -1,0 +1,204 @@
+//! PJRT engine: loads the AOT HLO-text artifacts and drives them.
+//!
+//! This is the only module that touches the `xla` crate on the training
+//! path. Pattern per /opt/xla-example: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format
+//! (xla_extension 0.5.1 rejects jax≥0.5 serialized protos).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifact::Manifest;
+use super::batch::HostBatch;
+
+/// Mutable training state: flat parameter vector + Adam moments, kept as
+/// PJRT literals between steps so marshalling cost is one loss read-back.
+pub struct TrainState {
+    pub params: Literal,
+    pub adam_m: Literal,
+    pub adam_v: Literal,
+    pub step: Literal,
+    pub steps_done: u64,
+}
+
+/// Cumulative engine counters for the perf log (EXPERIMENTS.md §Perf).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EngineStats {
+    pub steps: u64,
+    pub marshal_secs: f64,
+    pub execute_secs: f64,
+    pub readback_secs: f64,
+}
+
+pub struct Engine {
+    pub manifest: Manifest,
+    client: PjRtClient,
+    train_exe: PjRtLoadedExecutable,
+    predict_exe: PjRtLoadedExecutable,
+    /// Loss+gradient executable for the data-parallel path (present when
+    /// the artifacts were built with grad_step).
+    grad_exe: Option<PjRtLoadedExecutable>,
+    stats: std::cell::Cell<EngineStats>,
+}
+
+fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+    let comp = XlaComputation::from_proto(&proto);
+    Ok(client
+        .compile(&comp)
+        .with_context(|| format!("compiling {path:?}"))?)
+}
+
+impl Engine {
+    /// Load and compile both artifacts from `dir` on the CPU PJRT client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let train_exe = compile(&client, &manifest.dir.join(&manifest.train_step.file))?;
+        let predict_exe = compile(&client, &manifest.dir.join(&manifest.predict.file))?;
+        let grad_exe = match &manifest.grad_step {
+            Some(spec) => Some(compile(&client, &manifest.dir.join(&spec.file))?),
+            None => None,
+        };
+        Ok(Engine {
+            manifest,
+            client,
+            train_exe,
+            predict_exe,
+            grad_exe,
+            stats: std::cell::Cell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.get()
+    }
+
+    /// Fresh training state from `init_params.bin`.
+    pub fn init_state(&self) -> Result<TrainState> {
+        let p = self.manifest.load_init_params()?;
+        let zeros = vec![0f32; p.len()];
+        Ok(TrainState {
+            params: Literal::vec1(&p),
+            adam_m: Literal::vec1(&zeros),
+            adam_v: Literal::vec1(&zeros),
+            step: Literal::scalar(0f32),
+            steps_done: 0,
+        })
+    }
+
+    /// Restore state from a flat parameter vector (checkpoint resume).
+    pub fn state_from_params(&self, params: &[f32]) -> Result<TrainState> {
+        if params.len() != self.manifest.param_count {
+            bail!(
+                "checkpoint has {} params, artifacts expect {}",
+                params.len(),
+                self.manifest.param_count
+            );
+        }
+        let zeros = vec![0f32; params.len()];
+        Ok(TrainState {
+            params: Literal::vec1(params),
+            adam_m: Literal::vec1(&zeros),
+            adam_v: Literal::vec1(&zeros),
+            step: Literal::scalar(0f32),
+            steps_done: 0,
+        })
+    }
+
+    fn batch_literals(&self, b: &HostBatch, train: bool) -> Result<Vec<Literal>> {
+        debug_assert!(b.validate(&self.manifest.batch).is_ok());
+        let n = self.manifest.batch.n_nodes as i64;
+        let mut v = vec![
+            Literal::vec1(&b.z),
+            Literal::vec1(&b.pos).reshape(&[n, 3])?,
+            Literal::vec1(&b.src),
+            Literal::vec1(&b.dst),
+            Literal::vec1(&b.edge_mask),
+            Literal::vec1(&b.graph_id),
+            Literal::vec1(&b.node_mask),
+        ];
+        if train {
+            v.push(Literal::vec1(&b.target));
+            v.push(Literal::vec1(&b.graph_mask));
+        }
+        Ok(v)
+    }
+
+    /// One optimizer step; updates `state` in place and returns the loss.
+    pub fn train_step(&self, state: &mut TrainState, batch: &HostBatch) -> Result<f32> {
+        let mut s = self.stats.get();
+        let t0 = Instant::now();
+        let batch_lits = self.batch_literals(batch, true)?;
+        let mut args: Vec<&Literal> =
+            vec![&state.params, &state.adam_m, &state.adam_v, &state.step];
+        args.extend(batch_lits.iter());
+        let t1 = Instant::now();
+        let result = self.train_exe.execute::<&Literal>(&args)?;
+        let t2 = Instant::now();
+        let out = result[0][0].to_literal_sync()?;
+        let mut parts = out.to_tuple()?;
+        if parts.len() != 5 {
+            bail!("train_step returned {} outputs, expected 5", parts.len());
+        }
+        let loss = parts.pop().unwrap().get_first_element::<f32>()?;
+        state.step = parts.pop().unwrap();
+        state.adam_v = parts.pop().unwrap();
+        state.adam_m = parts.pop().unwrap();
+        state.params = parts.pop().unwrap();
+        state.steps_done += 1;
+        let t3 = Instant::now();
+        s.steps += 1;
+        s.marshal_secs += (t1 - t0).as_secs_f64();
+        s.execute_secs += (t2 - t1).as_secs_f64();
+        s.readback_secs += (t3 - t2).as_secs_f64();
+        self.stats.set(s);
+        Ok(loss)
+    }
+
+    /// Loss + flat gradient for one replica's batch (data-parallel path).
+    /// Requires artifacts built with the `grad_step` entry.
+    pub fn grad_step(&self, params: &Literal, batch: &HostBatch) -> Result<(f32, Vec<f32>)> {
+        let exe = self
+            .grad_exe
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("artifacts lack grad_step — re-run make artifacts"))?;
+        let batch_lits = self.batch_literals(batch, true)?;
+        let mut args: Vec<&Literal> = vec![params];
+        args.extend(batch_lits.iter());
+        let result = exe.execute::<&Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        let (loss, grad) = out.to_tuple2()?;
+        Ok((loss.get_first_element::<f32>()?, grad.to_vec::<f32>()?))
+    }
+
+    /// Forward-only energies for a batch (serving path).
+    pub fn predict(&self, params: &Literal, batch: &HostBatch) -> Result<Vec<f32>> {
+        let batch_lits = self.batch_literals(batch, false)?;
+        let mut args: Vec<&Literal> = vec![params];
+        args.extend(batch_lits.iter());
+        let result = self.predict_exe.execute::<&Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Copy the current flat parameter vector back to the host.
+    pub fn params_to_host(&self, state: &TrainState) -> Result<Vec<f32>> {
+        Ok(state.params.to_vec::<f32>()?)
+    }
+
+    /// Extract one named parameter tensor from a host parameter vector.
+    pub fn param_slice<'a>(&self, host: &'a [f32], name: &str) -> Option<&'a [f32]> {
+        let e = self.manifest.param(name)?;
+        host.get(e.offset..e.offset + e.size)
+    }
+}

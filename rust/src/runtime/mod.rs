@@ -1,0 +1,14 @@
+//! L3 ⇄ L2 bridge: AOT artifact loading and PJRT execution.
+//!
+//! `artifact` parses the manifest contract, `batch` defines the fixed-shape
+//! host batch, `engine` compiles the HLO text on the PJRT CPU client and
+//! runs training/inference steps. Python never runs here.
+
+pub mod artifact;
+pub mod batch;
+pub mod checkpoint;
+pub mod engine;
+
+pub use artifact::{ArtifactSpec, BatchGeometry, DType, Manifest, ModelInfo, ParamEntry, TensorSpec};
+pub use batch::HostBatch;
+pub use engine::{Engine, EngineStats, TrainState};

@@ -1,0 +1,124 @@
+//! Training loop: drives the PJRT engine over the async batch pipeline.
+//! The E2E validation path (paper Fig. 11's loss curve) runs through here.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::pipeline::{stream_epoch, PipelineConfig};
+use crate::datasets::MoleculeSource;
+use crate::runtime::{Engine, TrainState};
+
+/// Per-epoch record for the training log.
+#[derive(Debug, Clone, Copy)]
+pub struct EpochRecord {
+    pub epoch: u64,
+    pub mean_loss: f64,
+    pub batches: usize,
+    pub graphs: usize,
+    pub secs: f64,
+    pub graphs_per_sec: f64,
+}
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: u64,
+    pub pipeline: PipelineConfig,
+    /// Stop an epoch early after this many batches (0 = full epoch) —
+    /// keeps the examples CI-sized.
+    pub max_batches_per_epoch: usize,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 3,
+            pipeline: PipelineConfig::default(),
+            max_batches_per_epoch: 0,
+            log_every: 50,
+        }
+    }
+}
+
+/// Run the training loop; returns per-epoch records (the loss curve).
+pub fn train<S: MoleculeSource + 'static>(
+    engine: &Engine,
+    state: &mut TrainState,
+    source: Arc<S>,
+    cfg: &TrainConfig,
+    mut on_log: impl FnMut(u64, usize, f64),
+) -> Result<Vec<EpochRecord>> {
+    let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
+    let mut records = Vec::new();
+    for epoch in 0..cfg.epochs {
+        let t0 = Instant::now();
+        let stream = stream_epoch(Arc::clone(&source), batcher.clone(), &cfg.pipeline, epoch);
+        let mut loss_sum = 0.0f64;
+        let mut batches = 0usize;
+        let mut graphs = 0usize;
+        for batch in stream.batches.iter() {
+            let batch = batch?;
+            let loss = engine.train_step(state, &batch)?;
+            loss_sum += loss as f64;
+            graphs += batch.real_graphs();
+            batches += 1;
+            if cfg.log_every > 0 && batches % cfg.log_every == 0 {
+                on_log(epoch, batches, loss as f64);
+            }
+            if cfg.max_batches_per_epoch > 0 && batches >= cfg.max_batches_per_epoch {
+                break;
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        records.push(EpochRecord {
+            epoch,
+            mean_loss: loss_sum / batches.max(1) as f64,
+            batches,
+            graphs,
+            secs,
+            graphs_per_sec: graphs as f64 / secs,
+        });
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::HydroNet;
+
+    /// Full E2E integration: real artifacts, real PJRT execution, real
+    /// datasets, LPFHP packing, async pipeline. Skipped when artifacts are
+    /// absent (run `make artifacts`).
+    #[test]
+    fn e2e_loss_decreases_on_tiny_hydronet() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let engine = Engine::load(dir).unwrap();
+        let mut state = engine.init_state().unwrap();
+        let source = Arc::new(HydroNet::new(96, 123));
+        let cfg = TrainConfig {
+            epochs: 6,
+            pipeline: PipelineConfig { workers: 2, prefetch_depth: 2, ..Default::default() },
+            max_batches_per_epoch: 0,
+            log_every: 0,
+        };
+        let records = train(&engine, &mut state, source, &cfg, |_, _, _| {}).unwrap();
+        assert_eq!(records.len(), 6);
+        let first = records.first().unwrap().mean_loss;
+        let last = records.last().unwrap().mean_loss;
+        assert!(
+            last < 0.7 * first,
+            "loss should fall: {first} -> {last} ({records:?})"
+        );
+        // every epoch must see every molecule
+        assert!(records.iter().all(|r| r.graphs == 96));
+    }
+}

@@ -1,0 +1,9 @@
+//! Small dependency-free utilities: seeded RNG, JSON, plotting, stats.
+
+pub mod json;
+pub mod plot;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

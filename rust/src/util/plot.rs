@@ -1,0 +1,142 @@
+//! Terminal plotting for the figure harness: line series, bar charts and
+//! histograms rendered as Unicode text. The paper's figures are regenerated
+//! as data rows (for EXPERIMENTS.md) plus these quick-look plots.
+
+/// Render one or more named series as an ASCII line chart.
+pub fn line_chart(
+    title: &str,
+    x: &[f64],
+    series: &[(&str, Vec<f64>)],
+    width: usize,
+    height: usize,
+) -> String {
+    assert!(!x.is_empty() && !series.is_empty());
+    let marks = ['o', 'x', '+', '*', '#', '@'];
+    let ymin = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter())
+        .cloned()
+        .fold(f64::INFINITY, f64::min);
+    let ymax = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter())
+        .cloned()
+        .fold(f64::NEG_INFINITY, f64::max);
+    let yspan = if (ymax - ymin).abs() < 1e-12 { 1.0 } else { ymax - ymin };
+    let xmin = x.iter().cloned().fold(f64::INFINITY, f64::min);
+    let xmax = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let xspan = if (xmax - xmin).abs() < 1e-12 { 1.0 } else { xmax - xmin };
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (&xi, &yi) in x.iter().zip(ys.iter()) {
+            let col = (((xi - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let row = (((yi - ymin) / yspan) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - row.min(height - 1);
+            grid[row][col.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+
+    let mut out = format!("{title}\n");
+    for (i, row) in grid.iter().enumerate() {
+        let yv = ymax - (i as f64 / (height - 1) as f64) * yspan;
+        out.push_str(&format!("{yv:>10.3} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>10} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!(
+        "{:>10}  {:<w$.3}{:>.3}\n",
+        "",
+        xmin,
+        xmax,
+        w = width.saturating_sub(6)
+    ));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", marks[si % marks.len()], name));
+    }
+    out
+}
+
+/// Horizontal bar chart with labels.
+pub fn bar_chart(title: &str, rows: &[(String, f64)], width: usize) -> String {
+    let max = rows.iter().map(|(_, v)| *v).fold(f64::NEG_INFINITY, f64::max);
+    let lw = rows.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for (label, v) in rows {
+        let n = if max > 0.0 { ((v / max) * width as f64).round() as usize } else { 0 };
+        out.push_str(&format!("  {label:>lw$} | {} {v:.3}\n", "#".repeat(n)));
+    }
+    out
+}
+
+/// Markdown table: header + aligned rows — the canonical EXPERIMENTS.md form.
+pub fn md_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push('|');
+    for (h, w) in headers.iter().zip(&widths) {
+        out.push_str(&format!(" {h:<w$} |"));
+    }
+    out.push('\n');
+    out.push('|');
+    for w in &widths {
+        out.push_str(&format!("{}|", "-".repeat(w + 2)));
+    }
+    out.push('\n');
+    for row in rows {
+        out.push('|');
+        for (c, w) in row.iter().zip(&widths) {
+            out.push_str(&format!(" {c:<w$} |"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chart_contains_marks_and_legend() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let s = vec![("up", vec![1.0, 2.0, 3.0, 4.0]), ("down", vec![4.0, 3.0, 2.0, 1.0])];
+        let out = line_chart("t", &x, &s, 40, 10);
+        assert!(out.contains('o') && out.contains('x'));
+        assert!(out.contains("up") && out.contains("down"));
+    }
+
+    #[test]
+    fn line_chart_handles_flat_series() {
+        let out = line_chart("flat", &[0.0, 1.0], &[("c", vec![5.0, 5.0])], 20, 5);
+        assert!(out.contains('o'));
+    }
+
+    #[test]
+    fn bar_chart_scales_to_width() {
+        let rows = vec![("a".to_string(), 1.0), ("bb".to_string(), 2.0)];
+        let out = bar_chart("bars", &rows, 10);
+        let lines: Vec<&str> = out.lines().collect();
+        assert!(lines[2].matches('#').count() == 10);
+        assert!(lines[1].matches('#').count() == 5);
+    }
+
+    #[test]
+    fn md_table_is_well_formed() {
+        let t = md_table(
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.starts_with('|') && l.ends_with('|')));
+    }
+}

@@ -1,0 +1,72 @@
+//! Tiny property-testing harness (no proptest crate offline): runs a
+//! closure over `n` seeded random cases and reports the failing seed so a
+//! failure reproduces with `case(seed)`.
+//!
+//! ```ignore
+//! check(100, |rng| {
+//!     let xs = gen_sizes(rng, 1, 90, 200);
+//!     let packs = lpfhp(&xs, 96, None);
+//!     assert_partition(&xs, &packs);
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Run `body` over `cases` random number generators derived from a fixed
+/// master seed (deterministic across runs). Panics with the case seed on
+/// the first failure.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: u64, body: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            body(&mut rng);
+        });
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Uniform random usize vector in [lo, hi], length in [1, max_len].
+pub fn gen_sizes(rng: &mut Rng, lo: usize, hi: usize, max_len: usize) -> Vec<usize> {
+    let len = rng.range(1, max_len + 1);
+    (0..len).map(|_| rng.range(lo, hi + 1)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_good_property() {
+        check(50, |rng| {
+            let x = rng.range(0, 100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed on case")]
+    fn check_reports_failing_seed() {
+        check(50, |rng| {
+            let x = rng.range(0, 100);
+            assert!(x < 95, "x was {x}");
+        });
+    }
+
+    #[test]
+    fn gen_sizes_respects_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let v = gen_sizes(&mut rng, 3, 30, 50);
+            assert!(!v.is_empty() && v.len() <= 50);
+            assert!(v.iter().all(|&s| (3..=30).contains(&s)));
+        }
+    }
+}

