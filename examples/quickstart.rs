@@ -61,6 +61,9 @@ fn demo_batch(engine: &Engine, rng: &mut Rng) -> HostBatch {
         b.target[p * g.graphs_per_pack] = 0.1 * zsum as f32;
         b.graph_mask[p * g.graphs_per_pack] = 1.0;
     }
+    // hand-built masks: refresh the cached real counts the batcher would
+    // normally maintain
+    b.recount();
     b
 }
 

@@ -1,7 +1,12 @@
 //! Serving path: load trained (or initial) parameters and serve energy
 //! predictions for batches of molecules through the predict artifact —
-//! demonstrating that inference shares the packed fixed-shape path with
-//! training and reporting latency/throughput percentiles.
+//! demonstrating that inference shares the packed fixed-shape data-plane
+//! with training and reporting latency/throughput percentiles.
+//!
+//! The request queue streams through a persistent `DataPlane`: sharded
+//! LPFHP planning means the first prediction fires after O(shard) host
+//! work, and every `HostBatch` recycles through the buffer pool when its
+//! lease drops after `predict`.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example serve_energy -- [requests]
@@ -11,8 +16,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
-use molpack::coordinator::{plan_epoch, Batcher, PipelineConfig};
-use molpack::datasets::{HydroNet, MoleculeSource};
+use molpack::coordinator::{Batcher, DataPlane, PipelineConfig};
+use molpack::datasets::HydroNet;
 use molpack::packing::Packer;
 use molpack::runtime::Engine;
 use molpack::util::stats::summarize;
@@ -27,25 +32,27 @@ fn main() -> Result<()> {
     let state = engine.init_state()?;
     let source = Arc::new(HydroNet::new(requests, 99));
     let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
-    let cfg = PipelineConfig { packer: Packer::Lpfhp, ..Default::default() };
+    let cfg = PipelineConfig { packer: Packer::Lpfhp, shard_size: 128, ..Default::default() };
 
-    // Pack the request queue exactly like the training path.
-    let plan = plan_epoch(source.as_ref(), &batcher, &cfg, 0);
+    // Stream the request queue through the training data-plane.
+    let plane = DataPlane::new(source, batcher, cfg);
     println!(
-        "serve_energy: {requests} molecules -> {} packed batches (G={} slots each)",
-        plan.len(),
+        "serve_energy: {requests} molecules streaming in shards of {} (G={} slots/batch)",
+        plane.config().shard_size,
         engine.manifest.batch.n_graphs
     );
 
     let mut latencies = Vec::new();
+    let mut batches = 0usize;
     let mut served = 0usize;
     let mut sq_err = 0.0f64;
     let t_all = Instant::now();
-    for packs in &plan {
-        let batch = batcher.assemble(packs, source.as_ref())?;
+    for lease in plane.start_epoch(0) {
+        let batch = lease?;
         let t0 = Instant::now();
         let energies = engine.predict(&state.params, &batch)?;
         latencies.push(t0.elapsed().as_secs_f64() * 1e3);
+        batches += 1;
         for (i, (&m, &t)) in batch.graph_mask.iter().zip(&batch.target).enumerate() {
             if m == 1.0 {
                 served += 1;
@@ -53,14 +60,22 @@ fn main() -> Result<()> {
                 sq_err += e * e;
             }
         }
+        // lease drops here: the batch buffer returns to the pool
     }
     let total = t_all.elapsed().as_secs_f64();
 
     let s = summarize(&latencies);
-    println!("\nserved {served} molecules in {total:.2}s ({:.1} mol/s)", served as f64 / total);
+    println!(
+        "\nserved {served} molecules in {batches} packed batches in {total:.2}s ({:.1} mol/s)",
+        served as f64 / total
+    );
     println!(
         "batch latency ms: mean {:.2} p50 {:.2} p95 {:.2} max {:.2}",
         s.mean, s.p50, s.p95, s.max
+    );
+    println!(
+        "data-plane buffers allocated: {} (recycled across {batches} batches)",
+        plane.buffers_allocated()
     );
     println!(
         "RMSE vs synthetic targets (untrained params, sanity only): {:.3}",

@@ -1,8 +1,9 @@
 //! E2E validation run (paper Fig. 11 analogue): train the real
 //! AOT-compiled SchNet on a synthetic HydroNet corpus through the full
-//! stack — LPFHP packing, multi-worker async pipeline with prefetch,
-//! PJRT CPU execution — and print the per-epoch MSE loss curve plus
-//! throughput. Recorded in EXPERIMENTS.md.
+//! stack — sharded LPFHP planning, the persistent multi-worker
+//! data-plane with prefetch and batch recycling, PJRT CPU execution —
+//! and print the per-epoch MSE loss curve plus throughput. Recorded in
+//! EXPERIMENTS.md.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example train_hydronet -- [graphs] [epochs]
@@ -43,6 +44,9 @@ fn main() -> Result<()> {
             packer: Packer::Lpfhp,
             shuffle_seed: 7,
             ordered: true,
+            // plan incrementally: first batch ready after packing 512
+            // graphs, not the whole corpus
+            shard_size: 512,
         },
         max_batches_per_epoch: 0,
         log_every: 0,

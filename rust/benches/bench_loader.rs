@@ -1,11 +1,12 @@
 //! Host-I/O pipeline bench (paper section 4.2.3 / Fig. 7b): batch
 //! preparation throughput for the sync baseline vs multi-worker async
 //! loading, the effect of prefetch depth, and the two-level cache hit
-//! behavior over the disk store. `cargo bench --bench bench_loader`.
+//! behavior over the disk store — the latter through a persistent
+//! `DataPlane` held across epochs. `cargo bench --bench bench_loader`.
 
 use std::sync::Arc;
 
-use molpack::coordinator::{stream_epoch, Batcher, PipelineConfig};
+use molpack::coordinator::{stream_epoch, Batcher, DataPlane, PipelineConfig};
 use molpack::datasets::{write_store, CachedSource, HydroNet, MoleculeSource, Store};
 use molpack::runtime::BatchGeometry;
 
@@ -25,9 +26,8 @@ fn bench_pipeline<S: MoleculeSource + 'static>(src: Arc<S>, workers: usize, dept
     let batcher = Batcher::new(geometry(), 6.0);
     let cfg = PipelineConfig { workers, prefetch_depth: depth, ..Default::default() };
     let t0 = std::time::Instant::now();
-    let stream = stream_epoch(src, batcher, &cfg, 0);
     let mut graphs = 0;
-    for b in stream.batches.iter() {
+    for b in stream_epoch(src, batcher, &cfg, 0) {
         graphs += b.unwrap().real_graphs();
     }
     (t0.elapsed().as_secs_f64(), graphs)
@@ -64,7 +64,8 @@ fn main() {
         );
     }
 
-    // (c) disk store + two-level cache: hit rate across epochs
+    // (c) disk store + two-level cache: hit rate across epochs, streamed
+    // through one persistent data-plane (workers and buffers reused)
     let dir = std::env::temp_dir().join("molpack-bench");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("bench.mpks");
@@ -72,21 +73,24 @@ fn main() {
     let mols: Vec<_> = (0..1000).map(|i| gen.get(i)).collect();
     write_store(&path, &mols).unwrap();
     let cached = Arc::new(CachedSource::new(Store::open(&path).unwrap(), 1000));
-    println!("\ndisk store + LRU cache (capacity = dataset):");
+    let plane = DataPlane::new(
+        Arc::clone(&cached),
+        Batcher::new(geometry(), 6.0),
+        PipelineConfig { workers: 4, prefetch_depth: 4, ..Default::default() },
+    );
+    println!("\ndisk store + LRU cache (capacity = dataset), persistent plane:");
     for epoch in 0..3 {
         let t0 = std::time::Instant::now();
-        let batcher = Batcher::new(geometry(), 6.0);
-        let cfg = PipelineConfig { workers: 4, prefetch_depth: 4, ..Default::default() };
-        let stream = stream_epoch(Arc::clone(&cached), batcher, &cfg, epoch);
         let mut graphs = 0;
-        for b in stream.batches.iter() {
+        for b in plane.start_epoch(epoch) {
             graphs += b.unwrap().real_graphs();
         }
         let stats = cached.stats();
         println!(
-            "  epoch {epoch}: {:.2}s, {graphs} graphs, cumulative hit rate {:.1}%",
+            "  epoch {epoch}: {:.2}s, {graphs} graphs, cumulative hit rate {:.1}%, buffers {}",
             t0.elapsed().as_secs_f64(),
-            stats.hit_rate() * 100.0
+            stats.hit_rate() * 100.0,
+            plane.buffers_allocated()
         );
     }
     std::fs::remove_file(&path).ok();

@@ -1,0 +1,126 @@
+//! Data-plane bench: first-batch latency and steady-state throughput of
+//! the persistent streaming pipeline. `cargo bench --bench bench_pipeline`.
+//!
+//! What it demonstrates (ISSUE 2 acceptance criteria):
+//! * first-batch latency tracks the *shard* size, not the dataset size —
+//!   a 10× larger synthetic HydroNet must stay within 2× at a fixed
+//!   shard, while whole-dataset planning (shard 0) degrades ~linearly;
+//! * steady-state batches/sec vs worker count through one persistent
+//!   plane, compared against the per-epoch rebuild path (`stream_epoch`,
+//!   the seed architecture's cost model).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use molpack::coordinator::{stream_epoch, Batcher, DataPlane, PipelineConfig};
+use molpack::datasets::HydroNet;
+use molpack::runtime::BatchGeometry;
+
+fn geometry() -> BatchGeometry {
+    BatchGeometry {
+        n_nodes: 384,
+        n_edges: 4608,
+        n_graphs: 48,
+        packs_per_batch: 4,
+        nodes_per_pack: 96,
+        edges_per_pack: 1152,
+        graphs_per_pack: 12,
+    }
+}
+
+/// Seconds from `start_epoch` to the first delivered batch (min of `reps`).
+fn first_batch_secs(n: usize, shard_size: usize, reps: usize) -> f64 {
+    let plane = DataPlane::new(
+        Arc::new(HydroNet::new(n, 1)),
+        Batcher::new(geometry(), 6.0),
+        PipelineConfig { workers: 2, shard_size, ..Default::default() },
+    );
+    let mut best = f64::INFINITY;
+    for epoch in 0..reps as u64 {
+        let t0 = Instant::now();
+        let mut stream = plane.start_epoch(epoch);
+        let first = stream.next().expect("epoch yields batches").expect("assembly ok");
+        let dt = t0.elapsed().as_secs_f64();
+        drop(first);
+        stream.cancel();
+        best = best.min(dt);
+    }
+    best
+}
+
+fn main() {
+    println!("data-plane benchmark\n");
+
+    // (a) first-batch latency: sharded planning must scale with the
+    // shard, not the dataset
+    const SHARD: usize = 2048;
+    println!(
+        "{:>10} {:>9} | {:>14} {:>16}",
+        "graphs", "shard", "first batch ms", "(shard=0, eager)"
+    );
+    let mut fixed_shard = Vec::new();
+    for n in [10_000usize, 100_000] {
+        let sharded = first_batch_secs(n, SHARD, 3);
+        let eager = first_batch_secs(n, 0, 1);
+        fixed_shard.push(sharded);
+        println!(
+            "{:>10} {:>9} | {:>14.1} {:>16.1}",
+            n,
+            SHARD,
+            sharded * 1e3,
+            eager * 1e3
+        );
+    }
+    let ratio = fixed_shard[1] / fixed_shard[0];
+    println!("fixed-shard latency ratio 100k/10k: {ratio:.2}x");
+    assert!(
+        ratio <= 2.0,
+        "first-batch latency must track shard size, not dataset size ({ratio:.2}x)"
+    );
+
+    // (b) steady-state throughput vs worker count: persistent plane vs
+    // the per-epoch rebuild wrapper (the seed architecture)
+    let n = 6000;
+    println!("\n{n} graphs/epoch, 2 epochs each:");
+    println!(
+        "{:>8} | {:>13} {:>13} | {:>13}",
+        "workers", "plane b/s", "rebuild b/s", "plane buffers"
+    );
+    for workers in [1usize, 2, 4, 8] {
+        let cfg = PipelineConfig { workers, ..Default::default() };
+
+        let plane = DataPlane::new(
+            Arc::new(HydroNet::new(n, 1)),
+            Batcher::new(geometry(), 6.0),
+            cfg.clone(),
+        );
+        let t0 = Instant::now();
+        let mut batches = 0usize;
+        for epoch in 0..2u64 {
+            for b in plane.start_epoch(epoch) {
+                b.unwrap();
+                batches += 1;
+            }
+        }
+        let plane_bps = batches as f64 / t0.elapsed().as_secs_f64();
+        let buffers = plane.buffers_allocated();
+        drop(plane);
+
+        let t0 = Instant::now();
+        let mut rebuilt = 0usize;
+        for epoch in 0..2u64 {
+            let src = Arc::new(HydroNet::new(n, 1));
+            for b in stream_epoch(src, Batcher::new(geometry(), 6.0), &cfg, epoch) {
+                b.unwrap();
+                rebuilt += 1;
+            }
+        }
+        let rebuild_bps = rebuilt as f64 / t0.elapsed().as_secs_f64();
+
+        println!(
+            "{workers:>8} | {plane_bps:>13.1} {rebuild_bps:>13.1} | {buffers:>13}"
+        );
+    }
+
+    println!("\nbench_pipeline OK");
+}

@@ -34,16 +34,42 @@ impl Batcher {
         packs: &[Pack],
         source: &dyn MoleculeSource,
     ) -> Result<HostBatch> {
+        // A freshly built buffer is already in the reset state — no
+        // second zeroing pass.
+        let mut b = HostBatch::empty(&self.geometry);
+        self.fill_packs(&mut b, packs, source)?;
+        Ok(b)
+    }
+
+    /// Assemble into a recycled buffer: reset it in place, then fill. This
+    /// is the data-plane hot path — zero allocation once the buffer pool
+    /// is warm (the reset is a `fill`, not a reallocation).
+    pub fn assemble_into(
+        &self,
+        b: &mut HostBatch,
+        packs: &[Pack],
+        source: &dyn MoleculeSource,
+    ) -> Result<()> {
+        b.reset(&self.geometry);
+        self.fill_packs(b, packs, source)
+    }
+
+    /// Fill a buffer that is already in the all-padding state.
+    fn fill_packs(
+        &self,
+        b: &mut HostBatch,
+        packs: &[Pack],
+        source: &dyn MoleculeSource,
+    ) -> Result<()> {
         let g = self.geometry;
         if packs.len() > g.packs_per_batch {
             bail!("{} packs exceed batch capacity {}", packs.len(), g.packs_per_batch);
         }
-        let mut b = HostBatch::empty(&g);
         for (pi, pack) in packs.iter().enumerate() {
-            self.fill_pack(&mut b, pi, pack, source)?;
+            self.fill_pack(b, pi, pack, source)?;
         }
         debug_assert!(b.validate(&g).is_ok());
-        Ok(b)
+        Ok(())
     }
 
     /// Place one pack into window `pi` of the batch.
@@ -99,6 +125,7 @@ impl Batcher {
 
             b.target[g0 + slot] = mol.energy;
             b.graph_mask[g0 + slot] = 1.0;
+            b.add_real_counts(mol.n_atoms(), edges.len(), 1);
         }
 
         // Padding: route leftover edge slots to the pack's dump node (the

@@ -1,0 +1,800 @@
+//! The persistent streaming data-plane (paper section 4.2.3, rebuilt as a
+//! long-lived subsystem).
+//!
+//! The seed pipeline rebuilt the whole host data path every epoch: spawn
+//! workers, run an eager whole-dataset LPFHP pass (the first train step
+//! blocked on O(dataset) planning), join workers, repeat. This module
+//! replaces that with one `DataPlane` that lives for the whole training
+//! run:
+//!
+//! * **Persistent worker pool** — N threads spawned once, fed through a
+//!   shared FIFO work queue; epochs are just new job chains, never new
+//!   threads.
+//! * **Sharded incremental planning** — `start_epoch` shuffles the graph
+//!   ids (O(n)) and enqueues a single `PlanShard` job. Whichever worker
+//!   pops it packs that shard (`packing::pack_shard`), enqueues the
+//!   shard's `Assemble` jobs, and chains the next `PlanShard` behind
+//!   them, so the first batch is ready after O(shard) work and planning
+//!   of shard k+1 overlaps device execution of shard k.
+//! * **Zero-allocation batch recycling** — workers draw `HostBatch`
+//!   buffers from a shared pool and ship them as `BatchLease`s; dropping
+//!   a lease (what the train loop does after `train_step`) returns the
+//!   buffer, which the next assembly resets in place. Steady state does
+//!   no hot-path allocation. The pool retains at most
+//!   `workers + prefetch_depth + 2` buffers; a reorder-window spike
+//!   (one stalled assembly while the ordered consumer buffers
+//!   later-indexed batches) allocates transiently and deflates on
+//!   return.
+//!
+//! Ordering: workers emit `(batch index, lease)`; with `ordered: true`
+//! the consuming iterator reorders them on the consumer thread (the seed
+//! needed a dedicated sequencer thread), so multi-worker training is
+//! bitwise reproducible — the delivered sequence is identical for any
+//! worker count.
+//!
+//! Backpressure: each epoch's bounded `sync_channel` is the prefetch
+//! depth. Workers park (bounded-sleep retry, so shutdown can never
+//! deadlock on a full queue) when the device falls behind.
+
+use std::collections::{BTreeMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::Batcher;
+use crate::datasets::MoleculeSource;
+use crate::packing::{effective_shard, pack_shard, Pack, Packer};
+use crate::runtime::{BatchGeometry, HostBatch};
+use crate::util::Rng;
+
+/// Data-plane configuration (also the epoch-pipeline config — the legacy
+/// `stream_epoch` wrapper shares it).
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub packer: Packer,
+    /// Worker threads preparing batches (1 = the paper's sync baseline).
+    pub workers: usize,
+    /// Bounded queue capacity — the paper's pre-fetch depth (4 by default).
+    pub prefetch_depth: usize,
+    pub shuffle_seed: u64,
+    /// Deliver batches in plan order regardless of worker completion
+    /// order — makes multi-worker training bitwise reproducible (the
+    /// consuming iterator reorders in-flight batches).
+    pub ordered: bool,
+    /// Graphs per planning shard: the epoch plan is computed
+    /// incrementally in shards of this many graphs, so first-batch
+    /// latency is O(shard_size), not O(dataset). 0 = plan the whole
+    /// epoch eagerly in one shard.
+    pub shard_size: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            packer: Packer::Lpfhp,
+            workers: 4,
+            prefetch_depth: 4,
+            shuffle_seed: 0,
+            ordered: true,
+            shard_size: 2048,
+        }
+    }
+}
+
+/// One delivery: the batch's position in the epoch plan plus its lease.
+type Delivery = (usize, Result<BatchLease>);
+
+/// Work items flowing through the persistent pool.
+enum Job {
+    /// Pack one shard of the shuffled epoch order, enqueue its batches,
+    /// and chain the next shard.
+    PlanShard {
+        gen: u64,
+        ids: Arc<Vec<u32>>,
+        start: usize,
+        next_batch_idx: usize,
+        tx: SyncSender<Delivery>,
+    },
+    /// Materialize one batch into a pooled buffer and ship it.
+    Assemble {
+        gen: u64,
+        batch_idx: usize,
+        packs: Vec<Pack>,
+        tx: SyncSender<Delivery>,
+    },
+}
+
+/// FIFO job queue shared by the worker pool.
+struct WorkQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+struct QueueState {
+    jobs: std::collections::VecDeque<Job>,
+    closed: bool,
+}
+
+impl WorkQueue {
+    fn new() -> WorkQueue {
+        WorkQueue {
+            state: Mutex::new(QueueState { jobs: Default::default(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, job: Job) {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return; // shutdown: dropping the job drops its channel handle
+        }
+        st.jobs.push_back(job);
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until a job is available; `None` once closed and drained.
+    fn pop(&self) -> Option<Job> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(j) = st.jobs.pop_front() {
+                return Some(j);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+/// Recycling pool of `HostBatch` buffers. Buffers are only ever allocated
+/// when the pool runs dry (warm-up), so the steady-state hot path does no
+/// allocation. The *retained* set is capped at roughly the in-flight
+/// bound (workers + prefetch depth): a transient spike — e.g. the
+/// ordered consumer's reorder window growing while one slow assembly
+/// stalls the sequence — allocates extra buffers, but they are freed on
+/// return instead of becoming permanent resident memory.
+pub struct BufferPool {
+    free: Mutex<Vec<HostBatch>>,
+    allocated: AtomicUsize,
+    /// Max buffers kept for reuse; returns beyond this are dropped.
+    retain: usize,
+}
+
+impl BufferPool {
+    fn new(retain: usize) -> BufferPool {
+        BufferPool {
+            free: Mutex::new(Vec::new()),
+            allocated: AtomicUsize::new(0),
+            retain,
+        }
+    }
+
+    fn acquire(&self, g: &BatchGeometry) -> HostBatch {
+        if let Some(b) = self.free.lock().unwrap().pop() {
+            return b;
+        }
+        self.allocated.fetch_add(1, Ordering::Relaxed);
+        HostBatch::empty(g)
+    }
+
+    fn release(&self, batch: HostBatch) {
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.retain {
+            free.push(batch);
+        }
+        // else: drop the surplus buffer — spike memory deflates
+    }
+
+    /// Buffers ever allocated (the recycling high-water mark).
+    pub fn allocated(&self) -> usize {
+        self.allocated.load(Ordering::Relaxed)
+    }
+}
+
+/// A leased batch: derefs to `HostBatch`; dropping it returns the buffer
+/// to the pool for the next assembly to reset in place.
+pub struct BatchLease {
+    batch: Option<HostBatch>,
+    pool: Arc<BufferPool>,
+}
+
+impl BatchLease {
+    fn new(batch: HostBatch, pool: Arc<BufferPool>) -> BatchLease {
+        BatchLease { batch: Some(batch), pool }
+    }
+
+    /// Detach the buffer from the pool (compat path: callers that want an
+    /// owned `HostBatch` and accept losing the recycling).
+    pub fn into_inner(mut self) -> HostBatch {
+        self.batch.take().expect("lease already consumed")
+    }
+}
+
+impl std::ops::Deref for BatchLease {
+    type Target = HostBatch;
+    fn deref(&self) -> &HostBatch {
+        self.batch.as_ref().expect("lease already consumed")
+    }
+}
+
+impl AsRef<HostBatch> for BatchLease {
+    fn as_ref(&self) -> &HostBatch {
+        self
+    }
+}
+
+impl std::borrow::Borrow<HostBatch> for BatchLease {
+    fn borrow(&self) -> &HostBatch {
+        self
+    }
+}
+
+impl Drop for BatchLease {
+    fn drop(&mut self) {
+        if let Some(b) = self.batch.take() {
+            self.pool.release(b);
+        }
+    }
+}
+
+/// State shared between the plane handle, its workers, and epoch handles.
+struct Shared {
+    queue: WorkQueue,
+    pool: Arc<BufferPool>,
+    /// Generations retired by their epoch handles. A set, not a
+    /// watermark: cancelling one epoch must never kill another
+    /// in-flight epoch (concurrent epochs are supported). Grows by one
+    /// small entry per epoch started — negligible.
+    cancelled: Mutex<HashSet<u64>>,
+    /// Plane shutting down: every generation is dead.
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    fn is_cancelled(&self, gen: u64) -> bool {
+        self.shutdown.load(Ordering::Acquire) || self.cancelled.lock().unwrap().contains(&gen)
+    }
+
+    fn cancel(&self, gen: u64) {
+        self.cancelled.lock().unwrap().insert(gen);
+    }
+}
+
+/// Per-epoch shuffle seed — the single definition shared by the
+/// data-plane and the eager `plan_epoch`, so the two planners can never
+/// silently diverge on epoch ordering.
+pub(crate) fn epoch_shuffle_seed(shuffle_seed: u64, epoch: u64) -> u64 {
+    shuffle_seed ^ epoch.wrapping_mul(0x9E37_79B9)
+}
+
+/// The persistent streaming data-plane. Construct once, call
+/// `start_epoch` per epoch; dropping it joins the worker pool.
+pub struct DataPlane {
+    shared: Arc<Shared>,
+    source: Arc<dyn MoleculeSource>,
+    batcher: Batcher,
+    cfg: PipelineConfig,
+    next_gen: AtomicU64,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl DataPlane {
+    pub fn new(source: Arc<dyn MoleculeSource>, batcher: Batcher, cfg: PipelineConfig) -> DataPlane {
+        // Steady-state working set: one buffer per worker (assembling),
+        // the prefetch channel, and a little reorder slack.
+        let retain = cfg.workers.max(1) + cfg.prefetch_depth.max(1) + 2;
+        let shared = Arc::new(Shared {
+            queue: WorkQueue::new(),
+            pool: Arc::new(BufferPool::new(retain)),
+            cancelled: Mutex::new(HashSet::new()),
+            shutdown: AtomicBool::new(false),
+        });
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for w in 0..cfg.workers.max(1) {
+            let shared = Arc::clone(&shared);
+            let source = Arc::clone(&source);
+            let batcher = batcher.clone();
+            let cfg = cfg.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("dataplane-{w}"))
+                    .spawn(move || worker_loop(&shared, source.as_ref(), &batcher, &cfg))
+                    .expect("spawning data-plane worker"),
+            );
+        }
+        DataPlane { shared, source, batcher, cfg, next_gen: AtomicU64::new(1), workers }
+    }
+
+    pub fn geometry(&self) -> BatchGeometry {
+        self.batcher.geometry
+    }
+
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+
+    /// Recycling high-water mark: `HostBatch` buffers ever allocated.
+    pub fn buffers_allocated(&self) -> usize {
+        self.shared.pool.allocated()
+    }
+
+    /// Begin streaming one epoch: shuffle the dataset order (O(n)) and
+    /// hand the incremental planning chain to the worker pool. Returns
+    /// immediately; the first batch is ready after O(shard_size) work.
+    ///
+    /// Epochs are normally consumed one at a time. Multiple epochs may
+    /// be in flight, but they share one FIFO pool: jobs run in start
+    /// order, so an *earlier* epoch that is neither consumed nor
+    /// cancelled eventually parks every worker on its full prefetch
+    /// channel and stalls later epochs until it drains. Consume (or
+    /// `cancel`) epochs in the order they were started; true
+    /// cross-epoch pipelining needs per-epoch admission control (see
+    /// ROADMAP).
+    pub fn start_epoch(&self, epoch: u64) -> EpochBatches {
+        let gen = self.next_gen.fetch_add(1, Ordering::Relaxed);
+        let n = self.source.len();
+        let mut ids: Vec<u32> = (0..n as u32).collect();
+        let mut rng = Rng::new(epoch_shuffle_seed(self.cfg.shuffle_seed, epoch));
+        rng.shuffle(&mut ids);
+        let (tx, rx) = sync_channel::<Delivery>(self.cfg.prefetch_depth.max(1));
+        self.shared.queue.push(Job::PlanShard {
+            gen,
+            ids: Arc::new(ids),
+            start: 0,
+            next_batch_idx: 0,
+            tx,
+        });
+        EpochBatches {
+            rx,
+            pending: BTreeMap::new(),
+            next_idx: 0,
+            ordered: self.cfg.ordered,
+            gen,
+            shared: Arc::clone(&self.shared),
+        }
+    }
+}
+
+impl Drop for DataPlane {
+    fn drop(&mut self) {
+        // Cancel everything in flight, close the queue, join the pool.
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Handle to one streaming epoch: iterate to receive `BatchLease`s.
+/// Dropping it (or calling `cancel`) retires the epoch's remaining jobs
+/// without touching the worker pool — the fix for the seed's detached
+/// worker threads on early exit.
+pub struct EpochBatches {
+    rx: Receiver<Delivery>,
+    pending: BTreeMap<usize, Result<BatchLease>>,
+    next_idx: usize,
+    ordered: bool,
+    gen: u64,
+    shared: Arc<Shared>,
+}
+
+impl EpochBatches {
+    /// Explicitly retire the epoch (drop does the same; this reads
+    /// better at early-exit sites).
+    pub fn cancel(self) {}
+}
+
+impl Drop for EpochBatches {
+    fn drop(&mut self) {
+        self.shared.cancel(self.gen);
+    }
+}
+
+impl Iterator for EpochBatches {
+    type Item = Result<BatchLease>;
+
+    fn next(&mut self) -> Option<Result<BatchLease>> {
+        if !self.ordered {
+            return self.rx.recv().ok().map(|(_, b)| b);
+        }
+        loop {
+            if let Some(b) = self.pending.remove(&self.next_idx) {
+                self.next_idx += 1;
+                return Some(b);
+            }
+            match self.rx.recv() {
+                Ok((idx, b)) => {
+                    self.pending.insert(idx, b);
+                }
+                Err(_) => {
+                    // Channel closed: flush stragglers in plan order
+                    // (gaps only exist after a cancellation).
+                    let idx = *self.pending.keys().next()?;
+                    let b = self.pending.remove(&idx);
+                    self.next_idx = idx + 1;
+                    return b;
+                }
+            }
+        }
+    }
+}
+
+/// Bounded-backoff delivery: never parks forever, so plane shutdown can
+/// always join the pool even if a consumer holds an unread stream. Epoch
+/// cancellation needs no check here — cancelling drops the handle's
+/// receiver, which surfaces as `Disconnected`. The backoff doubles from
+/// 50us to a 1ms cap: when the device is the bottleneck (prefetch full,
+/// the steady state) a parked worker wakes at most ~1k times/sec on one
+/// atomic load, and resumes within 1ms of the consumer freeing a slot.
+fn deliver(shared: &Shared, tx: &SyncSender<Delivery>, item: Delivery) {
+    let mut item = Some(item);
+    let mut backoff = Duration::from_micros(50);
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            break; // dropping a lease recycles its buffer
+        }
+        match tx.try_send(item.take().expect("send retry lost item")) {
+            Ok(()) => break,
+            Err(TrySendError::Full(it)) => {
+                item = Some(it);
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_millis(1));
+            }
+            Err(TrySendError::Disconnected(_)) => break,
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, source: &dyn MoleculeSource, batcher: &Batcher, cfg: &PipelineConfig) {
+    let g = batcher.geometry;
+    while let Some(job) = shared.queue.pop() {
+        match job {
+            Job::PlanShard { gen, ids, start, next_batch_idx, tx } => {
+                if shared.is_cancelled(gen) {
+                    continue;
+                }
+                // Contain panics (a buggy source or packer assert): a dead
+                // worker would strand queued jobs holding live senders and
+                // hang the consumer forever. Convert to an error delivery
+                // so the epoch fails loudly instead.
+                let planned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let shard = effective_shard(cfg.shard_size, ids.len());
+                    let end = start.saturating_add(shard).min(ids.len());
+                    let shard_ids = &ids[start..end];
+                    let sizes: Vec<usize> =
+                        shard_ids.iter().map(|&i| source.n_atoms(i as usize)).collect();
+                    let packing = pack_shard(
+                        cfg.packer,
+                        shard_ids,
+                        &sizes,
+                        g.nodes_per_pack,
+                        Some(g.graphs_per_pack),
+                    );
+                    (packing, end)
+                }));
+                let (packing, end) = match planned {
+                    Ok(p) => p,
+                    Err(_) => {
+                        deliver(
+                            shared,
+                            &tx,
+                            (next_batch_idx, Err(anyhow::anyhow!(
+                                "data-plane worker panicked planning shard at graph {start}"
+                            ))),
+                        );
+                        continue; // tx drops: the epoch ends after in-flight batches
+                    }
+                };
+                let mut idx = next_batch_idx;
+                for chunk in packing.packs.chunks(g.packs_per_batch.max(1)) {
+                    shared.queue.push(Job::Assemble {
+                        gen,
+                        batch_idx: idx,
+                        packs: chunk.to_vec(),
+                        tx: tx.clone(),
+                    });
+                    idx += 1;
+                }
+                if end < ids.len() {
+                    // Chain the next shard *behind* this shard's batches:
+                    // planning overlaps the device working through them.
+                    shared.queue.push(Job::PlanShard {
+                        gen,
+                        ids,
+                        start: end,
+                        next_batch_idx: idx,
+                        tx,
+                    });
+                }
+                // Otherwise `tx` drops here; the epoch channel closes once
+                // the last in-flight assembly delivers.
+            }
+            Job::Assemble { gen, batch_idx, packs, tx } => {
+                if shared.is_cancelled(gen) {
+                    continue;
+                }
+                let mut buf = shared.pool.acquire(&g);
+                let assembled = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    batcher.assemble_into(&mut buf, &packs, source)
+                }));
+                let delivery = match assembled {
+                    Ok(Ok(())) => {
+                        buf.serves += 1;
+                        debug_assert!(buf.serves < buf.resets, "batch served without reset");
+                        Ok(BatchLease::new(buf, Arc::clone(&shared.pool)))
+                    }
+                    Ok(Err(e)) => {
+                        shared.pool.release(buf);
+                        Err(e)
+                    }
+                    Err(_) => {
+                        // buffer state is suspect after an unwind: drop it
+                        // rather than recycle it
+                        drop(buf);
+                        Err(anyhow::anyhow!(
+                            "data-plane worker panicked assembling batch {batch_idx}"
+                        ))
+                    }
+                };
+                deliver(shared, &tx, (batch_idx, delivery));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::HydroNet;
+
+    fn geometry() -> BatchGeometry {
+        BatchGeometry {
+            n_nodes: 192,
+            n_edges: 2304,
+            n_graphs: 8,
+            packs_per_batch: 2,
+            nodes_per_pack: 96,
+            edges_per_pack: 1152,
+            graphs_per_pack: 4,
+        }
+    }
+
+    fn plane(n: usize, seed: u64, cfg: PipelineConfig) -> DataPlane {
+        DataPlane::new(Arc::new(HydroNet::new(n, seed)), Batcher::new(geometry(), 6.0), cfg)
+    }
+
+    /// Content fingerprint for bitwise-reproducibility comparisons.
+    fn fingerprint(b: &HostBatch) -> (usize, usize, usize, Vec<i32>, Vec<u32>) {
+        (
+            b.real_graphs(),
+            b.real_nodes(),
+            b.real_edges(),
+            b.z.clone(),
+            b.target.iter().map(|t| t.to_bits()).collect(),
+        )
+    }
+
+    #[test]
+    fn epoch_delivers_every_molecule_exactly_once() {
+        let ds = HydroNet::new(40, 5);
+        let mut energies: Vec<f32> = (0..40).map(|i| ds.get(i).energy).collect();
+        energies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p = plane(40, 5, PipelineConfig { workers: 3, prefetch_depth: 2, shard_size: 16, ..Default::default() });
+        for epoch in 0..3u64 {
+            let mut seen: Vec<f32> = Vec::new();
+            for lease in p.start_epoch(epoch) {
+                let b = lease.unwrap();
+                b.validate(&geometry()).unwrap();
+                for (gi, &m) in b.graph_mask.iter().enumerate() {
+                    if m == 1.0 {
+                        seen.push(b.target[gi]);
+                    }
+                }
+            }
+            seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            assert_eq!(seen.len(), 40, "epoch {epoch} lost molecules");
+            assert_eq!(seen, energies, "epoch {epoch} targets diverge from dataset");
+        }
+    }
+
+    #[test]
+    fn ordered_streams_are_bitwise_reproducible_across_worker_counts() {
+        let mut reference: Option<Vec<(usize, usize, usize, Vec<i32>, Vec<u32>)>> = None;
+        for workers in [1usize, 2, 4] {
+            let cfg = PipelineConfig {
+                workers,
+                shard_size: 16,
+                ordered: true,
+                shuffle_seed: 77,
+                ..Default::default()
+            };
+            let p = plane(48, 8, cfg);
+            let got: Vec<_> =
+                p.start_epoch(3).map(|b| fingerprint(&b.unwrap())).collect();
+            assert!(!got.is_empty());
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => assert_eq!(want, &got, "workers={workers} diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn same_seed_same_epoch_is_deterministic_across_planes() {
+        let cfg = PipelineConfig { workers: 2, shard_size: 10, ..Default::default() };
+        let a: Vec<_> = plane(30, 6, cfg.clone())
+            .start_epoch(1)
+            .map(|b| fingerprint(&b.unwrap()))
+            .collect();
+        let b: Vec<_> = plane(30, 6, cfg)
+            .start_epoch(1)
+            .map(|b| fingerprint(&b.unwrap()))
+            .collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn epochs_shuffle_differently() {
+        let cfg = PipelineConfig { workers: 2, shard_size: 16, ..Default::default() };
+        let p = plane(60, 4, cfg);
+        let a: Vec<_> = p.start_epoch(0).map(|b| fingerprint(&b.unwrap())).collect();
+        let b: Vec<_> = p.start_epoch(1).map(|b| fingerprint(&b.unwrap())).collect();
+        assert_ne!(a, b, "epoch order should differ");
+    }
+
+    #[test]
+    fn buffers_recycle_with_reset_between_serves() {
+        let cfg = PipelineConfig { workers: 2, prefetch_depth: 2, shard_size: 16, ..Default::default() };
+        let p = plane(64, 7, cfg);
+        let mut served = 0usize;
+        let mut reused = false;
+        for epoch in 0..4u64 {
+            for lease in p.start_epoch(epoch) {
+                let b = lease.unwrap();
+                // the recycling invariant: a reset happened after every
+                // previous serve of this buffer
+                assert!(
+                    b.serves < b.resets,
+                    "batch served twice without reset (serves={} resets={})",
+                    b.serves,
+                    b.resets
+                );
+                reused |= b.serves > 1;
+                served += 1;
+            }
+        }
+        assert!(served > 8, "test should stream multiple batches");
+        assert!(reused, "pool never recycled a buffer across serves");
+        // zero steady-state allocation: the high-water mark is bounded by
+        // in-flight buffers, not by batches served
+        let cap = 2 * (2 + 2) + 2;
+        assert!(
+            p.buffers_allocated() <= cap,
+            "allocated {} buffers for {served} serves (cap {cap})",
+            p.buffers_allocated()
+        );
+    }
+
+    #[test]
+    fn unordered_mode_still_delivers_everything() {
+        let cfg = PipelineConfig { workers: 4, ordered: false, shard_size: 16, ..Default::default() };
+        let p = plane(40, 9, cfg);
+        let graphs: usize = p.start_epoch(0).map(|b| b.unwrap().real_graphs()).sum();
+        assert_eq!(graphs, 40);
+    }
+
+    #[test]
+    fn early_cancellation_frees_the_pool_for_the_next_epoch() {
+        let cfg = PipelineConfig { workers: 3, prefetch_depth: 2, shard_size: 8, ..Default::default() };
+        let p = plane(64, 11, cfg);
+        let mut stream = p.start_epoch(0);
+        let first = stream.next().unwrap().unwrap();
+        assert!(first.real_graphs() > 0);
+        drop(first);
+        stream.cancel(); // early exit: retire the epoch, keep the pool
+        // the same plane immediately serves a full epoch afterwards
+        let graphs: usize = p.start_epoch(1).map(|b| b.unwrap().real_graphs()).sum();
+        assert_eq!(graphs, 64);
+    }
+
+    #[test]
+    fn cancelling_one_epoch_leaves_concurrent_epochs_intact() {
+        // Generations are cancelled individually (a set, not a
+        // watermark): retiring a *newer* epoch's handle must not kill an
+        // older in-flight epoch.
+        let cfg = PipelineConfig { workers: 2, prefetch_depth: 2, shard_size: 8, ..Default::default() };
+        let p = plane(48, 13, cfg);
+        let older = p.start_epoch(0);
+        let newer = p.start_epoch(1);
+        newer.cancel();
+        let graphs: usize = older.map(|b| b.unwrap().real_graphs()).sum();
+        assert_eq!(graphs, 48, "older epoch truncated by newer cancellation");
+    }
+
+    #[test]
+    fn backpressure_bounds_materialization() {
+        // With prefetch_depth=1, workers must block rather than buffer
+        // the whole epoch; everything still arrives intact afterwards.
+        let cfg = PipelineConfig { workers: 2, prefetch_depth: 1, shard_size: 16, ..Default::default() };
+        let p = plane(64, 7, cfg);
+        let stream = p.start_epoch(0);
+        std::thread::sleep(Duration::from_millis(200));
+        let in_flight = p.buffers_allocated();
+        assert!(
+            in_flight <= 2 * (2 + 1) + 2,
+            "materialized {in_flight} batches ahead of a stalled consumer"
+        );
+        let graphs: usize = stream.map(|b| b.unwrap().real_graphs()).sum();
+        assert_eq!(graphs, 64);
+    }
+
+    #[test]
+    fn shard_size_zero_plans_whole_epoch() {
+        let cfg = PipelineConfig { workers: 2, shard_size: 0, ..Default::default() };
+        let p = plane(50, 3, cfg);
+        let graphs: usize = p.start_epoch(0).map(|b| b.unwrap().real_graphs()).sum();
+        assert_eq!(graphs, 50);
+    }
+
+    #[test]
+    fn empty_dataset_yields_empty_epoch() {
+        let cfg = PipelineConfig { workers: 2, ..Default::default() };
+        let p = plane(0, 1, cfg);
+        assert_eq!(p.start_epoch(0).count(), 0);
+    }
+
+    /// A molecule source whose `get` panics for one index — models a
+    /// corrupt record hit only at materialization time.
+    struct Panicky(HydroNet);
+
+    impl MoleculeSource for Panicky {
+        fn len(&self) -> usize {
+            self.0.len()
+        }
+        fn get(&self, idx: usize) -> crate::graph::Molecule {
+            assert!(idx != 7, "synthetic corrupt record");
+            self.0.get(idx)
+        }
+        fn n_atoms(&self, idx: usize) -> usize {
+            self.0.n_atoms(idx)
+        }
+    }
+
+    #[test]
+    fn worker_panic_surfaces_as_error_not_hang() {
+        // A panicking assembly must become an Err delivery; the epoch
+        // must still terminate (the seed degraded the same way when its
+        // workers died). With workers=1 this would hang forever if the
+        // panic killed the worker while queued jobs held live senders.
+        let p = DataPlane::new(
+            Arc::new(Panicky(HydroNet::new(32, 5))),
+            Batcher::new(geometry(), 6.0),
+            PipelineConfig { workers: 1, shard_size: 8, ..Default::default() },
+        );
+        let mut errors = 0;
+        let mut ok = 0;
+        for lease in p.start_epoch(0) {
+            match lease {
+                Ok(_) => ok += 1,
+                Err(_) => errors += 1,
+            }
+        }
+        assert!(errors >= 1, "the corrupt record must surface as an error");
+        assert!(ok >= 1, "healthy batches must still be delivered");
+        // the pool survives: the next epoch still streams (and still
+        // reports the same corrupt record)
+        let again: usize = p.start_epoch(1).filter(|b| b.is_err()).count();
+        assert!(again >= 1);
+    }
+}

@@ -1,10 +1,17 @@
-//! L3 coordinator: pack-aware batch assembly and the asynchronous
-//! host-side pipeline (paper sections 4.1 and 4.2.3 made executable).
+//! L3 coordinator: pack-aware batch assembly and the persistent
+//! streaming data-plane (paper sections 4.1 and 4.2.3 made executable).
+//!
+//! `dataplane` is the training-path subsystem: one worker pool for the
+//! whole run, shard-incremental epoch planning, recycled batch buffers.
+//! `pipeline` keeps the legacy eager planner and the one-epoch
+//! `stream_epoch` wrapper on top of it.
 
 pub mod batcher;
+pub mod dataplane;
 pub mod pipeline;
 pub mod replicas;
 
 pub use batcher::Batcher;
-pub use pipeline::{plan_epoch, stream_epoch, EpochStream, PipelineConfig};
+pub use dataplane::{BatchLease, BufferPool, DataPlane, EpochBatches, PipelineConfig};
+pub use pipeline::{plan_epoch, stream_epoch, EpochStream};
 pub use replicas::{CollectiveStats, DataParallel};

@@ -1,54 +1,41 @@
-//! Asynchronous batch-preparation pipeline (paper section 4.2.3):
-//! multi-worker batch assembly feeding a bounded prefetch queue that
-//! overlaps host-side preparation with device execution.
+//! Legacy per-epoch pipeline surface, kept as a thin compatibility layer
+//! over the persistent streaming data-plane (`coordinator::dataplane`).
 //!
-//! Epoch flow: shuffle → LPFHP over the size column → group packs into
-//! batches → a work queue of batch descriptors → N worker threads
-//! materialize `HostBatch`es (through the two-level cache) → a bounded
-//! `sync_channel` whose capacity is the *prefetch depth* (backpressure:
-//! workers block when the device falls behind).
+//! * `plan_epoch` — the eager whole-dataset planner (shuffle → LPFHP →
+//!   batch descriptors). Still the right tool for offline analysis and
+//!   for callers that want the full plan as data (`bench_train_step`,
+//!   the data-parallel and integration tests).
+//! * `stream_epoch` / `EpochStream` — the seed API: spin up a pipeline
+//!   for exactly one epoch. It now just constructs a single-epoch
+//!   `DataPlane` and adapts its leases to owned `HostBatch`es; new code
+//!   should hold a `DataPlane` across epochs instead so the worker pool
+//!   and the buffer pool persist.
+//!
+//! Behavior change vs the seed: the streamed epoch is planned by the
+//! data-plane (graph-shuffle, then per-shard packing), so its batch
+//! boundaries no longer coincide with `plan_epoch`'s pack-shuffled
+//! whole-dataset plan. Coverage (every molecule exactly once) and
+//! padding quality are preserved; callers that need a materialized plan
+//! to index into must use `plan_epoch` + `Batcher::assemble` directly.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::coordinator::batcher::Batcher;
+use crate::coordinator::dataplane::{epoch_shuffle_seed, BatchLease, DataPlane, EpochBatches};
+// Re-exported for source compatibility with the seed API, which defined
+// the config here.
+pub use crate::coordinator::dataplane::PipelineConfig;
 use crate::datasets::MoleculeSource;
-use crate::packing::{Pack, Packer};
+use crate::packing::Pack;
 use crate::runtime::HostBatch;
 use crate::util::Rng;
 
-/// Pipeline configuration.
-#[derive(Debug, Clone)]
-pub struct PipelineConfig {
-    pub packer: Packer,
-    /// Worker threads preparing batches (1 = the paper's sync baseline).
-    pub workers: usize,
-    /// Bounded queue capacity — the paper's pre-fetch depth (4 by default).
-    pub prefetch_depth: usize,
-    pub shuffle_seed: u64,
-    /// Deliver batches in plan order regardless of worker completion
-    /// order — makes multi-worker training bitwise reproducible (a
-    /// sequencer thread reorders in-flight batches).
-    pub ordered: bool,
-}
-
-impl Default for PipelineConfig {
-    fn default() -> Self {
-        PipelineConfig {
-            packer: Packer::Lpfhp,
-            workers: 4,
-            prefetch_depth: 4,
-            shuffle_seed: 0,
-            ordered: true,
-        }
-    }
-}
-
-/// Plan one epoch: shuffle the dataset, pack it, group packs into batches.
-/// Returns batch descriptors (each a Vec of packs).
+/// Plan one epoch eagerly: shuffle the dataset, pack it in one pass,
+/// group packs into batches. Returns batch descriptors (each a Vec of
+/// packs). The data-plane's incremental planner supersedes this on the
+/// training path; analysis and one-shot callers still use it.
 pub fn plan_epoch(
     source: &dyn MoleculeSource,
     batcher: &Batcher,
@@ -60,7 +47,7 @@ pub fn plan_epoch(
     let g = batcher.geometry;
     let mut packing = cfg.packer.run(&sizes, g.nodes_per_pack, Some(g.graphs_per_pack));
     // Shuffle pack order each epoch for SGD; pack composition stays optimal.
-    let mut rng = Rng::new(cfg.shuffle_seed ^ epoch.wrapping_mul(0x9E37_79B9));
+    let mut rng = Rng::new(epoch_shuffle_seed(cfg.shuffle_seed, epoch));
     rng.shuffle(&mut packing.packs);
     packing
         .packs
@@ -69,102 +56,43 @@ pub fn plan_epoch(
         .collect()
 }
 
-/// Handle to a running epoch pipeline.
+/// Handle to a one-epoch pipeline (compatibility wrapper). Iterate it to
+/// drain the epoch; it owns a private `DataPlane` whose workers join when
+/// the stream is dropped or `join`ed.
 pub struct EpochStream {
-    pub batches: Receiver<Result<HostBatch>>,
-    pub n_batches: usize,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    // Field order matters: the epoch handle must drop (cancelling its
+    // jobs) before the plane joins the worker pool.
+    inner: EpochBatches,
+    _plane: DataPlane,
 }
 
 impl EpochStream {
-    /// Drain and join (for clean shutdown mid-epoch).
+    /// Drain-or-cancel and join the workers (clean shutdown mid-epoch).
     pub fn join(self) {
-        drop(self.batches);
-        for h in self.handles {
-            let _ = h.join();
-        }
+        // inner's drop cancels the epoch; _plane's drop joins the pool.
     }
 }
 
-/// Spawn the worker pool for one epoch over `source`.
-///
-/// `source` must be shareable across threads; the synthetic generators are
-/// stateless and the disk store uses an internal mutex + cache.
+impl Iterator for EpochStream {
+    type Item = Result<HostBatch>;
+
+    fn next(&mut self) -> Option<Result<HostBatch>> {
+        self.inner.next().map(|r| r.map(BatchLease::into_inner))
+    }
+}
+
+/// Stream one epoch over `source` (compatibility wrapper): builds a
+/// fresh single-epoch `DataPlane`. Training should construct the plane
+/// once and call `start_epoch` per epoch instead.
 pub fn stream_epoch<S: MoleculeSource + 'static>(
     source: Arc<S>,
     batcher: Batcher,
     cfg: &PipelineConfig,
     epoch: u64,
 ) -> EpochStream {
-    let plan = plan_epoch(source.as_ref(), &batcher, cfg, epoch);
-    let n_batches = plan.len();
-    let plan = Arc::new(plan);
-    let next = Arc::new(AtomicUsize::new(0));
-    // workers emit (plan index, batch); an optional sequencer restores
-    // plan order before the consumer sees them
-    let (wtx, wrx) = sync_channel::<(usize, Result<HostBatch>)>(cfg.prefetch_depth.max(1));
-
-    let mut handles = Vec::new();
-    for _w in 0..cfg.workers.max(1) {
-        let plan = Arc::clone(&plan);
-        let next = Arc::clone(&next);
-        let wtx = wtx.clone();
-        let source = Arc::clone(&source);
-        let batcher = batcher.clone();
-        handles.push(std::thread::spawn(move || {
-            loop {
-                let idx = next.fetch_add(1, Ordering::Relaxed);
-                if idx >= plan.len() {
-                    break;
-                }
-                let result = batcher.assemble(&plan[idx], source.as_ref());
-                // receiver hung up -> device stopped, exit quietly
-                if wtx.send((idx, result)).is_err() {
-                    break;
-                }
-            }
-        }));
-    }
-    drop(wtx);
-
-    if !cfg.ordered {
-        // unordered fast path: strip indices inline via a forwarder thread
-        let (tx, rx) = sync_channel::<Result<HostBatch>>(cfg.prefetch_depth.max(1));
-        handles.push(std::thread::spawn(move || {
-            for (_, b) in wrx.iter() {
-                if tx.send(b).is_err() {
-                    break;
-                }
-            }
-        }));
-        return EpochStream { batches: rx, n_batches, handles };
-    }
-
-    // sequencer: reorder by plan index (holds at most ~workers +
-    // prefetch_depth batches, since workers claim indices in order)
-    let (tx, rx) = sync_channel::<Result<HostBatch>>(cfg.prefetch_depth.max(1));
-    handles.push(std::thread::spawn(move || {
-        let mut pending: std::collections::BTreeMap<usize, Result<HostBatch>> =
-            Default::default();
-        let mut want = 0usize;
-        for (idx, b) in wrx.iter() {
-            pending.insert(idx, b);
-            while let Some(b) = pending.remove(&want) {
-                if tx.send(b).is_err() {
-                    return;
-                }
-                want += 1;
-            }
-        }
-        // flush any stragglers (send errors mean the consumer is gone)
-        while let Some(b) = pending.remove(&want) {
-            if tx.send(b).is_err() {
-                return;
-            }
-            want += 1;
-        }
-    }));
-    EpochStream { batches: rx, n_batches, handles }
+    let plane = DataPlane::new(source, batcher, cfg.clone());
+    let inner = plane.start_epoch(epoch);
+    EpochStream { inner, _plane: plane }
 }
 
 #[cfg(test)]
@@ -204,7 +132,7 @@ mod tests {
     }
 
     #[test]
-    fn epochs_shuffle_differently() {
+    fn eager_plans_shuffle_across_epochs() {
         let ds = HydroNet::new(60, 4);
         let batcher = Batcher::new(geometry(), 6.0);
         let cfg = PipelineConfig::default();
@@ -217,79 +145,40 @@ mod tests {
     }
 
     #[test]
-    fn stream_delivers_all_planned_batches() {
+    fn compat_stream_delivers_every_molecule() {
         let ds = Arc::new(HydroNet::new(40, 5));
         let batcher = Batcher::new(geometry(), 6.0);
         let cfg = PipelineConfig { workers: 3, prefetch_depth: 2, ..Default::default() };
-        let stream = stream_epoch(Arc::clone(&ds), batcher, &cfg, 0);
-        let expect = stream.n_batches;
         let mut graphs = 0;
-        let mut count = 0;
-        for b in stream.batches.iter() {
+        for b in stream_epoch(Arc::clone(&ds), batcher, &cfg, 0) {
             let b = b.unwrap();
             b.validate(&geometry()).unwrap();
             graphs += b.real_graphs();
-            count += 1;
         }
-        assert_eq!(count, expect);
         assert_eq!(graphs, 40, "every molecule delivered exactly once");
     }
 
     #[test]
-    fn ordered_delivery_matches_plan_order() {
-        // With ordered=true, batch k's graphs are exactly plan[k]'s packs
-        // regardless of worker count.
-        let ds = Arc::new(HydroNet::new(48, 8));
+    fn compat_stream_joins_cleanly_mid_epoch() {
+        let ds = Arc::new(HydroNet::new(64, 7));
         let batcher = Batcher::new(geometry(), 6.0);
-        let cfg = PipelineConfig { workers: 4, ordered: true, ..Default::default() };
-        let plan = plan_epoch(ds.as_ref(), &batcher, &cfg, 3);
-        let stream = stream_epoch(Arc::clone(&ds), batcher, &cfg, 3);
-        for (k, b) in stream.batches.iter().enumerate() {
-            let b = b.unwrap();
-            let want: usize = plan[k].iter().map(|p| p.items.len()).sum();
-            assert_eq!(b.real_graphs(), want, "batch {k} out of order");
-        }
+        let cfg = PipelineConfig { workers: 2, prefetch_depth: 1, ..Default::default() };
+        let mut stream = stream_epoch(Arc::clone(&ds), batcher, &cfg, 0);
+        let first = stream.next().unwrap().unwrap();
+        assert!(first.real_graphs() > 0);
+        stream.join(); // must not hang or leak threads
     }
 
     #[test]
-    fn unordered_mode_still_delivers_everything() {
-        let ds = Arc::new(HydroNet::new(40, 9));
-        let batcher = Batcher::new(geometry(), 6.0);
-        let cfg = PipelineConfig { workers: 4, ordered: false, ..Default::default() };
-        let stream = stream_epoch(Arc::clone(&ds), batcher, &cfg, 0);
-        let graphs: usize = stream.batches.iter().map(|b| b.unwrap().real_graphs()).sum();
-        assert_eq!(graphs, 40);
-    }
-
-    #[test]
-    fn single_worker_matches_multi_worker_coverage() {
+    fn compat_stream_single_and_multi_worker_agree_on_coverage() {
         let ds = Arc::new(HydroNet::new(30, 6));
         let batcher = Batcher::new(geometry(), 6.0);
         for workers in [1usize, 4] {
             let cfg = PipelineConfig { workers, ..Default::default() };
-            let stream = stream_epoch(Arc::clone(&ds), batcher.clone(), &cfg, 2);
-            let graphs: usize =
-                stream.batches.iter().map(|b| b.unwrap().real_graphs()).sum();
+            let graphs: usize = stream_epoch(Arc::clone(&ds), batcher.clone(), &cfg, 2)
+                .map(|b| b.unwrap().real_graphs())
+                .sum();
             assert_eq!(graphs, 30, "workers={workers}");
         }
-    }
-
-    #[test]
-    fn backpressure_bounds_memory() {
-        // With prefetch_depth=1 workers must block rather than buffer the
-        // whole epoch: after sleeping, at most depth + workers batches were
-        // materialized ahead of consumption.
-        let ds = Arc::new(HydroNet::new(64, 7));
-        let batcher = Batcher::new(geometry(), 6.0);
-        let cfg = PipelineConfig { workers: 2, prefetch_depth: 1, ..Default::default() };
-        let stream = stream_epoch(Arc::clone(&ds), batcher, &cfg, 0);
-        std::thread::sleep(std::time::Duration::from_millis(200));
-        // consume one batch; the rest must still arrive intact
-        let mut count = 0;
-        for b in stream.batches.iter() {
-            b.unwrap();
-            count += 1;
-        }
-        assert_eq!(count, stream.n_batches);
     }
 }

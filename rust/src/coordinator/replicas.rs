@@ -9,12 +9,17 @@
 //! optimizer are exactly the distributed algorithm, so convergence
 //! semantics (global batch = R × local batch) and collective costs are
 //! real even though replica *compute* is serialized.
+//!
+//! Batch supply rides the persistent data-plane: `run_epoch` pulls
+//! replica-sized groups of `BatchLease`s from a shared `DataPlane`, so
+//! the dp path gets sharded planning and buffer recycling for free.
 
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 use xla::Literal;
 
+use crate::coordinator::dataplane::{BatchLease, DataPlane};
 use crate::optim::{allreduce_mean_merged, allreduce_mean_per_tensor, Adam, AdamConfig};
 use crate::runtime::{Engine, HostBatch};
 
@@ -51,8 +56,14 @@ impl DataParallel {
     }
 
     /// One synchronous data-parallel step over `batches` (one per
-    /// replica). Returns the mean replica loss.
-    pub fn step(&mut self, engine: &Engine, batches: &[HostBatch]) -> Result<f32> {
+    /// replica). Returns the mean replica loss. Accepts anything that
+    /// borrows as `HostBatch` — owned batches or data-plane
+    /// `BatchLease`s — so the replica path rides the recycling pool.
+    pub fn step<B: std::borrow::Borrow<HostBatch>>(
+        &mut self,
+        engine: &Engine,
+        batches: &[B],
+    ) -> Result<f32> {
         if batches.len() != self.replicas {
             bail!("expected {} batches, got {}", self.replicas, batches.len());
         }
@@ -61,7 +72,7 @@ impl DataParallel {
         let mut grads = Vec::with_capacity(self.replicas);
         let mut loss_sum = 0.0f32;
         for b in batches {
-            let (loss, grad) = engine.grad_step(&params_lit, b)?;
+            let (loss, grad) = engine.grad_step(&params_lit, b.borrow())?;
             loss_sum += loss;
             grads.push(grad);
         }
@@ -80,6 +91,31 @@ impl DataParallel {
         self.stats.allreduce_secs += (t2 - t1).as_secs_f64();
         self.stats.optimizer_secs += (t3 - t2).as_secs_f64();
         Ok(loss_sum / self.replicas as f32)
+    }
+
+    /// Stream one epoch from the persistent data-plane in replica-sized
+    /// groups, running one synchronous dp-step per full group (the ragged
+    /// tail group is dropped, matching the seed CLI semantics). Leases
+    /// return to the plane's buffer pool after each step. Returns
+    /// (mean step loss, dp-steps run).
+    pub fn run_epoch(
+        &mut self,
+        engine: &Engine,
+        plane: &DataPlane,
+        epoch: u64,
+    ) -> Result<(f64, usize)> {
+        let mut group: Vec<BatchLease> = Vec::with_capacity(self.replicas);
+        let mut loss_sum = 0.0f64;
+        let mut steps = 0usize;
+        for lease in plane.start_epoch(epoch) {
+            group.push(lease?);
+            if group.len() == self.replicas {
+                loss_sum += self.step(engine, &group)? as f64;
+                steps += 1;
+                group.clear(); // leases drop -> buffers recycle
+            }
+        }
+        Ok((loss_sum / steps.max(1) as f64, steps))
     }
 }
 

@@ -4,9 +4,11 @@
 //! Prediction Models for Quantum Chemistry" (Graphcore/PNNL, 2022).
 //!
 //! Three-layer architecture:
-//! * **L3 (this crate)** — coordinator: datasets, batch packing (LPFHP),
-//!   scatter/gather planner, BSP tile-machine performance model, async
-//!   dataloader with prefetching, data-parallel training orchestrator.
+//! * **L3 (this crate)** — coordinator: datasets, batch packing (LPFHP,
+//!   sharded for incremental epoch planning), scatter/gather planner, BSP
+//!   tile-machine performance model, a persistent streaming data-plane
+//!   (long-lived worker pool, prefetching, zero-allocation batch
+//!   recycling), data-parallel training orchestrator.
 //! * **L2 (python/compile/model.py)** — SchNet forward/backward in JAX,
 //!   AOT-lowered to HLO text artifacts at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute

@@ -2,8 +2,9 @@
 //!
 //! Subcommands:
 //!   figures [--fig N | --table 1 | --all]   regenerate paper exhibits
-//!   train [--graphs N] [--epochs E] [--workers W] [--prefetch D]
-//!                                            real PJRT training run
+//!   train [--graphs N] [--epochs E] [--workers W] [--prefetch D] [--shard S]
+//!                                            real PJRT training run over
+//!                                            the persistent data-plane
 //!   characterize                             Fig. 5 dataset profiles
 //!   pack [--dataset NAME] [--s-m N]          run LPFHP + baselines once
 //!   plan [--edges E] [--nodes N] [--feat F]  scatter/gather planner demo
@@ -81,29 +82,29 @@ fn cmd_figures(args: &Args) -> Result<()> {
 
 /// Data-parallel mode: R logical replicas, gradient all-reduce in Rust
 /// (merged or per-tensor), native Adam (paper section 4.3 made real).
+/// Batches stream from the same persistent data-plane as single-replica
+/// training.
 fn cmd_train_dp(args: &Args, engine: &Engine, graphs: usize, epochs: u64) -> Result<()> {
-    use molpack::coordinator::{plan_epoch, Batcher, DataParallel};
+    use molpack::coordinator::{Batcher, DataParallel, DataPlane};
     let replicas = args.usize_or("replicas", 2);
     let merged = args.get("no-merged").is_none();
-    let source = HydroNet::new(graphs, 42);
+    let source = Arc::new(HydroNet::new(graphs, 42));
     let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
+    let plane = DataPlane::new(
+        source,
+        batcher,
+        PipelineConfig {
+            workers: args.usize_or("workers", 4),
+            prefetch_depth: args.usize_or("prefetch", 4),
+            shard_size: args.usize_or("shard", 2048),
+            ..Default::default()
+        },
+    );
     let mut dp = DataParallel::new(engine, replicas, merged)?;
     println!("data-parallel: {replicas} replicas, merged_collective={merged}");
     for epoch in 0..epochs {
-        let plan = plan_epoch(&source, &batcher, &PipelineConfig::default(), epoch);
-        let mut losses = Vec::new();
-        for group in plan.chunks(replicas) {
-            if group.len() < replicas {
-                break; // drop the ragged tail group
-            }
-            let batches: Vec<_> = group
-                .iter()
-                .map(|p| batcher.assemble(p, &source))
-                .collect::<Result<_>>()?;
-            losses.push(dp.step(engine, &batches)? as f64);
-        }
-        let mean = losses.iter().sum::<f64>() / losses.len().max(1) as f64;
-        println!("epoch {epoch}: mean loss {mean:.5} over {} dp-steps", losses.len());
+        let (mean, steps) = dp.run_epoch(engine, &plane, epoch)?;
+        println!("epoch {epoch}: mean loss {mean:.5} over {steps} dp-steps");
     }
     let s = dp.stats;
     println!(
@@ -113,6 +114,7 @@ fn cmd_train_dp(args: &Args, engine: &Engine, graphs: usize, epochs: u64) -> Res
         1e3 * s.allreduce_secs / s.steps as f64,
         1e3 * s.optimizer_secs / s.steps as f64,
     );
+    println!("data-plane buffers allocated: {}", plane.buffers_allocated());
     Ok(())
 }
 
@@ -138,6 +140,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             packer: Packer::Lpfhp,
             shuffle_seed: 42,
             ordered: true,
+            shard_size: args.usize_or("shard", 2048),
         },
         max_batches_per_epoch: args.usize_or("max-batches", 0),
         log_every: 50,
@@ -247,7 +250,8 @@ fn cmd_characterize() -> Result<()> {
 
 const USAGE: &str = "usage: molpack <figures|train|pack|plan|characterize> [flags]\n\
   figures [--fig 5..13 | --table 1 | --all]\n\
-  train [--graphs N] [--epochs E] [--workers W] [--prefetch D] [--max-batches B]\n\
+  train [--graphs N] [--epochs E] [--workers W] [--prefetch D] [--shard S]\n\
+        [--max-batches B] [--replicas R [--no-merged]]\n\
   pack [--dataset QM9|500K|2.7M|4.5M] [--s-m N] [--sample N]\n\
   plan [--edges I] [--nodes M] [--feat N]\n\
   characterize";

@@ -52,28 +52,43 @@ impl Strategy {
 
 /// Paper Algorithm 1 over a size histogram. `hist[s]` = number of graphs
 /// with `s` nodes; `hist.len()` must be `s_m + 1`.
+///
+/// Best-fit lookup: buckets keep item-capped ("full") groups apart from
+/// open ones, and a `BTreeSet` indexes the buckets with at least one open
+/// group, so the tightest fit for a size is one ordered-set range query
+/// (O(log s_m)) instead of a linear scan over all `s_m` space buckets —
+/// the scan dominated strategy construction at large node budgets.
 pub fn lpfhp_strategy(hist: &[usize], s_m: usize, max_items: Option<usize>) -> Strategy {
     assert_eq!(hist.len(), s_m + 1, "histogram must cover 0..=s_m");
     let cap = max_items.unwrap_or(usize::MAX);
     assert!(cap >= 1);
-    // S[space] = list of (count, composition) groups with `space` left.
-    let mut s: Vec<Vec<(usize, Vec<usize>)>> = vec![Vec::new(); s_m + 1];
+    // Per remaining-space bucket: groups still below the item cap, and
+    // groups that hit it (kept only for the final collection).
+    let mut open: Vec<Vec<(usize, Vec<usize>)>> = vec![Vec::new(); s_m + 1];
+    let mut full: Vec<Vec<(usize, Vec<usize>)>> = vec![Vec::new(); s_m + 1];
+    // Index of buckets with at least one open group.
+    let mut open_spaces: std::collections::BTreeSet<usize> = std::collections::BTreeSet::new();
+
+    let insert = |open: &mut Vec<Vec<(usize, Vec<usize>)>>,
+                      full: &mut Vec<Vec<(usize, Vec<usize>)>>,
+                      open_spaces: &mut std::collections::BTreeSet<usize>,
+                      j: usize,
+                      group: (usize, Vec<usize>)| {
+        if group.1.len() < cap {
+            open[j].push(group);
+            open_spaces.insert(j);
+        } else {
+            full[j].push(group);
+        }
+    };
 
     // Iterate sizes longest-first (the "longest-pack-first" order).
     for size in (1..=s_m).rev() {
         let mut c = hist[size];
         while c > 0 {
-            // Best fit: the non-empty space bucket j >= size with minimal j,
-            // skipping groups that already hit the item cap.
-            let mut chosen: Option<(usize, usize)> = None; // (space j, idx in S[j])
-            'search: for j in size..=s_m {
-                for (idx, (_, comp)) in s[j].iter().enumerate() {
-                    if comp.len() < cap {
-                        chosen = Some((j, idx));
-                        break 'search;
-                    }
-                }
-            }
+            // Best fit: the smallest space bucket j >= size holding a
+            // group below the item cap.
+            let chosen = open_spaces.range(size..).next().copied();
             match chosen {
                 None => {
                     // Open fresh packs. The paper's simplified Algorithm 1
@@ -86,21 +101,24 @@ pub fn lpfhp_strategy(hist: &[usize], s_m: usize, max_items: Option<usize>) -> S
                     // remaining count. Equivalent quality to per-item
                     // best-fit, still O(groups).
                     let per = (s_m / size).min(cap).max(1);
-                    let open = c.div_ceil(per);
-                    s[s_m - size].push((open, vec![size]));
-                    c -= open;
+                    let opened = c.div_ceil(per);
+                    insert(&mut open, &mut full, &mut open_spaces, s_m - size, (opened, vec![size]));
+                    c -= opened;
                 }
-                Some((j, idx)) => {
+                Some(j) => {
                     // the paper's update(S, i, c, s)
-                    let (c_p, mut comp) = s[j].swap_remove(idx);
+                    let (c_p, mut comp) = open[j].pop().expect("indexed bucket is empty");
+                    if open[j].is_empty() {
+                        open_spaces.remove(&j);
+                    }
                     if c >= c_p {
                         comp.push(size);
-                        s[j - size].push((c_p, comp));
+                        insert(&mut open, &mut full, &mut open_spaces, j - size, (c_p, comp));
                         c -= c_p;
                     } else {
-                        s[j].push((c_p - c, comp.clone()));
+                        insert(&mut open, &mut full, &mut open_spaces, j, (c_p - c, comp.clone()));
                         comp.push(size);
-                        s[j - size].push((c, comp));
+                        insert(&mut open, &mut full, &mut open_spaces, j - size, (c, comp));
                         c = 0;
                     }
                 }
@@ -109,8 +127,8 @@ pub fn lpfhp_strategy(hist: &[usize], s_m: usize, max_items: Option<usize>) -> S
     }
 
     let mut groups = Vec::new();
-    for bucket in s {
-        for (count, sizes) in bucket {
+    for (o, f) in open.into_iter().zip(full) {
+        for (count, sizes) in o.into_iter().chain(f) {
             groups.push(StrategyGroup { count, sizes });
         }
     }

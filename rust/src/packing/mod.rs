@@ -2,17 +2,23 @@
 //! graphs into fixed-size packs for ahead-of-time-compiled execution.
 //!
 //! * `lpfhp` — the paper's Algorithm 1 (longest-pack-first histogram
-//!   packing), operating on size histograms in O(distinct sizes²).
+//!   packing), operating on size histograms with an indexed best-fit
+//!   lookup (O(log s_m) per placement).
+//! * `sharded` — shard-incremental planning for the streaming data-plane:
+//!   per-shard strategies composed into a `ShardedStrategy` with
+//!   aggregate efficiency accounting.
 //! * `baselines` — padding / next-fit / FFD / BFD comparators.
 //! * `pack` — pack types, efficiency metrics, validation.
 
 pub mod baselines;
 pub mod lpfhp;
 pub mod pack;
+pub mod sharded;
 
 pub use baselines::{best_fit_decreasing, first_fit_decreasing, next_fit, padding};
 pub use lpfhp::{histogram, lpfhp, lpfhp_strategy, materialize, Strategy, StrategyGroup};
 pub use pack::{lower_bound_packs, Pack, Packing};
+pub use sharded::{effective_shard, pack_shard, ShardedStrategy};
 
 use crate::datasets::MoleculeSource;
 

@@ -1,6 +1,12 @@
 //! Host-side packed batch: the fixed-shape tensor set fed to the AOT
 //! executables (DESIGN.md §5). The coordinator's batcher fills this in from
 //! packs; the runtime marshals it into PJRT literals.
+//!
+//! Batches are designed to be *recycled*: the data-plane's buffer pool
+//! hands the same allocations out epoch after epoch, and `reset` restores
+//! the all-padding state in place without touching the heap. The real
+//! node/edge/graph counts are cached at assembly time (`add_real_counts`)
+//! so the hot path never rescans the mask tensors.
 
 use anyhow::{bail, Result};
 
@@ -18,6 +24,16 @@ pub struct HostBatch {
     pub node_mask: Vec<f32>,  // [N]
     pub target: Vec<f32>,     // [G]
     pub graph_mask: Vec<f32>, // [G]
+    /// Cached unmasked counts, maintained by the batcher at assembly time
+    /// so `real_*()` is O(1) on the hot path.
+    n_real_nodes: usize,
+    n_real_edges: usize,
+    n_real_graphs: usize,
+    /// Lifecycle counters for the buffer-recycling invariant: a batch must
+    /// be `reset` between consecutive serves. `empty` counts as the first
+    /// reset; the data-plane bumps `serves` when it ships a lease.
+    pub resets: u64,
+    pub serves: u64,
 }
 
 impl HostBatch {
@@ -34,21 +50,72 @@ impl HostBatch {
             node_mask: vec![0.0; g.n_nodes],
             target: vec![0.0; g.n_graphs],
             graph_mask: vec![0.0; g.n_graphs],
+            n_real_nodes: 0,
+            n_real_edges: 0,
+            n_real_graphs: 0,
+            resets: 1,
+            serves: 0,
         }
     }
 
-    /// Number of real (unmasked) graphs in the batch.
-    pub fn real_graphs(&self) -> usize {
-        self.graph_mask.iter().filter(|&&m| m == 1.0).count()
+    /// Restore the all-padding state *in place* — no allocation as long as
+    /// the buffer already matches the geometry (the recycling fast path).
+    /// A buffer from a different geometry is rebuilt (startup only).
+    pub fn reset(&mut self, g: &BatchGeometry) {
+        if self.z.len() != g.n_nodes
+            || self.src.len() != g.n_edges
+            || self.target.len() != g.n_graphs
+        {
+            let (resets, serves) = (self.resets, self.serves);
+            *self = HostBatch::empty(g);
+            self.resets = resets + 1;
+            self.serves = serves;
+            return;
+        }
+        self.z.fill(0);
+        self.pos.fill(0.0);
+        self.src.fill(0);
+        self.dst.fill(0);
+        self.edge_mask.fill(0.0);
+        self.graph_id.fill((g.n_graphs - 1) as i32);
+        self.node_mask.fill(0.0);
+        self.target.fill(0.0);
+        self.graph_mask.fill(0.0);
+        self.n_real_nodes = 0;
+        self.n_real_edges = 0;
+        self.n_real_graphs = 0;
+        self.resets += 1;
     }
 
-    /// Number of real nodes / edges (packing-efficiency accounting).
+    /// Record newly assembled real content (batcher-internal accounting).
+    pub fn add_real_counts(&mut self, nodes: usize, edges: usize, graphs: usize) {
+        self.n_real_nodes += nodes;
+        self.n_real_edges += edges;
+        self.n_real_graphs += graphs;
+    }
+
+    /// Recompute the cached counts from the mask tensors — for batches
+    /// assembled by hand (e.g. the quickstart demo) rather than through
+    /// the batcher.
+    pub fn recount(&mut self) {
+        self.n_real_nodes = self.node_mask.iter().filter(|&&m| m == 1.0).count();
+        self.n_real_edges = self.edge_mask.iter().filter(|&&m| m == 1.0).count();
+        self.n_real_graphs = self.graph_mask.iter().filter(|&&m| m == 1.0).count();
+    }
+
+    /// Number of real (unmasked) graphs in the batch. O(1): cached at
+    /// assembly time.
+    pub fn real_graphs(&self) -> usize {
+        self.n_real_graphs
+    }
+
+    /// Number of real nodes / edges (packing-efficiency accounting). O(1).
     pub fn real_nodes(&self) -> usize {
-        self.node_mask.iter().filter(|&&m| m == 1.0).count()
+        self.n_real_nodes
     }
 
     pub fn real_edges(&self) -> usize {
-        self.edge_mask.iter().filter(|&&m| m == 1.0).count()
+        self.n_real_edges
     }
 
     /// Structural validation against the compiled geometry. Called on the
@@ -88,6 +155,22 @@ impl HostBatch {
             if self.edge_mask[e] == 1.0 && s / npp != d / npp {
                 bail!("edge {e} crosses pack boundary: {s} -> {d}");
             }
+        }
+        // Cached counts must agree with the masks (catches stale buffers
+        // that were recycled without a reset).
+        let nodes = self.node_mask.iter().filter(|&&m| m == 1.0).count();
+        let edges = self.edge_mask.iter().filter(|&&m| m == 1.0).count();
+        let graphs = self.graph_mask.iter().filter(|&&m| m == 1.0).count();
+        if nodes != self.n_real_nodes
+            || edges != self.n_real_edges
+            || graphs != self.n_real_graphs
+        {
+            bail!(
+                "cached real counts (n={} e={} g={}) disagree with masks (n={nodes} e={edges} g={graphs})",
+                self.n_real_nodes,
+                self.n_real_edges,
+                self.n_real_graphs
+            );
         }
         Ok(())
     }
@@ -136,6 +219,7 @@ mod tests {
         b.edge_mask[0] = 1.0;
         assert!(b.validate(&g).is_err());
         b.edge_mask[0] = 0.0; // masked cross edges are tolerated (padding)
+        b.recount();
         b.validate(&g).unwrap();
     }
 
@@ -145,5 +229,46 @@ mod tests {
         let mut b = HostBatch::empty(&g);
         b.graph_id[3] = 4;
         assert!(b.validate(&g).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_stale_cached_counts() {
+        let g = geom();
+        let mut b = HostBatch::empty(&g);
+        b.graph_mask[0] = 1.0; // mask says 1 real graph, cache says 0
+        assert!(b.validate(&g).is_err());
+        b.recount();
+        b.validate(&g).unwrap();
+        assert_eq!(b.real_graphs(), 1);
+    }
+
+    #[test]
+    fn reset_restores_empty_state_in_place() {
+        let g = geom();
+        let mut b = HostBatch::empty(&g);
+        b.z[0] = 8;
+        b.node_mask[0] = 1.0;
+        b.edge_mask[0] = 1.0;
+        b.src[0] = 1;
+        b.graph_mask[1] = 1.0;
+        b.target[1] = 3.5;
+        b.recount();
+        let ptr = b.z.as_ptr();
+        b.reset(&g);
+        assert_eq!(b.z.as_ptr(), ptr, "reset must not reallocate");
+        b.validate(&g).unwrap();
+        assert_eq!(b.real_nodes() + b.real_edges() + b.real_graphs(), 0);
+        assert!(b.node_mask.iter().all(|&m| m == 0.0));
+        assert_eq!(b.resets, 2);
+    }
+
+    #[test]
+    fn reset_rebuilds_on_geometry_change() {
+        let g = geom();
+        let mut b = HostBatch::empty(&g);
+        let g2 = BatchGeometry { n_nodes: 16, n_edges: 24, ..g };
+        b.reset(&g2);
+        b.validate(&g2).unwrap();
+        assert_eq!(b.resets, 2);
     }
 }

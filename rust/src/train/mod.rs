@@ -1,5 +1,13 @@
-//! Training loop: drives the PJRT engine over the async batch pipeline.
-//! The E2E validation path (paper Fig. 11's loss curve) runs through here.
+//! Training loop: drives the PJRT engine over the persistent streaming
+//! data-plane. The E2E validation path (paper Fig. 11's loss curve) runs
+//! through here.
+//!
+//! One `DataPlane` is constructed per training run and reused across
+//! epochs: the worker pool stays alive, and every `HostBatch` flows back
+//! into the buffer pool when its lease drops after `train_step` — the
+//! steady-state loop does no hot-path allocation. Early epoch exits
+//! (`max_batches_per_epoch`) cancel the in-flight epoch instead of
+//! leaking detached worker threads.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -7,7 +15,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::batcher::Batcher;
-use crate::coordinator::pipeline::{stream_epoch, PipelineConfig};
+use crate::coordinator::dataplane::{DataPlane, PipelineConfig};
 use crate::datasets::MoleculeSource;
 use crate::runtime::{Engine, TrainState};
 
@@ -53,14 +61,16 @@ pub fn train<S: MoleculeSource + 'static>(
     mut on_log: impl FnMut(u64, usize, f64),
 ) -> Result<Vec<EpochRecord>> {
     let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
+    let plane = DataPlane::new(source, batcher, cfg.pipeline.clone());
     let mut records = Vec::new();
     for epoch in 0..cfg.epochs {
         let t0 = Instant::now();
-        let stream = stream_epoch(Arc::clone(&source), batcher.clone(), &cfg.pipeline, epoch);
+        let mut stream = plane.start_epoch(epoch);
         let mut loss_sum = 0.0f64;
         let mut batches = 0usize;
         let mut graphs = 0usize;
-        for batch in stream.batches.iter() {
+        let mut truncated = false;
+        for batch in stream.by_ref() {
             let batch = batch?;
             let loss = engine.train_step(state, &batch)?;
             loss_sum += loss as f64;
@@ -70,8 +80,16 @@ pub fn train<S: MoleculeSource + 'static>(
                 on_log(epoch, batches, loss as f64);
             }
             if cfg.max_batches_per_epoch > 0 && batches >= cfg.max_batches_per_epoch {
+                truncated = true;
                 break;
             }
+            // `batch` (the lease) drops here, returning its buffer to the
+            // pool for the next assembly.
+        }
+        if truncated {
+            // Retire the epoch's remaining jobs; the worker pool stays up
+            // for the next epoch (the seed detached its threads here).
+            stream.cancel();
         }
         let secs = t0.elapsed().as_secs_f64();
         records.push(EpochRecord {
@@ -92,8 +110,8 @@ mod tests {
     use crate::datasets::HydroNet;
 
     /// Full E2E integration: real artifacts, real PJRT execution, real
-    /// datasets, LPFHP packing, async pipeline. Skipped when artifacts are
-    /// absent (run `make artifacts`).
+    /// datasets, sharded LPFHP planning, the persistent data-plane.
+    /// Skipped when artifacts are absent (run `make artifacts`).
     #[test]
     fn e2e_loss_decreases_on_tiny_hydronet() {
         let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
@@ -120,5 +138,37 @@ mod tests {
         );
         // every epoch must see every molecule
         assert!(records.iter().all(|r| r.graphs == 96));
+    }
+
+    /// Epoch truncation must not leak or wedge anything: the plane keeps
+    /// serving full epochs after an early exit. Runs without artifacts.
+    #[test]
+    fn truncated_epochs_cancel_cleanly() {
+        use crate::coordinator::Batcher;
+        use crate::runtime::BatchGeometry;
+        let g = BatchGeometry {
+            n_nodes: 192,
+            n_edges: 2304,
+            n_graphs: 8,
+            packs_per_batch: 2,
+            nodes_per_pack: 96,
+            edges_per_pack: 1152,
+            graphs_per_pack: 4,
+        };
+        let plane = DataPlane::new(
+            Arc::new(HydroNet::new(64, 3)),
+            Batcher::new(g, 6.0),
+            PipelineConfig { workers: 3, prefetch_depth: 2, shard_size: 8, ..Default::default() },
+        );
+        // epoch 0: consume two batches, then cancel (what train() does on
+        // max_batches_per_epoch)
+        let mut stream = plane.start_epoch(0);
+        for _ in 0..2 {
+            stream.next().unwrap().unwrap();
+        }
+        stream.cancel();
+        // epoch 1 on the same plane still covers the whole dataset
+        let graphs: usize = plane.start_epoch(1).map(|b| b.unwrap().real_graphs()).sum();
+        assert_eq!(graphs, 64);
     }
 }

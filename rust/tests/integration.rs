@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use molpack::coordinator::{plan_epoch, Batcher, DataParallel, PipelineConfig};
+use molpack::coordinator::{plan_epoch, Batcher, DataParallel, DataPlane, PipelineConfig};
 use molpack::datasets::{write_store, CachedSource, HydroNet, MoleculeSource, Qm9, Store};
 use molpack::runtime::{checkpoint, Engine};
 use molpack::train::{train, TrainConfig};
@@ -163,6 +163,28 @@ fn data_parallel_end_to_end() {
     assert!(dp.stats.grad_secs > 0.0);
     assert!(dp.stats.allreduce_secs >= 0.0);
     assert!(dp.stats.optimizer_secs > 0.0);
+}
+
+/// Data-parallel epochs streamed from the persistent data-plane: every
+/// epoch's full dp-step groups cover the dataset (minus the ragged tail)
+/// and the buffer pool recycles across epochs.
+#[test]
+fn data_parallel_runs_on_the_data_plane() {
+    let Some(engine) = engine() else { return };
+    let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
+    let plane = DataPlane::new(
+        Arc::new(HydroNet::new(48, 41)),
+        batcher,
+        PipelineConfig { workers: 2, shard_size: 16, ..Default::default() },
+    );
+    let mut dp = DataParallel::new(&engine, 2, true).unwrap();
+    let (l0, steps0) = dp.run_epoch(&engine, &plane, 0).unwrap();
+    let (l1, steps1) = dp.run_epoch(&engine, &plane, 1).unwrap();
+    assert!(steps0 >= 1 && steps1 >= 1, "dp-steps: {steps0}, {steps1}");
+    assert!(l0.is_finite() && l1.is_finite());
+    assert_eq!(dp.stats.steps as usize, steps0 + steps1);
+    // recycling across epochs: far fewer buffers than batches served
+    assert!(plane.buffers_allocated() <= 2 * (2 + 4) + 2);
 }
 
 /// The predict path answers every real graph slot and ignores padding.
