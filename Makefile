@@ -1,0 +1,25 @@
+# molpack build/verify entry points.
+#
+#   make artifacts   AOT-lower the JAX model (L2+L1) to HLO text under
+#                    rust/artifacts — required once before `train`,
+#                    `serve`, the examples, and the artifact-gated tests
+#                    (they skip gracefully without it).
+#   make check       the CI gate: formatting, clippy (warnings are
+#                    errors), and the test suite.
+#   make test        tests only.
+
+.PHONY: check fmt clippy test artifacts
+
+check: fmt clippy test
+
+fmt:
+	cargo fmt --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
+test:
+	cargo test -q
+
+artifacts:
+	cd python && python3 -m compile.aot --out ../rust/artifacts

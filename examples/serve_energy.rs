@@ -3,10 +3,13 @@
 //! demonstrating that inference shares the packed fixed-shape data-plane
 //! with training and reporting latency/throughput percentiles.
 //!
-//! The request queue streams through a persistent `DataPlane`: sharded
-//! LPFHP planning means the first prediction fires after O(shard) host
-//! work, and every `HostBatch` recycles through the buffer pool when its
-//! lease drops after `predict`.
+//! The request queue is a Serving-class *session* on a persistent
+//! `DataPlane`: sharded LPFHP planning means the first prediction fires
+//! after O(shard) host work, admission credits bound how far the plane
+//! runs ahead of the device, and every `HostBatch` recycles through the
+//! buffer pool when its lease drops after `predict`. Session metrics
+//! (dispatcher queue wait, credit stalls) are reported alongside
+//! latency.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example serve_energy -- [requests]
@@ -16,7 +19,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
-use molpack::coordinator::{Batcher, DataPlane, PipelineConfig};
+use molpack::coordinator::{Batcher, DataPlane, JobSpec, PipelineConfig};
 use molpack::datasets::HydroNet;
 use molpack::packing::Packer;
 use molpack::runtime::Engine;
@@ -34,12 +37,15 @@ fn main() -> Result<()> {
     let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
     let cfg = PipelineConfig { packer: Packer::Lpfhp, shard_size: 128, ..Default::default() };
 
-    // Stream the request queue through the training data-plane.
+    // The request queue is one Serving-class session on the plane.
     let plane = DataPlane::new(source, batcher, cfg);
+    let mut session = plane.open_session(JobSpec::serving().with_credits(4));
     println!(
-        "serve_energy: {requests} molecules streaming in shards of {} (G={} slots/batch)",
+        "serve_energy: {requests} molecules streaming in shards of {} (G={} slots/batch, session #{} qos={})",
         plane.config().shard_size,
-        engine.manifest.batch.n_graphs
+        engine.manifest.batch.n_graphs,
+        session.id(),
+        session.qos().name(),
     );
 
     let mut latencies = Vec::new();
@@ -47,7 +53,7 @@ fn main() -> Result<()> {
     let mut served = 0usize;
     let mut sq_err = 0.0f64;
     let t_all = Instant::now();
-    for lease in plane.start_epoch(0) {
+    for lease in session.by_ref() {
         let batch = lease?;
         let t0 = Instant::now();
         let energies = engine.predict(&state.params, &batch)?;
@@ -64,6 +70,16 @@ fn main() -> Result<()> {
     }
     let total = t_all.elapsed().as_secs_f64();
 
+    assert_eq!(served, requests, "every request must be answered exactly once");
+    if served == 0 {
+        // 0-request invocation: there is no throughput or error to
+        // report — dividing by `served` here used to print NaN RMSE and
+        // a misleading "0 molecules in 0.0s" rate.
+        println!("\nserved 0 molecules (empty request queue) in {total:.2}s — no latency/RMSE to report");
+        println!("serve_energy OK");
+        return Ok(());
+    }
+
     let s = summarize(&latencies);
     println!(
         "\nserved {served} molecules in {batches} packed batches in {total:.2}s ({:.1} mol/s)",
@@ -73,6 +89,16 @@ fn main() -> Result<()> {
         "batch latency ms: mean {:.2} p50 {:.2} p95 {:.2} max {:.2}",
         s.mean, s.p50, s.p95, s.max
     );
+    let waits = session.queue_wait_samples_ms();
+    let w = summarize(&waits);
+    let m = session.metrics();
+    println!(
+        "dispatcher queue wait ms: p50 {:.3} p95 {:.3} | assembly {:.1} ms total | credit stalls {}",
+        w.p50,
+        w.p95,
+        m.assembly_time.as_secs_f64() * 1e3,
+        m.credit_stalls
+    );
     println!(
         "data-plane buffers allocated: {} (recycled across {batches} batches)",
         plane.buffers_allocated()
@@ -81,7 +107,6 @@ fn main() -> Result<()> {
         "RMSE vs synthetic targets (untrained params, sanity only): {:.3}",
         (sq_err / served as f64).sqrt()
     );
-    assert_eq!(served, requests, "every request must be answered exactly once");
     println!("serve_energy OK");
     Ok(())
 }

@@ -1,9 +1,10 @@
 //! E2E validation run (paper Fig. 11 analogue): train the real
 //! AOT-compiled SchNet on a synthetic HydroNet corpus through the full
 //! stack — sharded LPFHP planning, the persistent multi-worker
-//! data-plane with prefetch and batch recycling, PJRT CPU execution —
-//! and print the per-epoch MSE loss curve plus throughput. Recorded in
-//! EXPERIMENTS.md.
+//! data-plane (each epoch a Training-class session with admission
+//! credits and batch recycling), PJRT CPU execution — and print the
+//! per-epoch MSE loss curve, throughput, and per-session data-plane
+//! metrics. Recorded in EXPERIMENTS.md.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example train_hydronet -- [graphs] [epochs]
@@ -54,11 +55,14 @@ fn main() -> Result<()> {
 
     let records = train(&engine, &mut state, source, &cfg, |_, _, _| {})?;
 
-    println!("\nepoch | mean MSE | batches | graphs/s | secs");
+    println!("\nepoch | mean MSE | batches | graphs/s | secs | wait ms | stalls");
     for r in &records {
+        // `wait ms` is the epoch session's mean dispatcher queue wait;
+        // `stalls` counts admission-credit hits (nonzero = the device,
+        // not the data-plane, bounded the epoch — the healthy state).
         println!(
-            "{:5} | {:8.5} | {:7} | {:8.1} | {:6.2}",
-            r.epoch, r.mean_loss, r.batches, r.graphs_per_sec, r.secs
+            "{:5} | {:8.5} | {:7} | {:8.1} | {:6.2} | {:7.3} | {:6}",
+            r.epoch, r.mean_loss, r.batches, r.graphs_per_sec, r.secs, r.queue_wait_ms, r.credit_stalls
         );
     }
 

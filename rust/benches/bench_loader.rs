@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use molpack::coordinator::{stream_epoch, Batcher, DataPlane, PipelineConfig};
+use molpack::coordinator::{stream_epoch, Batcher, DataPlane, JobSpec, PipelineConfig};
 use molpack::datasets::{write_store, CachedSource, HydroNet, MoleculeSource, Store};
 use molpack::runtime::BatchGeometry;
 
@@ -82,7 +82,7 @@ fn main() {
     for epoch in 0..3 {
         let t0 = std::time::Instant::now();
         let mut graphs = 0;
-        for b in plane.start_epoch(epoch) {
+        for b in plane.open_session(JobSpec::training(epoch)) {
             graphs += b.unwrap().real_graphs();
         }
         let stats = cached.stats();

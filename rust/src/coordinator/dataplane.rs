@@ -1,73 +1,79 @@
-//! The persistent streaming data-plane (paper section 4.2.3, rebuilt as a
-//! long-lived subsystem).
+//! The persistent multi-tenant streaming data-plane (paper section
+//! 4.2.3, rebuilt as a long-lived shared subsystem).
 //!
-//! The seed pipeline rebuilt the whole host data path every epoch: spawn
-//! workers, run an eager whole-dataset LPFHP pass (the first train step
-//! blocked on O(dataset) planning), join workers, repeat. This module
-//! replaces that with one `DataPlane` that lives for the whole training
-//! run:
+//! One `DataPlane` owns a worker pool for the life of the process and
+//! serves *sessions*: independent tenants — training epochs, serving
+//! request queues, background sweeps — opened with
+//! [`DataPlane::open_session`] and a [`JobSpec`]. The redesign replaces
+//! the single-tenant `start_epoch` API (kept as a deprecated wrapper for
+//! one release) with three mechanisms:
 //!
-//! * **Persistent worker pool** — N threads spawned once, fed through a
-//!   shared FIFO work queue; epochs are just new job chains, never new
-//!   threads.
-//! * **Sharded incremental planning** — `start_epoch` shuffles the graph
-//!   ids (O(n)) and enqueues a single `PlanShard` job. Whichever worker
-//!   pops it packs that shard (`packing::pack_shard`), enqueues the
-//!   shard's `Assemble` jobs, and chains the next `PlanShard` behind
-//!   them, so the first batch is ready after O(shard) work and planning
-//!   of shard k+1 overlaps device execution of shard k.
-//! * **Zero-allocation batch recycling** — workers draw `HostBatch`
-//!   buffers from a shared pool and ship them as `BatchLease`s; dropping
-//!   a lease (what the train loop does after `train_step`) returns the
-//!   buffer, which the next assembly resets in place. Steady state does
-//!   no hot-path allocation. The pool retains at most
-//!   `workers + prefetch_depth + 2` buffers; a reorder-window spike
-//!   (one stalled assembly while the ordered consumer buffers
-//!   later-indexed batches) allocates transiently and deflates on
-//!   return.
+//! * **Per-session admission control** — each session holds a bounded
+//!   number of *credits* (batches materialized but not yet consumed).
+//!   Workers are only dispatched an assembly job when its session has a
+//!   free credit, and the delivery channel is sized to the credit limit,
+//!   so a send can never park a worker: a slow or abandoned consumer
+//!   idles *its own stream* and nothing else. (The old API's documented
+//!   failure mode — an unconsumed epoch parking every worker on its full
+//!   prefetch channel — is structurally impossible.)
+//! * **Weighted QoS dispatch** — the job queue is a set of per-session
+//!   FIFOs grouped into three [`QosClass`] lanes, scheduled by smooth
+//!   weighted round-robin (Serving 6 : Training 3 : Background 1) with
+//!   plain round-robin between sessions of one class. Serving latency is
+//!   protected while training is mid-epoch and no class can starve.
+//! * **Per-session metrics** — `queue_wait` (dispatcher latency per
+//!   batch, with per-batch samples for percentiles), `assembly_time`,
+//!   and `credits_blocked`/`credit_stalls` (time the session was
+//!   runnable but capped by its own consumer), via
+//!   [`Session::metrics`].
 //!
-//! Ordering: workers emit `(batch index, lease)`; with `ordered: true`
-//! the consuming iterator reorders them on the consumer thread (the seed
-//! needed a dedicated sequencer thread), so multi-worker training is
-//! bitwise reproducible — the delivered sequence is identical for any
-//! worker count.
+//! Planning is shard-incremental as before: opening a session enqueues a
+//! single `PlanShard` job; whichever worker pops it packs that shard
+//! (`packing::pack_shard`), enqueues the shard's `Assemble` jobs, and
+//! chains the next `PlanShard` *behind* them in the session's FIFO. With
+//! credit gating this also bounds memory: a stalled session stops being
+//! planned after at most one shard of queued descriptors.
 //!
-//! Backpressure: each epoch's bounded `sync_channel` is the prefetch
-//! depth. Workers park (bounded-sleep retry, so shutdown can never
-//! deadlock on a full queue) when the device falls behind.
+//! Batch buffers recycle through a shared [`BufferPool`] as
+//! [`BatchLease`]s; ordering and backpressure semantics per session are
+//! unchanged from the epoch-stream design (consumer-side reorder window
+//! for `ordered` streams, bitwise-reproducible for any worker count).
 
-use std::collections::{BTreeMap, HashSet};
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::coordinator::batcher::Batcher;
+use crate::coordinator::session::{JobSpec, QosClass, SessionMetrics, SessionState};
 use crate::datasets::MoleculeSource;
 use crate::packing::{effective_shard, pack_shard, Pack, Packer};
 use crate::runtime::{BatchGeometry, HostBatch};
 use crate::util::Rng;
 
-/// Data-plane configuration (also the epoch-pipeline config — the legacy
-/// `stream_epoch` wrapper shares it).
+/// Data-plane configuration. Sessions inherit `packer`, `shard_size`,
+/// `ordered`, and `prefetch_depth` (as their default credit limit)
+/// unless their [`JobSpec`] overrides them.
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
     pub packer: Packer,
     /// Worker threads preparing batches (1 = the paper's sync baseline).
     pub workers: usize,
-    /// Bounded queue capacity — the paper's pre-fetch depth (4 by default).
+    /// Default per-session admission credits — the paper's pre-fetch
+    /// depth (4 by default): max batches materialized but unconsumed.
     pub prefetch_depth: usize,
     pub shuffle_seed: u64,
     /// Deliver batches in plan order regardless of worker completion
     /// order — makes multi-worker training bitwise reproducible (the
     /// consuming iterator reorders in-flight batches).
     pub ordered: bool,
-    /// Graphs per planning shard: the epoch plan is computed
+    /// Graphs per planning shard: a session's plan is computed
     /// incrementally in shards of this many graphs, so first-batch
     /// latency is O(shard_size), not O(dataset). 0 = plan the whole
-    /// epoch eagerly in one shard.
+    /// stream eagerly in one shard.
     pub shard_size: usize,
 }
 
@@ -84,99 +90,287 @@ impl Default for PipelineConfig {
     }
 }
 
-/// One delivery: the batch's position in the epoch plan plus its lease.
-type Delivery = (usize, Result<BatchLease>);
+/// One delivery into a session's stream.
+struct Delivery {
+    /// Position in the session's plan (for ordered reassembly).
+    idx: usize,
+    /// Whether this delivery holds an admission credit (assemblies do;
+    /// rare plan-failure error deliveries bypass admission).
+    credited: bool,
+    payload: Result<BatchLease>,
+}
 
-/// Work items flowing through the persistent pool.
+/// Work items flowing through the dispatcher.
 enum Job {
-    /// Pack one shard of the shuffled epoch order, enqueue its batches,
-    /// and chain the next shard.
+    /// Pack one shard of the session's id order, enqueue its batches,
+    /// and chain the next shard behind them.
     PlanShard {
-        gen: u64,
+        sess: Arc<SessionState>,
         ids: Arc<Vec<u32>>,
         start: usize,
         next_batch_idx: usize,
         tx: SyncSender<Delivery>,
     },
-    /// Materialize one batch into a pooled buffer and ship it.
+    /// Materialize one batch into a pooled buffer and ship it. Requires
+    /// a session credit to dispatch.
     Assemble {
-        gen: u64,
+        sess: Arc<SessionState>,
         batch_idx: usize,
         packs: Vec<Pack>,
+        enqueued: Instant,
         tx: SyncSender<Delivery>,
     },
 }
 
-/// FIFO job queue shared by the worker pool.
-struct WorkQueue {
-    state: Mutex<QueueState>,
-    cv: Condvar,
+impl Job {
+    fn session(&self) -> &Arc<SessionState> {
+        match self {
+            Job::PlanShard { sess, .. } => sess,
+            Job::Assemble { sess, .. } => sess,
+        }
+    }
 }
 
-struct QueueState {
-    jobs: std::collections::VecDeque<Job>,
+/// One session's FIFO of pending jobs inside the dispatcher.
+struct SessionQueue {
+    sess: Arc<SessionState>,
+    jobs: VecDeque<Job>,
+    /// When the head assembly first failed admission (all credits in
+    /// flight); cleared — and accounted — when the head dispatches.
+    blocked_since: Option<Instant>,
+}
+
+impl SessionQueue {
+    /// Is the head job dispatchable right now? Planning never needs a
+    /// credit (it is bounded by construction: one `PlanShard` per
+    /// session chain); assembly needs a free credit.
+    fn dispatchable(&self) -> bool {
+        match self.jobs.front() {
+            Some(Job::Assemble { sess, .. }) => {
+                sess.in_flight.load(Ordering::Acquire) < sess.credits
+            }
+            Some(Job::PlanShard { .. }) => true,
+            None => false,
+        }
+    }
+}
+
+/// One QoS class's set of session queues plus its smooth-WRR counter.
+#[derive(Default)]
+struct Lane {
+    queues: VecDeque<SessionQueue>,
+    wrr: i64,
+}
+
+impl Lane {
+    /// First dispatchable session in round-robin order. Side effect:
+    /// stamps (and counts) the onset of a credit stall on every blocked
+    /// head it scans past, so `credits_blocked` is tracked even while
+    /// other sessions keep the workers busy.
+    fn scan(&mut self, now: Instant) -> Option<usize> {
+        let mut found = None;
+        for (qi, q) in self.queues.iter_mut().enumerate() {
+            if q.dispatchable() {
+                if found.is_none() {
+                    found = Some(qi);
+                }
+            } else if matches!(q.jobs.front(), Some(Job::Assemble { .. }))
+                && q.blocked_since.is_none()
+            {
+                q.blocked_since = Some(now);
+                q.sess.record_credit_stall_onset();
+            }
+        }
+        found
+    }
+
+    /// Dispatch the head job of session `qi`: take its credit, account
+    /// queue-wait/stall time, and rotate the session to the lane's back
+    /// for round-robin fairness.
+    fn take(&mut self, qi: usize) -> Job {
+        let mut q = self.queues.remove(qi).expect("session queue index in range");
+        let job = q.jobs.pop_front().expect("dispatchable session has a head job");
+        if let Job::Assemble { sess, enqueued, .. } = &job {
+            sess.in_flight.fetch_add(1, Ordering::AcqRel);
+            sess.record_dispatch(*enqueued);
+            if let Some(t) = q.blocked_since.take() {
+                sess.record_credit_stall_cleared(t.elapsed());
+            }
+        }
+        q.blocked_since = None; // the head changed
+        if !q.jobs.is_empty() {
+            self.queues.push_back(q);
+        }
+        job
+    }
+}
+
+struct DispatchState {
+    /// Indexed by `QosClass::lane()` (priority order).
+    lanes: [Lane; 3],
     closed: bool,
 }
 
-impl WorkQueue {
-    fn new() -> WorkQueue {
-        WorkQueue {
-            state: Mutex::new(QueueState { jobs: Default::default(), closed: false }),
+impl DispatchState {
+    /// Pick the next job by smooth weighted round-robin over lanes with
+    /// a dispatchable session, or `None` if nothing is runnable.
+    fn dispatch_next(&mut self) -> Option<Job> {
+        let now = Instant::now();
+        let mut heads: [Option<usize>; 3] = [None; 3];
+        for (li, lane) in self.lanes.iter_mut().enumerate() {
+            heads[li] = lane.scan(now);
+        }
+        let runnable: Vec<usize> = (0..3).filter(|&l| heads[l].is_some()).collect();
+        if runnable.is_empty() {
+            return None;
+        }
+        let mut total = 0i64;
+        for &l in &runnable {
+            let w = QosClass::ALL[l].weight() as i64;
+            self.lanes[l].wrr += w;
+            total += w;
+        }
+        // Highest counter wins; ties break toward the higher-priority
+        // (lower-index) lane.
+        let best = *runnable
+            .iter()
+            .max_by_key(|&&l| (self.lanes[l].wrr, std::cmp::Reverse(l)))
+            .expect("runnable is non-empty");
+        self.lanes[best].wrr -= total;
+        Some(self.lanes[best].take(heads[best].expect("runnable lane has a head")))
+    }
+
+    /// Drop every queued job of cancelled sessions (dropping their
+    /// channel handles, which ends their streams).
+    fn purge_cancelled(&mut self) {
+        for lane in &mut self.lanes {
+            lane.queues.retain(|q| !q.sess.is_cancelled());
+        }
+    }
+}
+
+/// The session-aware job dispatcher shared by the worker pool: per-class
+/// lanes of per-session FIFOs, credit-gated admission, weighted-priority
+/// selection.
+struct Dispatcher {
+    state: Mutex<DispatchState>,
+    cv: Condvar,
+}
+
+impl Dispatcher {
+    fn new() -> Dispatcher {
+        Dispatcher {
+            state: Mutex::new(DispatchState { lanes: Default::default(), closed: false }),
             cv: Condvar::new(),
         }
     }
 
     fn push(&self, job: Job) {
         let mut st = self.state.lock().unwrap();
-        if st.closed {
-            return; // shutdown: dropping the job drops its channel handle
+        if st.closed || job.session().is_cancelled() {
+            return; // dropping the job drops its channel handle
         }
-        st.jobs.push_back(job);
+        let sess = Arc::clone(job.session());
+        let lane = &mut st.lanes[sess.qos.lane()];
+        if let Some(q) = lane.queues.iter_mut().find(|q| q.sess.id == sess.id) {
+            q.jobs.push_back(job);
+        } else {
+            let mut jobs = VecDeque::with_capacity(1);
+            jobs.push_back(job);
+            lane.queues.push_back(SessionQueue { sess, jobs, blocked_since: None });
+        }
         drop(st);
         self.cv.notify_one();
     }
 
-    fn close(&self) {
-        self.state.lock().unwrap().closed = true;
-        self.cv.notify_all();
-    }
-
-    /// Block until a job is available; `None` once closed and drained.
+    /// Block until a job is dispatchable; `None` once closed.
     fn pop(&self) -> Option<Job> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(j) = st.jobs.pop_front() {
-                return Some(j);
-            }
             if st.closed {
                 return None;
             }
+            st.purge_cancelled();
+            if let Some(job) = st.dispatch_next() {
+                return Some(job);
+            }
             st = self.cv.wait(st).unwrap();
         }
+    }
+
+    /// A consumer freed one admission credit: at most one job became
+    /// newly dispatchable, so waking a single worker suffices. Takes the
+    /// lock briefly so the credit release can never race a worker
+    /// between its admission check and its wait.
+    fn credit_released(&self) {
+        drop(self.state.lock().unwrap());
+        self.cv.notify_one();
+    }
+
+    /// Wake every worker to re-evaluate (session cancelled: the purge
+    /// must run even on workers about to wait on unrelated lanes).
+    fn wake_all(&self) {
+        drop(self.state.lock().unwrap());
+        self.cv.notify_all();
+    }
+
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        for lane in &mut st.lanes {
+            lane.queues.clear(); // drop queued jobs and their senders
+        }
+        drop(st);
+        self.cv.notify_all();
     }
 }
 
 /// Recycling pool of `HostBatch` buffers. Buffers are only ever allocated
 /// when the pool runs dry (warm-up), so the steady-state hot path does no
 /// allocation. The *retained* set is capped at roughly the in-flight
-/// bound (workers + prefetch depth): a transient spike — e.g. the
-/// ordered consumer's reorder window growing while one slow assembly
-/// stalls the sequence — allocates extra buffers, but they are freed on
-/// return instead of becoming permanent resident memory.
+/// bound (workers + default credits): a transient spike — e.g. one
+/// session's reorder window growing while a slow assembly stalls its
+/// sequence — allocates extra buffers, but they are freed on return
+/// instead of becoming permanent resident memory.
 pub struct BufferPool {
     free: Mutex<Vec<HostBatch>>,
     allocated: AtomicUsize,
-    /// Max buffers kept for reuse; returns beyond this are dropped.
-    retain: usize,
+    /// Fixed part of the retained-buffer cap: one per worker + slack.
+    base: usize,
+    /// Default credit window (the plane's `prefetch_depth`): the cap
+    /// never drops below it, so serial sessions (the train loop's
+    /// epoch-after-epoch pattern) keep their warm buffers between
+    /// sessions.
+    min_window: usize,
+    /// Sum of open sessions' credit limits: the cap grows with real
+    /// concurrent in-flight demand (a tenant opened with large credits,
+    /// or many tenants at once) so steady state stays allocation-free
+    /// instead of thrashing release/acquire at the fixed cap.
+    open_credits: AtomicUsize,
 }
 
 impl BufferPool {
-    fn new(retain: usize) -> BufferPool {
+    fn new(base: usize, min_window: usize) -> BufferPool {
         BufferPool {
             free: Mutex::new(Vec::new()),
             allocated: AtomicUsize::new(0),
-            retain,
+            base,
+            min_window,
+            open_credits: AtomicUsize::new(0),
         }
+    }
+
+    /// Current retained-buffer cap; returns beyond it are dropped.
+    fn retain(&self) -> usize {
+        self.base + self.min_window.max(self.open_credits.load(Ordering::Relaxed))
+    }
+
+    fn session_opened(&self, credits: usize) {
+        self.open_credits.fetch_add(credits, Ordering::Relaxed);
+    }
+
+    fn session_closed(&self, credits: usize) {
+        self.open_credits.fetch_sub(credits, Ordering::Relaxed);
     }
 
     fn acquire(&self, g: &BatchGeometry) -> HostBatch {
@@ -188,8 +382,9 @@ impl BufferPool {
     }
 
     fn release(&self, batch: HostBatch) {
+        let retain = self.retain();
         let mut free = self.free.lock().unwrap();
-        if free.len() < self.retain {
+        if free.len() < retain {
             free.push(batch);
         }
         // else: drop the surplus buffer — spike memory deflates
@@ -247,27 +442,12 @@ impl Drop for BatchLease {
     }
 }
 
-/// State shared between the plane handle, its workers, and epoch handles.
+/// State shared between the plane handle, its workers, and sessions.
 struct Shared {
-    queue: WorkQueue,
+    dispatcher: Dispatcher,
     pool: Arc<BufferPool>,
-    /// Generations retired by their epoch handles. A set, not a
-    /// watermark: cancelling one epoch must never kill another
-    /// in-flight epoch (concurrent epochs are supported). Grows by one
-    /// small entry per epoch started — negligible.
-    cancelled: Mutex<HashSet<u64>>,
-    /// Plane shutting down: every generation is dead.
+    /// Plane shutting down: every session is dead.
     shutdown: AtomicBool,
-}
-
-impl Shared {
-    fn is_cancelled(&self, gen: u64) -> bool {
-        self.shutdown.load(Ordering::Acquire) || self.cancelled.lock().unwrap().contains(&gen)
-    }
-
-    fn cancel(&self, gen: u64) {
-        self.cancelled.lock().unwrap().insert(gen);
-    }
 }
 
 /// Per-epoch shuffle seed — the single definition shared by the
@@ -277,42 +457,40 @@ pub(crate) fn epoch_shuffle_seed(shuffle_seed: u64, epoch: u64) -> u64 {
     shuffle_seed ^ epoch.wrapping_mul(0x9E37_79B9)
 }
 
-/// The persistent streaming data-plane. Construct once, call
-/// `start_epoch` per epoch; dropping it joins the worker pool.
+/// The persistent multi-tenant streaming data-plane. Construct once,
+/// open sessions against it from any number of tenants; dropping it
+/// joins the worker pool.
 pub struct DataPlane {
     shared: Arc<Shared>,
     source: Arc<dyn MoleculeSource>,
     batcher: Batcher,
     cfg: PipelineConfig,
-    next_gen: AtomicU64,
+    next_session: AtomicU64,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl DataPlane {
     pub fn new(source: Arc<dyn MoleculeSource>, batcher: Batcher, cfg: PipelineConfig) -> DataPlane {
-        // Steady-state working set: one buffer per worker (assembling),
-        // the prefetch channel, and a little reorder slack.
-        let retain = cfg.workers.max(1) + cfg.prefetch_depth.max(1) + 2;
+        // Steady-state working set: one buffer per worker (assembling)
+        // plus reorder slack, and at least the default credit window —
+        // the pool cap then tracks the open sessions' summed credits.
         let shared = Arc::new(Shared {
-            queue: WorkQueue::new(),
-            pool: Arc::new(BufferPool::new(retain)),
-            cancelled: Mutex::new(HashSet::new()),
+            dispatcher: Dispatcher::new(),
+            pool: Arc::new(BufferPool::new(cfg.workers.max(1) + 2, cfg.prefetch_depth.max(1))),
             shutdown: AtomicBool::new(false),
         });
         let mut workers = Vec::with_capacity(cfg.workers.max(1));
         for w in 0..cfg.workers.max(1) {
             let shared = Arc::clone(&shared);
-            let source = Arc::clone(&source);
             let batcher = batcher.clone();
-            let cfg = cfg.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("dataplane-{w}"))
-                    .spawn(move || worker_loop(&shared, source.as_ref(), &batcher, &cfg))
+                    .spawn(move || worker_loop(&shared, &batcher))
                     .expect("spawning data-plane worker"),
             );
         }
-        DataPlane { shared, source, batcher, cfg, next_gen: AtomicU64::new(1), workers }
+        DataPlane { shared, source, batcher, cfg, next_session: AtomicU64::new(1), workers }
     }
 
     pub fn geometry(&self) -> BatchGeometry {
@@ -328,98 +506,190 @@ impl DataPlane {
         self.shared.pool.allocated()
     }
 
-    /// Begin streaming one epoch: shuffle the dataset order (O(n)) and
-    /// hand the incremental planning chain to the worker pool. Returns
-    /// immediately; the first batch is ready after O(shard_size) work.
-    ///
-    /// Epochs are normally consumed one at a time. Multiple epochs may
-    /// be in flight, but they share one FIFO pool: jobs run in start
-    /// order, so an *earlier* epoch that is neither consumed nor
-    /// cancelled eventually parks every worker on its full prefetch
-    /// channel and stalls later epochs until it drains. Consume (or
-    /// `cancel`) epochs in the order they were started; true
-    /// cross-epoch pipelining needs per-epoch admission control (see
-    /// ROADMAP).
-    pub fn start_epoch(&self, epoch: u64) -> EpochBatches {
-        let gen = self.next_gen.fetch_add(1, Ordering::Relaxed);
-        let n = self.source.len();
+    /// Open a session: admit one tenant's stream onto the shared worker
+    /// pool. Returns immediately; the first batch is ready after
+    /// O(shard_size) planning work. Any number of sessions may be open
+    /// concurrently — admission credits guarantee that a session that
+    /// stops consuming (or is dropped mid-stream) only idles itself,
+    /// and QoS weights decide how the pool is shared between the rest.
+    pub fn open_session(&self, spec: JobSpec) -> Session {
+        let id = self.next_session.fetch_add(1, Ordering::Relaxed);
+        let source = spec.source.unwrap_or_else(|| Arc::clone(&self.source));
+        let packer = spec.packer.unwrap_or(self.cfg.packer);
+        let shard_size = spec.shard_size.unwrap_or(self.cfg.shard_size);
+        let ordered = spec.ordered.unwrap_or(self.cfg.ordered);
+        let credits = spec.credits.unwrap_or(self.cfg.prefetch_depth).max(1);
+
+        let n = source.len();
         let mut ids: Vec<u32> = (0..n as u32).collect();
-        let mut rng = Rng::new(epoch_shuffle_seed(self.cfg.shuffle_seed, epoch));
-        rng.shuffle(&mut ids);
-        let (tx, rx) = sync_channel::<Delivery>(self.cfg.prefetch_depth.max(1));
-        self.shared.queue.push(Job::PlanShard {
-            gen,
+        if let Some(epoch) = spec.epoch {
+            // Training semantics: identical order to the old
+            // `start_epoch(epoch)` for the same plane config.
+            let mut rng = Rng::new(epoch_shuffle_seed(self.cfg.shuffle_seed, epoch));
+            rng.shuffle(&mut ids);
+        }
+        let sess = Arc::new(SessionState::new(id, spec.qos, credits, source, packer, shard_size));
+        // Channel capacity = credits + 1: credited occupancy is bounded
+        // by the credit limit, and the plan chain is strictly sequential
+        // (one `PlanShard` at a time, and a failed plan ends the chain)
+        // so at most ONE uncredited error delivery can ever exist per
+        // session. A send can therefore never find the channel full —
+        // workers never park on delivery, even for a stalled consumer.
+        let (tx, rx) = sync_channel::<Delivery>(credits + 1);
+        self.shared.pool.session_opened(credits);
+        self.shared.dispatcher.push(Job::PlanShard {
+            sess: Arc::clone(&sess),
             ids: Arc::new(ids),
             start: 0,
             next_batch_idx: 0,
             tx,
         });
-        EpochBatches {
-            rx,
-            pending: BTreeMap::new(),
-            next_idx: 0,
-            ordered: self.cfg.ordered,
-            gen,
-            shared: Arc::clone(&self.shared),
+        Session {
+            stream: BatchStream {
+                rx,
+                pending: BTreeMap::new(),
+                next_idx: 0,
+                ordered,
+                sess,
+                shared: Arc::clone(&self.shared),
+            },
         }
+    }
+
+    /// Begin streaming one training epoch.
+    #[deprecated(
+        note = "open a session instead: `plane.open_session(JobSpec::training(epoch))` — \
+                sessions add QoS classes and per-session admission control"
+    )]
+    pub fn start_epoch(&self, epoch: u64) -> EpochBatches {
+        EpochBatches { inner: self.open_session(JobSpec::training(epoch)) }
     }
 }
 
 impl Drop for DataPlane {
     fn drop(&mut self) {
-        // Cancel everything in flight, close the queue, join the pool.
+        // Cancel everything in flight, close the dispatcher, join the
+        // pool.
         self.shared.shutdown.store(true, Ordering::Release);
-        self.shared.queue.close();
+        self.shared.dispatcher.close();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-/// Handle to one streaming epoch: iterate to receive `BatchLease`s.
-/// Dropping it (or calling `cancel`) retires the epoch's remaining jobs
-/// without touching the worker pool — the fix for the seed's detached
-/// worker threads on early exit.
-pub struct EpochBatches {
-    rx: Receiver<Delivery>,
-    pending: BTreeMap<usize, Result<BatchLease>>,
-    next_idx: usize,
-    ordered: bool,
-    gen: u64,
-    shared: Arc<Shared>,
+/// One tenant's handle on the plane: iterate it (or its
+/// [`batches`](Session::batches) stream) to receive `BatchLease`s;
+/// [`metrics`](Session::metrics) exposes the session's dispatcher
+/// counters at any point. Dropping the handle (or calling
+/// [`cancel`](Session::cancel)) retires the session's remaining jobs and
+/// releases its admission slots without touching the worker pool or any
+/// other session.
+pub struct Session {
+    stream: BatchStream,
 }
 
-impl EpochBatches {
-    /// Explicitly retire the epoch (drop does the same; this reads
+impl Session {
+    pub fn id(&self) -> u64 {
+        self.stream.sess.id
+    }
+
+    pub fn qos(&self) -> QosClass {
+        self.stream.sess.qos
+    }
+
+    /// Admission credit limit this session was opened with.
+    pub fn credits(&self) -> usize {
+        self.stream.sess.credits
+    }
+
+    /// Snapshot of the session's metrics (`queue_wait`,
+    /// `assembly_time`, `credits_blocked`, ...).
+    pub fn metrics(&self) -> SessionMetrics {
+        self.stream.sess.metrics()
+    }
+
+    /// Per-batch dispatcher queue waits in milliseconds (for
+    /// percentiles; one sample per dispatched batch).
+    pub fn queue_wait_samples_ms(&self) -> Vec<f64> {
+        self.stream.sess.queue_wait_samples_ms()
+    }
+
+    /// The session's batch stream (the `Iterator` impl on `Session`
+    /// delegates here).
+    pub fn batches(&mut self) -> &mut BatchStream {
+        &mut self.stream
+    }
+
+    /// Explicitly retire the session (drop does the same; this reads
     /// better at early-exit sites).
     pub fn cancel(self) {}
 }
 
-impl Drop for EpochBatches {
-    fn drop(&mut self) {
-        self.shared.cancel(self.gen);
+impl Iterator for Session {
+    type Item = Result<BatchLease>;
+
+    fn next(&mut self) -> Option<Result<BatchLease>> {
+        self.stream.next()
     }
 }
 
-impl Iterator for EpochBatches {
+/// The delivery side of a session: yields `BatchLease`s (in plan order
+/// when the session is `ordered`). Receiving a batch returns its
+/// admission credit, which is what re-admits the session's next assembly
+/// to the worker pool.
+pub struct BatchStream {
+    rx: Receiver<Delivery>,
+    pending: BTreeMap<usize, Result<BatchLease>>,
+    next_idx: usize,
+    ordered: bool,
+    sess: Arc<SessionState>,
+    shared: Arc<Shared>,
+}
+
+impl BatchStream {
+    /// Receive one delivery and return its credit to the session.
+    fn receive(&mut self) -> Option<Delivery> {
+        let d = self.rx.recv().ok()?;
+        if d.credited {
+            self.sess.in_flight.fetch_sub(1, Ordering::AcqRel);
+            // A worker may be waiting on this session's admission.
+            self.shared.dispatcher.credit_released();
+        }
+        Some(d)
+    }
+}
+
+impl Drop for BatchStream {
+    fn drop(&mut self) {
+        self.sess.cancelled.store(true, Ordering::Release);
+        // The session's credits no longer bound live buffers.
+        self.shared.pool.session_closed(self.sess.credits);
+        // Wake workers so the dispatcher purges the session's queue
+        // (dropping its remaining senders closes the channel).
+        self.shared.dispatcher.wake_all();
+    }
+}
+
+impl Iterator for BatchStream {
     type Item = Result<BatchLease>;
 
     fn next(&mut self) -> Option<Result<BatchLease>> {
         if !self.ordered {
-            return self.rx.recv().ok().map(|(_, b)| b);
+            return self.receive().map(|d| d.payload);
         }
         loop {
             if let Some(b) = self.pending.remove(&self.next_idx) {
                 self.next_idx += 1;
                 return Some(b);
             }
-            match self.rx.recv() {
-                Ok((idx, b)) => {
-                    self.pending.insert(idx, b);
+            match self.receive() {
+                Some(d) => {
+                    self.pending.insert(d.idx, d.payload);
                 }
-                Err(_) => {
+                None => {
                     // Channel closed: flush stragglers in plan order
-                    // (gaps only exist after a cancellation).
+                    // (gaps only exist after a failed plan shard).
                     let idx = *self.pending.keys().next()?;
                     let b = self.pending.remove(&idx);
                     self.next_idx = idx + 1;
@@ -430,13 +700,35 @@ impl Iterator for EpochBatches {
     }
 }
 
-/// Bounded-backoff delivery: never parks forever, so plane shutdown can
-/// always join the pool even if a consumer holds an unread stream. Epoch
-/// cancellation needs no check here — cancelling drops the handle's
-/// receiver, which surfaces as `Disconnected`. The backoff doubles from
-/// 50us to a 1ms cap: when the device is the bottleneck (prefetch full,
-/// the steady state) a parked worker wakes at most ~1k times/sec on one
-/// atomic load, and resumes within 1ms of the consumer freeing a slot.
+/// Deprecated epoch-stream handle, returned by the deprecated
+/// [`DataPlane::start_epoch`]; thin wrapper over a Training-class
+/// [`Session`].
+pub struct EpochBatches {
+    inner: Session,
+}
+
+impl EpochBatches {
+    /// Explicitly retire the epoch (drop does the same).
+    pub fn cancel(self) {}
+}
+
+impl Iterator for EpochBatches {
+    type Item = Result<BatchLease>;
+
+    fn next(&mut self) -> Option<Result<BatchLease>> {
+        self.inner.next()
+    }
+}
+
+/// Bounded-backoff delivery. By construction the Full arm is
+/// unreachable — the channel holds `credits + 1` slots, credited
+/// occupancy is capped by admission control, and at most one uncredited
+/// plan-error delivery can exist per session — so this never parks a
+/// worker; the backoff loop stays as a belt-and-braces guard on that
+/// invariant (it also lets plane shutdown join the pool even if the
+/// invariant were broken). Session cancellation needs no check here —
+/// cancelling drops the handle's receiver, which surfaces as
+/// `Disconnected`.
 fn deliver(shared: &Shared, tx: &SyncSender<Delivery>, item: Delivery) {
     let mut item = Some(item);
     let mut backoff = Duration::from_micros(50);
@@ -456,26 +748,33 @@ fn deliver(shared: &Shared, tx: &SyncSender<Delivery>, item: Delivery) {
     }
 }
 
-fn worker_loop(shared: &Shared, source: &dyn MoleculeSource, batcher: &Batcher, cfg: &PipelineConfig) {
+/// Is this job's work pointless — its session retired, or the whole
+/// plane shutting down? (Checked per job so teardown never burns a full
+/// assembly only to discard the delivery.)
+fn dead(shared: &Shared, sess: &SessionState) -> bool {
+    shared.shutdown.load(Ordering::Acquire) || sess.is_cancelled()
+}
+
+fn worker_loop(shared: &Shared, batcher: &Batcher) {
     let g = batcher.geometry;
-    while let Some(job) = shared.queue.pop() {
+    while let Some(job) = shared.dispatcher.pop() {
         match job {
-            Job::PlanShard { gen, ids, start, next_batch_idx, tx } => {
-                if shared.is_cancelled(gen) {
+            Job::PlanShard { sess, ids, start, next_batch_idx, tx } => {
+                if dead(shared, &sess) {
                     continue;
                 }
                 // Contain panics (a buggy source or packer assert): a dead
                 // worker would strand queued jobs holding live senders and
                 // hang the consumer forever. Convert to an error delivery
-                // so the epoch fails loudly instead.
+                // so the session fails loudly instead.
                 let planned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    let shard = effective_shard(cfg.shard_size, ids.len());
+                    let shard = effective_shard(sess.shard_size, ids.len());
                     let end = start.saturating_add(shard).min(ids.len());
                     let shard_ids = &ids[start..end];
                     let sizes: Vec<usize> =
-                        shard_ids.iter().map(|&i| source.n_atoms(i as usize)).collect();
+                        shard_ids.iter().map(|&i| sess.source.n_atoms(i as usize)).collect();
                     let packing = pack_shard(
-                        cfg.packer,
+                        sess.packer,
                         shard_ids,
                         &sizes,
                         g.nodes_per_pack,
@@ -489,46 +788,57 @@ fn worker_loop(shared: &Shared, source: &dyn MoleculeSource, batcher: &Batcher, 
                         deliver(
                             shared,
                             &tx,
-                            (next_batch_idx, Err(anyhow::anyhow!(
-                                "data-plane worker panicked planning shard at graph {start}"
-                            ))),
+                            Delivery {
+                                idx: next_batch_idx,
+                                credited: false,
+                                payload: Err(anyhow::anyhow!(
+                                    "data-plane worker panicked planning shard at graph {start}"
+                                )),
+                            },
                         );
-                        continue; // tx drops: the epoch ends after in-flight batches
+                        continue; // tx drops: the stream ends after in-flight batches
                     }
                 };
                 let mut idx = next_batch_idx;
                 for chunk in packing.packs.chunks(g.packs_per_batch.max(1)) {
-                    shared.queue.push(Job::Assemble {
-                        gen,
+                    shared.dispatcher.push(Job::Assemble {
+                        sess: Arc::clone(&sess),
                         batch_idx: idx,
                         packs: chunk.to_vec(),
+                        enqueued: Instant::now(),
                         tx: tx.clone(),
                     });
                     idx += 1;
                 }
                 if end < ids.len() {
                     // Chain the next shard *behind* this shard's batches:
-                    // planning overlaps the device working through them.
-                    shared.queue.push(Job::PlanShard {
-                        gen,
+                    // planning overlaps consumption, and a credit-blocked
+                    // session stops being planned until it drains.
+                    shared.dispatcher.push(Job::PlanShard {
+                        sess,
                         ids,
                         start: end,
                         next_batch_idx: idx,
                         tx,
                     });
                 }
-                // Otherwise `tx` drops here; the epoch channel closes once
-                // the last in-flight assembly delivers.
+                // Otherwise `tx` drops here; the session channel closes
+                // once the last in-flight assembly delivers.
             }
-            Job::Assemble { gen, batch_idx, packs, tx } => {
-                if shared.is_cancelled(gen) {
+            Job::Assemble { sess, batch_idx, packs, enqueued: _, tx } => {
+                if dead(shared, &sess) {
+                    // Return the credit taken at dispatch; the consumer
+                    // is gone (or the plane is) but the accounting stays
+                    // consistent.
+                    sess.in_flight.fetch_sub(1, Ordering::AcqRel);
                     continue;
                 }
+                let t0 = Instant::now();
                 let mut buf = shared.pool.acquire(&g);
                 let assembled = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    batcher.assemble_into(&mut buf, &packs, source)
+                    batcher.assemble_into(&mut buf, &packs, sess.source.as_ref())
                 }));
-                let delivery = match assembled {
+                let payload = match assembled {
                     Ok(Ok(())) => {
                         buf.serves += 1;
                         debug_assert!(buf.serves < buf.resets, "batch served without reset");
@@ -547,7 +857,8 @@ fn worker_loop(shared: &Shared, source: &dyn MoleculeSource, batcher: &Batcher, 
                         ))
                     }
                 };
-                deliver(shared, &tx, (batch_idx, delivery));
+                sess.record_assembly(t0.elapsed());
+                deliver(shared, &tx, Delivery { idx: batch_idx, credited: true, payload });
             }
         }
     }
@@ -574,6 +885,10 @@ mod tests {
         DataPlane::new(Arc::new(HydroNet::new(n, seed)), Batcher::new(geometry(), 6.0), cfg)
     }
 
+    fn training(p: &DataPlane, epoch: u64) -> Session {
+        p.open_session(JobSpec::training(epoch))
+    }
+
     /// Content fingerprint for bitwise-reproducibility comparisons.
     fn fingerprint(b: &HostBatch) -> (usize, usize, usize, Vec<i32>, Vec<u32>) {
         (
@@ -586,14 +901,14 @@ mod tests {
     }
 
     #[test]
-    fn epoch_delivers_every_molecule_exactly_once() {
+    fn session_delivers_every_molecule_exactly_once() {
         let ds = HydroNet::new(40, 5);
         let mut energies: Vec<f32> = (0..40).map(|i| ds.get(i).energy).collect();
         energies.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let p = plane(40, 5, PipelineConfig { workers: 3, prefetch_depth: 2, shard_size: 16, ..Default::default() });
         for epoch in 0..3u64 {
             let mut seen: Vec<f32> = Vec::new();
-            for lease in p.start_epoch(epoch) {
+            for lease in training(&p, epoch) {
                 let b = lease.unwrap();
                 b.validate(&geometry()).unwrap();
                 for (gi, &m) in b.graph_mask.iter().enumerate() {
@@ -620,8 +935,7 @@ mod tests {
                 ..Default::default()
             };
             let p = plane(48, 8, cfg);
-            let got: Vec<_> =
-                p.start_epoch(3).map(|b| fingerprint(&b.unwrap())).collect();
+            let got: Vec<_> = training(&p, 3).map(|b| fingerprint(&b.unwrap())).collect();
             assert!(!got.is_empty());
             match &reference {
                 None => reference = Some(got),
@@ -633,24 +947,44 @@ mod tests {
     #[test]
     fn same_seed_same_epoch_is_deterministic_across_planes() {
         let cfg = PipelineConfig { workers: 2, shard_size: 10, ..Default::default() };
-        let a: Vec<_> = plane(30, 6, cfg.clone())
-            .start_epoch(1)
+        let a: Vec<_> = training(&plane(30, 6, cfg.clone()), 1)
             .map(|b| fingerprint(&b.unwrap()))
             .collect();
-        let b: Vec<_> = plane(30, 6, cfg)
-            .start_epoch(1)
+        let b: Vec<_> = training(&plane(30, 6, cfg), 1)
             .map(|b| fingerprint(&b.unwrap()))
             .collect();
         assert_eq!(a, b);
     }
 
     #[test]
-    fn epochs_shuffle_differently() {
+    #[allow(deprecated)]
+    fn deprecated_start_epoch_matches_training_session() {
+        // The one-release compat wrapper must stream the exact same
+        // ordered sequence as its session-API replacement.
+        let cfg = PipelineConfig { workers: 2, shard_size: 10, ..Default::default() };
+        let a: Vec<_> = plane(30, 6, cfg.clone())
+            .start_epoch(2)
+            .map(|b| fingerprint(&b.unwrap()))
+            .collect();
+        let b: Vec<_> = training(&plane(30, 6, cfg), 2)
+            .map(|b| fingerprint(&b.unwrap()))
+            .collect();
+        assert_eq!(a, b, "start_epoch diverged from JobSpec::training");
+    }
+
+    #[test]
+    fn epochs_shuffle_differently_and_serving_preserves_arrival_order() {
         let cfg = PipelineConfig { workers: 2, shard_size: 16, ..Default::default() };
         let p = plane(60, 4, cfg);
-        let a: Vec<_> = p.start_epoch(0).map(|b| fingerprint(&b.unwrap())).collect();
-        let b: Vec<_> = p.start_epoch(1).map(|b| fingerprint(&b.unwrap())).collect();
+        let a: Vec<_> = training(&p, 0).map(|b| fingerprint(&b.unwrap())).collect();
+        let b: Vec<_> = training(&p, 1).map(|b| fingerprint(&b.unwrap())).collect();
         assert_ne!(a, b, "epoch order should differ");
+        // serving sessions stream in arrival order: two identical passes
+        let serving_pass =
+            || p.open_session(JobSpec::serving()).map(|b| fingerprint(&b.unwrap())).collect::<Vec<_>>();
+        let s1 = serving_pass();
+        let s2 = serving_pass();
+        assert_eq!(s1, s2, "serving passes must not shuffle");
     }
 
     #[test]
@@ -660,7 +994,7 @@ mod tests {
         let mut served = 0usize;
         let mut reused = false;
         for epoch in 0..4u64 {
-            for lease in p.start_epoch(epoch) {
+            for lease in training(&p, epoch) {
                 let b = lease.unwrap();
                 // the recycling invariant: a reset happened after every
                 // previous serve of this buffer
@@ -690,45 +1024,179 @@ mod tests {
     fn unordered_mode_still_delivers_everything() {
         let cfg = PipelineConfig { workers: 4, ordered: false, shard_size: 16, ..Default::default() };
         let p = plane(40, 9, cfg);
-        let graphs: usize = p.start_epoch(0).map(|b| b.unwrap().real_graphs()).sum();
+        let graphs: usize = training(&p, 0).map(|b| b.unwrap().real_graphs()).sum();
         assert_eq!(graphs, 40);
     }
 
     #[test]
-    fn early_cancellation_frees_the_pool_for_the_next_epoch() {
+    fn early_cancellation_frees_the_pool_for_the_next_session() {
         let cfg = PipelineConfig { workers: 3, prefetch_depth: 2, shard_size: 8, ..Default::default() };
         let p = plane(64, 11, cfg);
-        let mut stream = p.start_epoch(0);
+        let mut stream = training(&p, 0);
         let first = stream.next().unwrap().unwrap();
         assert!(first.real_graphs() > 0);
         drop(first);
-        stream.cancel(); // early exit: retire the epoch, keep the pool
-        // the same plane immediately serves a full epoch afterwards
-        let graphs: usize = p.start_epoch(1).map(|b| b.unwrap().real_graphs()).sum();
+        stream.cancel(); // early exit: retire the session, keep the pool
+        // the same plane immediately serves a full pass afterwards
+        let graphs: usize = training(&p, 1).map(|b| b.unwrap().real_graphs()).sum();
         assert_eq!(graphs, 64);
     }
 
     #[test]
-    fn cancelling_one_epoch_leaves_concurrent_epochs_intact() {
-        // Generations are cancelled individually (a set, not a
-        // watermark): retiring a *newer* epoch's handle must not kill an
-        // older in-flight epoch.
+    fn cancelling_one_session_leaves_concurrent_sessions_intact() {
+        // Sessions are cancelled individually: retiring a *newer*
+        // session's handle must not kill an older in-flight session.
         let cfg = PipelineConfig { workers: 2, prefetch_depth: 2, shard_size: 8, ..Default::default() };
         let p = plane(48, 13, cfg);
-        let older = p.start_epoch(0);
-        let newer = p.start_epoch(1);
+        let older = training(&p, 0);
+        let newer = training(&p, 1);
         newer.cancel();
         let graphs: usize = older.map(|b| b.unwrap().real_graphs()).sum();
-        assert_eq!(graphs, 48, "older epoch truncated by newer cancellation");
+        assert_eq!(graphs, 48, "older session truncated by newer cancellation");
+    }
+
+    #[test]
+    fn stalled_session_never_parks_the_worker_pool() {
+        // THE admission-control guarantee: a session that stops
+        // consuming idles only itself. Under the old epoch API this
+        // exact shape (unconsumed earlier stream + later stream on one
+        // plane) parked every worker on the full prefetch channel.
+        let cfg = PipelineConfig { workers: 2, prefetch_depth: 2, shard_size: 8, ..Default::default() };
+        let p = plane(60, 5, cfg);
+        let mut stalled = p.open_session(JobSpec::training(0).with_credits(2));
+        let first = stalled.next().unwrap().unwrap();
+        assert!(first.real_graphs() > 0);
+        drop(first);
+        // `stalled` stays open but is never consumed again. A serving
+        // session opened afterwards must still complete a full pass.
+        let served: usize = p
+            .open_session(JobSpec::serving().with_credits(2))
+            .map(|b| b.unwrap().real_graphs())
+            .sum();
+        assert_eq!(served, 60, "stalled session starved a concurrent session");
+        // the stall is visible in the stalled session's metrics
+        assert!(
+            stalled.metrics().credit_stalls >= 1,
+            "admission control never engaged: {:?}",
+            stalled.metrics()
+        );
+        // and the stalled session still holds only its credit window
+        drop(stalled);
+        let again: usize = training(&p, 1).map(|b| b.unwrap().real_graphs()).sum();
+        assert_eq!(again, 60, "plane wedged after dropping the stalled session");
+    }
+
+    #[test]
+    fn dropped_mid_stream_session_does_not_stall_a_concurrent_pass() {
+        let cfg = PipelineConfig { workers: 2, prefetch_depth: 1, shard_size: 8, ..Default::default() };
+        let p = plane(48, 17, cfg);
+        let mut doomed = training(&p, 0);
+        doomed.next().unwrap().unwrap();
+        let survivor = training(&p, 1);
+        drop(doomed); // abandoned mid-epoch, credits still in flight
+        let graphs: usize = survivor.map(|b| b.unwrap().real_graphs()).sum();
+        assert_eq!(graphs, 48, "survivor session truncated by the dropped one");
+    }
+
+    #[test]
+    fn concurrent_qos_classes_share_one_plane() {
+        // Acceptance: a Serving session completes a full dataset pass
+        // while a Training session is mid-epoch on the same plane, and
+        // cancelling either side leaves the other able to finish.
+        let cfg = PipelineConfig { workers: 2, prefetch_depth: 2, shard_size: 8, ..Default::default() };
+        let p = plane(48, 13, cfg);
+        let mut train = training(&p, 0);
+        let mut mid_epoch_graphs = 0usize;
+        for _ in 0..2 {
+            mid_epoch_graphs += train.next().unwrap().unwrap().real_graphs();
+        }
+        assert!(mid_epoch_graphs > 0 && mid_epoch_graphs < 48, "training must be mid-epoch");
+        // serving streams to completion while training is mid-epoch
+        let serve = p.open_session(JobSpec::serving().with_credits(2));
+        assert_eq!(serve.qos(), QosClass::Serving);
+        let served: usize = serve.map(|b| b.unwrap().real_graphs()).sum();
+        assert_eq!(served, 48, "serving pass incomplete while training mid-epoch");
+        // cancel training mid-epoch: a fresh serving pass still completes
+        train.cancel();
+        let again: usize = p
+            .open_session(JobSpec::serving())
+            .map(|b| b.unwrap().real_graphs())
+            .sum();
+        assert_eq!(again, 48, "plane stalled after cancelling the training session");
+        // and the reverse: training completes after a serving cancel
+        let serve2 = p.open_session(JobSpec::serving());
+        serve2.cancel();
+        let full: usize = training(&p, 1).map(|b| b.unwrap().real_graphs()).sum();
+        assert_eq!(full, 48, "training stalled after cancelling a serving session");
+    }
+
+    #[test]
+    fn background_and_serving_both_complete_on_one_worker() {
+        // Weighted dispatch must not starve the lowest class even with a
+        // single worker and an unconsumed higher-priority backlog.
+        let cfg = PipelineConfig { workers: 1, prefetch_depth: 2, shard_size: 8, ..Default::default() };
+        let p = plane(32, 19, cfg);
+        let background = p.open_session(JobSpec::background().with_credits(1));
+        let serving = p.open_session(JobSpec::serving().with_credits(2));
+        let served: usize = serving.map(|b| b.unwrap().real_graphs()).sum();
+        assert_eq!(served, 32);
+        let bg: usize = background.map(|b| b.unwrap().real_graphs()).sum();
+        assert_eq!(bg, 32, "background class starved");
+    }
+
+    #[test]
+    fn session_metrics_track_waits_and_stalls() {
+        let cfg = PipelineConfig { workers: 2, shard_size: 8, ..Default::default() };
+        let p = plane(48, 23, cfg);
+        let mut s = p.open_session(JobSpec::training(0).with_credits(1));
+        // consume one batch, then stall long enough for a worker to
+        // observe the credit-blocked head, then drain
+        let mut graphs = s.next().unwrap().unwrap().real_graphs();
+        std::thread::sleep(Duration::from_millis(60));
+        for b in s.batches() {
+            graphs += b.unwrap().real_graphs();
+        }
+        assert_eq!(graphs, 48);
+        let m = s.metrics();
+        assert!(m.batches >= 4, "48 graphs in 8-graph batches: {m:?}");
+        assert_eq!(
+            s.queue_wait_samples_ms().len(),
+            m.batches as usize,
+            "one queue-wait sample per dispatched batch"
+        );
+        assert!(m.assembly_time > Duration::ZERO);
+        assert!(m.credit_stalls >= 1, "credits=1 consumer stall not recorded: {m:?}");
+        assert!(m.credits_blocked >= Duration::from_millis(40), "{m:?}");
+        assert!(m.mean_queue_wait_ms() >= 0.0);
+    }
+
+    #[test]
+    fn sessions_can_stream_their_own_source() {
+        // Multi-tenant in the full sense: a session may bring its own
+        // dataset; the plane's geometry stays fixed (packed shapes).
+        let cfg = PipelineConfig { workers: 2, shard_size: 8, ..Default::default() };
+        let p = plane(16, 29, cfg);
+        let other = Arc::new(HydroNet::new(24, 31));
+        let graphs: usize = p
+            .open_session(JobSpec::serving().with_source(other))
+            .map(|b| b.unwrap().real_graphs())
+            .sum();
+        assert_eq!(graphs, 24, "session-supplied source not honored");
+        let default: usize = p
+            .open_session(JobSpec::serving())
+            .map(|b| b.unwrap().real_graphs())
+            .sum();
+        assert_eq!(default, 16, "default source broken by per-session sources");
     }
 
     #[test]
     fn backpressure_bounds_materialization() {
-        // With prefetch_depth=1, workers must block rather than buffer
-        // the whole epoch; everything still arrives intact afterwards.
+        // With credits=1 (prefetch_depth=1), the plane must not run
+        // ahead of a stalled consumer; everything still arrives intact
+        // afterwards.
         let cfg = PipelineConfig { workers: 2, prefetch_depth: 1, shard_size: 16, ..Default::default() };
         let p = plane(64, 7, cfg);
-        let stream = p.start_epoch(0);
+        let stream = training(&p, 0);
         std::thread::sleep(Duration::from_millis(200));
         let in_flight = p.buffers_allocated();
         assert!(
@@ -740,18 +1208,19 @@ mod tests {
     }
 
     #[test]
-    fn shard_size_zero_plans_whole_epoch() {
+    fn shard_size_zero_plans_whole_stream() {
         let cfg = PipelineConfig { workers: 2, shard_size: 0, ..Default::default() };
         let p = plane(50, 3, cfg);
-        let graphs: usize = p.start_epoch(0).map(|b| b.unwrap().real_graphs()).sum();
+        let graphs: usize = training(&p, 0).map(|b| b.unwrap().real_graphs()).sum();
         assert_eq!(graphs, 50);
     }
 
     #[test]
-    fn empty_dataset_yields_empty_epoch() {
+    fn empty_dataset_yields_empty_session() {
         let cfg = PipelineConfig { workers: 2, ..Default::default() };
         let p = plane(0, 1, cfg);
-        assert_eq!(p.start_epoch(0).count(), 0);
+        assert_eq!(training(&p, 0).count(), 0);
+        assert_eq!(p.open_session(JobSpec::serving()).count(), 0);
     }
 
     /// A molecule source whose `get` panics for one index — models a
@@ -773,10 +1242,10 @@ mod tests {
 
     #[test]
     fn worker_panic_surfaces_as_error_not_hang() {
-        // A panicking assembly must become an Err delivery; the epoch
-        // must still terminate (the seed degraded the same way when its
-        // workers died). With workers=1 this would hang forever if the
-        // panic killed the worker while queued jobs held live senders.
+        // A panicking assembly must become an Err delivery; the session
+        // must still terminate. With workers=1 this would hang forever
+        // if the panic killed the worker while queued jobs held live
+        // senders.
         let p = DataPlane::new(
             Arc::new(Panicky(HydroNet::new(32, 5))),
             Batcher::new(geometry(), 6.0),
@@ -784,7 +1253,7 @@ mod tests {
         );
         let mut errors = 0;
         let mut ok = 0;
-        for lease in p.start_epoch(0) {
+        for lease in training(&p, 0) {
             match lease {
                 Ok(_) => ok += 1,
                 Err(_) => errors += 1,
@@ -792,9 +1261,9 @@ mod tests {
         }
         assert!(errors >= 1, "the corrupt record must surface as an error");
         assert!(ok >= 1, "healthy batches must still be delivered");
-        // the pool survives: the next epoch still streams (and still
+        // the pool survives: the next session still streams (and still
         // reports the same corrupt record)
-        let again: usize = p.start_epoch(1).filter(|b| b.is_err()).count();
+        let again: usize = training(&p, 1).filter(|b| b.is_err()).count();
         assert!(again >= 1);
     }
 }

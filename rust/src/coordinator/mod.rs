@@ -1,17 +1,25 @@
 //! L3 coordinator: pack-aware batch assembly and the persistent
-//! streaming data-plane (paper sections 4.1 and 4.2.3 made executable).
+//! multi-tenant streaming data-plane (paper sections 4.1 and 4.2.3 made
+//! executable, extended to mixed workloads).
 //!
-//! `dataplane` is the training-path subsystem: one worker pool for the
-//! whole run, shard-incremental epoch planning, recycled batch buffers.
-//! `pipeline` keeps the legacy eager planner and the one-epoch
-//! `stream_epoch` wrapper on top of it.
+//! `dataplane` is the shared subsystem: one worker pool for the whole
+//! process, serving any number of concurrent *sessions* (training
+//! epochs, serving request queues, background sweeps) opened with a
+//! `JobSpec` under a `QosClass`, with per-session admission control and
+//! shard-incremental planning. `session` holds the session-layer
+//! vocabulary (job specs, QoS classes, metrics). `pipeline` keeps the
+//! legacy eager planner and the one-epoch `stream_epoch` wrapper.
 
 pub mod batcher;
 pub mod dataplane;
 pub mod pipeline;
 pub mod replicas;
+pub mod session;
 
 pub use batcher::Batcher;
-pub use dataplane::{BatchLease, BufferPool, DataPlane, EpochBatches, PipelineConfig};
+pub use dataplane::{
+    BatchLease, BatchStream, BufferPool, DataPlane, EpochBatches, PipelineConfig, Session,
+};
 pub use pipeline::{plan_epoch, stream_epoch, EpochStream};
 pub use replicas::{CollectiveStats, DataParallel};
+pub use session::{JobSpec, QosClass, SessionMetrics};

@@ -6,10 +6,11 @@
 //!   for callers that want the full plan as data (`bench_train_step`,
 //!   the data-parallel and integration tests).
 //! * `stream_epoch` / `EpochStream` — the seed API: spin up a pipeline
-//!   for exactly one epoch. It now just constructs a single-epoch
-//!   `DataPlane` and adapts its leases to owned `HostBatch`es; new code
-//!   should hold a `DataPlane` across epochs instead so the worker pool
-//!   and the buffer pool persist.
+//!   for exactly one epoch. It now constructs a single-use `DataPlane`,
+//!   opens one Training-class session on it, and adapts the session's
+//!   leases to owned `HostBatch`es; new code should hold a `DataPlane`
+//!   across epochs and open sessions (`JobSpec::training(epoch)`)
+//!   instead so the worker pool and the buffer pool persist.
 //!
 //! Behavior change vs the seed: the streamed epoch is planned by the
 //! data-plane (graph-shuffle, then per-shard packing), so its batch
@@ -23,10 +24,11 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::coordinator::batcher::Batcher;
-use crate::coordinator::dataplane::{epoch_shuffle_seed, BatchLease, DataPlane, EpochBatches};
+use crate::coordinator::dataplane::{epoch_shuffle_seed, BatchLease, DataPlane, Session};
 // Re-exported for source compatibility with the seed API, which defined
 // the config here.
 pub use crate::coordinator::dataplane::PipelineConfig;
+use crate::coordinator::session::JobSpec;
 use crate::datasets::MoleculeSource;
 use crate::packing::Pack;
 use crate::runtime::HostBatch;
@@ -60,9 +62,9 @@ pub fn plan_epoch(
 /// drain the epoch; it owns a private `DataPlane` whose workers join when
 /// the stream is dropped or `join`ed.
 pub struct EpochStream {
-    // Field order matters: the epoch handle must drop (cancelling its
+    // Field order matters: the session handle must drop (cancelling its
     // jobs) before the plane joins the worker pool.
-    inner: EpochBatches,
+    inner: Session,
     _plane: DataPlane,
 }
 
@@ -82,8 +84,9 @@ impl Iterator for EpochStream {
 }
 
 /// Stream one epoch over `source` (compatibility wrapper): builds a
-/// fresh single-epoch `DataPlane`. Training should construct the plane
-/// once and call `start_epoch` per epoch instead.
+/// fresh single-use `DataPlane` and one Training-class session on it.
+/// Training should construct the plane once and open a session
+/// (`JobSpec::training(epoch)`) per epoch instead.
 pub fn stream_epoch<S: MoleculeSource + 'static>(
     source: Arc<S>,
     batcher: Batcher,
@@ -91,7 +94,7 @@ pub fn stream_epoch<S: MoleculeSource + 'static>(
     epoch: u64,
 ) -> EpochStream {
     let plane = DataPlane::new(source, batcher, cfg.clone());
-    let inner = plane.start_epoch(epoch);
+    let inner = plane.open_session(JobSpec::training(epoch));
     EpochStream { inner, _plane: plane }
 }
 

@@ -20,6 +20,7 @@ use anyhow::{bail, Result};
 use xla::Literal;
 
 use crate::coordinator::dataplane::{BatchLease, DataPlane};
+use crate::coordinator::session::JobSpec;
 use crate::optim::{allreduce_mean_merged, allreduce_mean_per_tensor, Adam, AdamConfig};
 use crate::runtime::{Engine, HostBatch};
 
@@ -95,9 +96,11 @@ impl DataParallel {
 
     /// Stream one epoch from the persistent data-plane in replica-sized
     /// groups, running one synchronous dp-step per full group (the ragged
-    /// tail group is dropped, matching the seed CLI semantics). Leases
-    /// return to the plane's buffer pool after each step. Returns
-    /// (mean step loss, dp-steps run).
+    /// tail group is dropped, matching the seed CLI semantics). The epoch
+    /// rides a Training-class session, so serving tenants sharing the
+    /// plane keep their QoS while replicas train. Leases return to the
+    /// plane's buffer pool after each step. Returns (mean step loss,
+    /// dp-steps run).
     pub fn run_epoch(
         &mut self,
         engine: &Engine,
@@ -107,7 +110,7 @@ impl DataParallel {
         let mut group: Vec<BatchLease> = Vec::with_capacity(self.replicas);
         let mut loss_sum = 0.0f64;
         let mut steps = 0usize;
-        for lease in plane.start_epoch(epoch) {
+        for lease in plane.open_session(JobSpec::training(epoch)) {
             group.push(lease?);
             if group.len() == self.replicas {
                 loss_sum += self.step(engine, &group)? as f64;

@@ -1,0 +1,392 @@
+//! Session-layer types for the multi-tenant data-plane: QoS classes, job
+//! specifications, and per-session metrics.
+//!
+//! A *session* is one tenant's stream of packed batches drawn from a
+//! shared [`DataPlane`](crate::coordinator::DataPlane): a training epoch,
+//! a serving request queue, or a background sweep. Sessions are opened
+//! with a [`JobSpec`] describing what to stream (source, packer, shard
+//! size, ordering) and how it competes for the worker pool
+//! ([`QosClass`], admission credits). The plane's dispatcher interleaves
+//! all open sessions by weighted QoS priority, and per-session admission
+//! control guarantees that one slow or abandoned consumer can never park
+//! the shared worker pool (the documented failure mode of the old
+//! epoch-stream API).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::datasets::MoleculeSource;
+use crate::packing::Packer;
+
+/// Quality-of-service class of a session: the dispatcher shares workers
+/// between classes by weighted priority (smooth weighted round-robin),
+/// so latency-sensitive serving traffic preempts most — but never all —
+/// of the throughput-oriented training and background work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QosClass {
+    /// Latency-sensitive inference traffic (highest weight).
+    Serving,
+    /// Throughput-oriented training epochs.
+    Training,
+    /// Best-effort bulk work (re-packing sweeps, eval backfills).
+    Background,
+}
+
+impl QosClass {
+    /// All classes in dispatch-priority order (ties break toward the
+    /// earlier class).
+    pub const ALL: [QosClass; 3] = [QosClass::Serving, QosClass::Training, QosClass::Background];
+
+    /// Dispatch weight: out of every `6+3+1` worker dispatches with all
+    /// three classes runnable, Serving gets 6, Training 3, Background 1.
+    pub fn weight(self) -> u32 {
+        match self {
+            QosClass::Serving => 6,
+            QosClass::Training => 3,
+            QosClass::Background => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Serving => "serving",
+            QosClass::Training => "training",
+            QosClass::Background => "background",
+        }
+    }
+
+    pub(crate) fn lane(self) -> usize {
+        match self {
+            QosClass::Serving => 0,
+            QosClass::Training => 1,
+            QosClass::Background => 2,
+        }
+    }
+}
+
+/// What a session streams and how it competes for the shared plane.
+///
+/// Every `None` field inherits the plane's [`PipelineConfig`]
+/// (`packer`, `shard_size`, `ordered`, and `prefetch_depth` for
+/// `credits`); `source` defaults to the plane's construction-time
+/// dataset. Built via [`JobSpec::training`], [`JobSpec::serving`], or
+/// [`JobSpec::background`] plus `with_*` setters.
+///
+/// [`PipelineConfig`]: crate::coordinator::PipelineConfig
+#[derive(Clone)]
+pub struct JobSpec {
+    pub qos: QosClass,
+    /// Dataset to stream; `None` = the plane's default source.
+    pub source: Option<Arc<dyn MoleculeSource>>,
+    pub packer: Option<Packer>,
+    pub shard_size: Option<usize>,
+    /// Deliver in plan order (reproducible) vs completion order.
+    pub ordered: Option<bool>,
+    /// `Some(epoch)` shuffles the dataset with the plane's epoch-derived
+    /// seed (training semantics, identical order to the old
+    /// `start_epoch(epoch)`); `None` streams in arrival order (serving
+    /// request-queue semantics).
+    pub epoch: Option<u64>,
+    /// Admission credits: max batches materialized but not yet consumed.
+    /// The dispatcher stops assembling for this session once the limit
+    /// is reached, so a stalled consumer idles only its own stream.
+    /// `None` = the plane's `prefetch_depth`; clamped to at least 1.
+    pub credits: Option<usize>,
+}
+
+impl JobSpec {
+    fn new(qos: QosClass, epoch: Option<u64>) -> JobSpec {
+        JobSpec {
+            qos,
+            source: None,
+            packer: None,
+            shard_size: None,
+            ordered: None,
+            epoch,
+            credits: None,
+        }
+    }
+
+    /// One training epoch over the (shuffled) dataset — the session-API
+    /// equivalent of the deprecated `start_epoch(epoch)`.
+    pub fn training(epoch: u64) -> JobSpec {
+        JobSpec::new(QosClass::Training, Some(epoch))
+    }
+
+    /// A serving request queue: arrival order, no shuffle.
+    pub fn serving() -> JobSpec {
+        JobSpec::new(QosClass::Serving, None)
+    }
+
+    /// Best-effort background pass in arrival order.
+    pub fn background() -> JobSpec {
+        JobSpec::new(QosClass::Background, None)
+    }
+
+    pub fn with_qos(mut self, qos: QosClass) -> JobSpec {
+        self.qos = qos;
+        self
+    }
+
+    pub fn with_source(mut self, source: Arc<dyn MoleculeSource>) -> JobSpec {
+        self.source = Some(source);
+        self
+    }
+
+    pub fn with_packer(mut self, packer: Packer) -> JobSpec {
+        self.packer = Some(packer);
+        self
+    }
+
+    pub fn with_shard_size(mut self, shard_size: usize) -> JobSpec {
+        self.shard_size = Some(shard_size);
+        self
+    }
+
+    pub fn with_ordered(mut self, ordered: bool) -> JobSpec {
+        self.ordered = Some(ordered);
+        self
+    }
+
+    pub fn with_epoch(mut self, epoch: u64) -> JobSpec {
+        self.epoch = Some(epoch);
+        self
+    }
+
+    pub fn with_credits(mut self, credits: usize) -> JobSpec {
+        self.credits = Some(credits);
+        self
+    }
+}
+
+impl std::fmt::Debug for JobSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobSpec")
+            .field("qos", &self.qos)
+            .field("source", &self.source.as_ref().map(|s| s.len()))
+            .field("packer", &self.packer)
+            .field("shard_size", &self.shard_size)
+            .field("ordered", &self.ordered)
+            .field("epoch", &self.epoch)
+            .field("credits", &self.credits)
+            .finish()
+    }
+}
+
+/// Point-in-time snapshot of one session's counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SessionMetrics {
+    /// Batches delivered into the session's stream so far.
+    pub batches: u64,
+    /// Total time assembly jobs spent queued before a worker picked
+    /// them up (dispatcher latency, the QoS signal).
+    pub queue_wait: Duration,
+    /// Total time workers spent materializing this session's batches.
+    pub assembly_time: Duration,
+    /// Total time this session's next assembly was runnable but held
+    /// back by admission control (all credits in flight) — nonzero means
+    /// the consumer, not the plane, was the bottleneck.
+    pub credits_blocked: Duration,
+    /// How many times the session hit the credit limit.
+    pub credit_stalls: u64,
+}
+
+impl SessionMetrics {
+    /// Mean dispatcher queue wait per delivered batch, in milliseconds.
+    pub fn mean_queue_wait_ms(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.queue_wait.as_secs_f64() * 1e3 / self.batches as f64
+    }
+}
+
+/// Internal per-session state shared by the dispatcher, the workers, and
+/// the consumer-side stream handle.
+pub(crate) struct SessionState {
+    pub(crate) id: u64,
+    pub(crate) qos: QosClass,
+    /// Admission bound: max batches in flight (dispatched or delivered
+    /// but not yet received by the consumer). Always >= 1.
+    pub(crate) credits: usize,
+    /// Batches currently in flight against `credits`.
+    pub(crate) in_flight: AtomicUsize,
+    /// Consumer dropped the stream: workers skip this session's jobs and
+    /// the dispatcher purges its queue. (Plane-wide shutdown is a
+    /// separate flag on the plane's shared state — workers check both.)
+    pub(crate) cancelled: AtomicBool,
+    // --- job parameters (what the workers plan/assemble) ---
+    pub(crate) source: Arc<dyn MoleculeSource>,
+    pub(crate) packer: Packer,
+    pub(crate) shard_size: usize,
+    // --- metrics ---
+    batches: AtomicU64,
+    queue_wait_ns: AtomicU64,
+    assembly_ns: AtomicU64,
+    credits_blocked_ns: AtomicU64,
+    credit_stalls: AtomicU64,
+    /// Per-batch dispatcher queue waits in nanoseconds for percentile
+    /// reporting — a ring of the most recent [`WAIT_SAMPLE_CAP`]
+    /// dispatches, so a long-lived serving session's memory stays
+    /// bounded.
+    wait_samples: Mutex<WaitRing>,
+}
+
+/// Most recent queue-wait samples a session retains (8 bytes each).
+pub const WAIT_SAMPLE_CAP: usize = 4096;
+
+#[derive(Default)]
+struct WaitRing {
+    buf: Vec<u64>,
+    /// Next overwrite position once `buf` reaches the cap.
+    next: usize,
+}
+
+impl WaitRing {
+    fn push(&mut self, ns: u64) {
+        if self.buf.len() < WAIT_SAMPLE_CAP {
+            self.buf.push(ns);
+        } else {
+            self.buf[self.next] = ns;
+            self.next = (self.next + 1) % WAIT_SAMPLE_CAP;
+        }
+    }
+}
+
+impl SessionState {
+    pub(crate) fn new(
+        id: u64,
+        qos: QosClass,
+        credits: usize,
+        source: Arc<dyn MoleculeSource>,
+        packer: Packer,
+        shard_size: usize,
+    ) -> SessionState {
+        SessionState {
+            id,
+            qos,
+            credits: credits.max(1),
+            in_flight: AtomicUsize::new(0),
+            cancelled: AtomicBool::new(false),
+            source,
+            packer,
+            shard_size,
+            batches: AtomicU64::new(0),
+            queue_wait_ns: AtomicU64::new(0),
+            assembly_ns: AtomicU64::new(0),
+            credits_blocked_ns: AtomicU64::new(0),
+            credit_stalls: AtomicU64::new(0),
+            wait_samples: Mutex::new(WaitRing::default()),
+        }
+    }
+
+    pub(crate) fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Acquire)
+    }
+
+    /// Dispatcher accounting when an assembly job leaves the queue.
+    pub(crate) fn record_dispatch(&self, enqueued: Instant) {
+        let wait = enqueued.elapsed();
+        let ns = wait.as_nanos() as u64;
+        self.queue_wait_ns.fetch_add(ns, Ordering::Relaxed);
+        self.wait_samples.lock().unwrap().push(ns);
+    }
+
+    /// The session's next assembly just failed admission (all credits in
+    /// flight). Counted at onset so a still-stalled session is visible.
+    pub(crate) fn record_credit_stall_onset(&self) {
+        self.credit_stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The stalled head finally dispatched: attribute the blocked time.
+    pub(crate) fn record_credit_stall_cleared(&self, blocked: Duration) {
+        self.credits_blocked_ns
+            .fetch_add(blocked.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_assembly(&self, took: Duration) {
+        self.assembly_ns.fetch_add(took.as_nanos() as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn metrics(&self) -> SessionMetrics {
+        SessionMetrics {
+            batches: self.batches.load(Ordering::Relaxed),
+            queue_wait: Duration::from_nanos(self.queue_wait_ns.load(Ordering::Relaxed)),
+            assembly_time: Duration::from_nanos(self.assembly_ns.load(Ordering::Relaxed)),
+            credits_blocked: Duration::from_nanos(self.credits_blocked_ns.load(Ordering::Relaxed)),
+            credit_stalls: self.credit_stalls.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The most recent [`WAIT_SAMPLE_CAP`] per-batch dispatcher queue
+    /// waits in milliseconds (unordered — feed to
+    /// `util::stats::summarize` for percentiles).
+    pub(crate) fn queue_wait_samples_ms(&self) -> Vec<f64> {
+        self.wait_samples
+            .lock()
+            .unwrap()
+            .buf
+            .iter()
+            .map(|&ns| ns as f64 / 1e6)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::HydroNet;
+
+    #[test]
+    fn qos_weights_are_ordered_and_positive() {
+        let w: Vec<u32> = QosClass::ALL.iter().map(|q| q.weight()).collect();
+        assert!(w.iter().all(|&x| x > 0), "a zero weight starves a class");
+        assert!(w[0] > w[1] && w[1] > w[2], "serving > training > background");
+        assert_eq!(
+            QosClass::ALL.map(|q| q.lane()),
+            [0, 1, 2],
+            "lane indices must match dispatch-priority order"
+        );
+    }
+
+    #[test]
+    fn jobspec_builders_set_class_and_order_semantics() {
+        let t = JobSpec::training(7);
+        assert_eq!(t.qos, QosClass::Training);
+        assert_eq!(t.epoch, Some(7));
+        let s = JobSpec::serving().with_credits(2).with_shard_size(64);
+        assert_eq!(s.qos, QosClass::Serving);
+        assert_eq!(s.epoch, None, "serving streams in arrival order");
+        assert_eq!(s.credits, Some(2));
+        assert_eq!(s.shard_size, Some(64));
+        let b = JobSpec::background().with_qos(QosClass::Training);
+        assert_eq!(b.qos, QosClass::Training);
+    }
+
+    #[test]
+    fn metrics_snapshot_tracks_recorded_counters() {
+        let st = SessionState::new(
+            1,
+            QosClass::Serving,
+            0, // clamped to 1
+            Arc::new(HydroNet::new(4, 1)),
+            Packer::Lpfhp,
+            8,
+        );
+        assert_eq!(st.credits, 1);
+        let t = Instant::now();
+        st.record_dispatch(t);
+        st.record_assembly(Duration::from_millis(2));
+        st.record_credit_stall_onset();
+        st.record_credit_stall_cleared(Duration::from_millis(5));
+        let m = st.metrics();
+        assert_eq!(m.batches, 1);
+        assert!(m.assembly_time >= Duration::from_millis(2));
+        assert!(m.credits_blocked >= Duration::from_millis(5));
+        assert_eq!(m.credit_stalls, 1);
+        assert_eq!(st.queue_wait_samples_ms().len(), 1);
+        assert!(m.mean_queue_wait_ms() >= 0.0);
+    }
+}

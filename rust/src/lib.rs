@@ -5,10 +5,23 @@
 //!
 //! Three-layer architecture:
 //! * **L3 (this crate)** — coordinator: datasets, batch packing (LPFHP,
-//!   sharded for incremental epoch planning), scatter/gather planner, BSP
-//!   tile-machine performance model, a persistent streaming data-plane
-//!   (long-lived worker pool, prefetching, zero-allocation batch
-//!   recycling), data-parallel training orchestrator.
+//!   sharded for incremental planning), scatter/gather planner, BSP
+//!   tile-machine performance model, a persistent **multi-tenant**
+//!   streaming data-plane, data-parallel training orchestrator. The
+//!   data-plane is session-based: one long-lived worker pool serves any
+//!   number of concurrent tenants — training epochs, serving request
+//!   queues, background sweeps — each opened as a
+//!   `coordinator::Session` with a `JobSpec` (source, packer, shard
+//!   size, ordering, `QosClass`). Worker dispatch is weighted by QoS
+//!   class (Serving 6 : Training 3 : Background 1) and every session
+//!   has bounded admission credits, so a slow or abandoned consumer can
+//!   never park the shared pool; buffers recycle zero-allocation
+//!   through `BatchLease`s. *Migration note:* the single-tenant
+//!   `DataPlane::start_epoch(epoch)` is deprecated for one release —
+//!   replace it with `plane.open_session(JobSpec::training(epoch))`,
+//!   which streams the identical ordered batch sequence and adds
+//!   per-session metrics (`queue_wait`, `assembly_time`,
+//!   `credits_blocked`).
 //! * **L2 (python/compile/model.py)** — SchNet forward/backward in JAX,
 //!   AOT-lowered to HLO text artifacts at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute

@@ -5,6 +5,9 @@
 //!   train [--graphs N] [--epochs E] [--workers W] [--prefetch D] [--shard S]
 //!                                            real PJRT training run over
 //!                                            the persistent data-plane
+//!   serve [--tenants T] [--requests N]       multi-tenant demo: serving
+//!                                            sessions + one background
+//!                                            training session on one plane
 //!   characterize                             Fig. 5 dataset profiles
 //!   pack [--dataset NAME] [--s-m N]          run LPFHP + baselines once
 //!   plan [--edges E] [--nodes N] [--feat F]  scatter/gather planner demo
@@ -14,13 +17,14 @@
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
-use molpack::coordinator::PipelineConfig;
+use molpack::coordinator::{Batcher, DataPlane, JobSpec, PipelineConfig, QosClass, Session};
 use molpack::datasets::{HydroNet, PaperDataset};
 use molpack::ipu::IpuArch;
 use molpack::packing::Packer;
 use molpack::planner::{plan_gather, plan_scatter, OpDims};
 use molpack::runtime::Engine;
 use molpack::train::{train, TrainConfig};
+use molpack::util::stats::summarize;
 use molpack::{figures, perfmodel};
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
@@ -51,8 +55,16 @@ impl Args {
         self.flags.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
     }
 
-    fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Flag value as usize, or `default` when absent. A present but
+    /// malformed value is an error, not a silent fallback: `--workers
+    /// abc` must fail loudly instead of training with the default.
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("invalid value for --{key}: {v:?} (expected a non-negative integer)")
+            }),
+        }
     }
 }
 
@@ -85,8 +97,8 @@ fn cmd_figures(args: &Args) -> Result<()> {
 /// Batches stream from the same persistent data-plane as single-replica
 /// training.
 fn cmd_train_dp(args: &Args, engine: &Engine, graphs: usize, epochs: u64) -> Result<()> {
-    use molpack::coordinator::{Batcher, DataParallel, DataPlane};
-    let replicas = args.usize_or("replicas", 2);
+    use molpack::coordinator::DataParallel;
+    let replicas = args.usize_or("replicas", 2)?;
     let merged = args.get("no-merged").is_none();
     let source = Arc::new(HydroNet::new(graphs, 42));
     let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
@@ -94,9 +106,9 @@ fn cmd_train_dp(args: &Args, engine: &Engine, graphs: usize, epochs: u64) -> Res
         source,
         batcher,
         PipelineConfig {
-            workers: args.usize_or("workers", 4),
-            prefetch_depth: args.usize_or("prefetch", 4),
-            shard_size: args.usize_or("shard", 2048),
+            workers: args.usize_or("workers", 4)?,
+            prefetch_depth: args.usize_or("prefetch", 4)?,
+            shard_size: args.usize_or("shard", 2048)?,
             ..Default::default()
         },
     );
@@ -119,8 +131,8 @@ fn cmd_train_dp(args: &Args, engine: &Engine, graphs: usize, epochs: u64) -> Res
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let graphs = args.usize_or("graphs", 2000);
-    let epochs = args.usize_or("epochs", 3) as u64;
+    let graphs = args.usize_or("graphs", 2000)?;
+    let epochs = args.usize_or("epochs", 3)? as u64;
     let engine = Engine::load("artifacts")?;
     println!(
         "engine up: platform={} params={}",
@@ -135,22 +147,25 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = TrainConfig {
         epochs,
         pipeline: PipelineConfig {
-            workers: args.usize_or("workers", 4),
-            prefetch_depth: args.usize_or("prefetch", 4),
+            workers: args.usize_or("workers", 4)?,
+            prefetch_depth: args.usize_or("prefetch", 4)?,
             packer: Packer::Lpfhp,
             shuffle_seed: 42,
             ordered: true,
-            shard_size: args.usize_or("shard", 2048),
+            shard_size: args.usize_or("shard", 2048)?,
         },
-        max_batches_per_epoch: args.usize_or("max-batches", 0),
+        max_batches_per_epoch: args.usize_or("max-batches", 0)?,
         log_every: 50,
     };
     let records = train(&engine, &mut state, source, &cfg, |e, b, l| {
         println!("  epoch {e} batch {b}: loss {l:.5}");
     })?;
-    println!("\nepoch | mean MSE | graphs/s");
+    println!("\nepoch | mean MSE | graphs/s | plane wait ms");
     for r in &records {
-        println!("{:5} | {:8.5} | {:8.1}", r.epoch, r.mean_loss, r.graphs_per_sec);
+        println!(
+            "{:5} | {:8.5} | {:8.1} | {:13.3}",
+            r.epoch, r.mean_loss, r.graphs_per_sec, r.queue_wait_ms
+        );
     }
     let s = engine.stats();
     println!(
@@ -162,17 +177,124 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Multi-tenant serving demo: N serving tenants (each its own request
+/// queue / `Session`) answered by the predict artifact while a
+/// Background-class training session streams from the *same* plane and
+/// keeps updating parameters. One OS thread drives the device (the PJRT
+/// engine is single-device); concurrency lives in the data-plane, whose
+/// dispatcher interleaves all open sessions by QoS weight and whose
+/// admission credits keep every tenant's stream bounded.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let tenants = args.usize_or("tenants", 2)?.max(1);
+    let requests = args.usize_or("requests", 200)?;
+    let train_graphs = args.usize_or("train-graphs", 600)?;
+    let engine = Engine::load("artifacts")?;
+    let mut state = engine.init_state()?;
+    let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
+    let plane = DataPlane::new(
+        Arc::new(HydroNet::new(train_graphs, 42)),
+        batcher,
+        PipelineConfig {
+            workers: args.usize_or("workers", 4)?,
+            prefetch_depth: args.usize_or("prefetch", 4)?,
+            shard_size: args.usize_or("shard", 256)?,
+            ..Default::default()
+        },
+    );
+
+    // The training tenant rides Background QoS: it soaks up whatever
+    // worker capacity the serving tenants leave idle. (A drained
+    // session's iterator keeps returning `None`, so polling it in the
+    // round-robin below is safe.)
+    let mut training = plane.open_session(JobSpec::training(0).with_qos(QosClass::Background));
+    let mut tenant_streams: Vec<Session> = (0..tenants)
+        .map(|t| {
+            plane.open_session(
+                JobSpec::serving()
+                    .with_source(Arc::new(HydroNet::new(requests, 100 + t as u64)))
+                    .with_credits(2),
+            )
+        })
+        .collect();
+    println!(
+        "serve: {tenants} serving tenants × {requests} requests + background training ({train_graphs} graphs) on one data-plane"
+    );
+
+    let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); tenants];
+    let mut served = vec![0usize; tenants];
+    let mut train_steps = 0usize;
+    let mut open: Vec<bool> = vec![true; tenants];
+    while open.iter().any(|&o| o) || train_steps == 0 {
+        let mut progressed = false;
+        for (t, stream) in tenant_streams.iter_mut().enumerate() {
+            if !open[t] {
+                continue;
+            }
+            match stream.next() {
+                Some(lease) => {
+                    let batch = lease?;
+                    let t0 = std::time::Instant::now();
+                    engine.predict(&state.params, &batch)?;
+                    latencies[t].push(t0.elapsed().as_secs_f64() * 1e3);
+                    served[t] += batch.real_graphs();
+                    progressed = true;
+                }
+                None => open[t] = false,
+            }
+        }
+        // one training step between serving rounds keeps the model moving
+        if let Some(lease) = training.next() {
+            let batch = lease?;
+            engine.train_step(&mut state, &batch)?;
+            train_steps += 1;
+            progressed = true;
+        } else if !open.iter().any(|&o| o) {
+            break;
+        }
+        if !progressed {
+            break; // all streams exhausted
+        }
+    }
+
+    println!("\ntenant | served | p50 ms | p95 ms | queue-wait p95 ms");
+    for (t, stream) in tenant_streams.iter().enumerate() {
+        if served[t] != requests {
+            bail!("tenant {t} lost requests: served {} of {requests}", served[t]);
+        }
+        if latencies[t].is_empty() {
+            println!("{t:6} | {:6} | (no batches — 0 requests)", served[t]);
+            continue;
+        }
+        let lat = summarize(&latencies[t]);
+        let waits = stream.queue_wait_samples_ms();
+        let wait = summarize(&waits);
+        println!(
+            "{t:6} | {:6} | {:6.2} | {:6.2} | {:17.3}",
+            served[t], lat.p50, lat.p95, wait.p95
+        );
+    }
+    let tm = training.metrics();
+    println!(
+        "background training: {train_steps} steps interleaved, queue-wait mean {:.3} ms, credit stalls {}",
+        tm.mean_queue_wait_ms(),
+        tm.credit_stalls
+    );
+    println!("data-plane buffers allocated: {}", plane.buffers_allocated());
+    println!("serve OK");
+    Ok(())
+}
+
 fn cmd_pack(args: &Args) -> Result<()> {
     let name = args.get("dataset").unwrap_or("4.5M");
     let ds = PaperDataset::all()
         .into_iter()
         .find(|d| d.name() == name)
         .ok_or_else(|| anyhow::anyhow!("unknown dataset {name} (QM9/500K/2.7M/4.5M)"))?;
-    let sample = args.usize_or("sample", 20_000);
+    let sample = args.usize_or("sample", 20_000)?.max(1);
     let src = ds.source((ds.full_len() / sample).max(1), 3);
     let sizes: Vec<usize> = (0..src.len().min(sample)).map(|i| src.n_atoms(i)).collect();
     let max = *sizes.iter().max().unwrap();
-    let s_m = args.usize_or("s-m", max);
+    let s_m = args.usize_or("s-m", max)?;
     println!(
         "{name}: {} graphs sampled, sizes {}..{max}, s_m={s_m}",
         sizes.len(),
@@ -202,9 +324,9 @@ fn cmd_pack(args: &Args) -> Result<()> {
 
 fn cmd_plan(args: &Args) -> Result<()> {
     let d = OpDims {
-        i: args.usize_or("edges", 4608),
-        m: args.usize_or("nodes", 384),
-        n: args.usize_or("feat", 64),
+        i: args.usize_or("edges", 4608)?,
+        m: args.usize_or("nodes", 384)?,
+        n: args.usize_or("feat", 64)?,
     };
     let arch = IpuArch::bow();
     let g = plan_gather(d, &arch);
@@ -248,10 +370,12 @@ fn cmd_characterize() -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: molpack <figures|train|pack|plan|characterize> [flags]\n\
+const USAGE: &str = "usage: molpack <figures|train|serve|pack|plan|characterize> [flags]\n\
   figures [--fig 5..13 | --table 1 | --all]\n\
   train [--graphs N] [--epochs E] [--workers W] [--prefetch D] [--shard S]\n\
         [--max-batches B] [--replicas R [--no-merged]]\n\
+  serve [--tenants T] [--requests N] [--train-graphs N] [--workers W]\n\
+        [--prefetch D] [--shard S]\n\
   pack [--dataset QM9|500K|2.7M|4.5M] [--s-m N] [--sample N]\n\
   plan [--edges I] [--nodes M] [--feat N]\n\
   characterize";
@@ -266,6 +390,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "figures" => cmd_figures(&args),
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "pack" => cmd_pack(&args),
         "plan" => cmd_plan(&args),
         "characterize" => cmd_characterize(),

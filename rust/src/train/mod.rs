@@ -3,11 +3,13 @@
 //! through here.
 //!
 //! One `DataPlane` is constructed per training run and reused across
-//! epochs: the worker pool stays alive, and every `HostBatch` flows back
-//! into the buffer pool when its lease drops after `train_step` — the
-//! steady-state loop does no hot-path allocation. Early epoch exits
-//! (`max_batches_per_epoch`) cancel the in-flight epoch instead of
-//! leaking detached worker threads.
+//! epochs; each epoch is a Training-class *session*
+//! (`JobSpec::training(epoch)`) on the shared plane, so a concurrent
+//! serving tenant can stream from the same plane while this loop runs.
+//! Every `HostBatch` flows back into the buffer pool when its lease
+//! drops after `train_step` — the steady-state loop does no hot-path
+//! allocation. Early epoch exits (`max_batches_per_epoch`) cancel the
+//! in-flight session instead of leaking detached worker threads.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -16,6 +18,7 @@ use anyhow::Result;
 
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::dataplane::{DataPlane, PipelineConfig};
+use crate::coordinator::session::JobSpec;
 use crate::datasets::MoleculeSource;
 use crate::runtime::{Engine, TrainState};
 
@@ -28,6 +31,14 @@ pub struct EpochRecord {
     pub graphs: usize,
     pub secs: f64,
     pub graphs_per_sec: f64,
+    /// Mean data-plane dispatcher wait per batch (ms) — from the epoch
+    /// session's metrics; high values mean the plane, not the device,
+    /// bounded this epoch.
+    pub queue_wait_ms: f64,
+    /// Times the epoch session hit its admission-credit limit — nonzero
+    /// means the device (this consumer) was the bottleneck, the healthy
+    /// steady state.
+    pub credit_stalls: u64,
 }
 
 /// Trainer configuration.
@@ -65,12 +76,12 @@ pub fn train<S: MoleculeSource + 'static>(
     let mut records = Vec::new();
     for epoch in 0..cfg.epochs {
         let t0 = Instant::now();
-        let mut stream = plane.start_epoch(epoch);
+        let mut session = plane.open_session(JobSpec::training(epoch));
         let mut loss_sum = 0.0f64;
         let mut batches = 0usize;
         let mut graphs = 0usize;
         let mut truncated = false;
-        for batch in stream.by_ref() {
+        for batch in session.by_ref() {
             let batch = batch?;
             let loss = engine.train_step(state, &batch)?;
             loss_sum += loss as f64;
@@ -86,10 +97,11 @@ pub fn train<S: MoleculeSource + 'static>(
             // `batch` (the lease) drops here, returning its buffer to the
             // pool for the next assembly.
         }
+        let metrics = session.metrics();
         if truncated {
-            // Retire the epoch's remaining jobs; the worker pool stays up
-            // for the next epoch (the seed detached its threads here).
-            stream.cancel();
+            // Retire the session's remaining jobs; the worker pool stays
+            // up for the next epoch (the seed detached its threads here).
+            session.cancel();
         }
         let secs = t0.elapsed().as_secs_f64();
         records.push(EpochRecord {
@@ -99,6 +111,8 @@ pub fn train<S: MoleculeSource + 'static>(
             graphs,
             secs,
             graphs_per_sec: graphs as f64 / secs,
+            queue_wait_ms: metrics.mean_queue_wait_ms(),
+            credit_stalls: metrics.credit_stalls,
         });
     }
     Ok(records)
@@ -162,13 +176,16 @@ mod tests {
         );
         // epoch 0: consume two batches, then cancel (what train() does on
         // max_batches_per_epoch)
-        let mut stream = plane.start_epoch(0);
+        let mut session = plane.open_session(JobSpec::training(0));
         for _ in 0..2 {
-            stream.next().unwrap().unwrap();
+            session.next().unwrap().unwrap();
         }
-        stream.cancel();
+        session.cancel();
         // epoch 1 on the same plane still covers the whole dataset
-        let graphs: usize = plane.start_epoch(1).map(|b| b.unwrap().real_graphs()).sum();
+        let graphs: usize = plane
+            .open_session(JobSpec::training(1))
+            .map(|b| b.unwrap().real_graphs())
+            .sum();
         assert_eq!(graphs, 64);
     }
 }

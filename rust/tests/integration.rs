@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use molpack::coordinator::{plan_epoch, Batcher, DataParallel, DataPlane, PipelineConfig};
+use molpack::coordinator::{plan_epoch, Batcher, DataParallel, DataPlane, JobSpec, PipelineConfig};
 use molpack::datasets::{write_store, CachedSource, HydroNet, MoleculeSource, Qm9, Store};
 use molpack::runtime::{checkpoint, Engine};
 use molpack::train::{train, TrainConfig};
@@ -185,6 +185,56 @@ fn data_parallel_runs_on_the_data_plane() {
     assert_eq!(dp.stats.steps as usize, steps0 + steps1);
     // recycling across epochs: far fewer buffers than batches served
     assert!(plane.buffers_allocated() <= 2 * (2 + 4) + 2);
+}
+
+/// Multi-tenant sessions over the real engine: a Serving-class session
+/// (its own request corpus) completes through `predict` while a
+/// Training-class session is mid-epoch on the same plane and `train_step`
+/// keeps running; the training epoch then finishes intact. This is the
+/// serving story the session API exists for.
+#[test]
+fn serving_session_completes_while_training_is_mid_epoch() {
+    let Some(engine) = engine() else { return };
+    let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
+    let plane = DataPlane::new(
+        Arc::new(HydroNet::new(64, 7)),
+        batcher,
+        PipelineConfig { workers: 2, shard_size: 16, ..Default::default() },
+    );
+    let mut state = engine.init_state().unwrap();
+
+    let mut training = plane.open_session(JobSpec::training(0));
+    let mut train_graphs = 0usize;
+    for _ in 0..2 {
+        let b = training.next().unwrap().unwrap();
+        engine.train_step(&mut state, &b).unwrap();
+        train_graphs += b.real_graphs();
+    }
+    assert!(train_graphs < 64, "training must still be mid-epoch");
+
+    // a serving tenant with its own molecules streams to completion now
+    let serving = plane.open_session(
+        JobSpec::serving()
+            .with_source(Arc::new(HydroNet::new(24, 91)))
+            .with_credits(2),
+    );
+    let mut served = 0usize;
+    for lease in serving {
+        let b = lease.unwrap();
+        let energies = engine.predict(&state.params, &b).unwrap();
+        assert_eq!(energies.len(), engine.manifest.batch.n_graphs);
+        served += b.real_graphs();
+    }
+    assert_eq!(served, 24, "serving session incomplete while training mid-epoch");
+
+    // the interrupted training epoch still covers the whole dataset
+    for b in training.by_ref() {
+        let b = b.unwrap();
+        engine.train_step(&mut state, &b).unwrap();
+        train_graphs += b.real_graphs();
+    }
+    assert_eq!(train_graphs, 64, "training epoch lost graphs to the serving tenant");
+    assert!(training.metrics().batches >= 4);
 }
 
 /// The predict path answers every real graph slot and ignores padding.
