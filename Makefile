@@ -1,16 +1,19 @@
 # molpack build/verify entry points.
 #
-#   make artifacts   AOT-lower the JAX model (L2+L1) to HLO text under
-#                    rust/artifacts — required once before `train`,
-#                    `serve`, the examples, and the artifact-gated tests
-#                    (they skip gracefully without it).
-#   make check       the CI gate: formatting, clippy (warnings are
-#                    errors), and the test suite.
-#   make test        tests only.
+#   make artifacts    AOT-lower the JAX model (L2+L1) to HLO text under
+#                     rust/artifacts — required once before `train`,
+#                     `serve`, the examples, and the artifact-gated tests
+#                     (they skip gracefully without it).
+#   make check        the CI gate: formatting, clippy (warnings are
+#                     errors), the test suite, and bench compilation.
+#   make test         tests only.
+#   make bench-smoke  the assembly cold-vs-warm section of bench_pipeline
+#                     on a CI-sized dataset; asserts the >= 2x warm-epoch
+#                     bar and writes machine-readable BENCH_assembly.json.
 
-.PHONY: check fmt clippy test artifacts
+.PHONY: check fmt clippy test bench-build bench-smoke artifacts
 
-check: fmt clippy test
+check: fmt clippy test bench-build
 
 fmt:
 	cargo fmt --check
@@ -20,6 +23,13 @@ clippy:
 
 test:
 	cargo test -q
+
+# Benches must at least compile in CI even though they only run on demand.
+bench-build:
+	cargo bench --no-run
+
+bench-smoke:
+	cargo bench --bench bench_pipeline -- --assembly-only --graphs 4000 --out BENCH_assembly.json
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../rust/artifacts

@@ -1,6 +1,6 @@
-//! Data-plane bench: first-batch latency, steady-state throughput, and
-//! mixed-tenancy QoS of the persistent streaming pipeline.
-//! `cargo bench --bench bench_pipeline`.
+//! Data-plane bench: first-batch latency, steady-state throughput,
+//! mixed-tenancy QoS, and cold-vs-warm assembly of the persistent
+//! streaming pipeline. `cargo bench --bench bench_pipeline`.
 //!
 //! What it demonstrates:
 //! * first-batch latency tracks the *shard* size, not the dataset size —
@@ -12,14 +12,23 @@
 //! * mixed tenancy (ISSUE 3): one Training + one Serving session
 //!   sharing a plane, consumed concurrently, reporting per-class p95
 //!   dispatcher queue wait — the Serving class must not see its tail
-//!   latency destroyed by a Training epoch in flight.
+//!   latency destroyed by a Training epoch in flight;
+//! * cold vs warm assembly (ISSUE 4): the same epoch replayed on one
+//!   plane, with the epoch-invariant prepared source (SoA arena + edge
+//!   cache) warm on the second pass — asserted ≥ 2× throughput,
+//!   bitwise-identical stream, zero warm misses — written as
+//!   machine-readable `BENCH_assembly.json` for the perf trajectory.
+//!
+//! Flags (after `--`): `--assembly-only` runs just the assembly section
+//! (the `make bench-smoke` CI entry point); `--graphs N` sizes its
+//! dataset; `--out PATH` moves the JSON (default `BENCH_assembly.json`).
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use molpack::coordinator::{stream_epoch, Batcher, DataPlane, JobSpec, PipelineConfig};
 use molpack::datasets::HydroNet;
-use molpack::runtime::BatchGeometry;
+use molpack::runtime::{BatchGeometry, HostBatch};
 use molpack::util::stats::summarize;
 
 fn geometry() -> BatchGeometry {
@@ -91,7 +100,123 @@ fn mixed_tenancy(workers: usize, n_train: usize, n_serve: usize) -> [(f64, f64);
     })
 }
 
+/// One full epoch pass over `plane`: wall seconds, graphs streamed, and
+/// a per-batch content fingerprint (bit patterns, so "bitwise-identical"
+/// means exactly that).
+fn epoch_pass(plane: &DataPlane, epoch: u64) -> (f64, usize, Vec<u64>) {
+    fn fingerprint(b: &HostBatch) -> u64 {
+        // FNV-1a over every tensor's bit pattern — cheap relative to
+        // assembly, sensitive to any byte-level divergence.
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut eat = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        b.z.iter().for_each(|&x| eat(x as u64));
+        b.pos.iter().for_each(|&x| eat(x.to_bits() as u64));
+        b.src.iter().for_each(|&x| eat(x as u64));
+        b.dst.iter().for_each(|&x| eat(x as u64));
+        b.edge_mask.iter().for_each(|&x| eat(x.to_bits() as u64));
+        b.graph_id.iter().for_each(|&x| eat(x as u64));
+        b.node_mask.iter().for_each(|&x| eat(x.to_bits() as u64));
+        b.target.iter().for_each(|&x| eat(x.to_bits() as u64));
+        b.graph_mask.iter().for_each(|&x| eat(x.to_bits() as u64));
+        h
+    }
+    let t0 = Instant::now();
+    let mut graphs = 0usize;
+    let mut prints = Vec::new();
+    for lease in plane.open_session(JobSpec::training(epoch)) {
+        let b = lease.expect("assembly ok");
+        graphs += b.real_graphs();
+        prints.push(fingerprint(&b));
+    }
+    (t0.elapsed().as_secs_f64(), graphs, prints)
+}
+
+/// Cold-vs-warm assembly over the synthetic 500K-subset size profile
+/// (clusters capped at 25 waters / 75 atoms, the paper's 500K shape).
+/// Replays the same epoch so the plans are identical and the only
+/// difference is the prepared-source temperature. Writes
+/// `BENCH_assembly.json` and asserts the ISSUE 4 acceptance bars.
+fn assembly_cold_vs_warm(n: usize, workers: usize, out: &str) {
+    println!("assembly cold vs warm — synthetic 500K subset, {n} graphs, {workers} workers:");
+    let plane = DataPlane::new(
+        Arc::new(HydroNet::with_max_molecules(n, 1, 25)),
+        Batcher::new(geometry(), 6.0),
+        PipelineConfig { workers, shard_size: 2048, ..Default::default() },
+    );
+    let (cold_secs, cold_graphs, cold_prints) = epoch_pass(&plane, 0);
+    let cold_stats = plane.prepared_stats();
+    let (warm_secs, warm_graphs, warm_prints) = epoch_pass(&plane, 0);
+    let warm_stats = plane.prepared_stats();
+
+    assert_eq!(cold_graphs, n, "cold epoch lost graphs");
+    assert_eq!(warm_graphs, n, "warm epoch lost graphs");
+    assert_eq!(cold_prints, warm_prints, "warm stream is not bitwise-identical to cold");
+    let warm_misses = warm_stats.edge_misses - cold_stats.edge_misses;
+    assert_eq!(warm_misses, 0, "warm epoch recomputed {warm_misses} edge lists");
+    let speedup = cold_secs / warm_secs;
+    let cold_gps = cold_graphs as f64 / cold_secs;
+    let warm_gps = warm_graphs as f64 / warm_secs;
+    println!("  cold epoch: {cold_secs:>7.3}s  {cold_gps:>9.0} graphs/s");
+    println!("  warm epoch: {warm_secs:>7.3}s  {warm_gps:>9.0} graphs/s");
+    println!(
+        "  speedup {speedup:.2}x | arena {:.1} MB in {} segments | edge cache {:.1} MB, {} entries, warm hit rate {:.3}",
+        warm_stats.arena_bytes as f64 / 1e6,
+        warm_stats.segments_built,
+        warm_stats.edge_bytes as f64 / 1e6,
+        warm_stats.edge_entries,
+        warm_stats.edge_hit_rate(),
+    );
+    assert!(
+        speedup >= 2.0,
+        "warm-epoch assembly must be >= 2x cold ({speedup:.2}x)"
+    );
+
+    let fields = [
+        "  \"bench\": \"assembly_cold_vs_warm\"".to_string(),
+        "  \"dataset\": \"synthetic-500K-subset\"".to_string(),
+        format!("  \"graphs\": {n}"),
+        format!("  \"workers\": {workers}"),
+        format!("  \"cold_secs\": {cold_secs:.6}"),
+        format!("  \"warm_secs\": {warm_secs:.6}"),
+        format!("  \"cold_graphs_per_sec\": {cold_gps:.1}"),
+        format!("  \"warm_graphs_per_sec\": {warm_gps:.1}"),
+        format!("  \"speedup\": {speedup:.3}"),
+        "  \"bitwise_identical\": true".to_string(),
+        format!("  \"warm_edge_misses\": {warm_misses}"),
+        format!("  \"arena_bytes\": {}", warm_stats.arena_bytes),
+        format!("  \"arena_segments\": {}", warm_stats.segments_built),
+        format!("  \"edge_cache_bytes\": {}", warm_stats.edge_bytes),
+        format!("  \"edge_cache_entries\": {}", warm_stats.edge_entries),
+        format!("  \"buffers_allocated\": {}", plane.buffers_allocated()),
+    ];
+    let json = format!("{{\n{}\n}}\n", fields.join(",\n"));
+    std::fs::write(out, json).expect("writing assembly bench JSON");
+    println!("  wrote {out}");
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let flag_val = |key: &str| {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let out = flag_val("--out").unwrap_or_else(|| "BENCH_assembly.json".to_string());
+    let assembly_graphs: usize = flag_val("--graphs")
+        .map(|v| v.parse().expect("--graphs takes an integer"))
+        .unwrap_or(20_000);
+    if args.iter().any(|a| a == "--assembly-only") {
+        // CI smoke entry point (`make bench-smoke`): just the ISSUE 4
+        // acceptance section on a CI-sized dataset.
+        assembly_cold_vs_warm(assembly_graphs, 4, &out);
+        println!("\nbench_pipeline assembly smoke OK");
+        return;
+    }
+
     println!("data-plane benchmark\n");
 
     // (a) first-batch latency: sharded planning must scale with the
@@ -178,6 +303,12 @@ fn main() {
             sp50, sp95, tp50, tp95
         );
     }
+
+    // (d) epoch-invariant assembly cache: cold vs warm epoch on one
+    // plane (ISSUE 4 acceptance: >= 2x, bitwise-identical, no warm
+    // recomputation). Emits BENCH_assembly.json.
+    println!();
+    assembly_cold_vs_warm(assembly_graphs, 4, &out);
 
     println!("\nbench_pipeline OK");
 }

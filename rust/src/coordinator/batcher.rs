@@ -1,24 +1,48 @@
 //! Batch assembly: materialize LPFHP packs into the fixed-shape
 //! `HostBatch` tensors the AOT executables expect (DESIGN.md §5).
 //!
+//! The assembler consumes a [`PreparedSource`] — the epoch-invariant SoA
+//! arena + memoized edge topology (`datasets::prepared`) — so the
+//! steady-state (warm-cache) path is memcpy-bound: per molecule it is a
+//! handful of bulk `copy_from_slice`/`fill` spans plus an offset-rebased
+//! copy of the cached edge list, with zero heap allocation and no
+//! per-atom scalar writes. Molecule materialization and `knn_edges`
+//! construction happen at most once per molecule for the lifetime of the
+//! prepared source, not once per epoch per session.
+//!
 //! Each pack occupies a fixed node/edge/graph-slot window; edges are built
 //! per molecule (KNN within the radius cutoff, capped by the compiled
 //! k_max), so packs are disconnected components and cross-contamination is
 //! structurally impossible. Padding edges are self-loops on a dump node
 //! with `edge_mask = 0`; padding nodes route to the batch's last graph
-//! slot with `node_mask = 0`.
+//! slot with `node_mask = 0`. The filled extent of every tensor is
+//! recorded via `HostBatch::mark_dirty`, which is what lets the recycling
+//! `reset` clear only the touched region.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::datasets::MoleculeSource;
-use crate::graph::{knn_edges, Molecule};
+use crate::datasets::{EdgeTopology, PreparedSource};
 use crate::packing::Pack;
 use crate::runtime::{BatchGeometry, HostBatch};
+
+/// Per-assembly cache accounting, attributed to the consuming session by
+/// the data-plane workers.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AssemblyStats {
+    /// Molecules whose edge list was served from the topology cache.
+    pub edge_hits: u64,
+    /// Molecules whose edge list had to be constructed (cold path).
+    pub edge_misses: u64,
+}
 
 /// Assembles packs into batches for a fixed geometry.
 #[derive(Debug, Clone)]
 pub struct Batcher {
     pub geometry: BatchGeometry,
+    /// Default radius cutoff; sessions may override per assembly
+    /// (`assemble_into_with`), selecting a different cached topology.
     pub r_cut: f32,
 }
 
@@ -27,31 +51,54 @@ impl Batcher {
         Batcher { geometry, r_cut }
     }
 
+    /// The memoized edge topology this batcher's defaults select on
+    /// `prepared` — resolve once per session/caller and reuse across
+    /// assemblies (the lookup takes the prepared source's topology lock).
+    pub fn topology(&self, prepared: &PreparedSource) -> Arc<EdgeTopology> {
+        prepared.topology(self.r_cut, self.geometry.k_max())
+    }
+
     /// Build one `HostBatch` from up to `packs_per_batch` packs. Fewer
     /// packs leave fully padded windows (end of epoch).
-    pub fn assemble(
-        &self,
-        packs: &[Pack],
-        source: &dyn MoleculeSource,
-    ) -> Result<HostBatch> {
+    pub fn assemble(&self, packs: &[Pack], prepared: &PreparedSource) -> Result<HostBatch> {
         // A freshly built buffer is already in the reset state — no
         // second zeroing pass.
         let mut b = HostBatch::empty(&self.geometry);
-        self.fill_packs(&mut b, packs, source)?;
+        let topo = self.topology(prepared);
+        self.fill_packs(&mut b, packs, prepared, &topo)?;
         Ok(b)
     }
 
-    /// Assemble into a recycled buffer: reset it in place, then fill. This
-    /// is the data-plane hot path — zero allocation once the buffer pool
-    /// is warm (the reset is a `fill`, not a reallocation).
+    /// Assemble into a recycled buffer: reset it in place (dirty region
+    /// only), then fill, resolving the default edge topology per call.
+    /// Hot-path callers (the data-plane workers) use
+    /// [`assemble_into_with`](Batcher::assemble_into_with) with a
+    /// session-held topology instead, keeping the topology lookup — and
+    /// its lock — off the per-batch path entirely.
     pub fn assemble_into(
         &self,
         b: &mut HostBatch,
         packs: &[Pack],
-        source: &dyn MoleculeSource,
-    ) -> Result<()> {
+        prepared: &PreparedSource,
+    ) -> Result<AssemblyStats> {
+        let topo = self.topology(prepared);
+        self.assemble_into_with(b, packs, prepared, &topo)
+    }
+
+    /// `assemble_into` with a pre-resolved edge topology (a per-session
+    /// cutoff override resolves a different topology, so sessions with
+    /// different cutoffs coexist on one prepared source without
+    /// cross-talk). `topo` must come from `prepared`'s own cache — this
+    /// is the zero-lock, zero-allocation steady-state path.
+    pub fn assemble_into_with(
+        &self,
+        b: &mut HostBatch,
+        packs: &[Pack],
+        prepared: &PreparedSource,
+        topo: &EdgeTopology,
+    ) -> Result<AssemblyStats> {
         b.reset(&self.geometry);
-        self.fill_packs(b, packs, source)
+        self.fill_packs(b, packs, prepared, topo)
     }
 
     /// Fill a buffer that is already in the all-padding state.
@@ -59,26 +106,40 @@ impl Batcher {
         &self,
         b: &mut HostBatch,
         packs: &[Pack],
-        source: &dyn MoleculeSource,
-    ) -> Result<()> {
+        prepared: &PreparedSource,
+        topo: &EdgeTopology,
+    ) -> Result<AssemblyStats> {
         let g = self.geometry;
         if packs.len() > g.packs_per_batch {
             bail!("{} packs exceed batch capacity {}", packs.len(), g.packs_per_batch);
         }
+        let mut stats = AssemblyStats::default();
         for (pi, pack) in packs.iter().enumerate() {
-            self.fill_pack(b, pi, pack, source)?;
+            if let Err(e) = self.fill_pack(b, pi, pack, prepared, topo, &mut stats) {
+                // A failed fill may have written tensor data it never got
+                // to mark (marks land at the end of each pack window).
+                // Poison the whole geometry dirty so the buffer's next
+                // reset provably clears the partial writes — error
+                // assemblies are rare, so one full clear is cheap.
+                b.mark_dirty(g.n_nodes, g.n_edges, g.n_graphs);
+                return Err(e);
+            }
         }
         debug_assert!(b.validate(&g).is_ok());
-        Ok(())
+        Ok(stats)
     }
 
-    /// Place one pack into window `pi` of the batch.
+    /// Place one pack into window `pi` of the batch: bulk-copy each
+    /// molecule's arena spans, rebase its cached edge list onto the pack
+    /// window, and record the dirty extent.
     fn fill_pack(
         &self,
         b: &mut HostBatch,
         pi: usize,
         pack: &Pack,
-        source: &dyn MoleculeSource,
+        prepared: &PreparedSource,
+        topo: &EdgeTopology,
+        stats: &mut AssemblyStats,
     ) -> Result<()> {
         let g = self.geometry;
         let n0 = pi * g.nodes_per_pack;
@@ -98,17 +159,24 @@ impl Batcher {
         let mut node_cursor = n0;
         let mut edge_cursor = e0;
         for (slot, &item) in pack.items.iter().enumerate() {
-            let mol: Molecule = source.get(item as usize);
+            let mol = prepared.molecule(item as usize);
+            let n = mol.n_atoms();
             let base = node_cursor;
-            for a in 0..mol.n_atoms() {
-                b.z[base + a] = mol.z[a] as i32;
-                b.pos[(base + a) * 3..(base + a) * 3 + 3].copy_from_slice(&mol.pos[a]);
-                b.graph_id[base + a] = (g0 + slot) as i32;
-                b.node_mask[base + a] = 1.0;
+            if base + n > n0 + g.nodes_per_pack {
+                bail!("graph {item} overflows pack node window ({n} atoms at {base})");
             }
-            node_cursor += mol.n_atoms();
+            b.z[base..base + n].copy_from_slice(mol.z);
+            b.pos[base * 3..(base + n) * 3].copy_from_slice(mol.pos);
+            b.graph_id[base..base + n].fill((g0 + slot) as i32);
+            b.node_mask[base..base + n].fill(1.0);
+            node_cursor += n;
 
-            let edges = knn_edges(&mol, self.r_cut, g.k_max());
+            let (edges, hit) = prepared.edges(topo, item as usize);
+            if hit {
+                stats.edge_hits += 1;
+            } else {
+                stats.edge_misses += 1;
+            }
             let budget_left = e0 + g.edges_per_pack - edge_cursor;
             if edges.len() > budget_left {
                 bail!(
@@ -116,25 +184,28 @@ impl Batcher {
                     edges.len()
                 );
             }
+            let base32 = base as i32;
             for (s, d) in edges.src.iter().zip(&edges.dst) {
-                b.src[edge_cursor] = (base + *s as usize) as i32;
-                b.dst[edge_cursor] = (base + *d as usize) as i32;
-                b.edge_mask[edge_cursor] = 1.0;
+                b.src[edge_cursor] = base32 + *s as i32;
+                b.dst[edge_cursor] = base32 + *d as i32;
                 edge_cursor += 1;
             }
+            b.edge_mask[edge_cursor - edges.len()..edge_cursor].fill(1.0);
 
             b.target[g0 + slot] = mol.energy;
             b.graph_mask[g0 + slot] = 1.0;
-            b.add_real_counts(mol.n_atoms(), edges.len(), 1);
+            b.add_real_counts(n, edges.len(), 1);
         }
 
         // Padding: route leftover edge slots to the pack's dump node (the
         // first padded node slot, or the last node of the pack when full).
         let dump = node_cursor.min(n0 + g.nodes_per_pack - 1) as i32;
-        for e in edge_cursor..e0 + g.edges_per_pack {
-            b.src[e] = dump;
-            b.dst[e] = dump;
-        }
+        let pack_edge_end = e0 + g.edges_per_pack;
+        b.src[edge_cursor..pack_edge_end].fill(dump);
+        b.dst[edge_cursor..pack_edge_end].fill(dump);
+        // Dirty extent of this window: real node prefix, the full edge
+        // window (dump self-loops above), and the real graph slots.
+        b.mark_dirty(node_cursor, pack_edge_end, g0 + pack.items.len());
         Ok(())
     }
 }
@@ -142,8 +213,9 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::datasets::HydroNet;
+    use crate::datasets::{HydroNet, MoleculeSource, PreparedSource};
     use crate::packing::{lpfhp, Packing};
+    use crate::util::proptest::check;
 
     fn geometry() -> BatchGeometry {
         BatchGeometry {
@@ -157,7 +229,7 @@ mod tests {
         }
     }
 
-    fn packed(ds: &HydroNet, n: usize) -> Packing {
+    fn packed(ds: &dyn MoleculeSource, n: usize) -> Packing {
         let sizes: Vec<usize> = (0..n).map(|i| ds.n_atoms(i)).collect();
         lpfhp(&sizes, 96, Some(4))
     }
@@ -166,8 +238,9 @@ mod tests {
     fn assembled_batch_is_valid_and_masks_consistent() {
         let ds = HydroNet::new(20, 3);
         let packing = packed(&ds, 20);
+        let prep = PreparedSource::wrap(ds);
         let batcher = Batcher::new(geometry(), 6.0);
-        let b = batcher.assemble(&packing.packs[0..2], &ds).unwrap();
+        let b = batcher.assemble(&packing.packs[0..2], &prep).unwrap();
         b.validate(&geometry()).unwrap();
         // real node count matches the packs' used nodes
         let want: usize = packing.packs[0..2].iter().map(|p| p.used_nodes).sum();
@@ -183,8 +256,9 @@ mod tests {
     fn graph_ids_partition_nodes_by_molecule() {
         let ds = HydroNet::new(20, 5);
         let packing = packed(&ds, 20);
+        let prep = PreparedSource::wrap(ds.clone());
         let batcher = Batcher::new(geometry(), 6.0);
-        let b = batcher.assemble(&packing.packs[0..1], &ds).unwrap();
+        let b = batcher.assemble(&packing.packs[0..1], &prep).unwrap();
         // each real graph id's node count equals its molecule's atom count
         for (slot, &item) in packing.packs[0].items.iter().enumerate() {
             let gid = slot as i32;
@@ -202,8 +276,9 @@ mod tests {
     fn targets_match_molecule_energies() {
         let ds = HydroNet::new(10, 7);
         let packing = packed(&ds, 10);
+        let prep = PreparedSource::wrap(ds.clone());
         let batcher = Batcher::new(geometry(), 6.0);
-        let b = batcher.assemble(&packing.packs[0..1], &ds).unwrap();
+        let b = batcher.assemble(&packing.packs[0..1], &prep).unwrap();
         for (slot, &item) in packing.packs[0].items.iter().enumerate() {
             assert_eq!(b.target[slot], ds.get(item as usize).energy);
             assert_eq!(b.graph_mask[slot], 1.0);
@@ -214,8 +289,9 @@ mod tests {
     fn partial_batch_leaves_padded_window() {
         let ds = HydroNet::new(10, 9);
         let packing = packed(&ds, 10);
+        let prep = PreparedSource::wrap(ds);
         let batcher = Batcher::new(geometry(), 6.0);
-        let b = batcher.assemble(&packing.packs[0..1], &ds).unwrap();
+        let b = batcher.assemble(&packing.packs[0..1], &prep).unwrap();
         b.validate(&geometry()).unwrap();
         // second window entirely padding
         let g = geometry();
@@ -227,9 +303,10 @@ mod tests {
     fn rejects_oversized_pack_lists() {
         let ds = HydroNet::new(30, 1);
         let packing = packed(&ds, 30);
+        let prep = PreparedSource::wrap(ds);
         let batcher = Batcher::new(geometry(), 6.0);
         if packing.packs.len() >= 3 {
-            assert!(batcher.assemble(&packing.packs[0..3], &ds).is_err());
+            assert!(batcher.assemble(&packing.packs[0..3], &prep).is_err());
         }
     }
 
@@ -237,13 +314,116 @@ mod tests {
     fn edges_stay_within_pack_windows() {
         let ds = HydroNet::new(20, 11);
         let packing = packed(&ds, 20);
+        let prep = PreparedSource::wrap(ds);
         let batcher = Batcher::new(geometry(), 6.0);
-        let b = batcher.assemble(&packing.packs[0..2], &ds).unwrap();
+        let b = batcher.assemble(&packing.packs[0..2], &prep).unwrap();
         let npp = geometry().nodes_per_pack as i32;
         for (e, (&s, &d)) in b.src.iter().zip(&b.dst).enumerate() {
             if b.edge_mask[e] == 1.0 {
                 assert_eq!(s / npp, d / npp, "edge {e} crosses packs");
             }
+        }
+    }
+
+    #[test]
+    fn second_assembly_is_bitwise_identical_and_fully_cached() {
+        // The epoch-invariance contract at the batcher level: assembling
+        // the same packs twice from one prepared source yields identical
+        // tensors, and the second pass is all cache hits.
+        let ds = HydroNet::new(20, 13);
+        let packing = packed(&ds, 20);
+        let prep = PreparedSource::wrap(ds);
+        let batcher = Batcher::new(geometry(), 6.0);
+        let cold = batcher.assemble(&packing.packs[0..2], &prep).unwrap();
+        let mut warm = HostBatch::empty(&geometry());
+        let stats = batcher.assemble_into(&mut warm, &packing.packs[0..2], &prep).unwrap();
+        assert_eq!(stats.edge_misses, 0, "warm assembly recomputed edges");
+        assert!(stats.edge_hits > 0);
+        assert_eq!(cold.z, warm.z);
+        assert_eq!(cold.pos, warm.pos);
+        assert_eq!(cold.src, warm.src);
+        assert_eq!(cold.dst, warm.dst);
+        assert_eq!(cold.edge_mask, warm.edge_mask);
+        assert_eq!(cold.graph_id, warm.graph_id);
+        assert_eq!(cold.node_mask, warm.node_mask);
+        assert_eq!(cold.target, warm.target);
+        assert_eq!(cold.graph_mask, warm.graph_mask);
+    }
+
+    #[test]
+    fn dirty_region_reset_equals_full_reset_for_arbitrary_fills() {
+        // Property: after any sequence of real assemblies into one
+        // recycled buffer, a (dirty-region) reset leaves the buffer
+        // indistinguishable from a freshly built empty batch.
+        let g = geometry();
+        check(30, |rng| {
+            let n = rng.range(1, 41);
+            let ds = HydroNet::new(n, rng.next_u64());
+            let packing = packed(&ds, n);
+            let prep = PreparedSource::wrap(ds);
+            let batcher = Batcher::new(g, 6.0);
+            let mut b = HostBatch::empty(&g);
+            for _ in 0..rng.range(1, 4) {
+                let hi = packing.packs.len().min(g.packs_per_batch);
+                let take = rng.range(0, hi + 1);
+                batcher.assemble_into(&mut b, &packing.packs[0..take], &prep).unwrap();
+            }
+            b.reset(&g);
+            let want = HostBatch::empty(&g);
+            assert_eq!(b.z, want.z);
+            assert_eq!(b.pos, want.pos);
+            assert_eq!(b.src, want.src);
+            assert_eq!(b.dst, want.dst);
+            assert_eq!(b.edge_mask, want.edge_mask);
+            assert_eq!(b.graph_id, want.graph_id);
+            assert_eq!(b.node_mask, want.node_mask);
+            assert_eq!(b.target, want.target);
+            assert_eq!(b.graph_mask, want.graph_mask);
+            assert_eq!(b.real_nodes() + b.real_edges() + b.real_graphs(), 0);
+            b.validate(&g).unwrap();
+        });
+    }
+
+    #[test]
+    fn failed_fill_poisons_dirty_marks_so_reset_fully_clears() {
+        // A fill that bails mid-pack has written tensor data it never
+        // marked; the poisoned marks must make the next reset clear it
+        // all (otherwise stale data leaks into the next recycled batch).
+        let ds = HydroNet::new(50, 19);
+        // a lying pack: two big molecules overflow the 96-node window
+        // even though `used_nodes` claims otherwise
+        let big: Vec<u32> = (0..50u32).filter(|&i| ds.n_atoms(i as usize) >= 60).take(2).collect();
+        assert_eq!(big.len(), 2, "seed must yield two large clusters");
+        let prep = PreparedSource::wrap(ds);
+        let batcher = Batcher::new(geometry(), 6.0);
+        let lying = Pack { items: big, used_nodes: 1 };
+        let mut b = HostBatch::empty(&geometry());
+        assert!(batcher.assemble_into(&mut b, std::slice::from_ref(&lying), &prep).is_err());
+        b.reset(&geometry());
+        let want = HostBatch::empty(&geometry());
+        assert_eq!(b.z, want.z);
+        assert_eq!(b.pos, want.pos);
+        assert_eq!(b.node_mask, want.node_mask);
+        assert_eq!(b.graph_id, want.graph_id);
+        assert_eq!(b.target, want.target);
+        assert_eq!(b.graph_mask, want.graph_mask);
+        b.validate(&geometry()).unwrap();
+    }
+
+    #[test]
+    fn steady_state_assembly_avoids_full_geometry_clears() {
+        // Warm recycling must take the dirty-reset path on every cycle
+        // (the acceptance counter for "no full-geometry memset").
+        let ds = HydroNet::new(20, 17);
+        let packing = packed(&ds, 20);
+        let prep = PreparedSource::wrap(ds);
+        let batcher = Batcher::new(geometry(), 6.0);
+        let mut b = HostBatch::empty(&geometry());
+        for i in 0..5u64 {
+            // one pack: the second window is provably untouched, so a
+            // full-geometry clear can never be the minimal reset here
+            batcher.assemble_into(&mut b, &packing.packs[0..1], &prep).unwrap();
+            assert_eq!(b.dirty_resets, i + 1, "reset {i} fell back to a full clear");
         }
     }
 }

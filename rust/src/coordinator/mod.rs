@@ -16,7 +16,7 @@ pub mod pipeline;
 pub mod replicas;
 pub mod session;
 
-pub use batcher::Batcher;
+pub use batcher::{AssemblyStats, Batcher};
 pub use dataplane::{
     BatchLease, BatchStream, BufferPool, DataPlane, EpochBatches, PipelineConfig, Session,
 };

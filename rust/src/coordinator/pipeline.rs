@@ -86,7 +86,10 @@ impl Iterator for EpochStream {
 /// Stream one epoch over `source` (compatibility wrapper): builds a
 /// fresh single-use `DataPlane` and one Training-class session on it.
 /// Training should construct the plane once and open a session
-/// (`JobSpec::training(epoch)`) per epoch instead.
+/// (`JobSpec::training(epoch)`) per epoch instead — besides keeping the
+/// worker and buffer pools warm, a persistent plane keeps the
+/// epoch-invariant prepared source (molecule arena + edge cache) warm,
+/// which this single-use wrapper rebuilds cold on every call.
 pub fn stream_epoch<S: MoleculeSource + 'static>(
     source: Arc<S>,
     batcher: Batcher,

@@ -141,9 +141,10 @@ mod tests {
         let ds = HydroNet::new(n * 12, seed);
         let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
         let plan = plan_epoch(&ds, &batcher, &PipelineConfig::default(), 0);
+        let prep = crate::datasets::PreparedSource::wrap(ds);
         plan.iter()
             .take(n)
-            .map(|p| batcher.assemble(p, &ds).unwrap())
+            .map(|p| batcher.assemble(p, &prep).unwrap())
             .collect()
     }
 

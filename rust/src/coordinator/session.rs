@@ -16,7 +16,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::datasets::MoleculeSource;
+use crate::datasets::{EdgeTopology, MoleculeSource, PreparedSource};
 use crate::packing::Packer;
 
 /// Quality-of-service class of a session: the dispatcher shares workers
@@ -93,6 +93,11 @@ pub struct JobSpec {
     /// is reached, so a stalled consumer idles only its own stream.
     /// `None` = the plane's `prefetch_depth`; clamped to at least 1.
     pub credits: Option<usize>,
+    /// Radius cutoff for this session's edge construction; `None` = the
+    /// plane batcher's default. The cutoff keys the plane's shared
+    /// edge-topology cache, so sessions with different cutoffs coexist
+    /// without cross-contaminating each other's cached edges.
+    pub r_cut: Option<f32>,
 }
 
 impl JobSpec {
@@ -105,6 +110,7 @@ impl JobSpec {
             ordered: None,
             epoch,
             credits: None,
+            r_cut: None,
         }
     }
 
@@ -158,6 +164,11 @@ impl JobSpec {
         self.credits = Some(credits);
         self
     }
+
+    pub fn with_r_cut(mut self, r_cut: f32) -> JobSpec {
+        self.r_cut = Some(r_cut);
+        self
+    }
 }
 
 impl std::fmt::Debug for JobSpec {
@@ -170,6 +181,7 @@ impl std::fmt::Debug for JobSpec {
             .field("ordered", &self.ordered)
             .field("epoch", &self.epoch)
             .field("credits", &self.credits)
+            .field("r_cut", &self.r_cut)
             .finish()
     }
 }
@@ -190,6 +202,13 @@ pub struct SessionMetrics {
     pub credits_blocked: Duration,
     /// How many times the session hit the credit limit.
     pub credit_stalls: u64,
+    /// Molecules whose edge list was served from the plane's shared
+    /// epoch-invariant cache during this session's assemblies (and the
+    /// misses that had to construct one). A warm steady-state session
+    /// should be all hits — misses mean this session paid cold-cache
+    /// cost some earlier epoch/tenant had not already covered.
+    pub edge_cache_hits: u64,
+    pub edge_cache_misses: u64,
 }
 
 impl SessionMetrics {
@@ -199,6 +218,17 @@ impl SessionMetrics {
             return 0.0;
         }
         self.queue_wait.as_secs_f64() * 1e3 / self.batches as f64
+    }
+
+    /// Edge-cache hit fraction in [0, 1] for this session's assemblies
+    /// (0 when nothing was assembled).
+    pub fn edge_cache_hit_rate(&self) -> f64 {
+        let total = self.edge_cache_hits + self.edge_cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.edge_cache_hits as f64 / total as f64
+        }
     }
 }
 
@@ -217,15 +247,25 @@ pub(crate) struct SessionState {
     /// separate flag on the plane's shared state — workers check both.)
     pub(crate) cancelled: AtomicBool,
     // --- job parameters (what the workers plan/assemble) ---
-    pub(crate) source: Arc<dyn MoleculeSource>,
+    /// Prepared (arena + edge cache) view of the session's dataset —
+    /// shared with every other session on the plane's default source, or
+    /// private when the `JobSpec` brought its own.
+    pub(crate) source: Arc<PreparedSource>,
     pub(crate) packer: Packer,
     pub(crate) shard_size: usize,
+    /// This session's edge topology, resolved once at open time from its
+    /// effective `(r_cut, k_max)` against `source`'s cache — workers use
+    /// it directly, so the topology lookup (and its lock) never sits on
+    /// the per-batch assembly path.
+    pub(crate) topology: Arc<EdgeTopology>,
     // --- metrics ---
     batches: AtomicU64,
     queue_wait_ns: AtomicU64,
     assembly_ns: AtomicU64,
     credits_blocked_ns: AtomicU64,
     credit_stalls: AtomicU64,
+    edge_cache_hits: AtomicU64,
+    edge_cache_misses: AtomicU64,
     /// Per-batch dispatcher queue waits in nanoseconds for percentile
     /// reporting — a ring of the most recent [`WAIT_SAMPLE_CAP`]
     /// dispatches, so a long-lived serving session's memory stays
@@ -259,9 +299,10 @@ impl SessionState {
         id: u64,
         qos: QosClass,
         credits: usize,
-        source: Arc<dyn MoleculeSource>,
+        source: Arc<PreparedSource>,
         packer: Packer,
         shard_size: usize,
+        topology: Arc<EdgeTopology>,
     ) -> SessionState {
         SessionState {
             id,
@@ -272,11 +313,14 @@ impl SessionState {
             source,
             packer,
             shard_size,
+            topology,
             batches: AtomicU64::new(0),
             queue_wait_ns: AtomicU64::new(0),
             assembly_ns: AtomicU64::new(0),
             credits_blocked_ns: AtomicU64::new(0),
             credit_stalls: AtomicU64::new(0),
+            edge_cache_hits: AtomicU64::new(0),
+            edge_cache_misses: AtomicU64::new(0),
             wait_samples: Mutex::new(WaitRing::default()),
         }
     }
@@ -310,6 +354,12 @@ impl SessionState {
         self.batches.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Attribute one assembly's edge-cache traffic to this session.
+    pub(crate) fn record_edge_cache(&self, hits: u64, misses: u64) {
+        self.edge_cache_hits.fetch_add(hits, Ordering::Relaxed);
+        self.edge_cache_misses.fetch_add(misses, Ordering::Relaxed);
+    }
+
     pub(crate) fn metrics(&self) -> SessionMetrics {
         SessionMetrics {
             batches: self.batches.load(Ordering::Relaxed),
@@ -317,6 +367,8 @@ impl SessionState {
             assembly_time: Duration::from_nanos(self.assembly_ns.load(Ordering::Relaxed)),
             credits_blocked: Duration::from_nanos(self.credits_blocked_ns.load(Ordering::Relaxed)),
             credit_stalls: self.credit_stalls.load(Ordering::Relaxed),
+            edge_cache_hits: self.edge_cache_hits.load(Ordering::Relaxed),
+            edge_cache_misses: self.edge_cache_misses.load(Ordering::Relaxed),
         }
     }
 
@@ -356,24 +408,28 @@ mod tests {
         let t = JobSpec::training(7);
         assert_eq!(t.qos, QosClass::Training);
         assert_eq!(t.epoch, Some(7));
-        let s = JobSpec::serving().with_credits(2).with_shard_size(64);
+        let s = JobSpec::serving().with_credits(2).with_shard_size(64).with_r_cut(4.5);
         assert_eq!(s.qos, QosClass::Serving);
         assert_eq!(s.epoch, None, "serving streams in arrival order");
         assert_eq!(s.credits, Some(2));
         assert_eq!(s.shard_size, Some(64));
+        assert_eq!(s.r_cut, Some(4.5));
         let b = JobSpec::background().with_qos(QosClass::Training);
         assert_eq!(b.qos, QosClass::Training);
     }
 
     #[test]
     fn metrics_snapshot_tracks_recorded_counters() {
+        let source = Arc::new(PreparedSource::wrap(HydroNet::new(4, 1)));
+        let topology = source.topology(6.0, 12);
         let st = SessionState::new(
             1,
             QosClass::Serving,
             0, // clamped to 1
-            Arc::new(HydroNet::new(4, 1)),
+            source,
             Packer::Lpfhp,
             8,
+            topology,
         );
         assert_eq!(st.credits, 1);
         let t = Instant::now();
@@ -381,11 +437,15 @@ mod tests {
         st.record_assembly(Duration::from_millis(2));
         st.record_credit_stall_onset();
         st.record_credit_stall_cleared(Duration::from_millis(5));
+        st.record_edge_cache(3, 1);
         let m = st.metrics();
         assert_eq!(m.batches, 1);
         assert!(m.assembly_time >= Duration::from_millis(2));
         assert!(m.credits_blocked >= Duration::from_millis(5));
         assert_eq!(m.credit_stalls, 1);
+        assert_eq!(m.edge_cache_hits, 3);
+        assert_eq!(m.edge_cache_misses, 1);
+        assert!((m.edge_cache_hit_rate() - 0.75).abs() < 1e-12);
         assert_eq!(st.queue_wait_samples_ms().len(), 1);
         assert!(m.mean_queue_wait_ms() >= 0.0);
     }

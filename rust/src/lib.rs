@@ -16,7 +16,11 @@
 //!   class (Serving 6 : Training 3 : Background 1) and every session
 //!   has bounded admission credits, so a slow or abandoned consumer can
 //!   never park the shared pool; buffers recycle zero-allocation
-//!   through `BatchLease`s. *Migration note:* the single-tenant
+//!   through `BatchLease`s with dirty-region resets, and assembly reads
+//!   an epoch-invariant prepared source (`datasets::PreparedSource`: SoA
+//!   molecule arena + memoized edge topologies shared across epochs and
+//!   sessions), so warm-epoch batch prep is memcpy-bound.
+//!   *Migration note:* the single-tenant
 //!   `DataPlane::start_epoch(epoch)` is deprecated for one release —
 //!   replace it with `plane.open_session(JobSpec::training(epoch))`,
 //!   which streams the identical ordered batch sequence and adds

@@ -160,11 +160,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     let records = train(&engine, &mut state, source, &cfg, |e, b, l| {
         println!("  epoch {e} batch {b}: loss {l:.5}");
     })?;
-    println!("\nepoch | mean MSE | graphs/s | plane wait ms");
+    println!("\nepoch | mean MSE | graphs/s | plane wait ms | edge cache hit");
     for r in &records {
         println!(
-            "{:5} | {:8.5} | {:8.1} | {:13.3}",
-            r.epoch, r.mean_loss, r.graphs_per_sec, r.queue_wait_ms
+            "{:5} | {:8.5} | {:8.1} | {:13.3} | {:13.1}%",
+            r.epoch,
+            r.mean_loss,
+            r.graphs_per_sec,
+            r.queue_wait_ms,
+            100.0 * r.edge_cache_hit_rate
         );
     }
     let s = engine.stats();

@@ -7,6 +7,22 @@
 //! the all-padding state in place without touching the heap. The real
 //! node/edge/graph counts are cached at assembly time (`add_real_counts`)
 //! so the hot path never rescans the mask tensors.
+//!
+//! # Dirty-region reset
+//!
+//! `reset` does not memset the whole geometry: writers record per-tensor
+//! high-water marks (`mark_dirty`) while filling, and `reset` clears only
+//! the touched prefix of each tensor — the rest is *provably* still in the
+//! all-padding state from the previous reset. For realistic packings the
+//! node tensors are never fully dirty (pack windows always carry padding
+//! tails), so steady-state recycling avoids a full-geometry memset on
+//! every batch (`dirty_resets` counts how often).
+//!
+//! **Invariant**: any code that writes tensor data directly (instead of
+//! going through the batcher) must either call `mark_dirty` for the ranges
+//! it touched or call `recount()`, which conservatively marks the whole
+//! geometry dirty. A direct write that does neither may survive the next
+//! reset and leak into a recycled batch.
 
 use anyhow::{bail, Result};
 
@@ -29,11 +45,21 @@ pub struct HostBatch {
     n_real_nodes: usize,
     n_real_edges: usize,
     n_real_graphs: usize,
+    /// Dirty high-water marks: everything at-or-beyond these indices is
+    /// still in the all-padding state (module docs).
+    hw_nodes: usize,
+    hw_edges: usize,
+    hw_graphs: usize,
     /// Lifecycle counters for the buffer-recycling invariant: a batch must
     /// be `reset` between consecutive serves. `empty` counts as the first
     /// reset; the data-plane bumps `serves` when it ships a lease.
     pub resets: u64,
     pub serves: u64,
+    /// In-place resets that cleared strictly less than the full geometry —
+    /// the dirty-region win. Steady-state recycling should see this grow
+    /// with `resets` (a full-geometry clear means every tensor was dirty
+    /// to its end, which real packings never produce).
+    pub dirty_resets: u64,
 }
 
 impl HostBatch {
@@ -53,37 +79,62 @@ impl HostBatch {
             n_real_nodes: 0,
             n_real_edges: 0,
             n_real_graphs: 0,
+            hw_nodes: 0,
+            hw_edges: 0,
+            hw_graphs: 0,
             resets: 1,
             serves: 0,
+            dirty_resets: 0,
         }
     }
 
+    /// Record that node slots below `nodes`, edge slots below `edges` and
+    /// graph slots below `graphs` may have been written since the last
+    /// reset. Monotonic (max-merge), so callers mark per pack window.
+    pub fn mark_dirty(&mut self, nodes: usize, edges: usize, graphs: usize) {
+        self.hw_nodes = self.hw_nodes.max(nodes);
+        self.hw_edges = self.hw_edges.max(edges);
+        self.hw_graphs = self.hw_graphs.max(graphs);
+    }
+
     /// Restore the all-padding state *in place* — no allocation as long as
-    /// the buffer already matches the geometry (the recycling fast path).
-    /// A buffer from a different geometry is rebuilt (startup only).
+    /// the buffer already matches the geometry (the recycling fast path),
+    /// and no full-geometry memset: only the dirty prefix recorded by
+    /// `mark_dirty` is cleared. A buffer from a different geometry is
+    /// rebuilt (startup only).
     pub fn reset(&mut self, g: &BatchGeometry) {
         if self.z.len() != g.n_nodes
             || self.src.len() != g.n_edges
             || self.target.len() != g.n_graphs
         {
-            let (resets, serves) = (self.resets, self.serves);
+            let (resets, serves, dirty) = (self.resets, self.serves, self.dirty_resets);
             *self = HostBatch::empty(g);
             self.resets = resets + 1;
             self.serves = serves;
+            self.dirty_resets = dirty;
             return;
         }
-        self.z.fill(0);
-        self.pos.fill(0.0);
-        self.src.fill(0);
-        self.dst.fill(0);
-        self.edge_mask.fill(0.0);
-        self.graph_id.fill((g.n_graphs - 1) as i32);
-        self.node_mask.fill(0.0);
-        self.target.fill(0.0);
-        self.graph_mask.fill(0.0);
+        let n = self.hw_nodes.min(g.n_nodes);
+        let e = self.hw_edges.min(g.n_edges);
+        let gr = self.hw_graphs.min(g.n_graphs);
+        if n + e + gr < g.n_nodes + g.n_edges + g.n_graphs {
+            self.dirty_resets += 1;
+        }
+        self.z[..n].fill(0);
+        self.pos[..n * 3].fill(0.0);
+        self.src[..e].fill(0);
+        self.dst[..e].fill(0);
+        self.edge_mask[..e].fill(0.0);
+        self.graph_id[..n].fill((g.n_graphs - 1) as i32);
+        self.node_mask[..n].fill(0.0);
+        self.target[..gr].fill(0.0);
+        self.graph_mask[..gr].fill(0.0);
         self.n_real_nodes = 0;
         self.n_real_edges = 0;
         self.n_real_graphs = 0;
+        self.hw_nodes = 0;
+        self.hw_edges = 0;
+        self.hw_graphs = 0;
         self.resets += 1;
     }
 
@@ -96,11 +147,16 @@ impl HostBatch {
 
     /// Recompute the cached counts from the mask tensors — for batches
     /// assembled by hand (e.g. the quickstart demo) rather than through
-    /// the batcher.
+    /// the batcher. Hand assembly bypasses `mark_dirty`, so this also
+    /// conservatively marks the full geometry dirty: the next `reset`
+    /// clears everything the writer might have touched.
     pub fn recount(&mut self) {
         self.n_real_nodes = self.node_mask.iter().filter(|&&m| m == 1.0).count();
         self.n_real_edges = self.edge_mask.iter().filter(|&&m| m == 1.0).count();
         self.n_real_graphs = self.graph_mask.iter().filter(|&&m| m == 1.0).count();
+        self.hw_nodes = self.z.len();
+        self.hw_edges = self.src.len();
+        self.hw_graphs = self.target.len();
     }
 
     /// Number of real (unmasked) graphs in the batch. O(1): cached at
@@ -120,6 +176,13 @@ impl HostBatch {
 
     /// Structural validation against the compiled geometry. Called on the
     /// hot path only in debug builds; always by tests.
+    ///
+    /// Invariant note: the cached-count/mask cross-check is O(N+E+G) mask
+    /// scans, so it is compiled only into test and debug builds — release
+    /// hot paths (which call this via `debug_assert!`) must never pay it.
+    /// The counts are maintained exclusively by `add_real_counts` during
+    /// assembly (after a `reset`) and by `recount`, which is what makes
+    /// the O(1) `real_*()` accessors trustworthy in release.
     pub fn validate(&self, g: &BatchGeometry) -> Result<()> {
         if self.z.len() != g.n_nodes
             || self.pos.len() != g.n_nodes * 3
@@ -157,20 +220,24 @@ impl HostBatch {
             }
         }
         // Cached counts must agree with the masks (catches stale buffers
-        // that were recycled without a reset).
-        let nodes = self.node_mask.iter().filter(|&&m| m == 1.0).count();
-        let edges = self.edge_mask.iter().filter(|&&m| m == 1.0).count();
-        let graphs = self.graph_mask.iter().filter(|&&m| m == 1.0).count();
-        if nodes != self.n_real_nodes
-            || edges != self.n_real_edges
-            || graphs != self.n_real_graphs
+        // that were recycled without a reset). Debug/test builds only:
+        // these are the O(N) scans the cached counts exist to avoid.
+        #[cfg(any(test, debug_assertions))]
         {
-            bail!(
-                "cached real counts (n={} e={} g={}) disagree with masks (n={nodes} e={edges} g={graphs})",
-                self.n_real_nodes,
-                self.n_real_edges,
-                self.n_real_graphs
-            );
+            let nodes = self.node_mask.iter().filter(|&&m| m == 1.0).count();
+            let edges = self.edge_mask.iter().filter(|&&m| m == 1.0).count();
+            let graphs = self.graph_mask.iter().filter(|&&m| m == 1.0).count();
+            if nodes != self.n_real_nodes
+                || edges != self.n_real_edges
+                || graphs != self.n_real_graphs
+            {
+                bail!(
+                    "cached real counts (n={} e={} g={}) disagree with masks (n={nodes} e={edges} g={graphs})",
+                    self.n_real_nodes,
+                    self.n_real_edges,
+                    self.n_real_graphs
+                );
+            }
         }
         Ok(())
     }
@@ -190,6 +257,21 @@ mod tests {
             edges_per_pack: 6,
             graphs_per_pack: 2,
         }
+    }
+
+    /// Every observable field equals a freshly built empty batch.
+    fn assert_empty_state(b: &HostBatch, g: &BatchGeometry) {
+        let want = HostBatch::empty(g);
+        assert_eq!(b.z, want.z);
+        assert_eq!(b.pos, want.pos);
+        assert_eq!(b.src, want.src);
+        assert_eq!(b.dst, want.dst);
+        assert_eq!(b.edge_mask, want.edge_mask);
+        assert_eq!(b.graph_id, want.graph_id);
+        assert_eq!(b.node_mask, want.node_mask);
+        assert_eq!(b.target, want.target);
+        assert_eq!(b.graph_mask, want.graph_mask);
+        assert_eq!(b.real_nodes() + b.real_edges() + b.real_graphs(), 0);
     }
 
     #[test]
@@ -257,9 +339,53 @@ mod tests {
         b.reset(&g);
         assert_eq!(b.z.as_ptr(), ptr, "reset must not reallocate");
         b.validate(&g).unwrap();
-        assert_eq!(b.real_nodes() + b.real_edges() + b.real_graphs(), 0);
+        assert_empty_state(&b, &g);
         assert!(b.node_mask.iter().all(|&m| m == 0.0));
         assert_eq!(b.resets, 2);
+        // recount marked the full geometry dirty, so this was a full clear
+        assert_eq!(b.dirty_resets, 0);
+    }
+
+    #[test]
+    fn dirty_region_reset_clears_exactly_the_marked_prefix() {
+        let g = geom();
+        let mut b = HostBatch::empty(&g);
+        // writer touches a prefix of each tensor and marks it dirty (the
+        // batcher contract)
+        b.z[0] = 8;
+        b.pos[2] = 1.5;
+        b.graph_id[0] = 0;
+        b.node_mask[0] = 1.0;
+        b.src[0] = 1;
+        b.dst[0] = 0;
+        b.edge_mask[0] = 1.0;
+        b.target[0] = -2.0;
+        b.graph_mask[0] = 1.0;
+        b.add_real_counts(1, 1, 1);
+        b.mark_dirty(1, 1, 1);
+        b.reset(&g);
+        assert_empty_state(&b, &g);
+        assert_eq!(b.dirty_resets, 1, "partial clear must count as dirty reset");
+        assert_eq!(b.resets, 2);
+        // marks are consumed by reset: the next reset clears nothing new
+        b.reset(&g);
+        assert_eq!(b.dirty_resets, 2);
+        assert_empty_state(&b, &g);
+    }
+
+    #[test]
+    fn unmarked_writes_survive_reset_marked_writes_do_not() {
+        // The invariant the module docs state: direct writes need
+        // mark_dirty (or recount) to be cleared.
+        let g = geom();
+        let mut b = HostBatch::empty(&g);
+        b.z[5] = 7; // beyond any mark
+        b.mark_dirty(1, 0, 0);
+        b.reset(&g);
+        assert_eq!(b.z[5], 7, "unmarked write unexpectedly cleared");
+        b.mark_dirty(6, 0, 0);
+        b.reset(&g);
+        assert_eq!(b.z[5], 0, "marked write must clear");
     }
 
     #[test]

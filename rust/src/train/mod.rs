@@ -39,6 +39,10 @@ pub struct EpochRecord {
     /// means the device (this consumer) was the bottleneck, the healthy
     /// steady state.
     pub credit_stalls: u64,
+    /// Fraction of this epoch's edge lists served from the plane's
+    /// epoch-invariant cache — ~0 on epoch 1 (cold), ~1 from epoch 2 on
+    /// (a low warm-epoch value means the shared cache is not engaging).
+    pub edge_cache_hit_rate: f64,
 }
 
 /// Trainer configuration.
@@ -113,6 +117,7 @@ pub fn train<S: MoleculeSource + 'static>(
             graphs_per_sec: graphs as f64 / secs,
             queue_wait_ms: metrics.mean_queue_wait_ms(),
             credit_stalls: metrics.credit_stalls,
+            edge_cache_hit_rate: metrics.edge_cache_hit_rate(),
         });
     }
     Ok(records)

@@ -5,7 +5,9 @@
 use std::sync::Arc;
 
 use molpack::coordinator::{plan_epoch, Batcher, DataParallel, DataPlane, JobSpec, PipelineConfig};
-use molpack::datasets::{write_store, CachedSource, HydroNet, MoleculeSource, Qm9, Store};
+use molpack::datasets::{
+    write_store, CachedSource, HydroNet, MoleculeSource, PreparedSource, Qm9, Store,
+};
 use molpack::runtime::{checkpoint, Engine};
 use molpack::train::{train, TrainConfig};
 
@@ -111,7 +113,8 @@ fn checkpoint_resume_preserves_predictions() {
     // identical predictions on a fresh batch
     let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
     let plan = plan_epoch(source.as_ref(), &batcher, &PipelineConfig::default(), 1);
-    let batch = batcher.assemble(&plan[0], source.as_ref()).unwrap();
+    let prep = PreparedSource::new(source);
+    let batch = batcher.assemble(&plan[0], &prep).unwrap();
     let a = engine.predict(&state.params, &batch).unwrap();
     let b = engine.predict(&restored_state.params, &batch).unwrap();
     assert_eq!(a, b);
@@ -145,10 +148,11 @@ fn data_parallel_end_to_end() {
     let ds = HydroNet::new(48, 41);
     let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
     let plan = plan_epoch(&ds, &batcher, &PipelineConfig::default(), 0);
+    let prep = PreparedSource::wrap(ds);
     let batches: Vec<_> = plan
         .iter()
         .take(2)
-        .map(|p| batcher.assemble(p, &ds).unwrap())
+        .map(|p| batcher.assemble(p, &prep).unwrap())
         .collect();
     if batches.len() < 2 {
         return;
@@ -244,7 +248,8 @@ fn predict_respects_masks() {
     let ds = HydroNet::new(10, 51);
     let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
     let plan = plan_epoch(&ds, &batcher, &PipelineConfig::default(), 0);
-    let batch = batcher.assemble(&plan[0], &ds).unwrap();
+    let prep = PreparedSource::wrap(ds);
+    let batch = batcher.assemble(&plan[0], &prep).unwrap();
     let state = engine.init_state().unwrap();
     let energies = engine.predict(&state.params, &batch).unwrap();
     assert_eq!(energies.len(), engine.manifest.batch.n_graphs);
