@@ -5,11 +5,16 @@
 #                     `serve`, the examples, and the artifact-gated tests
 #                     (they skip gracefully without it).
 #   make check        the CI gate: formatting, clippy (warnings are
-#                     errors), the test suite, and bench compilation.
+#                     errors), the test suite (including the persistence
+#                     round-trip / stale-cache / truncation tests in
+#                     datasets::persist, datasets::prepared, and
+#                     coordinator::dataplane), and bench compilation.
 #   make test         tests only.
-#   make bench-smoke  the assembly cold-vs-warm section of bench_pipeline
-#                     on a CI-sized dataset; asserts the >= 2x warm-epoch
-#                     bar and writes machine-readable BENCH_assembly.json.
+#   make bench-smoke  CI-sized acceptance sections of bench_pipeline:
+#                     assembly cold-vs-warm (>= 2x warm-epoch bar,
+#                     BENCH_assembly.json) and the fresh-process persist
+#                     section (>= 1.5x warm-from-disk epoch-1 bar,
+#                     bitwise-identical stream, BENCH_persist.json).
 
 .PHONY: check fmt clippy test bench-build bench-smoke artifacts
 
@@ -30,6 +35,7 @@ bench-build:
 
 bench-smoke:
 	cargo bench --bench bench_pipeline -- --assembly-only --graphs 4000 --out BENCH_assembly.json
+	cargo bench --bench bench_pipeline -- --persist-only --graphs 4000 --persist-out BENCH_persist.json
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../rust/artifacts

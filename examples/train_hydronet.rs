@@ -7,8 +7,12 @@
 //! metrics. Recorded in EXPERIMENTS.md.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example train_hydronet -- [graphs] [epochs]
+//! make artifacts && cargo run --release --example train_hydronet -- [graphs] [epochs] [cache_dir]
 //! ```
+//!
+//! With a `cache_dir`, the first run persists the prepared cache
+//! (molecule arena + edge topology) on exit and every later run starts
+//! epoch 1 warm from disk — the fresh-process cold epoch disappears.
 
 use std::sync::Arc;
 
@@ -24,6 +28,7 @@ fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let graphs: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(1500);
     let epochs: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let cache_dir = args.get(2).map(std::path::PathBuf::from);
 
     let engine = Engine::load("artifacts")?;
     let g = engine.manifest.batch;
@@ -48,6 +53,10 @@ fn main() -> Result<()> {
             // plan incrementally: first batch ready after packing 512
             // graphs, not the whole corpus
             shard_size: 512,
+            // persist/restore the prepared cache so re-runs skip the
+            // cold epoch entirely
+            cache_dir,
+            ..Default::default()
         },
         max_batches_per_epoch: 0,
         log_every: 0,

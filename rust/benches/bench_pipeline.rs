@@ -17,17 +17,24 @@
 //!   plane, with the epoch-invariant prepared source (SoA arena + edge
 //!   cache) warm on the second pass — asserted ≥ 2× throughput,
 //!   bitwise-identical stream, zero warm misses — written as
-//!   machine-readable `BENCH_assembly.json` for the perf trajectory.
+//!   machine-readable `BENCH_assembly.json` for the perf trajectory;
+//! * persistence (ISSUE 5): cold epoch 1 on a fresh plane vs epoch 1 on
+//!   a *second* fresh plane that restores the persisted prepared cache
+//!   from disk (two independent planes share no in-memory state — the
+//!   fresh-process proxy) — asserted ≥ 1.5× epoch-1 speedup,
+//!   bitwise-identical stream, zero molecule/edge recomputation —
+//!   written as `BENCH_persist.json`.
 //!
-//! Flags (after `--`): `--assembly-only` runs just the assembly section
-//! (the `make bench-smoke` CI entry point); `--graphs N` sizes its
-//! dataset; `--out PATH` moves the JSON (default `BENCH_assembly.json`).
+//! Flags (after `--`): `--assembly-only` / `--persist-only` run a single
+//! section (the `make bench-smoke` CI entry points); `--graphs N` sizes
+//! their dataset; `--out PATH` / `--persist-out PATH` move the JSON
+//! (defaults `BENCH_assembly.json` / `BENCH_persist.json`).
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use molpack::coordinator::{stream_epoch, Batcher, DataPlane, JobSpec, PipelineConfig};
-use molpack::datasets::HydroNet;
+use molpack::datasets::{HydroNet, CACHE_FILE};
 use molpack::runtime::{BatchGeometry, HostBatch};
 use molpack::util::stats::summarize;
 
@@ -197,6 +204,101 @@ fn assembly_cold_vs_warm(n: usize, workers: usize, out: &str) {
     println!("  wrote {out}");
 }
 
+/// Persistence: fresh-process epoch 1, cold vs warm-from-disk (ISSUE 5
+/// acceptance). Plane A pays the cold epoch and persists the prepared
+/// cache; plane B — constructed from scratch, sharing no in-memory state
+/// with A, the in-harness proxy for a fresh `serve`/`train` process —
+/// restores it from disk and replays the same epoch. Asserts ≥ 1.5×
+/// epoch-1 speedup, a bitwise-identical batch stream, and zero
+/// recomputation; writes `BENCH_persist.json`.
+fn persist_cold_vs_warm(n: usize, workers: usize, out: &str) {
+    println!("persist: fresh-process epoch 1, cold vs warm-from-disk — {n} graphs, {workers} workers:");
+    let dir = std::env::temp_dir().join(format!("molpack-bench-persist-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("creating bench cache dir");
+    std::fs::remove_file(dir.join(CACHE_FILE)).ok(); // always start cold
+    let mk_plane = || {
+        DataPlane::new(
+            Arc::new(HydroNet::with_max_molecules(n, 1, 25)),
+            Batcher::new(geometry(), 6.0),
+            PipelineConfig {
+                workers,
+                shard_size: 2048,
+                cache_dir: Some(dir.clone()),
+                ..Default::default()
+            },
+        )
+    };
+
+    let cold_plane = mk_plane();
+    assert!(
+        !cold_plane.prepared_stats().loaded_from_disk,
+        "cold plane unexpectedly found a cache"
+    );
+    let (cold_secs, cold_graphs, cold_prints) = epoch_pass(&cold_plane, 0);
+    let t0 = Instant::now();
+    let persist_bytes = cold_plane
+        .save_prepared()
+        .expect("persisting prepared cache")
+        .expect("cache_dir is configured");
+    let save_secs = t0.elapsed().as_secs_f64();
+    drop(cold_plane);
+
+    let t0 = Instant::now();
+    let warm_plane = mk_plane();
+    let load_secs = t0.elapsed().as_secs_f64();
+    let loaded = warm_plane.prepared_stats();
+    assert!(loaded.loaded_from_disk, "fresh plane failed to restore the disk cache");
+    let (warm_secs, warm_graphs, warm_prints) = epoch_pass(&warm_plane, 0);
+    let warm_stats = warm_plane.prepared_stats();
+
+    assert_eq!(cold_graphs, n, "cold epoch lost graphs");
+    assert_eq!(warm_graphs, n, "warm epoch lost graphs");
+    assert_eq!(
+        cold_prints, warm_prints,
+        "warm-from-disk stream is not bitwise-identical to cold"
+    );
+    assert_eq!(warm_stats.edge_misses, 0, "warm-from-disk epoch recomputed edge lists");
+    assert_eq!(warm_stats.molecule_misses, 0, "warm-from-disk epoch materialized molecules");
+    let speedup = cold_secs / warm_secs;
+    let cold_gps = cold_graphs as f64 / cold_secs;
+    let warm_gps = warm_graphs as f64 / warm_secs;
+    println!("  cold epoch 1 (no cache):  {cold_secs:>7.3}s  {cold_gps:>9.0} graphs/s");
+    println!("  warm epoch 1 (from disk): {warm_secs:>7.3}s  {warm_gps:>9.0} graphs/s");
+    println!(
+        "  speedup {speedup:.2}x | cache file {:.1} MB (save {save_secs:.2}s, load+fingerprint {load_secs:.3}s)",
+        persist_bytes as f64 / 1e6,
+    );
+    assert!(
+        speedup >= 1.5,
+        "warm-from-disk epoch 1 must be >= 1.5x cold ({speedup:.2}x)"
+    );
+
+    let fields = [
+        "  \"bench\": \"persist_cold_vs_warm\"".to_string(),
+        "  \"dataset\": \"synthetic-500K-subset\"".to_string(),
+        format!("  \"graphs\": {n}"),
+        format!("  \"workers\": {workers}"),
+        format!("  \"cold_epoch1_secs\": {cold_secs:.6}"),
+        format!("  \"warm_epoch1_secs\": {warm_secs:.6}"),
+        format!("  \"cold_graphs_per_sec\": {cold_gps:.1}"),
+        format!("  \"warm_graphs_per_sec\": {warm_gps:.1}"),
+        format!("  \"speedup\": {speedup:.3}"),
+        "  \"bitwise_identical\": true".to_string(),
+        format!("  \"cache_file_bytes\": {persist_bytes}"),
+        format!("  \"save_secs\": {save_secs:.6}"),
+        format!("  \"load_secs\": {load_secs:.6}"),
+        format!("  \"warm_edge_misses\": {}", warm_stats.edge_misses),
+        format!("  \"warm_molecule_misses\": {}", warm_stats.molecule_misses),
+        format!("  \"arena_bytes\": {}", warm_stats.arena_bytes),
+        format!("  \"edge_cache_bytes\": {}", warm_stats.edge_bytes),
+    ];
+    let json = format!("{{\n{}\n}}\n", fields.join(",\n"));
+    std::fs::write(out, json).expect("writing persist bench JSON");
+    println!("  wrote {out}");
+    drop(warm_plane);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let flag_val = |key: &str| {
@@ -206,6 +308,8 @@ fn main() {
             .cloned()
     };
     let out = flag_val("--out").unwrap_or_else(|| "BENCH_assembly.json".to_string());
+    let persist_out =
+        flag_val("--persist-out").unwrap_or_else(|| "BENCH_persist.json".to_string());
     let assembly_graphs: usize = flag_val("--graphs")
         .map(|v| v.parse().expect("--graphs takes an integer"))
         .unwrap_or(20_000);
@@ -214,6 +318,13 @@ fn main() {
         // acceptance section on a CI-sized dataset.
         assembly_cold_vs_warm(assembly_graphs, 4, &out);
         println!("\nbench_pipeline assembly smoke OK");
+        return;
+    }
+    if args.iter().any(|a| a == "--persist-only") {
+        // CI smoke entry point (`make bench-smoke`): just the ISSUE 5
+        // fresh-process persistence section on a CI-sized dataset.
+        persist_cold_vs_warm(assembly_graphs, 4, &persist_out);
+        println!("\nbench_pipeline persist smoke OK");
         return;
     }
 
@@ -309,6 +420,12 @@ fn main() {
     // recomputation). Emits BENCH_assembly.json.
     println!();
     assembly_cold_vs_warm(assembly_graphs, 4, &out);
+
+    // (e) persistent prepared cache: fresh-process epoch 1, cold vs
+    // warm-from-disk (ISSUE 5 acceptance: >= 1.5x, bitwise-identical,
+    // zero recomputation). Emits BENCH_persist.json.
+    println!();
+    persist_cold_vs_warm(assembly_graphs, 4, &persist_out);
 
     println!("\nbench_pipeline OK");
 }

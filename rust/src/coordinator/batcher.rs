@@ -4,11 +4,14 @@
 //! The assembler consumes a [`PreparedSource`] — the epoch-invariant SoA
 //! arena + memoized edge topology (`datasets::prepared`) — so the
 //! steady-state (warm-cache) path is memcpy-bound: per molecule it is a
-//! handful of bulk `copy_from_slice`/`fill` spans plus an offset-rebased
-//! copy of the cached edge list, with zero heap allocation and no
-//! per-atom scalar writes. Molecule materialization and `knn_edges`
-//! construction happen at most once per molecule for the lifetime of the
-//! prepared source, not once per epoch per session.
+//! handful of bulk `copy_from_slice`/`fill` spans (plus one unit-stride
+//! widening pass for `z`, which the arena stores at source `u8` width)
+//! and an offset-rebased copy of the cached edge list, with zero heap
+//! allocation. Molecule materialization and `knn_edges` construction
+//! happen at most once per molecule for the lifetime of the prepared
+//! source — and, when the plane is given a `cache_dir`, at most once per
+//! *dataset*: a fresh process restores the whole prepared cache from
+//! disk.
 //!
 //! Each pack occupies a fixed node/edge/graph-slot window; edges are built
 //! per molecule (KNN within the radius cutoff, capped by the compiled
@@ -165,7 +168,14 @@ impl Batcher {
             if base + n > n0 + g.nodes_per_pack {
                 bail!("graph {item} overflows pack node window ({n} atoms at {base})");
             }
-            b.z[base..base + n].copy_from_slice(mol.z);
+            // `z` lives in the arena at source width (`u8`, 4× smaller
+            // arena and cache files); widen to the batch dtype in the
+            // copy itself — a branch-free unit-stride loop the compiler
+            // vectorizes, same cost class as the straight memcpy it
+            // replaces.
+            for (out, &zi) in b.z[base..base + n].iter_mut().zip(mol.z) {
+                *out = zi as i32;
+            }
             b.pos[base * 3..(base + n) * 3].copy_from_slice(mol.pos);
             b.graph_id[base..base + n].fill((g0 + slot) as i32);
             b.node_mask[base..base + n].fill(1.0);

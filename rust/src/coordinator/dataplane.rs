@@ -4,9 +4,10 @@
 //! One `DataPlane` owns a worker pool for the life of the process and
 //! serves *sessions*: independent tenants — training epochs, serving
 //! request queues, background sweeps — opened with
-//! [`DataPlane::open_session`] and a [`JobSpec`]. The redesign replaces
-//! the single-tenant `start_epoch` API (kept as a deprecated wrapper for
-//! one release) with three mechanisms:
+//! [`DataPlane::open_session`] and a [`JobSpec`]. The redesign replaced
+//! the single-tenant `start_epoch` API (whose deprecated wrapper has
+//! since been removed after its one promised release) with three
+//! mechanisms:
 //!
 //! * **Per-session admission control** — each session holds a bounded
 //!   number of *credits* (batches materialized but not yet consumed).
@@ -18,7 +19,8 @@
 //!   prefetch channel — is structurally impossible.)
 //! * **Weighted QoS dispatch** — the job queue is a set of per-session
 //!   FIFOs grouped into three [`QosClass`] lanes, scheduled by smooth
-//!   weighted round-robin (Serving 6 : Training 3 : Background 1) with
+//!   weighted round-robin (default Serving 6 : Training 3 : Background
+//!   1, configurable per plane via `PipelineConfig::qos_weights`) with
 //!   plain round-robin between sessions of one class. Serving latency is
 //!   protected while training is mid-epoch and no class can starve.
 //! * **Per-session metrics** — `queue_wait` (dispatcher latency per
@@ -44,10 +46,16 @@
 //! arena and edge lists memoized per `(r_cut, k_max)`, shared by every
 //! session on the default dataset — so a warm (epoch ≥ 2) assembly is a
 //! memcpy-bound fill into a dirty-region-reset buffer, with zero heap
-//! allocation and no full-geometry memset. Cache counters surface via
-//! [`DataPlane::prepared_stats`] and per-session metrics.
+//! allocation and no full-geometry memset. With a
+//! `PipelineConfig::cache_dir` the prepared source also persists
+//! *across processes* (`datasets::persist`): construction restores a
+//! fingerprint-matched cache from disk so even epoch 1 of a fresh
+//! process is warm, and [`DataPlane::save_prepared`] writes one back.
+//! Cache counters surface via [`DataPlane::prepared_stats`] and
+//! per-session metrics.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
@@ -56,8 +64,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::batcher::Batcher;
-use crate::coordinator::session::{JobSpec, QosClass, SessionMetrics, SessionState};
-use crate::datasets::{MoleculeSource, PreparedSource, PreparedStats};
+use crate::coordinator::session::{JobSpec, QosClass, QosWeights, SessionMetrics, SessionState};
+use crate::datasets::{MoleculeSource, PreparedSource, PreparedStats, CACHE_FILE};
 use crate::packing::{effective_shard, pack_shard, Pack, Packer};
 use crate::runtime::{BatchGeometry, HostBatch};
 use crate::util::Rng;
@@ -83,6 +91,25 @@ pub struct PipelineConfig {
     /// latency is O(shard_size), not O(dataset). 0 = plan the whole
     /// stream eagerly in one shard.
     pub shard_size: usize,
+    /// Smooth-WRR dispatch weights for the three QoS lanes (default
+    /// Serving 6 : Training 3 : Background 1). Validated at plane
+    /// construction — a zero weight would silently starve its class.
+    pub qos_weights: QosWeights,
+    /// Directory holding the persistent prepared-dataset cache
+    /// (`datasets::persist::CACHE_FILE`). When set, the plane loads a
+    /// matching cache at construction — epoch 1 of a fresh process then
+    /// streams fully warm, with zero molecule materialization or edge
+    /// construction — and [`DataPlane::save_prepared`] writes one back.
+    /// A missing, stale (source fingerprint mismatch), truncated, or
+    /// corrupt file silently falls back to the cold path. Caveat on the
+    /// staleness check: the fingerprint *samples* the source (count +
+    /// ~72 probed records — `datasets::persist` docs), which catches
+    /// regeneration, reseeding, and resizing but not an in-place edit
+    /// confined to unprobed records with count and probes unchanged;
+    /// sources are required to be immutable for the prepared source's
+    /// in-memory cache to be sound in the first place, and the same
+    /// contract extends to the disk cache.
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl Default for PipelineConfig {
@@ -94,6 +121,8 @@ impl Default for PipelineConfig {
             shuffle_seed: 0,
             ordered: true,
             shard_size: 2048,
+            qos_weights: QosWeights::default(),
+            cache_dir: None,
         }
     }
 }
@@ -252,6 +281,9 @@ impl Lane {
 struct DispatchState {
     /// Indexed by `QosClass::lane()` (priority order).
     lanes: [Lane; 3],
+    /// Per-lane smooth-WRR weights, indexed like `lanes` — the plane's
+    /// validated `PipelineConfig::qos_weights`.
+    weights: [u32; 3],
     closed: bool,
 }
 
@@ -270,7 +302,7 @@ impl DispatchState {
         }
         let mut total = 0i64;
         for &l in &runnable {
-            let w = QosClass::ALL[l].weight() as i64;
+            let w = self.weights[l] as i64;
             self.lanes[l].wrr += w;
             total += w;
         }
@@ -302,9 +334,13 @@ struct Dispatcher {
 }
 
 impl Dispatcher {
-    fn new() -> Dispatcher {
+    fn new(weights: [u32; 3]) -> Dispatcher {
         Dispatcher {
-            state: Mutex::new(DispatchState { lanes: Default::default(), closed: false }),
+            state: Mutex::new(DispatchState {
+                lanes: Default::default(),
+                weights,
+                closed: false,
+            }),
             cv: Condvar::new(),
         }
     }
@@ -531,11 +567,42 @@ pub struct DataPlane {
 
 impl DataPlane {
     pub fn new(source: Arc<dyn MoleculeSource>, batcher: Batcher, cfg: PipelineConfig) -> DataPlane {
+        // Misconfiguration fails at construction, not as silent
+        // starvation mid-stream.
+        cfg.qos_weights
+            .validate()
+            .expect("invalid PipelineConfig::qos_weights");
+        // With a cache_dir, try to restore the prepared cache a previous
+        // process persisted: on a hit every arena segment and persisted
+        // edge topology is resident before the first session opens —
+        // epoch 1 runs at warm-epoch speed. Any validation failure
+        // (missing/stale/truncated/corrupt) falls back to the cold lazy
+        // build — with the reason on stderr when a file was actually
+        // there, so "stale cache being ignored (and overwritten on
+        // exit)" is distinguishable from "no cache yet".
+        let prepared = match &cfg.cache_dir {
+            Some(dir) => {
+                let path = dir.join(CACHE_FILE);
+                match PreparedSource::load(Arc::clone(&source), &path) {
+                    Ok(warm) => warm,
+                    Err(e) => {
+                        if path.exists() {
+                            eprintln!(
+                                "prepared cache at {} not usable ({e:#}); rebuilding cold",
+                                path.display()
+                            );
+                        }
+                        PreparedSource::new(source)
+                    }
+                }
+            }
+            None => PreparedSource::new(source),
+        };
         // Steady-state working set: one buffer per worker (assembling)
         // plus reorder slack, and at least the default credit window —
         // the pool cap then tracks the open sessions' summed credits.
         let shared = Arc::new(Shared {
-            dispatcher: Dispatcher::new(),
+            dispatcher: Dispatcher::new(cfg.qos_weights.lane_weights()),
             pool: Arc::new(BufferPool::new(cfg.workers.max(1) + 2, cfg.prefetch_depth.max(1))),
             shutdown: AtomicBool::new(false),
         });
@@ -552,7 +619,7 @@ impl DataPlane {
         }
         DataPlane {
             shared,
-            prepared: Arc::new(PreparedSource::new(source)),
+            prepared: Arc::new(prepared),
             batcher,
             cfg,
             next_session: AtomicU64::new(1),
@@ -632,8 +699,8 @@ impl DataPlane {
         let n = source.len();
         let mut ids: Vec<u32> = (0..n as u32).collect();
         if let Some(epoch) = spec.epoch {
-            // Training semantics: identical order to the old
-            // `start_epoch(epoch)` for the same plane config.
+            // Training semantics: epoch-seeded shuffle, identical order
+            // for the same plane config and epoch.
             let mut rng = Rng::new(epoch_shuffle_seed(self.cfg.shuffle_seed, epoch));
             rng.shuffle(&mut ids);
         }
@@ -667,13 +734,56 @@ impl DataPlane {
         }
     }
 
-    /// Begin streaming one training epoch.
-    #[deprecated(
-        note = "open a session instead: `plane.open_session(JobSpec::training(epoch))` — \
-                sessions add QoS classes and per-session admission control"
-    )]
-    pub fn start_epoch(&self, epoch: u64) -> EpochBatches {
-        EpochBatches { inner: self.open_session(JobSpec::training(epoch)) }
+    /// Persist the prepared cache (arena + every memoized edge topology)
+    /// into the plane's `cache_dir`, so the *next* process constructing
+    /// a plane over the same dataset starts epoch 1 warm. Materializes
+    /// any cold remainder of the arena first (persisting a half-warm
+    /// cache would ship the cold cost to every future process).
+    ///
+    /// Returns `Ok(None)` when there is nothing to do — no `cache_dir`
+    /// configured, or the cache this plane loaded from disk is still
+    /// complete — and `Ok(Some(bytes))` after a write.
+    pub fn save_prepared(&self) -> Result<Option<u64>> {
+        let Some(dir) = &self.cfg.cache_dir else {
+            return Ok(None);
+        };
+        // The skip-if-current policy lives on the prepared source
+        // (`save_if_stale`), shared with the offline `prepare` CLI.
+        self.prepared.save_if_stale(&dir.join(CACHE_FILE))
+    }
+
+    /// Exit-path persistence, shared by `train`, `serve`, and the
+    /// data-parallel CLI: announce up-front when part of the corpus is
+    /// still cold (saving materializes the remainder, which can dwarf a
+    /// short truncated run's own wall time on a large dataset), then
+    /// [`save_prepared`](DataPlane::save_prepared) and report the
+    /// outcome on stderr. Never fails the caller — disk trouble while a
+    /// finished run shuts down is a warning, not an error. No-op
+    /// without a `cache_dir`.
+    pub fn persist_prepared_on_exit(&self) {
+        if self.cfg.cache_dir.is_none() {
+            return;
+        }
+        let s = self.prepared_stats();
+        let cold = s.segments_total.saturating_sub(s.segments_built as usize);
+        // save() also completes every partially-populated topology (a
+        // with_r_cut tenant that touched a few molecules), which is a
+        // full knn pass over the gap — announce both, or a large corpus
+        // looks hung at shutdown.
+        let missing_edges =
+            (s.topologies as u64 * s.molecules as u64).saturating_sub(s.edge_entries);
+        if cold > 0 || missing_edges > 0 {
+            eprintln!(
+                "persisting prepared cache: materializing {cold} cold segments (of {}) and \
+                 {missing_edges} missing edge entries first",
+                s.segments_total
+            );
+        }
+        match self.save_prepared() {
+            Ok(Some(bytes)) => eprintln!("persisted prepared cache ({bytes} bytes)"),
+            Ok(None) => {} // disk cache still current — nothing to write
+            Err(e) => eprintln!("warning: failed to persist prepared cache: {e:#}"),
+        }
     }
 }
 
@@ -808,26 +918,6 @@ impl Iterator for BatchStream {
                 }
             }
         }
-    }
-}
-
-/// Deprecated epoch-stream handle, returned by the deprecated
-/// [`DataPlane::start_epoch`]; thin wrapper over a Training-class
-/// [`Session`].
-pub struct EpochBatches {
-    inner: Session,
-}
-
-impl EpochBatches {
-    /// Explicitly retire the epoch (drop does the same).
-    pub fn cancel(self) {}
-}
-
-impl Iterator for EpochBatches {
-    type Item = Result<BatchLease>;
-
-    fn next(&mut self) -> Option<Result<BatchLease>> {
-        self.inner.next()
     }
 }
 
@@ -1080,20 +1170,167 @@ mod tests {
         assert_eq!(a, b);
     }
 
+    /// Fresh per-test cache dir (tests run concurrently; a shared file
+    /// would race).
+    fn tmp_cache_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join("molpack-dataplane-tests")
+            .join(format!("{name}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_start_epoch_matches_training_session() {
-        // The one-release compat wrapper must stream the exact same
-        // ordered sequence as its session-API replacement.
-        let cfg = PipelineConfig { workers: 2, shard_size: 10, ..Default::default() };
-        let a: Vec<_> = plane(30, 6, cfg.clone())
-            .start_epoch(2)
-            .map(|b| fingerprint(&b.unwrap()))
-            .collect();
-        let b: Vec<_> = training(&plane(30, 6, cfg), 2)
-            .map(|b| fingerprint(&b.unwrap()))
-            .collect();
-        assert_eq!(a, b, "start_epoch diverged from JobSpec::training");
+    fn persisted_cache_makes_a_fresh_plane_warm_and_bitwise_identical() {
+        // THE persistence guarantee: a brand-new plane (stand-in for a
+        // fresh process — it shares no in-memory state) constructed over
+        // a saved cache streams the exact batch sequence of the plane
+        // that built the cache, with zero molecule materialization and
+        // zero edge construction.
+        let dir = tmp_cache_dir("roundtrip");
+        let cfg = PipelineConfig {
+            workers: 2,
+            shard_size: 16,
+            cache_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let cold_plane = plane(96, 21, cfg.clone());
+        assert!(!cold_plane.prepared_stats().loaded_from_disk);
+        let cold: Vec<_> = training(&cold_plane, 3).map(|b| fingerprint(&b.unwrap())).collect();
+        let bytes = cold_plane.save_prepared().unwrap().expect("cache_dir is set");
+        assert!(bytes > 0);
+        assert_eq!(
+            cold_plane.save_prepared().unwrap(),
+            None,
+            "an unchanged cache must not be rewritten"
+        );
+        drop(cold_plane);
+
+        let warm_plane = plane(96, 21, cfg);
+        let s = warm_plane.prepared_stats();
+        assert!(s.loaded_from_disk, "fresh plane must restore the disk cache");
+        assert_eq!(s.segments_built as usize, s.segments_total);
+        let warm: Vec<_> = training(&warm_plane, 3).map(|b| fingerprint(&b.unwrap())).collect();
+        assert_eq!(cold, warm, "warm-from-disk stream diverged from cold stream");
+        let s = warm_plane.prepared_stats();
+        assert_eq!(s.molecule_misses, 0, "warm-from-disk epoch materialized molecules");
+        assert_eq!(s.edge_misses, 0, "warm-from-disk epoch constructed edge lists");
+        assert_eq!(warm_plane.save_prepared().unwrap(), None, "loaded cache is current");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn stale_cache_rebuilds_cold_with_a_correct_stream() {
+        // The acceptance bar: a cache built from *different* data must
+        // never shape the batch stream — fingerprint mismatch falls back
+        // to the cold path, and the stream equals a never-cached plane's.
+        let dir = tmp_cache_dir("stale");
+        let cfg = PipelineConfig {
+            workers: 2,
+            shard_size: 16,
+            cache_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        // build + persist a cache for seed 5
+        let p = plane(64, 5, cfg.clone());
+        for b in training(&p, 0) {
+            b.unwrap();
+        }
+        p.save_prepared().unwrap().expect("first save writes");
+        drop(p);
+        // same plane shape, different dataset seed: the cache is stale
+        let stale = plane(64, 6, cfg.clone());
+        assert!(!stale.prepared_stats().loaded_from_disk, "stale cache must not load");
+        let got: Vec<_> = training(&stale, 1).map(|b| fingerprint(&b.unwrap())).collect();
+        let want: Vec<_> = training(
+            &plane(64, 6, PipelineConfig { cache_dir: None, ..cfg }),
+            1,
+        )
+        .map(|b| fingerprint(&b.unwrap()))
+        .collect();
+        assert_eq!(got, want, "stale cache changed the batch stream");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn truncated_cache_rebuilds_cold_without_error() {
+        let dir = tmp_cache_dir("truncated");
+        let cfg = PipelineConfig {
+            workers: 2,
+            shard_size: 16,
+            cache_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let p = plane(64, 9, cfg.clone());
+        for b in training(&p, 0) {
+            b.unwrap();
+        }
+        p.save_prepared().unwrap().expect("first save writes");
+        drop(p);
+        let path = dir.join(crate::datasets::CACHE_FILE);
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 3]).unwrap();
+        // construction must neither error nor panic; the stream is intact
+        let p = plane(64, 9, cfg);
+        assert!(!p.prepared_stats().loaded_from_disk, "truncated cache must not load");
+        let graphs: usize = training(&p, 0).map(|b| b.unwrap().real_graphs()).sum();
+        assert_eq!(graphs, 64);
+        // a full pass + save repairs the cache in place
+        p.save_prepared().unwrap().expect("repair save writes");
+        drop(p);
+        let repaired = plane(64, 9, PipelineConfig {
+            workers: 2,
+            shard_size: 16,
+            cache_dir: Some(dir.clone()),
+            ..Default::default()
+        });
+        assert!(repaired.prepared_stats().loaded_from_disk, "repaired cache must load");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn save_prepared_without_cache_dir_is_a_noop() {
+        let p = plane(16, 3, PipelineConfig { workers: 1, ..Default::default() });
+        assert_eq!(p.save_prepared().unwrap(), None);
+    }
+
+    #[test]
+    fn custom_qos_weights_still_complete_all_classes() {
+        // Equal weights are a legitimate configuration: every class must
+        // still complete (smooth WRR is starvation-free for any positive
+        // ratio).
+        let cfg = PipelineConfig {
+            workers: 1,
+            prefetch_depth: 2,
+            shard_size: 8,
+            qos_weights: QosWeights {
+                serving: 1,
+                training: 1,
+                background: 1,
+            },
+            ..Default::default()
+        };
+        let p = plane(32, 19, cfg);
+        let background = p.open_session(JobSpec::background().with_credits(1));
+        let serving = p.open_session(JobSpec::serving().with_credits(2));
+        let served: usize = serving.map(|b| b.unwrap().real_graphs()).sum();
+        assert_eq!(served, 32);
+        let bg: usize = background.map(|b| b.unwrap().real_graphs()).sum();
+        assert_eq!(bg, 32, "background class starved under equal weights");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid PipelineConfig::qos_weights")]
+    fn zero_qos_weight_fails_at_construction() {
+        let cfg = PipelineConfig {
+            qos_weights: QosWeights {
+                serving: 6,
+                training: 0,
+                background: 1,
+            },
+            ..Default::default()
+        };
+        let _ = plane(8, 1, cfg);
     }
 
     #[test]
@@ -1535,10 +1772,10 @@ mod tests {
     }
 
     /// A molecule source whose `get` panics for one index — models a
-    /// corrupt record hit only at materialization time. Index 70 sits in
-    /// the *second* arena segment (64..128), so segment-granularity
-    /// materialization poisons batches drawing on that segment while
-    /// batches wholly within healthy segments keep streaming.
+    /// corrupt record hit only at materialization time. With per-record
+    /// quarantine the blast radius is exactly that molecule: batches
+    /// containing index 70 error, every other batch — including ones
+    /// drawing on 70's own 64..128 arena segment — keeps streaming.
     struct Panicky(HydroNet);
 
     impl MoleculeSource for Panicky {
@@ -1579,14 +1816,14 @@ mod tests {
             (ok, errors)
         };
         let (ok, errors) = pass();
-        assert!(errors >= 1, "the corrupt record must surface as an error");
+        assert_eq!(errors, 1, "exactly the corrupt record's batch must error");
         assert!(ok >= 1, "healthy batches must still be delivered");
-        // the pool survives: the next session still streams (and still
-        // reports the same corrupt record — a panicking segment build
-        // leaves the arena slot uninitialized, so it is retried, not
-        // cached as garbage)
+        // the pool survives: the next session still streams, and the
+        // quarantined record still surfaces (the quarantine mark is
+        // per-molecule state, never cached as a healthy placeholder)
         let (ok2, errors2) = pass();
-        assert!(errors2 >= 1);
+        assert_eq!(errors2, 1);
         assert!(ok2 >= 1);
+        assert_eq!(p.prepared_stats().quarantined, 1, "one record quarantined");
     }
 }

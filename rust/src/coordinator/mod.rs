@@ -17,9 +17,7 @@ pub mod replicas;
 pub mod session;
 
 pub use batcher::{AssemblyStats, Batcher};
-pub use dataplane::{
-    BatchLease, BatchStream, BufferPool, DataPlane, EpochBatches, PipelineConfig, Session,
-};
+pub use dataplane::{BatchLease, BatchStream, BufferPool, DataPlane, PipelineConfig, Session};
 pub use pipeline::{plan_epoch, stream_epoch, EpochStream};
 pub use replicas::{CollectiveStats, DataParallel};
-pub use session::{JobSpec, QosClass, SessionMetrics};
+pub use session::{JobSpec, QosClass, QosWeights, SessionMetrics};

@@ -38,16 +38,6 @@ impl QosClass {
     /// earlier class).
     pub const ALL: [QosClass; 3] = [QosClass::Serving, QosClass::Training, QosClass::Background];
 
-    /// Dispatch weight: out of every `6+3+1` worker dispatches with all
-    /// three classes runnable, Serving gets 6, Training 3, Background 1.
-    pub fn weight(self) -> u32 {
-        match self {
-            QosClass::Serving => 6,
-            QosClass::Training => 3,
-            QosClass::Background => 1,
-        }
-    }
-
     pub fn name(self) -> &'static str {
         match self {
             QosClass::Serving => "serving",
@@ -62,6 +52,75 @@ impl QosClass {
             QosClass::Training => 1,
             QosClass::Background => 2,
         }
+    }
+}
+
+/// Smooth-WRR dispatch weights per [`QosClass`] — out of every
+/// `serving + training + background` worker dispatches with all three
+/// classes runnable, each class gets its weight's share. Formerly a
+/// constant `6:3:1` on `QosClass::weight`; now plane configuration
+/// (`PipelineConfig::qos_weights`), validated at plane construction.
+///
+/// The priority *order* between lanes (tie-breaking, lane indices) stays
+/// fixed at Serving > Training > Background; weights decide only the
+/// long-run dispatch ratio and may be set equal (fair sharing) or even
+/// inverted (a batch-ingest plane that deliberately favors background
+/// backfill) — any ratio of positive weights is starvation-free by the
+/// smooth-WRR construction.
+///
+/// [`PipelineConfig::qos_weights`]: crate::coordinator::PipelineConfig
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QosWeights {
+    pub serving: u32,
+    pub training: u32,
+    pub background: u32,
+}
+
+impl Default for QosWeights {
+    /// The paper-era default split: Serving 6 : Training 3 : Background 1.
+    fn default() -> Self {
+        QosWeights { serving: 6, training: 3, background: 1 }
+    }
+}
+
+/// Weights above this are rejected: they add nothing (only ratios
+/// matter) and huge values erode the smooth-WRR counter headroom.
+pub const MAX_QOS_WEIGHT: u32 = 1_000_000;
+
+impl QosWeights {
+    /// Reject configurations the dispatcher cannot serve fairly: a zero
+    /// weight would starve its class outright (the smooth-WRR counter
+    /// never accumulates), and absurdly large weights erode counter
+    /// headroom without changing any achievable ratio.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (class, w) in QosClass::ALL.iter().zip(self.lane_weights()) {
+            if w == 0 {
+                anyhow::bail!("QoS weight for {} is 0 — a zero weight starves the class", class.name());
+            }
+            if w > MAX_QOS_WEIGHT {
+                anyhow::bail!(
+                    "QoS weight {} for {} exceeds {MAX_QOS_WEIGHT} — only ratios matter, scale it down",
+                    w,
+                    class.name()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-class weight.
+    pub fn get(&self, class: QosClass) -> u32 {
+        match class {
+            QosClass::Serving => self.serving,
+            QosClass::Training => self.training,
+            QosClass::Background => self.background,
+        }
+    }
+
+    /// Weights indexed by `QosClass::lane()` (dispatch-priority order) —
+    /// the dispatcher's working representation.
+    pub(crate) fn lane_weights(&self) -> [u32; 3] {
+        [self.serving, self.training, self.background]
     }
 }
 
@@ -84,9 +143,8 @@ pub struct JobSpec {
     /// Deliver in plan order (reproducible) vs completion order.
     pub ordered: Option<bool>,
     /// `Some(epoch)` shuffles the dataset with the plane's epoch-derived
-    /// seed (training semantics, identical order to the old
-    /// `start_epoch(epoch)`); `None` streams in arrival order (serving
-    /// request-queue semantics).
+    /// seed (training semantics); `None` streams in arrival order
+    /// (serving request-queue semantics).
     pub epoch: Option<u64>,
     /// Admission credits: max batches materialized but not yet consumed.
     /// The dispatcher stops assembling for this session once the limit
@@ -114,8 +172,7 @@ impl JobSpec {
         }
     }
 
-    /// One training epoch over the (shuffled) dataset — the session-API
-    /// equivalent of the deprecated `start_epoch(epoch)`.
+    /// One training epoch over the (shuffled) dataset.
     pub fn training(epoch: u64) -> JobSpec {
         JobSpec::new(QosClass::Training, Some(epoch))
     }
@@ -392,15 +449,40 @@ mod tests {
     use crate::datasets::HydroNet;
 
     #[test]
-    fn qos_weights_are_ordered_and_positive() {
-        let w: Vec<u32> = QosClass::ALL.iter().map(|q| q.weight()).collect();
-        assert!(w.iter().all(|&x| x > 0), "a zero weight starves a class");
-        assert!(w[0] > w[1] && w[1] > w[2], "serving > training > background");
+    fn default_qos_weights_are_ordered_and_valid() {
+        let w = QosWeights::default();
+        w.validate().expect("default weights must validate");
+        assert_eq!(w.lane_weights(), [6, 3, 1], "paper-era default split");
+        assert!(
+            w.serving > w.training && w.training > w.background,
+            "default: serving > training > background"
+        );
+        assert_eq!(
+            QosClass::ALL.map(|q| w.get(q)),
+            w.lane_weights(),
+            "get() must agree with the lane order"
+        );
         assert_eq!(
             QosClass::ALL.map(|q| q.lane()),
             [0, 1, 2],
             "lane indices must match dispatch-priority order"
         );
+    }
+
+    #[test]
+    fn qos_weight_validation_rejects_zero_and_huge() {
+        assert!(QosWeights { serving: 0, training: 3, background: 1 }.validate().is_err());
+        assert!(QosWeights { serving: 6, training: 3, background: 0 }.validate().is_err());
+        assert!(QosWeights {
+            serving: MAX_QOS_WEIGHT + 1,
+            training: 3,
+            background: 1
+        }
+        .validate()
+        .is_err());
+        // equal and inverted ratios are legitimate configurations
+        assert!(QosWeights { serving: 1, training: 1, background: 1 }.validate().is_ok());
+        assert!(QosWeights { serving: 1, training: 2, background: 8 }.validate().is_ok());
     }
 
     #[test]

@@ -1,18 +1,22 @@
 //! Dataset substrate: synthetic HydroNet/QM9 generators (the paper's data
 //! is not redistributable — DESIGN.md §2 documents the substitution), a
 //! compact on-disk store, the two-level cache, the molecule source
-//! abstraction the loader pipeline consumes, and the epoch-invariant
+//! abstraction the loader pipeline consumes, the epoch-invariant
 //! prepared source (`prepared`: SoA arena + memoized edge topologies)
-//! the data-plane assembles from.
+//! the data-plane assembles from, and its on-disk persistence format
+//! (`persist`: versioned, checksummed, fingerprinted — epoch 1 of a
+//! fresh process runs warm).
 
 pub mod cache;
 pub mod hydronet;
+pub mod persist;
 pub mod prepared;
 pub mod qm9;
 pub mod store;
 
 pub use cache::{CacheStats, CachedSource, LruCache};
 pub use hydronet::HydroNet;
+pub use persist::{fingerprint, SourceFingerprint, CACHE_FILE};
 pub use prepared::{EdgeTopology, MoleculeView, PreparedSource, PreparedStats};
 pub use qm9::Qm9;
 pub use store::{write_store, Store};

@@ -1,0 +1,737 @@
+//! On-disk persistence format for the prepared-dataset cache: the
+//! paper's "compressed serialized binary representation" (section 4.2.3)
+//! extended to *derived* data — the SoA molecule arena plus the memoized
+//! per-`(r_cut, k_max)` edge topologies — so epoch 1 of a **fresh
+//! process** starts with the cache already warm.
+//!
+//! This module owns only the byte format and its validation ladder;
+//! [`PreparedSource::save`]/[`PreparedSource::load_or_wrap`]
+//! (`datasets::prepared`) translate between the live cache and the
+//! neutral [`CacheImage`] defined here.
+//!
+//! # Layout (little endian)
+//!
+//! ```text
+//! header (40 bytes):
+//!   magic "MPPC" | u32 version
+//!   u64 payload_len        -- exact byte length of the payload region
+//!   u64 payload_checksum   -- FNV-1a 64 over the payload bytes
+//!   u64 fp_molecules       -- source fingerprint: molecule count
+//!   u64 fp_content_hash    -- source fingerprint: sampled content hash
+//! payload:
+//!   u64 n                  -- molecules (== fp_molecules)
+//!   u64 arena_offsets[n+1] -- global CSR atom offsets
+//!   u8  z[total_atoms]     -- atomic numbers at source width
+//!   f32 pos[3*total_atoms] -- flat positions
+//!   f32 energy[n]
+//!   u32 n_topologies
+//!   per topology:
+//!     u32 r_cut_bits | u32 k_max
+//!     u64 edge_offsets[n+1]
+//!     u32 src[total_edges] | u32 dst[total_edges]
+//! ```
+//!
+//! # Validation ladder (any failure ⇒ the caller rebuilds cold)
+//!
+//! 1. header present, magic and version match;
+//! 2. `payload_len` equals the bytes actually on disk — a truncated or
+//!    grown file is rejected before any decoding;
+//! 3. `payload_checksum` matches — bit rot and partial overwrites are
+//!    rejected (writes also go through a temp file + atomic rename, so a
+//!    crashed writer leaves the old cache intact, never a torn one);
+//! 4. the stored fingerprint equals the fingerprint of the source the
+//!    caller is about to stream — a cache built from different data
+//!    (count, shapes, or sampled content) is *stale* and rejected.
+//!    This check is **sampled** (see [`fingerprint`]): it catches the
+//!    realistic staleness modes (regenerated/reseeded/resized corpora)
+//!    but, by construction, not an in-place edit confined to unprobed
+//!    records that leaves the count and every probe bit-identical —
+//!    the prepared source's immutable-source contract is what rules
+//!    that out, for the disk cache exactly as for the in-memory one
+//!    (a whole-corpus hash option is a ROADMAP follow-up);
+//! 5. structural decode with bounds checks and CSR-monotonicity checks
+//!    (belt-and-braces: unreachable behind a valid checksum, but decode
+//!    must never panic on hostile bytes).
+//!
+//! Loading is one bulk `fs::read` + in-memory slicing: at dataset-cache
+//! sizes the sequential read runs at device bandwidth, and the offline
+//! crate set has no mmap wrapper — the "zero-recompute" property (no
+//! molecule materialization, no `knn_edges`) is what the days→hours
+//! speedup comes from, not the copy.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::datasets::MoleculeSource;
+
+/// File name of the prepared cache inside a `cache_dir`.
+pub const CACHE_FILE: &str = "prepared.mppc";
+
+const MAGIC: &[u8; 4] = b"MPPC";
+const VERSION: u32 = 1;
+const HEADER_LEN: usize = 40;
+
+/// How many molecules contribute their `n_atoms` to the fingerprint.
+const FP_SHAPE_PROBES: usize = 64;
+/// How many molecules contribute their full content to the fingerprint.
+const FP_CONTENT_PROBES: usize = 8;
+
+/// FNV-1a 64 — the repo's standing content-hash primitive (cheap,
+/// dependency-free, good avalanche for change detection; not
+/// cryptographic, which the threat model here — stale or torn files, not
+/// adversaries — does not need).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0001_b3);
+    }
+    h
+}
+
+/// Identity of the dataset a cache was built from. A cache whose
+/// fingerprint does not match the source it is asked to serve is stale
+/// and must be rebuilt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SourceFingerprint {
+    /// Molecule count of the source.
+    pub molecules: u64,
+    /// Hash over a deterministic sample of the source's content.
+    pub content_hash: u64,
+}
+
+/// Fingerprint `source` without materializing it wholesale: the count,
+/// the `n_atoms` of up to [`FP_SHAPE_PROBES`] evenly spaced indices, and
+/// the full content (z, position bits, energy bits) of up to
+/// [`FP_CONTENT_PROBES`] of them. Hashing every molecule would cost the
+/// very cold pass the cache exists to avoid; sampled probes catch the
+/// realistic staleness modes (different generator seed, different count,
+/// regenerated or re-sorted stores) at O(1) cost. The file itself is
+/// separately guarded by the payload checksum.
+///
+/// A probe whose record panics (a corrupt entry the per-record
+/// quarantine would absorb during streaming) yields `Err`, never a
+/// panic — a crash-at-construction here would defeat the quarantine's
+/// blast-radius guarantee. Callers fall back to the cold path.
+pub fn fingerprint(source: &dyn MoleculeSource) -> Result<SourceFingerprint> {
+    let n = source.len();
+    let mut bytes: Vec<u8> = Vec::with_capacity(1024);
+    bytes.extend_from_slice(&(n as u64).to_le_bytes());
+    for idx in probe_indices(n, FP_SHAPE_PROBES) {
+        let atoms =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| source.n_atoms(idx)))
+                .map_err(|_| {
+                    anyhow::anyhow!("source panicked sizing probe molecule {idx}")
+                })?;
+        bytes.extend_from_slice(&(atoms as u64).to_le_bytes());
+    }
+    for idx in probe_indices(n, FP_CONTENT_PROBES) {
+        let m = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| source.get(idx)))
+            .map_err(|_| {
+                anyhow::anyhow!("source panicked materializing probe molecule {idx}")
+            })?;
+        bytes.extend_from_slice(&(idx as u64).to_le_bytes());
+        bytes.extend_from_slice(&m.z);
+        for p in &m.pos {
+            for c in p {
+                bytes.extend_from_slice(&c.to_bits().to_le_bytes());
+            }
+        }
+        bytes.extend_from_slice(&m.energy.to_bits().to_le_bytes());
+    }
+    Ok(SourceFingerprint { molecules: n as u64, content_hash: fnv1a64(&bytes) })
+}
+
+/// Up to `k` distinct indices spread evenly over `0..n`, always
+/// including the first and last molecule (off-by-one regeneration bugs
+/// live at the ends).
+fn probe_indices(n: usize, k: usize) -> Vec<usize> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = k.min(n).max(1);
+    let mut out: Vec<usize> = (0..k).map(|i| i * (n - 1) / k.max(1)).collect();
+    out.push(n - 1);
+    out.dedup();
+    out
+}
+
+/// Flat image of the SoA molecule arena.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ArenaImage {
+    /// Global CSR atom offsets, length `n + 1`.
+    pub offsets: Vec<u64>,
+    /// Atomic numbers at source width, length `offsets[n]`.
+    pub z: Vec<u8>,
+    /// Flat positions, length `3 * offsets[n]`.
+    pub pos: Vec<f32>,
+    /// Per-molecule targets, length `n`.
+    pub energy: Vec<f32>,
+}
+
+/// Flat image of one memoized edge topology.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TopologyImage {
+    pub r_cut_bits: u32,
+    pub k_max: u32,
+    /// Global CSR edge offsets, length `n + 1`.
+    pub edge_offsets: Vec<u64>,
+    pub src: Vec<u32>,
+    pub dst: Vec<u32>,
+}
+
+/// Everything a warm [`PreparedSource`] needs, in serialization-neutral
+/// form.
+///
+/// [`PreparedSource`]: crate::datasets::PreparedSource
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheImage {
+    pub fingerprint: SourceFingerprint,
+    pub arena: ArenaImage,
+    pub topologies: Vec<TopologyImage>,
+}
+
+impl CacheImage {
+    pub fn molecules(&self) -> usize {
+        self.arena.energy.len()
+    }
+}
+
+// ---------------------------------------------------------------- write
+
+fn put_u64s(buf: &mut Vec<u8>, vals: &[u64]) {
+    buf.reserve(8 * vals.len());
+    for v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_u32s(buf: &mut Vec<u8>, vals: &[u32]) {
+    buf.reserve(4 * vals.len());
+    for v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_f32s(buf: &mut Vec<u8>, vals: &[f32]) {
+    buf.reserve(4 * vals.len());
+    for v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Serialize `image` to `path`. The bytes land in a sibling temp file
+/// first and are atomically renamed into place, so a crash mid-write can
+/// never leave a torn `CACHE_FILE` — the old cache (if any) survives
+/// until the new one is durable. Returns the total bytes written.
+pub fn write_cache(path: &Path, image: &CacheImage) -> Result<u64> {
+    let n = image.molecules();
+    if image.arena.offsets.len() != n + 1 {
+        bail!("arena offsets length {} != molecules + 1 ({})", image.arena.offsets.len(), n + 1);
+    }
+    if image.fingerprint.molecules != n as u64 {
+        bail!("fingerprint count {} != arena molecules {n}", image.fingerprint.molecules);
+    }
+    let total_atoms = *image.arena.offsets.last().unwrap() as usize;
+    if image.arena.z.len() != total_atoms || image.arena.pos.len() != 3 * total_atoms {
+        bail!(
+            "arena spans (z {}, pos {}) disagree with offsets ({total_atoms} atoms)",
+            image.arena.z.len(),
+            image.arena.pos.len()
+        );
+    }
+
+    let mut payload = Vec::new();
+    put_u64s(&mut payload, &[n as u64]);
+    put_u64s(&mut payload, &image.arena.offsets);
+    payload.extend_from_slice(&image.arena.z);
+    put_f32s(&mut payload, &image.arena.pos);
+    put_f32s(&mut payload, &image.arena.energy);
+    put_u32s(&mut payload, &[image.topologies.len() as u32]);
+    for t in &image.topologies {
+        if t.edge_offsets.len() != n + 1 {
+            bail!("topology edge offsets length {} != molecules + 1", t.edge_offsets.len());
+        }
+        let total_edges = *t.edge_offsets.last().unwrap() as usize;
+        if t.src.len() != total_edges || t.dst.len() != total_edges {
+            bail!(
+                "topology edge arrays ({}, {}) disagree with offsets ({total_edges})",
+                t.src.len(),
+                t.dst.len()
+            );
+        }
+        put_u32s(&mut payload, &[t.r_cut_bits, t.k_max]);
+        put_u64s(&mut payload, &t.edge_offsets);
+        put_u32s(&mut payload, &t.src);
+        put_u32s(&mut payload, &t.dst);
+    }
+
+    let mut header = Vec::with_capacity(HEADER_LEN);
+    header.extend_from_slice(MAGIC);
+    header.extend_from_slice(&VERSION.to_le_bytes());
+    header.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    header.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    header.extend_from_slice(&image.fingerprint.molecules.to_le_bytes());
+    header.extend_from_slice(&image.fingerprint.content_hash.to_le_bytes());
+
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating cache dir {dir:?}"))?;
+    }
+    // Unique temp name per writer (pid + in-process counter): concurrent
+    // savers sharing a cache_dir (`serve` and `train` both persisting on
+    // exit) must never truncate each other's half-written temp file and
+    // rename a torn one into place — each rename is of a file its writer
+    // alone produced, so `CACHE_FILE` is always either the old cache or
+    // a complete new one.
+    static WRITE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = WRITE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let tmp = path.with_extension(format!("mppc.tmp.{}.{seq}", std::process::id()));
+    // Header and payload go to the file as two writes — no concatenated
+    // whole-file Vec (the payload alone is the dominant transient copy;
+    // streaming the sections to drop it too is a ROADMAP follow-up).
+    // Either arm failing must not strand the uniquely-named temp file —
+    // a disk-full condition (the very failure the exit-path save
+    // tolerates) would otherwise accumulate one partial file per run
+    // and make itself worse.
+    let written = (|| -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&header)?;
+        f.write_all(&payload)?;
+        f.flush()
+    })();
+    if let Err(e) = written {
+        std::fs::remove_file(&tmp).ok();
+        return Err(anyhow::Error::new(e).context(format!("writing cache temp {tmp:?}")));
+    }
+    std::fs::rename(&tmp, path).map_err(|e| {
+        std::fs::remove_file(&tmp).ok();
+        anyhow::Error::new(e).context(format!("renaming cache into place at {path:?}"))
+    })?;
+    Ok((HEADER_LEN + payload.len()) as u64)
+}
+
+// ----------------------------------------------------------------- read
+
+/// Bounds-checked little-endian reader over the payload bytes.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, len: usize) -> Result<&'a [u8]> {
+        let end = self
+            .at
+            .checked_add(len)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| anyhow::anyhow!("cache payload truncated at byte {}", self.at))?;
+        let s = &self.bytes[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u64s(&mut self, count: usize) -> Result<Vec<u64>> {
+        let raw = self.take(8 * count)?;
+        Ok(raw.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u32s(&mut self, count: usize) -> Result<Vec<u32>> {
+        let raw = self.take(4 * count)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f32s(&mut self, count: usize) -> Result<Vec<f32>> {
+        let raw = self.take(4 * count)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn done(&self) -> bool {
+        self.at == self.bytes.len()
+    }
+}
+
+/// CSR sanity: offsets start at 0 and never decrease. (The final offset
+/// is the span *definition*, not something to cross-check — the spans it
+/// sizes are validated downstream by the bounds-checked `Reader` takes
+/// plus the trailing-bytes check, which together pin every section's
+/// length against the payload.)
+fn check_csr(offsets: &[u64], what: &str) -> Result<()> {
+    if offsets.first() != Some(&0) {
+        bail!("{what} offsets do not start at 0");
+    }
+    if offsets.windows(2).any(|w| w[1] < w[0]) {
+        bail!("{what} offsets decrease");
+    }
+    Ok(())
+}
+
+/// Read and fully validate the cache at `path` against `expect` (the
+/// fingerprint of the source about to be streamed). Every failure mode —
+/// missing file, bad magic/version, truncation, checksum mismatch, stale
+/// fingerprint, structural corruption — returns `Err`, and the caller
+/// falls back to the cold path; a cache can therefore never produce
+/// wrong batches, only a slower first epoch.
+pub fn read_cache(path: &Path, expect: &SourceFingerprint) -> Result<CacheImage> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading cache {path:?}"))?;
+    if bytes.len() < HEADER_LEN {
+        bail!("cache file too short for a header: {} bytes", bytes.len());
+    }
+    if &bytes[0..4] != MAGIC {
+        bail!("bad magic in cache file");
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != VERSION {
+        bail!("unsupported cache version {version} (expected {VERSION})");
+    }
+    let payload_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let checksum = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let stored = SourceFingerprint {
+        molecules: u64::from_le_bytes(bytes[24..32].try_into().unwrap()),
+        content_hash: u64::from_le_bytes(bytes[32..40].try_into().unwrap()),
+    };
+    let payload = &bytes[HEADER_LEN..];
+    if payload.len() != payload_len {
+        bail!("cache truncated: payload {} bytes, header says {payload_len}", payload.len());
+    }
+    if fnv1a64(payload) != checksum {
+        bail!("cache payload checksum mismatch");
+    }
+    if stored != *expect {
+        bail!(
+            "stale cache: built for {} molecules (hash {:#x}), source has {} (hash {:#x})",
+            stored.molecules,
+            stored.content_hash,
+            expect.molecules,
+            expect.content_hash
+        );
+    }
+
+    let mut r = Reader { bytes: payload, at: 0 };
+    let n = r.u64()? as usize;
+    if n as u64 != stored.molecules {
+        bail!("payload molecule count {n} != fingerprint {}", stored.molecules);
+    }
+    let offsets = r.u64s(n + 1)?;
+    let total_atoms = *offsets.last().unwrap_or(&0);
+    // Guard the multiplication below against absurd counts before
+    // allocating (a corrupt-but-checksummed file cannot get here, but
+    // decode must stay total regardless).
+    if total_atoms > u32::MAX as u64 {
+        bail!("cache claims {total_atoms} atoms — refusing");
+    }
+    check_csr(&offsets, "arena")?;
+    let z = r.take(total_atoms as usize)?.to_vec();
+    let pos = r.f32s(3 * total_atoms as usize)?;
+    let energy = r.f32s(n)?;
+
+    let n_topologies = r.u32()? as usize;
+    // Bound the pre-allocation by what the remaining payload could
+    // possibly hold (each topology needs ≥ its 8-byte key + (n+1) u64
+    // offsets): a forged-but-checksummed count must hit the Err path,
+    // not an allocator abort — decode stays total.
+    let min_topo_bytes = 8 + 8 * (n + 1);
+    if n_topologies > (payload.len() - r.at) / min_topo_bytes {
+        bail!("cache claims {n_topologies} topologies — more than the payload can hold");
+    }
+    let mut topologies = Vec::with_capacity(n_topologies);
+    for _ in 0..n_topologies {
+        let r_cut_bits = r.u32()?;
+        let k_max = r.u32()?;
+        let edge_offsets = r.u64s(n + 1)?;
+        let total_edges = *edge_offsets.last().unwrap_or(&0);
+        if total_edges > u32::MAX as u64 {
+            bail!("cache claims {total_edges} edges in one topology — refusing");
+        }
+        check_csr(&edge_offsets, "topology")?;
+        let src = r.u32s(total_edges as usize)?;
+        let dst = r.u32s(total_edges as usize)?;
+        // Endpoint validation — the other half of staying total: edge
+        // lists are molecule-local indices the batcher rebases into pack
+        // windows, so a forged-but-checksummed endpoint >= the owning
+        // molecule's atom count would silently corrupt batch
+        // connectivity, not fail. Reject it here instead.
+        for idx in 0..n {
+            let atoms = (offsets[idx + 1] - offsets[idx]) as u32;
+            let (a, b) = (edge_offsets[idx] as usize, edge_offsets[idx + 1] as usize);
+            if src[a..b].iter().chain(&dst[a..b]).any(|&v| v >= atoms) {
+                bail!("cache edge endpoint out of range for molecule {idx} ({atoms} atoms)");
+            }
+        }
+        topologies.push(TopologyImage { r_cut_bits, k_max, edge_offsets, src, dst });
+    }
+    if !r.done() {
+        bail!("{} trailing bytes after cache payload", payload.len() - r.at);
+    }
+    Ok(CacheImage { fingerprint: stored, arena: ArenaImage { offsets, z, pos, energy }, topologies })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::HydroNet;
+
+    fn tmppath(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("molpack-persist-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}.mppc", std::process::id()))
+    }
+
+    fn sample_image(n: usize) -> CacheImage {
+        // Tiny synthetic arena: molecule i has i % 3 + 1 atoms.
+        let mut offsets = vec![0u64];
+        let mut z = Vec::new();
+        let mut pos = Vec::new();
+        let mut energy = Vec::new();
+        for i in 0..n {
+            let atoms = i % 3 + 1;
+            for a in 0..atoms {
+                z.push((a + 1) as u8);
+                pos.extend_from_slice(&[i as f32, a as f32, 0.5]);
+            }
+            energy.push(-(i as f32));
+            offsets.push(z.len() as u64);
+        }
+        let total_atoms = *offsets.last().unwrap();
+        let mut edge_offsets = vec![0u64];
+        let mut src = Vec::new();
+        let mut dst = Vec::new();
+        for i in 0..n {
+            // one self-describing edge per atom pair within the molecule
+            let atoms = (offsets[i + 1] - offsets[i]) as u32;
+            for a in 1..atoms {
+                src.push(a - 1);
+                dst.push(a);
+            }
+            edge_offsets.push(src.len() as u64);
+        }
+        assert_eq!(total_atoms as usize, z.len());
+        CacheImage {
+            fingerprint: SourceFingerprint { molecules: n as u64, content_hash: 0xfeed },
+            arena: ArenaImage { offsets, z, pos, energy },
+            topologies: vec![TopologyImage {
+                r_cut_bits: 6.0f32.to_bits(),
+                k_max: 12,
+                edge_offsets,
+                src,
+                dst,
+            }],
+        }
+    }
+
+    #[test]
+    fn round_trip_preserves_image() {
+        let img = sample_image(7);
+        let path = tmppath("roundtrip");
+        let bytes = write_cache(&path, &img).unwrap();
+        assert!(bytes > HEADER_LEN as u64);
+        assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+        let back = read_cache(&path, &img.fingerprint).unwrap();
+        assert_eq!(back, img);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn empty_dataset_round_trips() {
+        let img = CacheImage {
+            fingerprint: SourceFingerprint { molecules: 0, content_hash: 1 },
+            arena: ArenaImage {
+                offsets: vec![0],
+                z: vec![],
+                pos: vec![],
+                energy: vec![],
+            },
+            topologies: vec![],
+        };
+        let path = tmppath("empty");
+        write_cache(&path, &img).unwrap();
+        assert_eq!(read_cache(&path, &img.fingerprint).unwrap(), img);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn stale_fingerprint_is_rejected() {
+        let img = sample_image(5);
+        let path = tmppath("stale");
+        write_cache(&path, &img).unwrap();
+        let other = SourceFingerprint { molecules: 5, content_hash: 0xdead };
+        let err = read_cache(&path, &other).unwrap_err();
+        assert!(err.to_string().contains("stale"), "{err}");
+        let other = SourceFingerprint { molecules: 6, content_hash: 0xfeed };
+        assert!(read_cache(&path, &other).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn truncation_is_rejected_at_every_length() {
+        // Chop the file at a spread of byte lengths: every prefix must be
+        // rejected (never decoded into a wrong image, never a panic).
+        let img = sample_image(6);
+        let path = tmppath("trunc");
+        write_cache(&path, &img).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        for cut in [0usize, 3, HEADER_LEN - 1, HEADER_LEN, HEADER_LEN + 9, full.len() - 1] {
+            let p = tmppath(&format!("trunc-{cut}"));
+            std::fs::write(&p, &full[..cut]).unwrap();
+            assert!(read_cache(&p, &img.fingerprint).is_err(), "prefix {cut} accepted");
+            std::fs::remove_file(p).ok();
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bit_flip_is_rejected_by_checksum() {
+        let img = sample_image(6);
+        let path = tmppath("bitflip");
+        write_cache(&path, &img).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = HEADER_LEN + (bytes.len() - HEADER_LEN) / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_cache(&path, &img.fingerprint).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        let img = sample_image(3);
+        let path = tmppath("magic");
+        write_cache(&path, &img).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let good = bytes.clone();
+        bytes[0] = b'X';
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_cache(&path, &img.fingerprint).is_err());
+        let mut bytes = good;
+        bytes[4] = 99; // version
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_cache(&path, &img.fingerprint).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn forged_topology_count_with_valid_checksum_is_an_error_not_an_abort() {
+        // An attacker-or-bitrot payload whose u32 topology count is huge
+        // but whose FNV checksum has been made to match (FNV is not
+        // cryptographic) must take the Err path — never a giant
+        // Vec::with_capacity that aborts the process.
+        let img = sample_image(5);
+        let path = tmppath("forged-count");
+        write_cache(&path, &img).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // locate the n_topologies u32: header + u64 n + (n+1) u64 offsets
+        // + z + pos f32s + energy f32s
+        let n = 5usize;
+        let total_atoms = *img.arena.offsets.last().unwrap() as usize;
+        let off = HEADER_LEN + 8 + 8 * (n + 1) + total_atoms + 4 * 3 * total_atoms + 4 * n;
+        assert_eq!(
+            u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()),
+            1,
+            "test must patch the real count field"
+        );
+        bytes[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        // re-seal the forged payload so only the count check can reject it
+        let checksum = fnv1a64(&bytes[HEADER_LEN..]);
+        bytes[16..24].copy_from_slice(&checksum.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_cache(&path, &img.fingerprint).unwrap_err();
+        assert!(err.to_string().contains("topologies"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn forged_edge_endpoint_with_valid_checksum_is_rejected() {
+        // A checksummed payload whose edge endpoint exceeds its
+        // molecule's atom count must fail decode — rebased into a pack
+        // window it would silently corrupt batch connectivity.
+        let mut img = sample_image(5);
+        // molecule 0 has 1 atom; give it an out-of-range edge
+        img.topologies[0].edge_offsets =
+            (0..=5u64).map(|i| i.min(1)).collect(); // one edge, owned by molecule 0
+        img.topologies[0].src = vec![7];
+        img.topologies[0].dst = vec![0];
+        let path = tmppath("forged-endpoint");
+        write_cache(&path, &img).unwrap();
+        let err = read_cache(&path, &img.fingerprint).unwrap_err();
+        assert!(err.to_string().contains("endpoint"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_an_error_not_a_panic() {
+        let fp = SourceFingerprint { molecules: 1, content_hash: 2 };
+        assert!(read_cache(Path::new("/nonexistent/dir/nope.mppc"), &fp).is_err());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_sources() {
+        let a = HydroNet::new(64, 7);
+        let b = HydroNet::new(64, 8); // same count, different seed
+        let c = HydroNet::new(65, 7); // different count
+        let fa = fingerprint(&a).unwrap();
+        assert_eq!(fa, fingerprint(&a).unwrap(), "fingerprint must be deterministic");
+        assert_ne!(fa, fingerprint(&b).unwrap(), "seed change must change the fingerprint");
+        assert_ne!(fa, fingerprint(&c).unwrap(), "count change must change the fingerprint");
+        assert_eq!(fa.molecules, 64);
+    }
+
+    #[test]
+    fn fingerprint_survives_a_panicking_probe_record() {
+        // A corrupt record at a probed index (0 and n-1 are always
+        // probed) must yield Err, not a panic — a crash here would abort
+        // plane construction, defeating the per-record quarantine.
+        struct Corrupt(HydroNet);
+        impl crate::datasets::MoleculeSource for Corrupt {
+            fn len(&self) -> usize {
+                self.0.len()
+            }
+            fn get(&self, idx: usize) -> crate::graph::Molecule {
+                assert!(idx != 0, "synthetic corrupt record");
+                self.0.get(idx)
+            }
+            fn n_atoms(&self, idx: usize) -> usize {
+                self.0.n_atoms(idx)
+            }
+        }
+        let src = Corrupt(HydroNet::new(16, 3));
+        let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| fingerprint(&src)));
+        let inner = got.expect("fingerprint must not panic");
+        assert!(inner.is_err(), "corrupt probe must surface as Err");
+    }
+
+    #[test]
+    fn probe_indices_cover_ends_without_duplicates() {
+        for n in [0usize, 1, 2, 5, 64, 1000] {
+            let idx = probe_indices(n, 8);
+            if n == 0 {
+                assert!(idx.is_empty());
+                continue;
+            }
+            assert_eq!(idx.first(), Some(&0));
+            assert_eq!(idx.last(), Some(&(n - 1)));
+            assert!(idx.windows(2).all(|w| w[0] < w[1]), "{idx:?} not strictly increasing");
+            assert!(idx.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn writer_rejects_inconsistent_images() {
+        let mut img = sample_image(4);
+        img.arena.offsets.pop();
+        assert!(write_cache(&tmppath("badimg"), &img).is_err());
+        let mut img = sample_image(4);
+        img.fingerprint.molecules = 9;
+        assert!(write_cache(&tmppath("badimg2"), &img).is_err());
+    }
+}

@@ -1,5 +1,6 @@
 //! Epoch-invariant prepared-source subsystem: a SoA molecule arena plus a
-//! memoized edge-topology cache, shared across epochs *and* sessions.
+//! memoized edge-topology cache, shared across epochs *and* sessions —
+//! and, via `datasets::persist`, across **processes**.
 //!
 //! The paper's host pipeline redoes its two most expensive per-molecule
 //! steps — materializing the molecule (`MoleculeSource::get`) and building
@@ -11,15 +12,24 @@
 //!
 //! * **SoA arena** — molecules are materialized segment-at-a-time into
 //!   contiguous structure-of-arrays storage: CSR-style offsets plus flat
-//!   `z` (pre-widened to `i32`, the batch tensor dtype) and `pos` spans.
-//!   Steady-state assembly is then a handful of bulk `copy_from_slice`
-//!   calls per molecule instead of per-atom scalar writes, and zero heap
+//!   `z` (at source width, `u8`) and `pos` spans. Steady-state assembly
+//!   is then bulk span copies per molecule — a single widening pass for
+//!   `z`, straight `copy_from_slice` for everything else — and zero heap
 //!   allocation.
 //! * **Edge topology cache** — one [`EdgeTopology`] per `(r_cut, k_max)`
 //!   parameterization memoizes the per-molecule edge lists. Sessions with
 //!   different cutoffs get *different* topologies keyed by their exact
 //!   parameters, so a serving tenant with a tighter cutoff can never be
 //!   served another tenant's edges (the coherency rule below).
+//! * **Disk persistence** — [`save`](PreparedSource::save) serializes the
+//!   arena and every memoized topology into the versioned, checksummed
+//!   format of `datasets::persist`, and
+//!   [`load_or_wrap`](PreparedSource::load_or_wrap) reconstructs a fully
+//!   warm prepared source from that file with zero recomputation — so
+//!   epoch 1 of a *fresh process* runs at warm-epoch speed. A stale
+//!   (fingerprint-mismatched), truncated, or corrupt cache file is
+//!   rejected by the format's validation ladder and silently falls back
+//!   to the cold path: a bad cache can cost time, never correctness.
 //!
 //! # Cache-sharing / coherency rules across sessions
 //!
@@ -28,7 +38,8 @@
 //!   generators, the disk `Store`, and any cache over them). The arena
 //!   and edge lists are write-once (`OnceLock`) and never invalidated —
 //!   there is nothing to invalidate when the underlying data cannot
-//!   change.
+//!   change. The on-disk cache inherits this via the source fingerprint:
+//!   different data ⇒ different fingerprint ⇒ rebuild.
 //! * All sessions of a [`DataPlane`](crate::coordinator::DataPlane) that
 //!   stream the plane's *default* source share one `PreparedSource` via
 //!   `Arc`: epoch 2 of a training session — or the first pass of a new
@@ -45,28 +56,43 @@
 //!   winner finishes — results are computed exactly once and the arena is
 //!   never observed partially built.
 //!
-//! Memory: the arena holds `z` as `i32` (4x the `u8` source width) to keep
-//! the assembly path a straight `memcpy` into the batch tensors; at the
-//! paper's 500K-subset scale this is ~115 MB — far below the materialized
-//! `Molecule` churn it replaces. Hit/miss/byte counters are exposed via
-//! [`PreparedSource::stats`] and surfaced per-plane through
-//! `DataPlane::prepared_stats` and `bench_pipeline`'s assembly section.
+//! # Corrupt records: per-record quarantine
+//!
+//! A source whose `get` panics for one record (a torn store entry, a
+//! generator assert) no longer poisons its whole 64-molecule segment:
+//! the segment build catches the panic, stores a zero-atom placeholder,
+//! and marks that one molecule *quarantined*. Assemblies touching the
+//! quarantined molecule fail (the worker's panic containment turns the
+//! re-raised panic into a per-batch error delivery, exactly as before);
+//! every other molecule of the segment — and every batch that avoids the
+//! bad record — streams normally. Quarantined records are counted in
+//! [`PreparedStats::quarantined`], and [`save`](PreparedSource::save)
+//! refuses to persist a cache containing any (a corrupt dataset should
+//! be fixed, not cached).
+//!
+//! Memory: the arena holds `z` at source width (`u8`); the batcher widens
+//! to the batch tensor dtype (`i32`) in its copy pass, so the arena — and
+//! the on-disk cache file — stay 4× smaller than the widened layout at
+//! identical steady-state assembly cost (the widen loop vectorizes).
+//! Hit/miss/byte counters are exposed via [`PreparedSource::stats`] and
+//! surfaced per-plane through `DataPlane::prepared_stats` and
+//! `bench_pipeline`'s assembly/persist sections.
 
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
+use anyhow::{bail, Result};
+
+use crate::datasets::persist::{
+    fingerprint, read_cache, write_cache, ArenaImage, CacheImage, TopologyImage,
+};
 use crate::datasets::MoleculeSource;
 use crate::graph::{knn_edges, EdgeList, Molecule};
 
 /// Molecules per arena segment. A cold access materializes its whole
 /// segment (amortizing lock traffic and keeping spans contiguous); with
 /// the paper's 9–90-atom molecules a segment is a few tens of KB.
-///
-/// Granularity tradeoff: larger segments amortize better but widen the
-/// blast radius of a corrupt record — a source whose `get` panics poisons
-/// assembly for every batch touching that record's *segment* (the panic
-/// surfaces as per-batch error deliveries, exactly like a direct `get`
-/// panic did pre-arena; healthy segments keep streaming).
 const SEGMENT_MOLECULES: usize = 64;
 
 /// One contiguous SoA slab covering `SEGMENT_MOLECULES` molecules.
@@ -74,24 +100,36 @@ struct Segment {
     /// CSR offsets local to the segment: molecule `i` of the segment owns
     /// atoms `offsets[i]..offsets[i + 1]` of `z` (and 3x that of `pos`).
     offsets: Vec<u32>,
-    /// Atomic numbers, pre-widened to the batch tensor dtype.
-    z: Vec<i32>,
+    /// Atomic numbers at source width (the batcher widens on copy).
+    z: Vec<u8>,
     /// Flat positions, 3 contiguous `f32` per atom.
     pos: Vec<f32>,
     /// Per-molecule prediction target.
     energy: Vec<f32>,
+    /// Segment-local indices of quarantined records (sorted; normally
+    /// empty — a populated list means the source panicked materializing
+    /// those molecules and they hold zero-atom placeholders).
+    quarantined: Vec<u32>,
 }
 
 impl Segment {
     fn bytes(&self) -> u64 {
-        4 * (self.offsets.len() + self.z.len() + self.pos.len() + self.energy.len()) as u64
+        4 * (self.offsets.len() + self.pos.len() + self.energy.len() + self.quarantined.len())
+            as u64
+            + self.z.len() as u64
+    }
+
+    fn is_quarantined(&self, li: usize) -> bool {
+        !self.quarantined.is_empty() && self.quarantined.binary_search(&(li as u32)).is_ok()
     }
 }
 
 /// Borrowed view of one molecule's arena spans — the unit the batcher
 /// bulk-copies into a `HostBatch`.
 pub struct MoleculeView<'a> {
-    pub z: &'a [i32],
+    /// Atomic numbers at source width; the batcher widens to `i32` as it
+    /// copies into the batch tensor.
+    pub z: &'a [u8],
     /// Flat `[x, y, z]` triples; `pos.len() == 3 * z.len()`.
     pub pos: &'a [f32],
     pub energy: f32,
@@ -144,6 +182,12 @@ pub struct PreparedStats {
     pub edge_bytes: u64,
     /// Distinct `(r_cut, k_max)` topologies in the cache.
     pub topologies: usize,
+    /// Records whose source `get` panicked at materialization — each
+    /// poisons only its own molecule's assemblies.
+    pub quarantined: u64,
+    /// Whether this prepared source was reconstructed warm from a disk
+    /// cache (`load_or_wrap` hit) instead of built cold.
+    pub loaded_from_disk: bool,
 }
 
 impl PreparedStats {
@@ -159,7 +203,8 @@ impl PreparedStats {
 }
 
 /// Epoch-invariant prepared view of a `MoleculeSource`: SoA arena +
-/// memoized edge topologies (module docs above).
+/// memoized edge topologies, optionally persisted to / restored from
+/// disk (module docs above).
 pub struct PreparedSource {
     inner: Arc<dyn MoleculeSource>,
     segments: Vec<OnceLock<Segment>>,
@@ -167,6 +212,12 @@ pub struct PreparedSource {
     /// ever requested (in practice 1–2), so a linear scan under a short
     /// lock beats a map.
     topologies: Mutex<Vec<(EdgeKey, Arc<EdgeTopology>)>>,
+    /// Reconstructed warm from a disk cache (vs built cold)?
+    loaded_from_disk: bool,
+    /// Topology count of the on-disk image this source last loaded or
+    /// saved (`usize::MAX` = no known image) — `disk_current` compares
+    /// against the live count to skip redundant re-saves.
+    disk_topologies: std::sync::atomic::AtomicUsize,
     segments_built: AtomicU64,
     arena_bytes: AtomicU64,
     molecule_hits: AtomicU64,
@@ -175,6 +226,7 @@ pub struct PreparedSource {
     edge_misses: AtomicU64,
     edge_entries: AtomicU64,
     edge_bytes: AtomicU64,
+    quarantined: AtomicU64,
 }
 
 impl PreparedSource {
@@ -186,6 +238,8 @@ impl PreparedSource {
             inner,
             segments,
             topologies: Mutex::new(Vec::new()),
+            loaded_from_disk: false,
+            disk_topologies: std::sync::atomic::AtomicUsize::new(usize::MAX),
             segments_built: AtomicU64::new(0),
             arena_bytes: AtomicU64::new(0),
             molecule_hits: AtomicU64::new(0),
@@ -194,12 +248,214 @@ impl PreparedSource {
             edge_misses: AtomicU64::new(0),
             edge_entries: AtomicU64::new(0),
             edge_bytes: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
         }
     }
 
     /// Convenience for tests and one-shot callers.
     pub fn wrap<S: MoleculeSource + 'static>(inner: S) -> PreparedSource {
         PreparedSource::new(Arc::new(inner))
+    }
+
+    /// Reconstruct a fully warm prepared source from the cache file at
+    /// `path`, validating it against `inner`'s fingerprint. Zero
+    /// recomputation on success: every segment is resident and every
+    /// persisted topology entry is populated, so the first session of a
+    /// fresh process streams at warm-epoch speed. Errors (missing, stale,
+    /// truncated, corrupt) are returned for callers that want the reason;
+    /// most callers use [`load_or_wrap`](PreparedSource::load_or_wrap).
+    pub fn load(inner: Arc<dyn MoleculeSource>, path: &Path) -> Result<PreparedSource> {
+        // Missing-file fast path BEFORE fingerprinting: the common cold
+        // start (cache_dir configured, nothing persisted yet) must not
+        // pay the probe reads (disk I/O on Store-backed sources) just to
+        // discover there is no file to validate against.
+        if !path.exists() {
+            bail!("no prepared cache at {path:?}");
+        }
+        let fp = fingerprint(inner.as_ref())?;
+        let image = read_cache(path, &fp)?;
+        let n = inner.len();
+        let n_segments = n.div_ceil(SEGMENT_MOLECULES);
+        let mut segments = Vec::with_capacity(n_segments);
+        let mut arena_bytes = 0u64;
+        for si in 0..n_segments {
+            let lo = si * SEGMENT_MOLECULES;
+            let hi = (lo + SEGMENT_MOLECULES).min(n);
+            let base = image.arena.offsets[lo];
+            let offsets: Vec<u32> =
+                (lo..=hi).map(|i| (image.arena.offsets[i] - base) as u32).collect();
+            let (a, b) = (base as usize, image.arena.offsets[hi] as usize);
+            let seg = Segment {
+                offsets,
+                z: image.arena.z[a..b].to_vec(),
+                pos: image.arena.pos[a * 3..b * 3].to_vec(),
+                energy: image.arena.energy[lo..hi].to_vec(),
+                quarantined: Vec::new(),
+            };
+            arena_bytes += seg.bytes();
+            segments.push(OnceLock::from(seg));
+        }
+        let mut topologies = Vec::with_capacity(image.topologies.len());
+        let mut edge_entries = 0u64;
+        let mut edge_bytes = 0u64;
+        for t in &image.topologies {
+            let mut slots = Vec::with_capacity(n);
+            for idx in 0..n {
+                let (a, b) = (t.edge_offsets[idx] as usize, t.edge_offsets[idx + 1] as usize);
+                let e = EdgeList { src: t.src[a..b].to_vec(), dst: t.dst[a..b].to_vec() };
+                edge_bytes += 8 * e.len() as u64;
+                edge_entries += 1;
+                slots.push(OnceLock::from(Box::new(e)));
+            }
+            let key = EdgeKey { r_cut_bits: t.r_cut_bits, k_max: t.k_max as usize };
+            let topo = EdgeTopology {
+                r_cut: f32::from_bits(t.r_cut_bits),
+                k_max: key.k_max,
+                slots,
+            };
+            topologies.push((key, Arc::new(topo)));
+        }
+        let loaded_topologies = topologies.len();
+        Ok(PreparedSource {
+            inner,
+            segments,
+            topologies: Mutex::new(topologies),
+            loaded_from_disk: true,
+            disk_topologies: std::sync::atomic::AtomicUsize::new(loaded_topologies),
+            segments_built: AtomicU64::new(n_segments as u64),
+            arena_bytes: AtomicU64::new(arena_bytes),
+            molecule_hits: AtomicU64::new(0),
+            molecule_misses: AtomicU64::new(0),
+            edge_hits: AtomicU64::new(0),
+            edge_misses: AtomicU64::new(0),
+            edge_entries: AtomicU64::new(edge_entries),
+            edge_bytes: AtomicU64::new(edge_bytes),
+            quarantined: AtomicU64::new(0),
+        })
+    }
+
+    /// [`load`](PreparedSource::load) with the cold fallback folded in:
+    /// a warm prepared source when the cache at `path` is present, valid,
+    /// and matches `inner`'s fingerprint; otherwise a cold wrapper that
+    /// rebuilds lazily exactly as if no cache existed. This is the
+    /// correctness boundary of the persistence layer — a stale or
+    /// damaged file can never change the batch stream, only its
+    /// temperature.
+    pub fn load_or_wrap(inner: Arc<dyn MoleculeSource>, path: &Path) -> PreparedSource {
+        match PreparedSource::load(Arc::clone(&inner), path) {
+            Ok(warm) => warm,
+            Err(_) => PreparedSource::new(inner),
+        }
+    }
+
+    /// Serialize the arena plus every memoized edge topology to `path`
+    /// (atomically — temp file + rename). Materializes any not-yet-built
+    /// segments and completes partially populated topologies first, so
+    /// the persisted cache is *fully* warm: a process that loads it never
+    /// constructs a molecule or an edge list for the persisted
+    /// parameterizations. Refuses to persist quarantined (corrupt)
+    /// records. Returns the bytes written.
+    pub fn save(&self, path: &Path) -> Result<u64> {
+        for si in 0..self.segments.len() {
+            let _ = self.segment(si);
+        }
+        let q = self.quarantined.load(Ordering::Relaxed);
+        if q > 0 {
+            bail!("refusing to persist a prepared cache with {q} quarantined record(s)");
+        }
+        let n = self.inner.len();
+        // Flatten the per-segment SoA slabs into one global image: spans
+        // concatenate directly, and the global CSR accumulates each
+        // molecule's local extent.
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0u64);
+        let mut z = Vec::new();
+        let mut pos = Vec::new();
+        let mut energy = Vec::with_capacity(n);
+        for si in 0..self.segments.len() {
+            let seg = self.segments[si].get().expect("segment just materialized");
+            z.extend_from_slice(&seg.z);
+            pos.extend_from_slice(&seg.pos);
+            energy.extend_from_slice(&seg.energy);
+            for w in seg.offsets.windows(2) {
+                offsets.push(offsets.last().unwrap() + (w[1] - w[0]) as u64);
+            }
+        }
+
+        let snapshot: Vec<(EdgeKey, Arc<EdgeTopology>)> =
+            self.topologies.lock().unwrap().clone();
+        let mut topologies = Vec::with_capacity(snapshot.len());
+        for (key, topo) in &snapshot {
+            if key.k_max > u32::MAX as usize {
+                bail!("k_max {} too large to persist", key.k_max);
+            }
+            let mut edge_offsets = Vec::with_capacity(n + 1);
+            edge_offsets.push(0u64);
+            let mut src = Vec::new();
+            let mut dst = Vec::new();
+            for idx in 0..n {
+                // `edges` completes any entry this topology is missing.
+                let (e, _) = self.edges(topo, idx);
+                src.extend_from_slice(&e.src);
+                dst.extend_from_slice(&e.dst);
+                edge_offsets.push(src.len() as u64);
+            }
+            topologies.push(TopologyImage {
+                r_cut_bits: key.r_cut_bits,
+                k_max: key.k_max as u32,
+                edge_offsets,
+                src,
+                dst,
+            });
+        }
+
+        let image = CacheImage {
+            fingerprint: fingerprint(self.inner.as_ref())?,
+            arena: ArenaImage { offsets, z, pos, energy },
+            topologies,
+        };
+        let bytes = write_cache(path, &image)?;
+        self.disk_topologies
+            .store(image.topologies.len(), Ordering::Relaxed);
+        Ok(bytes)
+    }
+
+    /// Does the last disk image this source loaded or saved still cover
+    /// everything — i.e. no topology has been memoized since? Always
+    /// `false` for a source that has never touched disk.
+    pub fn disk_current(&self) -> bool {
+        let known = self.disk_topologies.load(Ordering::Relaxed);
+        known != usize::MAX && self.topologies.lock().unwrap().len() == known
+    }
+
+    /// [`save`](PreparedSource::save), skipped when the known disk image
+    /// is still current **and** the file is actually still there (a
+    /// cleanup job deleting the cache mid-run must not turn an exit
+    /// save into a no-op). This is THE skip policy — every save path
+    /// (`DataPlane::save_prepared`, the `prepare` CLI) goes through it,
+    /// so the rule cannot drift between call sites. `Ok(None)` =
+    /// skipped; `Ok(Some(bytes))` = written.
+    pub fn save_if_stale(&self, path: &Path) -> Result<Option<u64>> {
+        if self.disk_current() && path.exists() {
+            return Ok(None);
+        }
+        self.save(path).map(Some)
+    }
+
+    /// Materialize the whole arena and the full `(r_cut, k_max)` edge
+    /// topology (skipping quarantined records), e.g. ahead of a
+    /// [`save`](PreparedSource::save) from the offline `prepare` path.
+    pub fn warm(&self, r_cut: f32, k_max: usize) -> PreparedStats {
+        for si in 0..self.segments.len() {
+            let _ = self.segment(si);
+        }
+        let topo = self.topology(r_cut, k_max);
+        for idx in 0..self.inner.len() {
+            if !self.is_quarantined(idx) {
+                let _ = self.edges(&topo, idx);
+            }
+        }
+        self.stats()
     }
 
     /// The wrapped source (e.g. to share it with an eager planner).
@@ -228,13 +484,27 @@ impl PreparedSource {
             let mut z = Vec::new();
             let mut pos = Vec::new();
             let mut energy = Vec::with_capacity(n);
+            let mut quarantined = Vec::new();
             for idx in lo..hi {
-                let m = self.inner.get(idx);
-                z.extend(m.z.iter().map(|&v| v as i32));
-                for p in &m.pos {
-                    pos.extend_from_slice(p);
+                // Per-record quarantine: a panicking `get` (corrupt
+                // record) poisons only this molecule — it gets a
+                // zero-atom placeholder and a quarantine mark; its
+                // segment neighbors materialize normally.
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    self.inner.get(idx)
+                })) {
+                    Ok(m) => {
+                        z.extend_from_slice(&m.z);
+                        for p in &m.pos {
+                            pos.extend_from_slice(p);
+                        }
+                        energy.push(m.energy);
+                    }
+                    Err(_) => {
+                        quarantined.push((idx - lo) as u32);
+                        energy.push(0.0);
+                    }
                 }
-                energy.push(m.energy);
                 offsets.push(z.len() as u32);
             }
             // Drop geometric-growth slack before publishing: the segment
@@ -243,24 +513,37 @@ impl PreparedSource {
             // (and make `bytes()`, which is length-based, under-report).
             z.shrink_to_fit();
             pos.shrink_to_fit();
-            Segment { offsets, z, pos, energy }
+            Segment { offsets, z, pos, energy, quarantined }
         });
         if built {
             self.segments_built.fetch_add(1, Ordering::Relaxed);
             self.arena_bytes.fetch_add(seg.bytes(), Ordering::Relaxed);
             self.molecule_misses.fetch_add(1, Ordering::Relaxed);
+            self.quarantined.fetch_add(seg.quarantined.len() as u64, Ordering::Relaxed);
         } else {
             self.molecule_hits.fetch_add(1, Ordering::Relaxed);
         }
         seg
     }
 
+    /// Is molecule `idx` quarantined? (Materializes its segment.)
+    fn is_quarantined(&self, idx: usize) -> bool {
+        self.segment(idx / SEGMENT_MOLECULES).is_quarantined(idx % SEGMENT_MOLECULES)
+    }
+
     /// Arena view of molecule `idx` — contiguous spans the batcher copies
-    /// with `copy_from_slice`. Materializes the segment on first touch.
+    /// in bulk. Materializes the segment on first touch. Panics if the
+    /// record is quarantined (the data-plane's per-batch panic
+    /// containment converts that into an error delivery for exactly the
+    /// batches that touch the corrupt molecule).
     pub fn molecule(&self, idx: usize) -> MoleculeView<'_> {
         assert!(idx < self.inner.len(), "index {idx} out of range {}", self.inner.len());
         let seg = self.segment(idx / SEGMENT_MOLECULES);
         let li = idx % SEGMENT_MOLECULES;
+        assert!(
+            !seg.is_quarantined(li),
+            "molecule {idx} is quarantined: its source record panicked at materialization"
+        );
         let (a, b) = (seg.offsets[li] as usize, seg.offsets[li + 1] as usize);
         MoleculeView {
             z: &seg.z[a..b],
@@ -332,7 +615,7 @@ impl PreparedSource {
     fn rebuild_molecule(&self, idx: usize) -> Molecule {
         let v = self.molecule(idx);
         Molecule::new(
-            v.z.iter().map(|&z| z as u8).collect(),
+            v.z.to_vec(),
             v.pos.chunks_exact(3).map(|c| [c[0], c[1], c[2]]).collect(),
             v.energy,
         )
@@ -351,6 +634,8 @@ impl PreparedSource {
             edge_entries: self.edge_entries.load(Ordering::Relaxed),
             edge_bytes: self.edge_bytes.load(Ordering::Relaxed),
             topologies: self.topologies.lock().unwrap().len(),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+            loaded_from_disk: self.loaded_from_disk,
         }
     }
 }
@@ -369,11 +654,17 @@ impl MoleculeSource for PreparedSource {
 
     /// O(1) from the arena offsets once the segment is resident; cold
     /// indices delegate to the inner fast path so epoch-1 *planning* stays
-    /// O(shard) and never forces materialization.
+    /// O(shard) and never forces materialization. Quarantined records
+    /// also delegate — their placeholder is zero atoms, but the packer
+    /// should plan the real size so plans are stable whether or not the
+    /// corrupt record has been hit yet.
     fn n_atoms(&self, idx: usize) -> usize {
         match self.segments[idx / SEGMENT_MOLECULES].get() {
             Some(seg) => {
                 let li = idx % SEGMENT_MOLECULES;
+                if seg.is_quarantined(li) {
+                    return self.inner.n_atoms(idx);
+                }
                 (seg.offsets[li + 1] - seg.offsets[li]) as usize
             }
             None => self.inner.n_atoms(idx),
@@ -386,6 +677,12 @@ mod tests {
     use super::*;
     use crate::datasets::HydroNet;
 
+    fn tmppath(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("molpack-prepared-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}.mppc", std::process::id()))
+    }
+
     #[test]
     fn arena_views_match_source_molecules() {
         let ds = HydroNet::new(150, 7); // 3 segments of 64
@@ -396,7 +693,7 @@ mod tests {
             assert_eq!(v.n_atoms(), want.n_atoms(), "idx {idx}");
             assert_eq!(v.energy, want.energy);
             for a in 0..want.n_atoms() {
-                assert_eq!(v.z[a], want.z[a] as i32);
+                assert_eq!(v.z[a], want.z[a]);
                 assert_eq!(&v.pos[a * 3..a * 3 + 3], &want.pos[a]);
             }
             // and the owned compat path round-trips exactly
@@ -407,6 +704,8 @@ mod tests {
         assert_eq!(s.segments_built, 3);
         assert!(s.arena_bytes > 0);
         assert_eq!(s.molecules, 150);
+        assert_eq!(s.quarantined, 0);
+        assert!(!s.loaded_from_disk);
     }
 
     #[test]
@@ -507,5 +806,184 @@ mod tests {
         let s = prep.stats();
         assert_eq!(s.segments_built, 2, "segments built more than once");
         assert_eq!(s.edge_entries, 96, "edge entry duplicated or lost");
+    }
+
+    // ------------------------------------------------------ persistence
+
+    #[test]
+    fn save_then_load_is_warm_and_identical() {
+        let ds = HydroNet::new(150, 7);
+        let path = tmppath("warmload");
+        let cold = PreparedSource::wrap(ds.clone());
+        cold.warm(6.0, 12);
+        assert!(!cold.disk_current(), "no disk image exists before the first save");
+        let bytes = cold.save(&path).unwrap();
+        assert!(bytes > 0);
+        assert!(cold.disk_current(), "a just-saved source matches its disk image");
+
+        let warm = PreparedSource::load(Arc::new(ds.clone()), &path).unwrap();
+        let s = warm.stats();
+        assert!(s.loaded_from_disk);
+        assert!(warm.disk_current());
+        assert_eq!(s.segments_built as usize, s.segments_total, "all segments resident");
+        assert_eq!(s.edge_entries, 150, "all edge entries resident");
+        assert_eq!(s.molecule_misses + s.edge_misses, 0);
+
+        // every molecule and every edge list is bitwise what the cold
+        // path computes, with zero recomputation
+        let topo = warm.topology(6.0, 12);
+        for idx in 0..150 {
+            let want = ds.get(idx);
+            let v = warm.molecule(idx);
+            assert_eq!(v.z, &want.z[..], "idx {idx}");
+            assert_eq!(v.energy.to_bits(), want.energy.to_bits());
+            for a in 0..want.n_atoms() {
+                assert_eq!(&v.pos[a * 3..a * 3 + 3], &want.pos[a]);
+            }
+            let (e, hit) = warm.edges(&topo, idx);
+            assert!(hit, "loaded topology must be fully populated (idx {idx})");
+            assert_eq!(*e, crate::graph::knn_edges(&want, 6.0, 12));
+        }
+        assert_eq!(warm.stats().edge_misses, 0, "load recomputed edges");
+        assert_eq!(warm.stats().segments_built as usize, warm.stats().segments_total);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn save_persists_every_memoized_topology() {
+        let ds = HydroNet::new(40, 9);
+        let path = tmppath("multitopo");
+        let cold = PreparedSource::wrap(ds.clone());
+        cold.warm(6.0, 12);
+        // a second, only partially touched topology is completed at save
+        let t3 = cold.topology(3.0, 12);
+        let _ = cold.edges(&t3, 0);
+        cold.save(&path).unwrap();
+
+        let warm = PreparedSource::load(Arc::new(ds.clone()), &path).unwrap();
+        assert_eq!(warm.stats().topologies, 2);
+        assert_eq!(warm.stats().edge_entries, 2 * 40, "partial topology not completed");
+        let t3 = warm.topology(3.0, 12);
+        let (e, hit) = warm.edges(&t3, 17);
+        assert!(hit);
+        assert_eq!(*e, crate::graph::knn_edges(&ds.get(17), 3.0, 12));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_or_wrap_falls_back_cold_on_missing_stale_or_truncated() {
+        let ds = HydroNet::new(96, 5);
+        let path = tmppath("fallback");
+        // missing file: cold, and streaming still works
+        let prep = PreparedSource::load_or_wrap(Arc::new(ds.clone()), &path);
+        assert!(!prep.stats().loaded_from_disk);
+        assert_eq!(prep.molecule(10).n_atoms(), ds.n_atoms(10));
+
+        // valid file, wrong source (different seed): stale ⇒ cold
+        let cold = PreparedSource::wrap(ds.clone());
+        cold.warm(6.0, 12);
+        cold.save(&path).unwrap();
+        let other = HydroNet::new(96, 6);
+        let stale = PreparedSource::load_or_wrap(Arc::new(other.clone()), &path);
+        assert!(!stale.stats().loaded_from_disk, "stale cache must not load");
+        assert_eq!(stale.molecule(10).n_atoms(), other.n_atoms(10));
+
+        // truncated file: cold, not an error
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        let trunc = PreparedSource::load_or_wrap(Arc::new(ds.clone()), &path);
+        assert!(!trunc.stats().loaded_from_disk, "truncated cache must not load");
+        assert_eq!(trunc.molecule(10).n_atoms(), ds.n_atoms(10));
+        // and the matching-source load still works on the intact file
+        std::fs::write(&path, &full).unwrap();
+        assert!(PreparedSource::load_or_wrap(Arc::new(ds), &path).stats().loaded_from_disk);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn disk_current_detects_new_topologies() {
+        let ds = HydroNet::new(32, 3);
+        let path = tmppath("current");
+        let cold = PreparedSource::wrap(ds.clone());
+        cold.warm(6.0, 12);
+        cold.save(&path).unwrap();
+        let warm = PreparedSource::load(Arc::new(ds), &path).unwrap();
+        assert!(warm.disk_current());
+        let _ = warm.topology(6.0, 12); // existing key: still current
+        assert!(warm.disk_current());
+        let _ = warm.topology(4.5, 12); // new parameterization
+        assert!(!warm.disk_current(), "new topology must mark the disk cache incomplete");
+        std::fs::remove_file(path).ok();
+    }
+
+    // ------------------------------------------------------- quarantine
+
+    /// Source whose `get` panics for exactly one index.
+    #[derive(Clone)]
+    struct Panicky(HydroNet, usize);
+
+    impl MoleculeSource for Panicky {
+        fn len(&self) -> usize {
+            self.0.len()
+        }
+        fn get(&self, idx: usize) -> Molecule {
+            assert!(idx != self.1, "synthetic corrupt record");
+            self.0.get(idx)
+        }
+        fn n_atoms(&self, idx: usize) -> usize {
+            self.0.n_atoms(idx)
+        }
+    }
+
+    #[test]
+    fn corrupt_record_quarantines_only_itself() {
+        let ds = HydroNet::new(96, 5);
+        let prep = PreparedSource::wrap(Panicky(ds.clone(), 70));
+        // neighbors in the same segment (64..96) materialize fine
+        for idx in [64usize, 69, 71, 95] {
+            let v = prep.molecule(idx);
+            assert_eq!(v.n_atoms(), ds.n_atoms(idx), "healthy neighbor {idx} corrupted");
+            assert_eq!(v.z, &ds.get(idx).z[..]);
+        }
+        let s = prep.stats();
+        assert_eq!(s.quarantined, 1);
+        assert_eq!(s.segments_built, 1, "segment must materialize despite the bad record");
+        // planning still sees the real size (delegated to the inner source)
+        assert_eq!(prep.n_atoms(70), ds.n_atoms(70));
+        // the quarantined molecule itself panics (the plane converts this
+        // into a per-batch error delivery)
+        let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prep.molecule(70);
+        }));
+        assert!(hit.is_err(), "quarantined molecule must not serve a placeholder");
+    }
+
+    #[test]
+    fn load_or_wrap_with_corrupt_probe_record_falls_back_cold_not_panic() {
+        // A cache file exists, but the source's record 0 (always a
+        // fingerprint probe) is corrupt: fingerprinting must surface as
+        // a load error -> cold fallback, never a construction panic —
+        // streaming then quarantines the record as usual.
+        let ds = HydroNet::new(64, 5);
+        let path = tmppath("corrupt-probe");
+        let healthy = PreparedSource::wrap(ds.clone());
+        healthy.warm(6.0, 12);
+        healthy.save(&path).unwrap();
+        let prep = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            PreparedSource::load_or_wrap(Arc::new(Panicky(ds.clone(), 0)), &path)
+        }))
+        .expect("plane-construction path must not panic on a corrupt probe");
+        assert!(!prep.stats().loaded_from_disk);
+        assert_eq!(prep.molecule(1).n_atoms(), ds.n_atoms(1), "healthy neighbor intact");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn save_refuses_quarantined_records() {
+        let prep = PreparedSource::wrap(Panicky(HydroNet::new(64, 5), 10));
+        prep.warm(6.0, 12);
+        assert_eq!(prep.stats().quarantined, 1);
+        let err = prep.save(&tmppath("quarantine")).unwrap_err();
+        assert!(err.to_string().contains("quarantined"), "{err}");
     }
 }

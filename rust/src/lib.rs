@@ -13,19 +13,25 @@
 //!   queues, background sweeps — each opened as a
 //!   `coordinator::Session` with a `JobSpec` (source, packer, shard
 //!   size, ordering, `QosClass`). Worker dispatch is weighted by QoS
-//!   class (Serving 6 : Training 3 : Background 1) and every session
-//!   has bounded admission credits, so a slow or abandoned consumer can
-//!   never park the shared pool; buffers recycle zero-allocation
-//!   through `BatchLease`s with dirty-region resets, and assembly reads
-//!   an epoch-invariant prepared source (`datasets::PreparedSource`: SoA
+//!   class (default Serving 6 : Training 3 : Background 1, configurable
+//!   via `PipelineConfig::qos_weights`) and every session has bounded
+//!   admission credits, so a slow or abandoned consumer can never park
+//!   the shared pool; buffers recycle zero-allocation through
+//!   `BatchLease`s with dirty-region resets, and assembly reads an
+//!   epoch-invariant prepared source (`datasets::PreparedSource`: SoA
 //!   molecule arena + memoized edge topologies shared across epochs and
-//!   sessions), so warm-epoch batch prep is memcpy-bound.
-//!   *Migration note:* the single-tenant
-//!   `DataPlane::start_epoch(epoch)` is deprecated for one release —
-//!   replace it with `plane.open_session(JobSpec::training(epoch))`,
-//!   which streams the identical ordered batch sequence and adds
-//!   per-session metrics (`queue_wait`, `assembly_time`,
-//!   `credits_blocked`).
+//!   sessions), so warm-epoch batch prep is memcpy-bound. The prepared
+//!   cache also persists across *processes* (`datasets::persist`, the
+//!   paper's "compressed serialized binary representation" extended to
+//!   derived topology): give the plane a `cache_dir` — or build one
+//!   offline with `molpack prepare` — and epoch 1 of a fresh process
+//!   streams warm from a versioned, checksummed, fingerprint-validated
+//!   cache file.
+//!   *Migration note:* the deprecated single-tenant
+//!   `DataPlane::start_epoch(epoch)` wrapper has been removed after its
+//!   one promised release — use
+//!   `plane.open_session(JobSpec::training(epoch))`, which streams the
+//!   identical ordered batch sequence.
 //! * **L2 (python/compile/model.py)** — SchNet forward/backward in JAX,
 //!   AOT-lowered to HLO text artifacts at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute

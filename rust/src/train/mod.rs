@@ -10,6 +10,12 @@
 //! drops after `train_step` — the steady-state loop does no hot-path
 //! allocation. Early epoch exits (`max_batches_per_epoch`) cancel the
 //! in-flight session instead of leaking detached worker threads.
+//!
+//! When `PipelineConfig::cache_dir` is set, the plane restores the
+//! persistent prepared cache at construction (epoch 1 of a fresh
+//! process runs warm) and this loop saves it back after the last epoch,
+//! so each dataset pays its cold materialization once per *cache*, not
+//! once per process.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -120,6 +126,10 @@ pub fn train<S: MoleculeSource + 'static>(
             edge_cache_hit_rate: metrics.edge_cache_hit_rate(),
         });
     }
+    // With a cache_dir, persist the prepared cache so the *next* process
+    // training (or serving) this dataset starts epoch 1 warm (non-fatal,
+    // announced — the shared exit-path helper).
+    plane.persist_prepared_on_exit();
     Ok(records)
 }
 

@@ -241,6 +241,81 @@ fn serving_session_completes_while_training_is_mid_epoch() {
     assert!(training.metrics().batches >= 4);
 }
 
+/// Full storage-path persistence round trip, no engine needed: molecules
+/// written to a disk `Store`, a plane over that store persists its
+/// prepared cache next to it, and a second plane (fresh-process proxy)
+/// restores the cache and streams a bitwise-identical epoch with zero
+/// recomputation — the paper's "compressed serialized binary
+/// representation" covering raw records *and* derived topology in one
+/// directory.
+#[test]
+fn prepared_cache_persists_next_to_the_store() {
+    use molpack::datasets::CACHE_FILE;
+    use molpack::runtime::BatchGeometry;
+
+    let g = BatchGeometry {
+        n_nodes: 192,
+        n_edges: 2304,
+        n_graphs: 8,
+        packs_per_batch: 2,
+        nodes_per_pack: 96,
+        edges_per_pack: 1152,
+        graphs_per_pack: 4,
+    };
+    let n = 80;
+    let gen = HydroNet::new(n, 33);
+    // own temp ROOT: concurrent tests remove_dir_all the shared tmpdir()
+    // wholesale, which would take any subdirectory of it down mid-run
+    let dir = std::env::temp_dir().join(format!("molpack-int-persist-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let store_path = dir.join("corpus.mpks");
+    let mols: Vec<_> = (0..n).map(|i| gen.get(i)).collect();
+    write_store(&store_path, &mols).unwrap();
+
+    let cfg = PipelineConfig {
+        workers: 2,
+        shard_size: 16,
+        cache_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let fingerprint = |b: &molpack::runtime::HostBatch| {
+        (b.z.clone(), b.src.clone(), b.dst.clone(), b.pos.iter().map(|p| p.to_bits()).collect::<Vec<_>>())
+    };
+
+    // pass 1: cold plane over the store; persist on the way out
+    let plane = DataPlane::new(
+        Arc::new(Store::open(&store_path).unwrap()),
+        Batcher::new(g, 6.0),
+        cfg.clone(),
+    );
+    assert!(!plane.prepared_stats().loaded_from_disk);
+    let cold: Vec<_> = plane
+        .open_session(JobSpec::training(2))
+        .map(|b| fingerprint(&b.unwrap()))
+        .collect();
+    plane.save_prepared().unwrap().expect("first save must write");
+    assert!(dir.join(CACHE_FILE).exists(), "cache must land next to the store");
+    drop(plane);
+
+    // pass 2: a fresh plane over a freshly opened store restores it
+    let plane = DataPlane::new(
+        Arc::new(Store::open(&store_path).unwrap()),
+        Batcher::new(g, 6.0),
+        cfg,
+    );
+    let s = plane.prepared_stats();
+    assert!(s.loaded_from_disk, "fresh plane must load the persisted cache");
+    let warm: Vec<_> = plane
+        .open_session(JobSpec::training(2))
+        .map(|b| fingerprint(&b.unwrap()))
+        .collect();
+    assert_eq!(cold, warm, "warm-from-disk stream diverged");
+    let s = plane.prepared_stats();
+    assert_eq!(s.molecule_misses, 0, "warm plane re-read store records");
+    assert_eq!(s.edge_misses, 0, "warm plane rebuilt edge lists");
+    std::fs::remove_dir_all(dir).ok();
+}
+
 /// The predict path answers every real graph slot and ignores padding.
 #[test]
 fn predict_respects_masks() {
