@@ -5,10 +5,17 @@
 #                     `serve`, the examples, and the artifact-gated tests
 #                     (they skip gracefully without it).
 #   make check        the CI gate: formatting, clippy (warnings are
-#                     errors), the test suite (including the persistence
-#                     round-trip / stale-cache / truncation tests in
-#                     datasets::persist, datasets::prepared, and
-#                     coordinator::dataplane), and bench compilation.
+#                     errors), the project lint gate (`molpack tidy`),
+#                     the test suite (including the persistence
+#                     round-trip / stale-cache / truncation / mutation-
+#                     fuzz tests in datasets::persist, datasets::prepared,
+#                     and coordinator::dataplane), the CI-sized race
+#                     explorer, and bench compilation.
+#   make lint         the tidy static-analysis pass alone (zero findings
+#                     or explicit `// tidy: allow(...)` invariants).
+#   make race         deterministic dispatcher race explorer at CI depth
+#                     (~10k seeded interleavings; a failure prints a
+#                     seed — replay it with MOLPACK_RACE_SEED=<seed>).
 #   make test         tests only.
 #   make bench-smoke  CI-sized acceptance sections of bench_pipeline:
 #                     assembly cold-vs-warm (>= 2x warm-epoch bar,
@@ -16,9 +23,9 @@
 #                     section (>= 1.5x warm-from-disk epoch-1 bar,
 #                     bitwise-identical stream, BENCH_persist.json).
 
-.PHONY: check fmt clippy test bench-build bench-smoke artifacts
+.PHONY: check fmt clippy lint test race bench-build bench-smoke artifacts
 
-check: fmt clippy test bench-build
+check: fmt clippy lint test race bench-build
 
 fmt:
 	cargo fmt --check
@@ -26,8 +33,14 @@ fmt:
 clippy:
 	cargo clippy --all-targets -- -D warnings
 
+lint:
+	cargo run -q -- tidy
+
 test:
 	cargo test -q
+
+race:
+	MOLPACK_RACE_SCHEDULES=10000 cargo test -q --test race
 
 # Benches must at least compile in CI even though they only run on demand.
 bench-build:

@@ -50,6 +50,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// A batcher assembling into `geometry` with neighbor cutoff `r_cut`.
     pub fn new(geometry: BatchGeometry, r_cut: f32) -> Self {
         Batcher { geometry, r_cut }
     }

@@ -53,12 +53,47 @@
 //! process is warm, and [`DataPlane::save_prepared`] writes one back.
 //! Cache counters surface via [`DataPlane::prepared_stats`] and
 //! per-session metrics.
+//!
+//! # Invariant catalog
+//!
+//! The correctness gate (`molpack tidy` + `tests/race.rs`, see
+//! ROADMAP "Correctness gate") enforces and explores these protocol
+//! invariants; `// tidy: allow(...)` comments in this crate cite them
+//! by name:
+//!
+//! * **credits** — a session's in-flight admissions (dispatched but not
+//!   yet received batches) never exceed its credit limit; the check and
+//!   the `in_flight` increment happen under one dispatcher lock
+//!   acquisition, never split. Every admission is balanced by exactly
+//!   one release (receive, cancelled-job abandon, or stream drop), so
+//!   in-flight returns to zero at quiescence — credits are never lost.
+//! * **reserved error slot** — each session's delivery channel is sized
+//!   `credits + 1`: one uncredited slot reserved for a single
+//!   plan-error report. At most one plan error is ever delivered per
+//!   session, so `try_send` on the channel cannot see `Full`.
+//! * **lease lifecycle** — a pooled `HostBatch` is leased to at most
+//!   one assembly at a time and returns to the pool exactly once (via
+//!   `BatchLease` drop or abandon); never pooled-and-leased, never
+//!   double-leased.
+//! * **dirty reset** — recycled buffers are zeroed only over the
+//!   previous fill's dirty region (the high-water mark), which must be
+//!   indistinguishable from a full reset when the next assembly reads.
+//! * **quarantine** — a molecule quarantined by a failed assembly stays
+//!   quarantined (membership is monotonic per plane lifetime).
+//!
+//! Locking discipline, enforced by the `lock-across-send` and
+//! `unwrap-in-hot-path` lints: no `MutexGuard` is held across a
+//! `send`/`notify_*` (lost-wakeup/priority-inversion hazard), and
+//! dispatcher/pool locks are poison-tolerant
+//! (`unwrap_or_else(PoisonError::into_inner)`) — a worker that panics
+//! mid-assembly reports through its job channel, and queue state stays
+//! consistent line-to-line, so surviving sessions keep streaming.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -349,7 +384,7 @@ impl Dispatcher {
     /// id-keyed queue map, independent of how many tenants share the
     /// lane.
     fn push(&self, job: Job) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
         if st.closed || job.session().is_cancelled() {
             return; // dropping the job drops its channel handle
         }
@@ -361,7 +396,7 @@ impl Dispatcher {
 
     /// Block until a job is dispatchable; `None` once closed.
     fn pop(&self) -> Option<Job> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
         loop {
             if st.closed {
                 return None;
@@ -370,7 +405,7 @@ impl Dispatcher {
             if let Some(job) = st.dispatch_next() {
                 return Some(job);
             }
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
     }
 
@@ -379,19 +414,19 @@ impl Dispatcher {
     /// lock briefly so the credit release can never race a worker
     /// between its admission check and its wait.
     fn credit_released(&self) {
-        drop(self.state.lock().unwrap());
+        drop(self.state.lock().unwrap_or_else(PoisonError::into_inner));
         self.cv.notify_one();
     }
 
     /// Wake every worker to re-evaluate (session cancelled: the purge
     /// must run even on workers about to wait on unrelated lanes).
     fn wake_all(&self) {
-        drop(self.state.lock().unwrap());
+        drop(self.state.lock().unwrap_or_else(PoisonError::into_inner));
         self.cv.notify_all();
     }
 
     fn close(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
         st.closed = true;
         for lane in &mut st.lanes {
             lane.clear(); // drop queued jobs and their senders
@@ -453,7 +488,7 @@ impl BufferPool {
     fn session_closed(&self, credits: usize) {
         self.open_credits.fetch_sub(credits, Ordering::Relaxed);
         let retain = self.retain();
-        let mut free = self.free.lock().unwrap();
+        let mut free = self.free.lock().unwrap_or_else(PoisonError::into_inner);
         if free.len() > retain {
             free.truncate(retain);
         }
@@ -461,11 +496,11 @@ impl BufferPool {
 
     /// Idle buffers currently pooled (not leased out).
     fn pooled(&self) -> usize {
-        self.free.lock().unwrap().len()
+        self.free.lock().unwrap_or_else(PoisonError::into_inner).len()
     }
 
     fn acquire(&self, g: &BatchGeometry) -> HostBatch {
-        if let Some(b) = self.free.lock().unwrap().pop() {
+        if let Some(b) = self.free.lock().unwrap_or_else(PoisonError::into_inner).pop() {
             return b;
         }
         self.allocated.fetch_add(1, Ordering::Relaxed);
@@ -474,7 +509,7 @@ impl BufferPool {
 
     fn release(&self, batch: HostBatch) {
         let retain = self.retain();
-        let mut free = self.free.lock().unwrap();
+        let mut free = self.free.lock().unwrap_or_else(PoisonError::into_inner);
         if free.len() < retain {
             free.push(batch);
         }
@@ -501,6 +536,7 @@ impl BatchLease {
 
     /// Detach the buffer from the pool (compat path: callers that want an
     /// owned `HostBatch` and accept losing the recycling).
+    #[must_use]
     pub fn into_inner(mut self) -> HostBatch {
         self.batch.take().expect("lease already consumed")
     }
@@ -566,6 +602,9 @@ pub struct DataPlane {
 }
 
 impl DataPlane {
+    /// Start the plane: validate the QoS weights, restore (or lazily
+    /// cold-build) the prepared source, and spawn the worker pool that
+    /// lives until the plane is dropped.
     pub fn new(source: Arc<dyn MoleculeSource>, batcher: Batcher, cfg: PipelineConfig) -> DataPlane {
         // Misconfiguration fails at construction, not as silent
         // starvation mid-stream.
@@ -627,10 +666,12 @@ impl DataPlane {
         }
     }
 
+    /// Fixed geometry every assembled `HostBatch` conforms to.
     pub fn geometry(&self) -> BatchGeometry {
         self.batcher.geometry
     }
 
+    /// The configuration this plane was started with.
     pub fn config(&self) -> &PipelineConfig {
         &self.cfg
     }
@@ -811,10 +852,12 @@ pub struct Session {
 }
 
 impl Session {
+    /// Plane-unique session id (assigned at open, monotonic).
     pub fn id(&self) -> u64 {
         self.stream.sess.id
     }
 
+    /// QoS class this session was admitted under.
     pub fn qos(&self) -> QosClass {
         self.stream.sess.qos
     }

@@ -10,10 +10,15 @@
 //! vocabulary (job specs, QoS classes, metrics). `pipeline` keeps the
 //! legacy eager planner and the one-epoch `stream_epoch` wrapper.
 
+/// Pack-aware batch assembly into fixed-geometry host buffers.
 pub mod batcher;
+/// The persistent multi-tenant streaming data-plane.
 pub mod dataplane;
+/// Legacy eager planner and the one-epoch `stream_epoch` wrapper.
 pub mod pipeline;
+/// Data-parallel replica orchestration (all-reduce over PJRT).
 pub mod replicas;
+/// Session-layer vocabulary: job specs, QoS classes, metrics.
 pub mod session;
 
 pub use batcher::{AssemblyStats, Batcher};

@@ -44,6 +44,9 @@ pub struct DataParallel {
 }
 
 impl DataParallel {
+    /// Build a `replicas`-way data-parallel trainer over `engine`;
+    /// `merged` selects the single fused all-reduce over per-tensor
+    /// collectives.
     pub fn new(engine: &Engine, replicas: usize, merged: bool) -> Result<Self> {
         if replicas == 0 {
             bail!("need at least one replica");

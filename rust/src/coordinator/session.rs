@@ -13,7 +13,7 @@
 //! epoch-stream API).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::datasets::{EdgeTopology, MoleculeSource, PreparedSource};
@@ -38,6 +38,8 @@ impl QosClass {
     /// earlier class).
     pub const ALL: [QosClass; 3] = [QosClass::Serving, QosClass::Training, QosClass::Background];
 
+    /// Stable lowercase label for logs and metrics output.
+    #[must_use]
     pub fn name(self) -> &'static str {
         match self {
             QosClass::Serving => "serving",
@@ -187,41 +189,61 @@ impl JobSpec {
         JobSpec::new(QosClass::Background, None)
     }
 
+    /// Override the QoS class the preset chose.
+    #[must_use]
     pub fn with_qos(mut self, qos: QosClass) -> JobSpec {
         self.qos = qos;
         self
     }
 
+    /// Stream from this molecule source instead of the plane's default
+    /// dataset (serving requests over ad-hoc inputs).
+    #[must_use]
     pub fn with_source(mut self, source: Arc<dyn MoleculeSource>) -> JobSpec {
         self.source = Some(source);
         self
     }
 
+    /// Pack shards with this packer instead of the plane's default.
+    #[must_use]
     pub fn with_packer(mut self, packer: Packer) -> JobSpec {
         self.packer = Some(packer);
         self
     }
 
+    /// Override the incremental-planning shard size (molecules per
+    /// `PlanShard` job).
+    #[must_use]
     pub fn with_shard_size(mut self, shard_size: usize) -> JobSpec {
         self.shard_size = Some(shard_size);
         self
     }
 
+    /// Require (or relax) deterministic batch ordering for this
+    /// session's stream.
+    #[must_use]
     pub fn with_ordered(mut self, ordered: bool) -> JobSpec {
         self.ordered = Some(ordered);
         self
     }
 
+    /// Shuffle-epoch selector: seeds the deterministic permutation.
+    #[must_use]
     pub fn with_epoch(mut self, epoch: u64) -> JobSpec {
         self.epoch = Some(epoch);
         self
     }
 
+    /// Admission credit limit — batches materialized but not yet
+    /// consumed before the dispatcher stops serving this session.
+    #[must_use]
     pub fn with_credits(mut self, credits: usize) -> JobSpec {
         self.credits = Some(credits);
         self
     }
 
+    /// Override the neighbor-list cutoff radius for this session.
+    #[must_use]
     pub fn with_r_cut(mut self, r_cut: f32) -> JobSpec {
         self.r_cut = Some(r_cut);
         self
@@ -391,7 +413,7 @@ impl SessionState {
         let wait = enqueued.elapsed();
         let ns = wait.as_nanos() as u64;
         self.queue_wait_ns.fetch_add(ns, Ordering::Relaxed);
-        self.wait_samples.lock().unwrap().push(ns);
+        self.wait_samples.lock().unwrap_or_else(PoisonError::into_inner).push(ns);
     }
 
     /// The session's next assembly just failed admission (all credits in
@@ -435,7 +457,7 @@ impl SessionState {
     pub(crate) fn queue_wait_samples_ms(&self) -> Vec<f64> {
         self.wait_samples
             .lock()
-            .unwrap()
+            .unwrap_or_else(PoisonError::into_inner)
             .buf
             .iter()
             .map(|&ns| ns as f64 / 1e6)

@@ -33,6 +33,7 @@ pub struct LruCache<K: Eq + Hash + Clone, V> {
 }
 
 impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    /// An empty cache evicting beyond `capacity` entries (must be > 0).
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0, "cache capacity must be positive");
         LruCache {
@@ -45,10 +46,12 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         }
     }
 
+    /// Entries currently cached.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when nothing is cached.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
@@ -79,6 +82,7 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         }
     }
 
+    /// Look up `key`, marking it most recently used on a hit.
     pub fn get(&mut self, key: &K) -> Option<&V> {
         let idx = *self.map.get(key)?;
         self.detach(idx);
@@ -86,6 +90,8 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         Some(&self.slab[idx].val)
     }
 
+    /// Insert (or refresh) `key`, evicting the least recently used
+    /// entry when full.
     pub fn put(&mut self, key: K, val: V) {
         if let Some(&idx) = self.map.get(&key) {
             self.slab[idx].val = val;
@@ -114,6 +120,7 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         self.push_front(idx);
     }
 
+    /// Membership test without touching recency order.
     pub fn contains(&self, key: &K) -> bool {
         self.map.contains_key(key)
     }
@@ -127,6 +134,7 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
+    /// Fraction of lookups served from cache (0.0 when none yet).
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -145,6 +153,7 @@ pub struct CachedSource<S: MoleculeSource> {
 }
 
 impl<S: MoleculeSource> CachedSource<S> {
+    /// Wrap `inner` with an LRU of `capacity` molecules.
     pub fn new(inner: S, capacity: usize) -> Self {
         CachedSource {
             inner,
@@ -152,10 +161,13 @@ impl<S: MoleculeSource> CachedSource<S> {
         }
     }
 
+    /// Hit/miss counters since construction.
     pub fn stats(&self) -> CacheStats {
         self.cache.lock().unwrap().1
     }
 
+    /// Fetch molecule `idx`, shared: cached entries clone the `Arc`
+    /// instead of the molecule.
     pub fn get_arc(&self, idx: usize) -> Arc<Molecule> {
         {
             let mut guard = self.cache.lock().unwrap();

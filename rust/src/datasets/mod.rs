@@ -7,11 +7,17 @@
 //! (`persist`: versioned, checksummed, fingerprinted — epoch 1 of a
 //! fresh process runs warm).
 
+/// Two-level molecule cache (per-worker LRU over a shared source).
 pub mod cache;
+/// Synthetic HydroNet-like water-cluster generator.
 pub mod hydronet;
+/// On-disk persistence of the prepared cache (versioned + checksummed).
 pub mod persist;
+/// Epoch-invariant prepared source: SoA arena + memoized topologies.
 pub mod prepared;
+/// Synthetic QM9-like small-organic generator.
 pub mod qm9;
+/// Compact disk-backed molecule store.
 pub mod store;
 
 pub use cache::{CacheStats, CachedSource, LruCache};
@@ -53,6 +59,7 @@ pub enum PaperDataset {
 }
 
 impl PaperDataset {
+    /// All four evaluation datasets, in the paper's table order.
     pub fn all() -> [PaperDataset; 4] {
         [
             PaperDataset::Qm9,
@@ -62,6 +69,7 @@ impl PaperDataset {
         ]
     }
 
+    /// The paper's label for the dataset (table/figure axes).
     pub fn name(&self) -> &'static str {
         match self {
             PaperDataset::Qm9 => "QM9",

@@ -193,6 +193,7 @@ pub struct CacheImage {
 }
 
 impl CacheImage {
+    /// Number of molecules in the arena image.
     pub fn molecules(&self) -> usize {
         self.arena.energy.len()
     }
@@ -233,7 +234,10 @@ pub fn write_cache(path: &Path, image: &CacheImage) -> Result<u64> {
     if image.fingerprint.molecules != n as u64 {
         bail!("fingerprint count {} != arena molecules {n}", image.fingerprint.molecules);
     }
-    let total_atoms = *image.arena.offsets.last().unwrap() as usize;
+    let total_atoms = checked_usize(
+        *image.arena.offsets.last().expect("offsets length checked to n + 1 above"),
+        "arena atom span",
+    )?;
     if image.arena.z.len() != total_atoms || image.arena.pos.len() != 3 * total_atoms {
         bail!(
             "arena spans (z {}, pos {}) disagree with offsets ({total_atoms} atoms)",
@@ -248,12 +252,15 @@ pub fn write_cache(path: &Path, image: &CacheImage) -> Result<u64> {
     payload.extend_from_slice(&image.arena.z);
     put_f32s(&mut payload, &image.arena.pos);
     put_f32s(&mut payload, &image.arena.energy);
-    put_u32s(&mut payload, &[image.topologies.len() as u32]);
+    put_u32s(&mut payload, &[checked_u32(image.topologies.len(), "topology count")?]);
     for t in &image.topologies {
         if t.edge_offsets.len() != n + 1 {
             bail!("topology edge offsets length {} != molecules + 1", t.edge_offsets.len());
         }
-        let total_edges = *t.edge_offsets.last().unwrap() as usize;
+        let total_edges = checked_usize(
+            *t.edge_offsets.last().expect("edge offsets length checked to n + 1 above"),
+            "topology edge span",
+        )?;
         if t.src.len() != total_edges || t.dst.len() != total_edges {
             bail!(
                 "topology edge arrays ({}, {}) disagree with offsets ({total_edges})",
@@ -334,31 +341,54 @@ impl<'a> Reader<'a> {
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("take(4) returns 4 bytes")))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("take(8) returns 8 bytes")))
     }
 
     fn u64s(&mut self, count: usize) -> Result<Vec<u64>> {
         let raw = self.take(8 * count)?;
-        Ok(raw.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("chunks_exact(8) yields 8-byte chunks")))
+            .collect())
     }
 
     fn u32s(&mut self, count: usize) -> Result<Vec<u32>> {
         let raw = self.take(4 * count)?;
-        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().expect("chunks_exact(4) yields 4-byte chunks")))
+            .collect())
     }
 
     fn f32s(&mut self, count: usize) -> Result<Vec<f32>> {
         let raw = self.take(4 * count)?;
-        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("chunks_exact(4) yields 4-byte chunks")))
+            .collect())
     }
 
     fn done(&self) -> bool {
         self.at == self.bytes.len()
     }
+}
+
+/// Checked `u64 -> usize` narrowing for section lengths and counts:
+/// decode must stay total on 32-bit hosts too, so every count routes
+/// through here instead of a bare `as` cast (enforced by the
+/// `unchecked-narrowing` lint; see the invariant catalog in
+/// `coordinator/dataplane.rs`).
+fn checked_usize(v: u64, what: &str) -> Result<usize> {
+    usize::try_from(v).map_err(|_| anyhow::anyhow!("{what} {v} does not fit in usize"))
+}
+
+/// Checked `usize -> u32` narrowing for on-disk counters (write side).
+fn checked_u32(v: usize, what: &str) -> Result<u32> {
+    u32::try_from(v).map_err(|_| anyhow::anyhow!("{what} {v} does not fit in u32"))
 }
 
 /// CSR sanity: offsets start at 0 and never decrease. (The final offset
@@ -390,15 +420,18 @@ pub fn read_cache(path: &Path, expect: &SourceFingerprint) -> Result<CacheImage>
     if &bytes[0..4] != MAGIC {
         bail!("bad magic in cache file");
     }
-    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    let version = u32::from_le_bytes(bytes[4..8].try_into().expect("header slice is 4 bytes"));
     if version != VERSION {
         bail!("unsupported cache version {version} (expected {VERSION})");
     }
-    let payload_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
-    let checksum = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let payload_len = checked_usize(
+        u64::from_le_bytes(bytes[8..16].try_into().expect("header slice is 8 bytes")),
+        "payload length",
+    )?;
+    let checksum = u64::from_le_bytes(bytes[16..24].try_into().expect("header slice is 8 bytes"));
     let stored = SourceFingerprint {
-        molecules: u64::from_le_bytes(bytes[24..32].try_into().unwrap()),
-        content_hash: u64::from_le_bytes(bytes[32..40].try_into().unwrap()),
+        molecules: u64::from_le_bytes(bytes[24..32].try_into().expect("header slice is 8 bytes")),
+        content_hash: u64::from_le_bytes(bytes[32..40].try_into().expect("header slice is 8 bytes")),
     };
     let payload = &bytes[HEADER_LEN..];
     if payload.len() != payload_len {
@@ -418,7 +451,7 @@ pub fn read_cache(path: &Path, expect: &SourceFingerprint) -> Result<CacheImage>
     }
 
     let mut r = Reader { bytes: payload, at: 0 };
-    let n = r.u64()? as usize;
+    let n = checked_usize(r.u64()?, "molecule count")?;
     if n as u64 != stored.molecules {
         bail!("payload molecule count {n} != fingerprint {}", stored.molecules);
     }
@@ -431,11 +464,12 @@ pub fn read_cache(path: &Path, expect: &SourceFingerprint) -> Result<CacheImage>
         bail!("cache claims {total_atoms} atoms — refusing");
     }
     check_csr(&offsets, "arena")?;
-    let z = r.take(total_atoms as usize)?.to_vec();
-    let pos = r.f32s(3 * total_atoms as usize)?;
+    let total_atoms = checked_usize(total_atoms, "arena atom span")?;
+    let z = r.take(total_atoms)?.to_vec();
+    let pos = r.f32s(3 * total_atoms)?;
     let energy = r.f32s(n)?;
 
-    let n_topologies = r.u32()? as usize;
+    let n_topologies = checked_usize(u64::from(r.u32()?), "topology count")?;
     // Bound the pre-allocation by what the remaining payload could
     // possibly hold (each topology needs ≥ its 8-byte key + (n+1) u64
     // offsets): a forged-but-checksummed count must hit the Err path,
@@ -454,15 +488,18 @@ pub fn read_cache(path: &Path, expect: &SourceFingerprint) -> Result<CacheImage>
             bail!("cache claims {total_edges} edges in one topology — refusing");
         }
         check_csr(&edge_offsets, "topology")?;
-        let src = r.u32s(total_edges as usize)?;
-        let dst = r.u32s(total_edges as usize)?;
+        let total_edges = checked_usize(total_edges, "topology edge span")?;
+        let src = r.u32s(total_edges)?;
+        let dst = r.u32s(total_edges)?;
         // Endpoint validation — the other half of staying total: edge
         // lists are molecule-local indices the batcher rebases into pack
         // windows, so a forged-but-checksummed endpoint >= the owning
         // molecule's atom count would silently corrupt batch
         // connectivity, not fail. Reject it here instead.
         for idx in 0..n {
+            // tidy: allow(unchecked-narrowing): per-molecule span ≤ total_atoms ≤ u32::MAX, guarded above
             let atoms = (offsets[idx + 1] - offsets[idx]) as u32;
+            // tidy: allow(unchecked-narrowing): edge offsets ≤ total_edges ≤ u32::MAX, guarded above
             let (a, b) = (edge_offsets[idx] as usize, edge_offsets[idx + 1] as usize);
             if src[a..b].iter().chain(&dst[a..b]).any(|&v| v >= atoms) {
                 bail!("cache edge endpoint out of range for molecule {idx} ({atoms} atoms)");
@@ -601,6 +638,37 @@ mod tests {
         let err = read_cache(&path, &img.fingerprint).unwrap_err();
         assert!(err.to_string().contains("checksum"), "{err}");
         std::fs::remove_file(path).ok();
+    }
+
+    /// Mutation fuzz: ~1000 seeded cases, each XOR-flipping 1–8 random
+    /// bytes anywhere in the file (header or payload). The decoder must
+    /// stay *total* (never panic) and *honest* (never return `Ok` with
+    /// an image differing from the pristine one) — the generalization
+    /// of the fixed truncation/bit-flip cases above to arbitrary
+    /// corruption.
+    #[test]
+    fn mutation_fuzz_decoder_is_total_and_honest() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let img = sample_image(6);
+        let base = tmppath("fuzz-base");
+        write_cache(&base, &img).unwrap();
+        let pristine = std::fs::read(&base).unwrap();
+        std::fs::remove_file(&base).ok();
+        let case = AtomicU64::new(0);
+        crate::util::proptest::check(1000, |rng| {
+            let mut bytes = pristine.clone();
+            for _ in 0..rng.range(1, 9) {
+                let pos = rng.range(0, bytes.len());
+                bytes[pos] ^= rng.range(1, 256) as u8;
+            }
+            let path = tmppath(&format!("fuzz-{}", case.fetch_add(1, Ordering::Relaxed)));
+            std::fs::write(&path, &bytes).unwrap();
+            let out = read_cache(&path, &img.fingerprint);
+            std::fs::remove_file(&path).ok();
+            if let Ok(decoded) = out {
+                assert_eq!(decoded, img, "corrupted cache decoded Ok with a differing stream");
+            }
+        });
     }
 
     #[test]

@@ -136,6 +136,7 @@ pub struct MoleculeView<'a> {
 }
 
 impl MoleculeView<'_> {
+    /// Atom count of the viewed molecule.
     #[inline]
     pub fn n_atoms(&self) -> usize {
         self.z.len()
@@ -230,6 +231,8 @@ pub struct PreparedSource {
 }
 
 impl PreparedSource {
+    /// An empty (cold) prepared source over `inner`: arena segments and
+    /// edge topologies materialize lazily on first touch.
     pub fn new(inner: Arc<dyn MoleculeSource>) -> PreparedSource {
         let n_segments = inner.len().div_ceil(SEGMENT_MOLECULES);
         let mut segments = Vec::with_capacity(n_segments);
@@ -621,6 +624,7 @@ impl PreparedSource {
         )
     }
 
+    /// Arena/topology build counters and byte sizes (monotonic).
     pub fn stats(&self) -> PreparedStats {
         PreparedStats {
             molecules: self.inner.len(),

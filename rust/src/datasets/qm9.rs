@@ -168,6 +168,8 @@ fn molecule_energy(z: &[u8], pos: &[[f32; 3]]) -> f32 {
     (e / 10.0) as f32
 }
 
+/// Synthetic QM9-like source: small organic molecules (≤ 29 atoms),
+/// deterministic per `(len, seed, index)`.
 #[derive(Debug, Clone)]
 pub struct Qm9 {
     len: usize,
@@ -175,6 +177,7 @@ pub struct Qm9 {
 }
 
 impl Qm9 {
+    /// A source of `len` molecules generated from `seed`.
     pub fn new(len: usize, seed: u64) -> Self {
         Qm9 { len, seed }
     }

@@ -103,6 +103,8 @@ pub struct Store {
 }
 
 impl Store {
+    /// Open a store file, validating magic/version and decoding the
+    /// per-record size index.
     pub fn open(path: impl AsRef<Path>) -> Result<Store> {
         let f = File::open(path.as_ref())
             .with_context(|| format!("opening store {:?}", path.as_ref()))?;
@@ -137,6 +139,7 @@ impl Store {
         Ok(Store { file: Mutex::new(r), offsets, records_start, sizes })
     }
 
+    /// Decode record `idx` from disk.
     pub fn read(&self, idx: usize) -> Result<Molecule> {
         if idx >= self.sizes.len() {
             bail!("index {idx} out of range {}", self.sizes.len());

@@ -48,6 +48,7 @@ pub mod datasets;
 pub mod figures;
 pub mod graph;
 pub mod ipu;
+pub mod lint;
 pub mod optim;
 pub mod packing;
 pub mod perfmodel;

@@ -1,0 +1,331 @@
+//! Character-level sanitizer for the tidy rules: a tiny Rust "lexer"
+//! that blanks comments and string/char-literal bodies while preserving
+//! line structure, so the rules can pattern-match source text without a
+//! real parser and without false positives from literals.
+//!
+//! For every input line the sanitizer produces two parallel views:
+//!
+//! * `code`  — the line with comments and literal *contents* replaced by
+//!   spaces (delimiters kept, lengths preserved). `.expect("")` in this
+//!   view means the expect message was empty in the source, because
+//!   non-empty messages blank to `.expect("   ")`.
+//! * `comments` — only the comment text of the line (everything else
+//!   blanked), which is where `// tidy: allow(<rule>): <invariant>`
+//!   annotations are looked up.
+//!
+//! Length preservation is what makes brace matching, `#[cfg(test)]`
+//! region detection, and same-line allow comments work textually.
+
+/// Parallel per-line views of one source file (see module docs).
+pub struct Sanitized {
+    /// Source lines with comments and literal bodies blanked.
+    pub code: Vec<String>,
+    /// Comment text only, per line (non-comment chars blanked).
+    pub comments: Vec<String>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    /// Nesting depth of `/* */` (Rust block comments nest).
+    BlockComment(u32),
+    Str,
+    /// Raw string `r"…"` / `r#"…"#` with this many hashes.
+    RawStr(usize),
+}
+
+/// Split `text` into the two blanked views. Total over arbitrary input:
+/// an unterminated literal or comment simply blanks to end of file.
+pub fn sanitize(text: &str) -> Sanitized {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut code = String::with_capacity(n);
+    let mut comment = String::with_capacity(n);
+    let mut st = State::Code;
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        let nxt = chars.get(i + 1).copied().unwrap_or('\0');
+        match st {
+            State::Code => {
+                if c == '/' && nxt == '/' {
+                    st = State::LineComment;
+                    code.push_str("  ");
+                    comment.push_str("//");
+                    i += 2;
+                } else if c == '/' && nxt == '*' {
+                    st = State::BlockComment(1);
+                    code.push_str("  ");
+                    comment.push_str("/*");
+                    i += 2;
+                } else if c == '"' {
+                    st = State::Str;
+                    code.push('"');
+                    comment.push(' ');
+                    i += 1;
+                } else if c == 'r' && (nxt == '"' || nxt == '#') {
+                    // raw string r"…" / r#"…"# — but r#ident is a raw
+                    // identifier, which stays code.
+                    let mut j = i + 1;
+                    let mut hashes = 0usize;
+                    while j < n && chars[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && chars[j] == '"' {
+                        st = State::RawStr(hashes);
+                        for &k in chars.iter().take(j + 1).skip(i).collect::<Vec<_>>().iter() {
+                            code.push(*k);
+                            comment.push(' ');
+                        }
+                        i = j + 1;
+                    } else {
+                        code.push(c);
+                        comment.push(' ');
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // char literal vs lifetime
+                    if nxt == '\\' {
+                        // escaped char: scan (bounded) for the close quote
+                        match (i + 3..n.min(i + 12)).find(|&k| chars[k] == '\'') {
+                            Some(k) => {
+                                code.push('\'');
+                                for _ in i + 1..k {
+                                    code.push(' ');
+                                }
+                                code.push('\'');
+                                for _ in i..=k {
+                                    comment.push(' ');
+                                }
+                                i = k + 1;
+                            }
+                            None => {
+                                code.push(c);
+                                comment.push(' ');
+                                i += 1;
+                            }
+                        }
+                    } else if nxt != '\0' && nxt != '\n' && chars.get(i + 2) == Some(&'\'') {
+                        code.push_str("' '");
+                        comment.push_str("   ");
+                        i += 3;
+                    } else {
+                        // lifetime: keep as code
+                        code.push(c);
+                        comment.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    comment.push(if c == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                if c == '\n' {
+                    st = State::Code;
+                    code.push('\n');
+                    comment.push('\n');
+                } else {
+                    code.push(' ');
+                    comment.push(c);
+                }
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '/' && nxt == '*' {
+                    st = State::BlockComment(depth + 1);
+                    code.push_str("  ");
+                    comment.push_str("/*");
+                    i += 2;
+                } else if c == '*' && nxt == '/' {
+                    st = if depth == 1 { State::Code } else { State::BlockComment(depth - 1) };
+                    code.push_str("  ");
+                    comment.push_str("*/");
+                    i += 2;
+                } else {
+                    code.push(if c == '\n' { '\n' } else { ' ' });
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // the escaped char is blanked too (covers \"),
+                    // keeping a line-continuation newline in place
+                    code.push(' ');
+                    comment.push(' ');
+                    if nxt == '\n' {
+                        code.push('\n');
+                        comment.push('\n');
+                    } else if i + 1 < n {
+                        code.push(' ');
+                        comment.push(' ');
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    st = State::Code;
+                    code.push('"');
+                    comment.push(' ');
+                    i += 1;
+                } else {
+                    let out = if c == '\n' { '\n' } else { ' ' };
+                    code.push(out);
+                    comment.push(out);
+                    i += 1;
+                }
+            }
+            State::RawStr(raw_hashes) => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut hashes = 0usize;
+                    while j < n && chars[j] == '#' && hashes < raw_hashes {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if hashes == raw_hashes {
+                        st = State::Code;
+                        code.push('"');
+                        for _ in 0..hashes {
+                            code.push('#');
+                        }
+                        for _ in i..j {
+                            comment.push(' ');
+                        }
+                        i = j;
+                        continue;
+                    }
+                }
+                let out = if c == '\n' { '\n' } else { ' ' };
+                code.push(out);
+                comment.push(out);
+                i += 1;
+            }
+        }
+    }
+    Sanitized {
+        code: code.split('\n').map(str::to_string).collect(),
+        comments: comment.split('\n').map(str::to_string).collect(),
+    }
+}
+
+/// Per-line flags marking lines covered by a `#[cfg(test)]` or `#[test]`
+/// item (attribute line through the item's closing brace). Rules skip
+/// these regions: test code may unwrap freely.
+pub fn test_regions(code: &[String]) -> Vec<bool> {
+    let joined = code.join("\n");
+    let bytes = joined.as_bytes();
+    let mut in_test = vec![false; code.len()];
+    for pat in ["#[cfg(test)]", "#[test]"] {
+        let mut from = 0usize;
+        while let Some(off) = joined[from..].find(pat) {
+            let start = from + off;
+            from = start + pat.len();
+            // brace-match the item that follows the attribute
+            let mut i = from;
+            let mut depth = 0i64;
+            let mut opened = false;
+            while i < bytes.len() {
+                match bytes[i] {
+                    b'{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    b'}' => {
+                        depth -= 1;
+                        if depth == 0 && opened {
+                            break;
+                        }
+                    }
+                    b';' if !opened => break, // item without a body
+                    _ => {}
+                }
+                i += 1;
+            }
+            let first = joined[..start].matches('\n').count();
+            let last = joined[..i.min(joined.len())].matches('\n').count();
+            for flag in in_test.iter_mut().take(last + 1).skip(first) {
+                *flag = true;
+            }
+        }
+    }
+    in_test
+}
+
+/// Is `rule` allowlisted at (0-based) `line` — an inline
+/// `// tidy: allow(<rule>): <invariant>` on the same or previous line?
+pub fn allowed(rule: &str, line: usize, comments: &[String]) -> bool {
+    let pat = format!("tidy: allow({rule})");
+    comments.get(line).is_some_and(|l| l.contains(&pat))
+        || (line > 0 && comments.get(line - 1).is_some_and(|l| l.contains(&pat)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked_length_preserving() {
+        let s = sanitize("let x = \"a.unwrap()\"; // .unwrap() here\n");
+        assert_eq!(s.code.len(), s.comments.len());
+        assert!(!s.code[0].contains(".unwrap()"), "{:?}", s.code[0]);
+        assert!(s.comments[0].contains(".unwrap() here"));
+        assert_eq!(s.code[0].len(), "let x = \"a.unwrap()\"; // .unwrap() here".len());
+    }
+
+    #[test]
+    fn empty_expect_survives_sanitizing_but_messages_blank() {
+        let s = sanitize("a.expect(\"\");\nb.expect(\"msg\");\n");
+        assert!(s.code[0].contains(".expect(\"\")"));
+        assert!(!s.code[1].contains(".expect(\"\")"));
+        assert!(s.code[1].contains(".expect(\"   \")"));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_blank() {
+        let s = sanitize("let r = r#\"x.unwrap() } {\"#; let c = '}'; let l: &'static str = \"\";");
+        assert!(!s.code[0].contains("unwrap"));
+        // brace counts must not be skewed by literal braces
+        let opens = s.code[0].matches('{').count();
+        let closes = s.code[0].matches('}').count();
+        assert_eq!(opens, 0, "{:?}", s.code[0]);
+        assert_eq!(closes, 0, "{:?}", s.code[0]);
+        assert!(s.code[0].contains("&'static str"), "lifetimes stay code: {:?}", s.code[0]);
+    }
+
+    #[test]
+    fn escaped_char_literals_blank() {
+        let s = sanitize(r"let a = '\n'; let b = '\x41'; let q = '\''; x.send(y);");
+        assert_eq!(s.code[0].matches('\'').count() % 2, 0, "{:?}", s.code[0]);
+        assert!(s.code[0].contains(".send(y)"));
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let s = sanitize("/* a /* b */ still comment */ code.unwrap()");
+        assert!(s.code[0].contains(".unwrap()"));
+        assert!(s.comments[0].contains("still comment"));
+    }
+
+    #[test]
+    fn test_region_covers_cfg_test_module() {
+        let src = "fn hot() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\nfn hot2() {}\n";
+        let s = sanitize(src);
+        let t = test_regions(&s.code);
+        assert!(!t[0], "hot path is not a test region");
+        assert!(t[1] && t[2] && t[3] && t[4], "{t:?}");
+        assert!(!t[5], "code after the test module is hot again");
+    }
+
+    #[test]
+    fn allow_comment_matches_same_and_previous_line() {
+        let src = "// tidy: allow(some-rule): invariant holds\nx.unwrap();\ny.unwrap(); // tidy: allow(some-rule): also fine\nz.unwrap();\n";
+        let s = sanitize(src);
+        assert!(allowed("some-rule", 1, &s.comments));
+        assert!(allowed("some-rule", 2, &s.comments));
+        assert!(!allowed("some-rule", 3, &s.comments));
+        assert!(!allowed("other-rule", 1, &s.comments));
+    }
+}

@@ -1,0 +1,681 @@
+//! The tidy rules. Each rule pattern-matches the sanitized views from
+//! [`super::lexer`] — no parser, no regex crate, just hand-rolled
+//! matchers over blanked source lines.
+//!
+//! Scope:
+//! * `unwrap-in-hot-path` — worker/dispatcher/decoder files only.
+//! * `unchecked-narrowing` — the persist decoder only.
+//! * `lock-across-send` — every file (lost-wakeup hazard anywhere).
+//! * `pub-item-hygiene` — `coordinator/` and `datasets/`.
+//! * `makefile-bench-drift` — the Makefile against `rust/benches/`.
+//!
+//! Every rule honours `// tidy: allow(<rule>): <invariant>` on the same
+//! or previous line; the invariant text is the price of the exemption.
+
+use super::lexer::{allowed, sanitize, test_regions, Sanitized};
+use super::Finding;
+
+/// Rule ids, in reporting order. Kept public so docs/tests can
+/// enumerate the gate's coverage.
+pub const RULES: [&str; 5] = [
+    "unwrap-in-hot-path",
+    "unchecked-narrowing",
+    "lock-across-send",
+    "pub-item-hygiene",
+    "makefile-bench-drift",
+];
+
+/// Files whose non-test code must not `.unwrap()` / `.expect("")`:
+/// the dispatcher, session admission, batcher, and cache decoder.
+const HOT_PATH_FILES: [&str; 4] = [
+    "coordinator/batcher.rs",
+    "coordinator/dataplane.rs",
+    "coordinator/session.rs",
+    "datasets/persist.rs",
+];
+
+/// Files where `as usize` / `as u32` must route through checked helpers.
+const NARROWING_FILES: [&str; 1] = ["datasets/persist.rs"];
+
+/// Module prefixes under the doc/`#[must_use]` hygiene rule.
+const HYGIENE_PREFIXES: [&str; 2] = ["coordinator/", "datasets/"];
+
+/// Lint one source file. `rel` is the path relative to `rust/src`
+/// (forward slashes); `text` is the raw file contents.
+pub fn lint_source(rel: &str, text: &str) -> Vec<Finding> {
+    let s = sanitize(text);
+    let tests = test_regions(&s.code);
+    let mut findings = Vec::new();
+    rule_unwrap(rel, &s, &tests, &mut findings);
+    rule_narrow(rel, &s, &tests, &mut findings);
+    rule_lock(rel, &s, &tests, &mut findings);
+    rule_hygiene(rel, &s, &tests, &mut findings);
+    findings
+}
+
+fn rule_unwrap(rel: &str, s: &Sanitized, tests: &[bool], findings: &mut Vec<Finding>) {
+    if !HOT_PATH_FILES.contains(&rel) {
+        return;
+    }
+    for (ln, line) in s.code.iter().enumerate() {
+        if tests[ln] {
+            continue;
+        }
+        let what = if line.contains(".unwrap()") {
+            ".unwrap()"
+        } else if line.contains(".expect(\"\")") {
+            ".expect(\"\")"
+        } else {
+            continue;
+        };
+        if allowed("unwrap-in-hot-path", ln, &s.comments) {
+            continue;
+        }
+        findings.push(Finding {
+            rule: "unwrap-in-hot-path",
+            file: rel.to_string(),
+            line: ln + 1,
+            message: format!(
+                "{what} on a hot path — use expect(\"<invariant>\") or handle the Err/poison"
+            ),
+        });
+    }
+}
+
+fn rule_narrow(rel: &str, s: &Sanitized, tests: &[bool], findings: &mut Vec<Finding>) {
+    if !NARROWING_FILES.contains(&rel) {
+        return;
+    }
+    for (ln, line) in s.code.iter().enumerate() {
+        if tests[ln] || !has_narrowing_cast(line) {
+            continue;
+        }
+        if allowed("unchecked-narrowing", ln, &s.comments) {
+            continue;
+        }
+        findings.push(Finding {
+            rule: "unchecked-narrowing",
+            file: rel.to_string(),
+            line: ln + 1,
+            message: "unchecked `as` narrowing in the decoder — route through the checked helpers"
+                .to_string(),
+        });
+    }
+}
+
+struct Guard {
+    name: String,
+    depth: i64,
+    line: usize,
+}
+
+fn rule_lock(rel: &str, s: &Sanitized, tests: &[bool], findings: &mut Vec<Finding>) {
+    let mut depth: i64 = 0;
+    let mut guards: Vec<Guard> = Vec::new();
+    for (ln, line) in s.code.iter().enumerate() {
+        if tests[ln] {
+            depth += brace_delta(line);
+            continue;
+        }
+        let binding = find_guard_binding(line);
+        for (pos, call) in find_send_calls(line) {
+            // a guard bound earlier on this same line is already live at
+            // the send; otherwise the innermost guard from prior lines is
+            let live = match &binding {
+                Some((gpos, gname)) if pos > *gpos => Some((gname.clone(), ln)),
+                _ => guards.last().map(|g| (g.name.clone(), g.line)),
+            };
+            if let Some((gname, gline)) = live {
+                if !allowed("lock-across-send", ln, &s.comments) {
+                    findings.push(Finding {
+                        rule: "lock-across-send",
+                        file: rel.to_string(),
+                        line: ln + 1,
+                        message: format!(
+                            "`{call}` called while MutexGuard `{gname}` (line {}) is live",
+                            gline + 1
+                        ),
+                    });
+                }
+            }
+        }
+        for name in find_drops(line) {
+            guards.retain(|g| g.name != name);
+        }
+        depth += brace_delta(line);
+        guards.retain(|g| depth >= g.depth);
+        if let Some((_, name)) = binding {
+            guards.push(Guard { name, depth, line: ln });
+        }
+    }
+}
+
+fn rule_hygiene(rel: &str, s: &Sanitized, tests: &[bool], findings: &mut Vec<Finding>) {
+    if !HYGIENE_PREFIXES.iter().any(|p| rel.starts_with(p)) {
+        return;
+    }
+    for ln in 0..s.code.len() {
+        if tests[ln] {
+            continue;
+        }
+        let Some((kind, name)) = pub_item(&s.code[ln]) else {
+            continue;
+        };
+        // walk attribute lines upward to the doc comment (if any)
+        let mut has_doc = false;
+        let mut doc_hidden = false;
+        let mut must_use = false;
+        let mut k = ln;
+        while k > 0 {
+            k -= 1;
+            let t = s.code[k].trim();
+            let ct = s.comments[k].trim();
+            if t.starts_with("#[") {
+                if t.contains("doc(hidden)") {
+                    doc_hidden = true;
+                }
+                if t.contains("must_use") {
+                    must_use = true;
+                }
+                continue;
+            }
+            if t.is_empty() && (ct.starts_with("///") || ct.starts_with("//!")) {
+                has_doc = true;
+            }
+            break;
+        }
+        if !has_doc && !doc_hidden && !allowed("pub-item-hygiene", ln, &s.comments) {
+            findings.push(Finding {
+                rule: "pub-item-hygiene",
+                file: rel.to_string(),
+                line: ln + 1,
+                message: format!("pub {kind} `{name}` has no doc comment"),
+            });
+        }
+        if kind == "fn" {
+            // gather the signature (bounded) to spot consuming builders
+            let mut sig = String::new();
+            for code_line in s.code.iter().take((ln + 12).min(s.code.len())).skip(ln) {
+                sig.push_str(code_line);
+                if code_line.contains('{') || code_line.contains(';') {
+                    break;
+                }
+            }
+            let params = sig.split_once('(').map_or("", |(_, p)| p);
+            let first = params.trim_start();
+            let consuming = first.starts_with("self") || first.starts_with("mut self");
+            if consuming
+                && sig.contains("->")
+                && !must_use
+                && !allowed("pub-item-hygiene", ln, &s.comments)
+            {
+                findings.push(Finding {
+                    rule: "pub-item-hygiene",
+                    file: rel.to_string(),
+                    line: ln + 1,
+                    message: format!(
+                        "consuming builder `{name}` returns a value but has no #[must_use]"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Check the Makefile's `cargo bench --bench X -- <flags>` lines against
+/// bench sources. `bench_source(name)` returns the contents of
+/// `rust/benches/<name>.rs`, or `None` if the file does not exist.
+pub fn lint_makefile(makefile: &str, bench_source: &dyn Fn(&str) -> Option<String>) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for (ln, line) in makefile.lines().enumerate() {
+        let Some(idx) = line.find("cargo bench --bench ") else {
+            continue;
+        };
+        let after = &line[idx + "cargo bench --bench ".len()..];
+        let Some((bench, rest)) = after.split_once(" -- ") else {
+            continue;
+        };
+        if bench.is_empty() || bench.contains(char::is_whitespace) {
+            continue;
+        }
+        let Some(src) = bench_source(bench) else {
+            findings.push(Finding {
+                rule: "makefile-bench-drift",
+                file: "Makefile".to_string(),
+                line: ln + 1,
+                message: format!("bench target `{bench}` has no rust/benches/{bench}.rs"),
+            });
+            continue;
+        };
+        for flag in long_flags(rest) {
+            if !src.contains(&flag) {
+                findings.push(Finding {
+                    rule: "makefile-bench-drift",
+                    file: "Makefile".to_string(),
+                    line: ln + 1,
+                    message: format!("flag `{flag}` not found in rust/benches/{bench}.rs"),
+                });
+            }
+        }
+    }
+    findings
+}
+
+// ---- hand-rolled matchers -------------------------------------------------
+
+fn is_ident(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+fn brace_delta(line: &str) -> i64 {
+    let mut d = 0i64;
+    for b in line.bytes() {
+        match b {
+            b'{' => d += 1,
+            b'}' => d -= 1,
+            _ => {}
+        }
+    }
+    d
+}
+
+/// Does the line contain a narrowing `as usize` / `as u32` cast?
+fn has_narrowing_cast(line: &str) -> bool {
+    let b = line.as_bytes();
+    let mut i = 0;
+    while i + 1 < b.len() {
+        if b[i] == b'a'
+            && b[i + 1] == b's'
+            && (i == 0 || !is_ident(b[i - 1]))
+            && (i + 2 >= b.len() || !is_ident(b[i + 2]))
+        {
+            let mut j = i + 2;
+            let ws_start = j;
+            while j < b.len() && (b[j] == b' ' || b[j] == b'\t') {
+                j += 1;
+            }
+            if j > ws_start {
+                for target in ["usize", "u32"] {
+                    let t = target.as_bytes();
+                    if b.len() >= j + t.len()
+                        && &b[j..j + t.len()] == t
+                        && (j + t.len() >= b.len() || !is_ident(b[j + t.len()]))
+                    {
+                        return true;
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+/// First `let [mut] NAME = … .lock() …;` binding on the line:
+/// returns (byte position of `let`, NAME).
+fn find_guard_binding(line: &str) -> Option<(usize, String)> {
+    let b = line.as_bytes();
+    let mut from = 0;
+    while let Some(off) = line[from..].find("let") {
+        let pos = from + off;
+        from = pos + 3;
+        if pos > 0 && is_ident(b[pos - 1]) {
+            continue;
+        }
+        let mut j = pos + 3;
+        if j >= b.len() || !(b[j] == b' ' || b[j] == b'\t') {
+            continue;
+        }
+        while j < b.len() && (b[j] == b' ' || b[j] == b'\t') {
+            j += 1;
+        }
+        if line[j..].starts_with("mut ") {
+            j += 4;
+            while j < b.len() && (b[j] == b' ' || b[j] == b'\t') {
+                j += 1;
+            }
+        }
+        let name_start = j;
+        while j < b.len() && is_ident(b[j]) {
+            j += 1;
+        }
+        if j == name_start {
+            continue;
+        }
+        let name = &line[name_start..j];
+        while j < b.len() && (b[j] == b' ' || b[j] == b'\t') {
+            j += 1;
+        }
+        if j >= b.len() || b[j] != b'=' {
+            continue;
+        }
+        // `.lock()` must appear in the initializer, before any `;`
+        let init = &line[j + 1..];
+        let semi = init.find(';').unwrap_or(init.len());
+        if init[..semi].contains(".lock()") {
+            return Some((pos, name.to_string()));
+        }
+    }
+    None
+}
+
+/// All `.send(` / `.try_send(` / `.notify_one(` / `.notify_all(` calls
+/// on the line: (byte position, method name), sorted by position.
+fn find_send_calls(line: &str) -> Vec<(usize, &'static str)> {
+    let mut out = Vec::new();
+    let b = line.as_bytes();
+    for call in ["send", "try_send", "notify_one", "notify_all"] {
+        let pat = format!(".{call}");
+        let mut from = 0;
+        while let Some(off) = line[from..].find(&pat) {
+            let pos = from + off;
+            from = pos + pat.len();
+            let mut j = pos + pat.len();
+            while j < b.len() && (b[j] == b' ' || b[j] == b'\t') {
+                j += 1;
+            }
+            if j < b.len() && b[j] == b'(' {
+                out.push((pos, call));
+            }
+        }
+    }
+    // `.send` never matches inside `.try_send` (the dot differs), so
+    // positions are distinct; sort for left-to-right reporting.
+    out.sort_unstable();
+    out
+}
+
+/// All `drop(NAME)` calls on the line, by bound name.
+fn find_drops(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let b = line.as_bytes();
+    let mut from = 0;
+    while let Some(off) = line[from..].find("drop") {
+        let pos = from + off;
+        from = pos + 4;
+        if pos > 0 && is_ident(b[pos - 1]) {
+            continue;
+        }
+        let mut j = pos + 4;
+        while j < b.len() && (b[j] == b' ' || b[j] == b'\t') {
+            j += 1;
+        }
+        if j >= b.len() || b[j] != b'(' {
+            continue;
+        }
+        j += 1;
+        while j < b.len() && (b[j] == b' ' || b[j] == b'\t') {
+            j += 1;
+        }
+        let name_start = j;
+        while j < b.len() && is_ident(b[j]) {
+            j += 1;
+        }
+        if j == name_start {
+            continue;
+        }
+        let name = &line[name_start..j];
+        while j < b.len() && (b[j] == b' ' || b[j] == b'\t') {
+            j += 1;
+        }
+        if j < b.len() && b[j] == b')' {
+            out.push(name.to_string());
+        }
+    }
+    out
+}
+
+/// `pub <kind> <name>` at the start of a (trimmed) line. `pub(crate)`
+/// and friends are exempt — only the crate-public surface needs docs.
+fn pub_item(line: &str) -> Option<(&'static str, String)> {
+    let t = line.trim_start();
+    let rest = t.strip_prefix("pub ")?.trim_start();
+    let rest = match rest.strip_prefix("unsafe ") {
+        Some(r) => r.trim_start(),
+        None => rest,
+    };
+    let (kind, rest) = if let Some(r) = rest.strip_prefix("fn ") {
+        ("fn", r)
+    } else if let Some(r) = rest.strip_prefix("struct ") {
+        ("struct", r)
+    } else if let Some(r) = rest.strip_prefix("enum ") {
+        ("enum", r)
+    } else if let Some(r) = rest.strip_prefix("trait ") {
+        ("trait", r)
+    } else if let Some(r) = rest.strip_prefix("type ") {
+        ("type", r)
+    } else if let Some(r) = rest.strip_prefix("mod ") {
+        ("mod", r)
+    } else if let Some(r) = rest.strip_prefix("const ") {
+        let r = r.trim_start();
+        match r.strip_prefix("fn ") {
+            Some(r2) => ("fn", r2),
+            None => ("const", r),
+        }
+    } else {
+        return None;
+    };
+    let rest = rest.trim_start();
+    let name: String = rest
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    let leads_ident = name
+        .chars()
+        .next()
+        .is_some_and(|c| c.is_ascii_alphabetic() || c == '_');
+    if leads_ident {
+        Some((kind, name))
+    } else {
+        None
+    }
+}
+
+/// Long `--flag` tokens (lowercase, dash-separated) inside a bench
+/// invocation's trailing arguments.
+fn long_flags(rest: &str) -> Vec<String> {
+    let b = rest.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 2 < b.len() {
+        if b[i] == b'-' && b[i + 1] == b'-' && b[i + 2].is_ascii_lowercase() {
+            let start = i;
+            let mut j = i + 3;
+            while j < b.len() && (b[j].is_ascii_lowercase() || b[j] == b'-') {
+                j += 1;
+            }
+            out.push(rest[start..j].to_string());
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    // ---- unwrap-in-hot-path ----
+
+    #[test]
+    fn unwrap_flagged_on_hot_path() {
+        let f = lint_source("coordinator/dataplane.rs", "fn f() { x.lock().unwrap(); }\n");
+        assert_eq!(rules_of(&f), ["unwrap-in-hot-path"]);
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn empty_expect_flagged_but_message_expect_passes() {
+        let f = lint_source("datasets/persist.rs", "fn f() { a.expect(\"\"); }\n");
+        assert_eq!(rules_of(&f), ["unwrap-in-hot-path"]);
+        let f = lint_source("datasets/persist.rs", "fn f() { a.expect(\"checked above\"); }\n");
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn unwrap_allowed_with_inline_invariant() {
+        let src = "fn f() {\n    // tidy: allow(unwrap-in-hot-path): poisoning impossible, lock scope is panic-free\n    x.lock().unwrap();\n}\n";
+        assert!(lint_source("coordinator/dataplane.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_fine_in_tests_and_cold_files() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { x.lock().unwrap(); }\n}\n";
+        assert!(lint_source("coordinator/dataplane.rs", src).is_empty());
+        assert!(lint_source("graph/radius.rs", "fn f() { x.unwrap(); }\n").is_empty());
+    }
+
+    #[test]
+    fn unwrap_in_string_literal_not_flagged() {
+        let src = "fn f() { let s = \".unwrap()\"; }\n";
+        assert!(lint_source("coordinator/dataplane.rs", src).is_empty());
+    }
+
+    // ---- unchecked-narrowing ----
+
+    #[test]
+    fn narrowing_flagged_only_in_decoder() {
+        let src = "fn f(v: u64) -> usize { v as usize }\n";
+        let f = lint_source("datasets/persist.rs", src);
+        assert_eq!(rules_of(&f), ["unchecked-narrowing"]);
+        assert!(lint_source("datasets/qm9.rs", src).is_empty());
+    }
+
+    #[test]
+    fn narrowing_widening_and_allow_pass() {
+        assert!(lint_source("datasets/persist.rs", "fn f(v: u32) -> u64 { v as u64 }\n").is_empty());
+        let src = "fn f(v: u64) -> usize {\n    // tidy: allow(unchecked-narrowing): v < SECTION_MAX checked by caller\n    v as usize\n}\n";
+        assert!(lint_source("datasets/persist.rs", src).is_empty());
+    }
+
+    #[test]
+    fn narrowing_matcher_requires_word_boundaries() {
+        assert!(has_narrowing_cast("let a = b as usize;"));
+        assert!(has_narrowing_cast("(x as u32)"));
+        assert!(!has_narrowing_cast("let atlas = usize_helper();"));
+        assert!(!has_narrowing_cast("b as u64"));
+        assert!(!has_narrowing_cast("b as u329"));
+        assert!(!has_narrowing_cast("basu32"));
+    }
+
+    // ---- lock-across-send ----
+
+    #[test]
+    fn send_under_live_guard_is_flagged() {
+        let src = "fn f() {\n    let st = self.state.lock().unwrap_or_else(p);\n    tx.send(v);\n}\n";
+        let f = lint_source("runtime/worker.rs", src);
+        assert_eq!(rules_of(&f), ["lock-across-send"]);
+        assert!(f[0].message.contains("`send`"), "{}", f[0].message);
+        assert!(f[0].message.contains("`st` (line 2)"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn drop_or_scope_ends_the_guard() {
+        let dropped = "fn f() {\n    let st = m.lock().expect(\"ok\");\n    drop(st);\n    cv.notify_one();\n}\n";
+        assert!(lint_source("runtime/worker.rs", dropped).is_empty());
+        let scoped = "fn f() {\n    {\n        let st = m.lock().expect(\"ok\");\n    }\n    cv.notify_all();\n}\n";
+        assert!(lint_source("runtime/worker.rs", scoped).is_empty());
+    }
+
+    #[test]
+    fn same_line_guard_then_send_is_flagged() {
+        let src = "fn f() { let g = m.lock().expect(\"ok\"); tx.try_send(g.v); }\n";
+        let f = lint_source("runtime/worker.rs", src);
+        assert_eq!(rules_of(&f), ["lock-across-send"]);
+        assert!(f[0].message.contains("`try_send`"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn lock_across_send_allowed_with_invariant() {
+        let src = "fn f() {\n    let st = m.lock().expect(\"ok\");\n    // tidy: allow(lock-across-send): bounded channel never blocks here\n    tx.send(v);\n}\n";
+        assert!(lint_source("runtime/worker.rs", src).is_empty());
+    }
+
+    #[test]
+    fn non_guard_let_and_non_call_send_ignored() {
+        // no `.lock()` in the initializer -> not a guard
+        let src = "fn f() {\n    let st = self.state.clone();\n    tx.send(v);\n}\n";
+        assert!(lint_source("runtime/worker.rs", src).is_empty());
+        // `.sender` field access is not a send call
+        let src = "fn f() {\n    let g = m.lock().expect(\"ok\");\n    let s = self.sender;\n}\n";
+        assert!(lint_source("runtime/worker.rs", src).is_empty());
+    }
+
+    // ---- pub-item-hygiene ----
+
+    #[test]
+    fn undocumented_pub_fn_flagged_in_scope() {
+        let src = "pub fn frobnicate() {}\n";
+        let f = lint_source("coordinator/pipeline.rs", src);
+        assert_eq!(rules_of(&f), ["pub-item-hygiene"]);
+        assert!(f[0].message.contains("`frobnicate`"));
+        assert!(lint_source("graph/radius.rs", src).is_empty(), "out of scope");
+    }
+
+    #[test]
+    fn documented_and_crate_private_items_pass() {
+        let src = "/// Does the thing.\npub fn frobnicate() {}\npub(crate) fn helper() {}\n";
+        assert!(lint_source("coordinator/pipeline.rs", src).is_empty());
+    }
+
+    #[test]
+    fn doc_survives_intervening_attributes() {
+        let src = "/// Documented.\n#[derive(Debug)]\npub struct S;\n";
+        assert!(lint_source("datasets/store.rs", src).is_empty());
+    }
+
+    #[test]
+    fn consuming_builder_needs_must_use() {
+        let src = "/// With qos.\npub fn with_qos(mut self, q: Qos) -> Self {\n    self\n}\n";
+        let f = lint_source("coordinator/session.rs", src);
+        assert_eq!(rules_of(&f), ["pub-item-hygiene"]);
+        assert!(f[0].message.contains("#[must_use]"), "{}", f[0].message);
+        let ok = "/// With qos.\n#[must_use]\npub fn with_qos(mut self, q: Qos) -> Self {\n    self\n}\n";
+        assert!(lint_source("coordinator/session.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn borrowing_method_needs_no_must_use() {
+        let src = "/// Reads.\npub fn qos(&self) -> Qos {\n    self.qos\n}\n";
+        assert!(lint_source("coordinator/session.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pub_const_fn_parses_as_fn() {
+        assert_eq!(pub_item("pub const fn cap() -> usize {"), Some(("fn", "cap".to_string())));
+        assert_eq!(pub_item("pub const MAX: usize = 4;"), Some(("const", "MAX".to_string())));
+        assert_eq!(pub_item("pub unsafe fn raw() {}"), Some(("fn", "raw".to_string())));
+        assert_eq!(pub_item("pub(crate) fn hidden() {}"), None);
+        assert_eq!(pub_item("pub use foo::bar;"), None);
+    }
+
+    // ---- makefile-bench-drift ----
+
+    #[test]
+    fn makefile_flags_checked_against_bench_source() {
+        let mk = "bench-smoke:\n\tcargo bench --bench bench_x -- --graphs 4 --out a.json\n";
+        let src = "let graphs = args.get(\"--graphs\"); let out = args.get(\"--out\");";
+        let f = lint_makefile(mk, &|name| {
+            (name == "bench_x").then(|| src.to_string())
+        });
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn makefile_drift_and_missing_bench_flagged() {
+        let mk = "bench-smoke:\n\tcargo bench --bench bench_x -- --gone 1\n\tcargo bench --bench bench_missing -- --a\n";
+        let f = lint_makefile(mk, &|name| {
+            (name == "bench_x").then(|| "no flags here".to_string())
+        });
+        assert_eq!(rules_of(&f), ["makefile-bench-drift", "makefile-bench-drift"]);
+        assert!(f[0].message.contains("`--gone`"), "{}", f[0].message);
+        assert_eq!(f[0].line, 2);
+        assert!(f[1].message.contains("bench_missing"), "{}", f[1].message);
+    }
+}

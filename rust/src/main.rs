@@ -14,6 +14,8 @@
 //!   characterize                             Fig. 5 dataset profiles
 //!   pack [--dataset NAME] [--s-m N]          run LPFHP + baselines once
 //!   plan [--edges E] [--nodes N] [--feat F]  scatter/gather planner demo
+//!   tidy [--root DIR]                        project lint gate over
+//!                                            rust/src + the Makefile
 //!
 //! (Hand-rolled argument parsing: the offline crate set has no clap.)
 
@@ -524,7 +526,21 @@ fn cmd_characterize() -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: molpack <figures|train|serve|prepare|pack|plan|characterize> [flags]\n\
+/// `molpack tidy`: run the project lint gate and report findings.
+fn cmd_tidy(args: &Args) -> Result<()> {
+    let root = PathBuf::from(args.get("root").unwrap_or("."));
+    let findings = molpack::lint::run_tidy(&root)?;
+    for f in &findings {
+        println!("{f}");
+    }
+    if !findings.is_empty() {
+        bail!("tidy: {} finding(s)", findings.len());
+    }
+    println!("tidy: clean");
+    Ok(())
+}
+
+const USAGE: &str = "usage: molpack <figures|train|serve|prepare|pack|plan|characterize|tidy> [flags]\n\
   figures [--fig 5..13 | --table 1 | --all]\n\
   train [--graphs N] [--epochs E] [--workers W] [--prefetch D] [--shard S]\n\
         [--max-batches B] [--replicas R [--no-merged]] [--cache-dir DIR]\n\
@@ -533,7 +549,8 @@ const USAGE: &str = "usage: molpack <figures|train|serve|prepare|pack|plan|chara
   prepare [--graphs N] [--seed S] [--r-cut R] [--k-max K] [--cache-dir DIR]\n\
   pack [--dataset QM9|500K|2.7M|4.5M] [--s-m N] [--sample N]\n\
   plan [--edges I] [--nodes M] [--feat N]\n\
-  characterize";
+  characterize\n\
+  tidy [--root DIR]";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -550,6 +567,7 @@ fn main() -> Result<()> {
         "pack" => cmd_pack(&args),
         "plan" => cmd_plan(&args),
         "characterize" => cmd_characterize(),
+        "tidy" => cmd_tidy(&args),
         other => bail!("unknown command {other}\n{USAGE}"),
     }
 }

@@ -1,9 +1,11 @@
-//! Small dependency-free utilities: seeded RNG, JSON, plotting, stats.
+//! Small dependency-free utilities: seeded RNG, JSON, plotting, stats,
+//! property testing, and a deterministic schedule explorer.
 
 pub mod json;
 pub mod plot;
 pub mod proptest;
 pub mod rng;
+pub mod sched;
 pub mod stats;
 
 pub use rng::Rng;

@@ -10,12 +10,31 @@
 //! });
 //! ```
 
+use std::sync::{Mutex, PoisonError};
+
 use crate::util::Rng;
+
+/// Serializes panic-hook swaps across concurrently running `check`
+/// calls: the hook is process-global, so an unguarded swap could strand
+/// the silent hook after interleaved take/set pairs.
+static HOOK_SCOPE: Mutex<()> = Mutex::new(());
 
 /// Run `body` over `cases` random number generators derived from a fixed
 /// master seed (deterministic across runs). Panics with the case seed on
 /// the first failure.
+///
+/// The default panic hook is silenced for the duration (and restored
+/// before reporting): each probed case runs under `catch_unwind`, and a
+/// property that fails hundreds of cases — or deliberately drives
+/// expected panics — would otherwise spew one backtrace per case into
+/// the test output. Caveat: the hook is process-global, so a panic in
+/// an *unrelated* concurrent test is silenced too for the window of the
+/// run; `check` calls themselves are serialized by an internal lock.
 pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: u64, body: F) {
+    let scope = HOOK_SCOPE.lock().unwrap_or_else(PoisonError::into_inner);
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let mut failure = None;
     for case in 0..cases {
         let seed = 0xC0FFEE ^ case.wrapping_mul(0x9E3779B97F4A7C15);
         let result = std::panic::catch_unwind(|| {
@@ -28,8 +47,16 @@ pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: u64, body: F) {
                 .cloned()
                 .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
-            panic!("property failed on case {case} (seed {seed:#x}): {msg}");
+            failure = Some((case, seed, msg));
+            break;
         }
+    }
+    // restore the saved hook BEFORE reporting, so the seed-bearing
+    // panic below prints through the normal machinery
+    std::panic::set_hook(prev);
+    drop(scope);
+    if let Some((case, seed, msg)) = failure {
+        panic!("property failed on case {case} (seed {seed:#x}): {msg}");
     }
 }
 

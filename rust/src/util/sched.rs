@@ -1,0 +1,379 @@
+//! Loom-lite deterministic schedule explorer for concurrency protocols.
+//!
+//! Instead of real threads, a scenario models each thread as an *actor*:
+//! a closure that, when scheduled, performs at most one atomic step
+//! against the shared state and reports whether it [`Step::Ran`], is
+//! [`Step::Blocked`] (would wait — e.g. on a full channel or an empty
+//! pool), or is [`Step::Done`]. The explorer then drives the actors
+//! through thousands of seeded pseudo-random interleavings, checking a
+//! state invariant after every step and a finale predicate at
+//! quiescence. Because the schedule is a pure function of the seed, any
+//! violation replays exactly with [`Explorer::replay`].
+//!
+//! Contract: a `Blocked` return must be side-effect-free — the explorer
+//! may probe a blocked actor any number of times while sweeping for a
+//! runnable one, and uses "every live actor blocked" as its deadlock
+//! detector.
+//!
+//! Used by `tests/race.rs` to drive the dispatcher/credit/lease
+//! protocol; see `make race`.
+
+use crate::util::Rng;
+
+/// Outcome of scheduling one actor for one step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    /// The actor performed one atomic step against the state.
+    Ran,
+    /// The actor cannot progress right now (side-effect-free).
+    Blocked,
+    /// The actor has finished and must not be scheduled again.
+    Done,
+}
+
+/// A modeled thread: one atomic step per invocation.
+pub type Actor<S> = Box<dyn FnMut(&mut S) -> Step>;
+
+/// One concurrency scenario: shared state, actors, a per-step invariant,
+/// and a finale predicate checked when every actor is done.
+pub struct Scenario<S> {
+    state: S,
+    actors: Vec<(String, Actor<S>)>,
+    invariant: Box<dyn Fn(&S) -> Result<(), String>>,
+    finale: Box<dyn Fn(&S) -> Result<(), String>>,
+}
+
+impl<S> Scenario<S> {
+    /// A scenario over `state` with no actors and vacuous checks.
+    pub fn new(state: S) -> Self {
+        Scenario {
+            state,
+            actors: Vec::new(),
+            invariant: Box::new(|_| Ok(())),
+            finale: Box::new(|_| Ok(())),
+        }
+    }
+
+    /// Add a modeled thread. `name` labels violations.
+    #[must_use]
+    pub fn with_actor(mut self, name: &str, f: impl FnMut(&mut S) -> Step + 'static) -> Self {
+        self.actors.push((name.to_string(), Box::new(f)));
+        self
+    }
+
+    /// Predicate checked after every step; `Err(msg)` is a violation.
+    #[must_use]
+    pub fn with_invariant(mut self, f: impl Fn(&S) -> Result<(), String> + 'static) -> Self {
+        self.invariant = Box::new(f);
+        self
+    }
+
+    /// Predicate checked once all actors are done.
+    #[must_use]
+    pub fn with_finale(mut self, f: impl Fn(&S) -> Result<(), String> + 'static) -> Self {
+        self.finale = Box::new(f);
+        self
+    }
+}
+
+/// A failed schedule: everything needed to reproduce and diagnose it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Schedule seed; feed to [`Explorer::replay`] to reproduce.
+    pub seed: u64,
+    /// Steps executed when the violation fired.
+    pub step: u64,
+    /// Name of the actor whose step (or absence of steps) triggered it.
+    pub actor: String,
+    /// The invariant/finale/deadlock message.
+    pub message: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "schedule seed {:#018x} failed at step {} (actor `{}`): {}\n\
+             replay: MOLPACK_RACE_SEED={:#x} cargo test --test race -- --nocapture",
+            self.seed, self.step, self.actor, self.message, self.seed
+        )
+    }
+}
+
+/// Counters for a clean exploration run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunStats {
+    /// Schedules explored.
+    pub schedules: u64,
+    /// Total actor steps executed across all schedules.
+    pub steps: u64,
+}
+
+/// Drives a scenario builder through many seeded interleavings.
+pub struct Explorer {
+    /// Number of schedules to explore.
+    pub schedules: u64,
+    /// Master seed; per-schedule seeds derive from it.
+    pub master_seed: u64,
+    /// Per-schedule step budget; exceeding it is reported as livelock.
+    pub max_steps: u64,
+}
+
+impl Explorer {
+    /// Explore `schedules` interleavings derived from `master_seed`.
+    pub fn new(schedules: u64, master_seed: u64) -> Self {
+        Explorer { schedules, master_seed, max_steps: 20_000 }
+    }
+
+    /// Like [`Explorer::new`], honouring `MOLPACK_RACE_SCHEDULES` as a
+    /// schedule-count override (so CI can run a deeper pass than the
+    /// default `cargo test`).
+    pub fn from_env(default_schedules: u64, master_seed: u64) -> Self {
+        let schedules = std::env::var("MOLPACK_RACE_SCHEDULES")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .unwrap_or(default_schedules);
+        Explorer::new(schedules, master_seed)
+    }
+
+    /// Seed of the `i`-th schedule (splitmix-style stream from the
+    /// master seed, matching the crate's proptest seeding idiom).
+    pub fn schedule_seed(&self, i: u64) -> u64 {
+        self.master_seed ^ (i + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
+    /// Run the full exploration. `build` constructs a fresh scenario per
+    /// schedule (use the provided rng for randomized shapes). Returns
+    /// the first violation, or stats for a clean run.
+    pub fn run<S>(
+        &self,
+        build: impl Fn(&mut Rng) -> Scenario<S>,
+    ) -> Result<RunStats, Box<Violation>> {
+        let mut steps = 0;
+        for i in 0..self.schedules {
+            let seed = self.schedule_seed(i);
+            steps += self.run_one(seed, &build)?;
+        }
+        Ok(RunStats { schedules: self.schedules, steps })
+    }
+
+    /// Re-run exactly one schedule by its seed (from a violation
+    /// report, or `MOLPACK_RACE_SEED`).
+    pub fn replay<S>(
+        &self,
+        seed: u64,
+        build: impl Fn(&mut Rng) -> Scenario<S>,
+    ) -> Result<u64, Box<Violation>> {
+        self.run_one(seed, &build)
+    }
+
+    fn run_one<S>(
+        &self,
+        seed: u64,
+        build: &impl Fn(&mut Rng) -> Scenario<S>,
+    ) -> Result<u64, Box<Violation>> {
+        let mut rng = Rng::new(seed);
+        let mut sc = build(&mut rng);
+        let Scenario { ref mut state, ref mut actors, ref invariant, ref finale } = sc;
+        let mut done = vec![false; actors.len()];
+        let mut steps: u64 = 0;
+        loop {
+            let enabled: Vec<usize> =
+                (0..actors.len()).filter(|&i| !done[i]).collect();
+            if enabled.is_empty() {
+                break;
+            }
+            if steps >= self.max_steps {
+                return Err(Box::new(Violation {
+                    seed,
+                    step: steps,
+                    actor: "<scheduler>".to_string(),
+                    message: format!("livelock: exceeded {} steps", self.max_steps),
+                }));
+            }
+            // pick a random enabled actor; sweep forward until one runs
+            let start = rng.range(0, enabled.len());
+            let mut progressed = false;
+            for k in 0..enabled.len() {
+                let ai = enabled[(start + k) % enabled.len()];
+                match (actors[ai].1)(state) {
+                    Step::Blocked => continue,
+                    r => {
+                        if r == Step::Done {
+                            done[ai] = true;
+                        }
+                        steps += 1;
+                        progressed = true;
+                        if let Err(message) = invariant(state) {
+                            return Err(Box::new(Violation {
+                                seed,
+                                step: steps,
+                                actor: actors[ai].0.clone(),
+                                message,
+                            }));
+                        }
+                        break;
+                    }
+                }
+            }
+            if !progressed {
+                return Err(Box::new(Violation {
+                    seed,
+                    step: steps,
+                    actor: "<scheduler>".to_string(),
+                    message: format!(
+                        "deadlock: {} actors alive, all blocked",
+                        enabled.len()
+                    ),
+                }));
+            }
+        }
+        if let Err(message) = finale(state) {
+            return Err(Box::new(Violation {
+                seed,
+                step: steps,
+                actor: "<finale>".to_string(),
+                message,
+            }));
+        }
+        Ok(steps)
+    }
+}
+
+/// Parse a seed string as decimal or `0x…` hex (the format printed in
+/// violation reports), for the `MOLPACK_RACE_SEED` replay hook.
+pub fn parse_seed(s: &str) -> Option<u64> {
+    let t = s.trim();
+    if let Some(hex) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        t.parse().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // A 2-actor ping-pong: producer sends 0..n through a 1-slot cell,
+    // consumer sums. Any interleaving must deliver every value.
+    fn ping_pong(n: u32) -> Scenario<(Option<u32>, u32, u32)> {
+        // state: (cell, next_to_send, sum)
+        let mut received = 0u32;
+        Scenario::new((None, 0u32, 0u32))
+            .with_actor("producer", move |st: &mut (Option<u32>, u32, u32)| {
+                if st.1 >= n {
+                    return Step::Done;
+                }
+                if st.0.is_some() {
+                    return Step::Blocked;
+                }
+                st.0 = Some(st.1);
+                st.1 += 1;
+                Step::Ran
+            })
+            .with_actor("consumer", move |st: &mut (Option<u32>, u32, u32)| {
+                match st.0.take() {
+                    Some(v) => {
+                        st.2 += v;
+                        received += 1;
+                        if received == n {
+                            Step::Done
+                        } else {
+                            Step::Ran
+                        }
+                    }
+                    None => Step::Blocked,
+                }
+            })
+            .with_finale(move |st| {
+                let want = n * n.saturating_sub(1) / 2;
+                if st.2 == want {
+                    Ok(())
+                } else {
+                    Err(format!("sum {} != {want}", st.2))
+                }
+            })
+    }
+
+    #[test]
+    fn ping_pong_passes_many_schedules() {
+        let stats = Explorer::new(200, 0xBEEF)
+            .run(|rng| ping_pong(rng.range(1, 9) as u32))
+            .expect("ping-pong is race-free");
+        assert_eq!(stats.schedules, 200);
+        assert!(stats.steps > 0);
+    }
+
+    #[test]
+    fn deadlock_is_detected() {
+        // two actors each blocked forever waiting on the other
+        let v = Explorer::new(1, 7)
+            .run(|_| {
+                Scenario::new(())
+                    .with_actor("a", |_: &mut ()| Step::Blocked)
+                    .with_actor("b", |_: &mut ()| Step::Blocked)
+            })
+            .expect_err("must deadlock");
+        assert!(v.message.contains("deadlock"), "{v}");
+        assert_eq!(v.step, 0);
+    }
+
+    #[test]
+    fn livelock_hits_the_step_budget() {
+        let mut ex = Explorer::new(1, 7);
+        ex.max_steps = 50;
+        let v = ex
+            .run(|_| Scenario::new(()).with_actor("spin", |_: &mut ()| Step::Ran))
+            .expect_err("must livelock");
+        assert!(v.message.contains("livelock"), "{v}");
+        assert_eq!(v.step, 50);
+    }
+
+    #[test]
+    fn violations_replay_identically() {
+        let build = |rng: &mut Rng| {
+            let trip = rng.range(2, 20) as u32;
+            Scenario::new(0u32)
+                .with_actor("inc", move |st: &mut u32| {
+                    *st += 1;
+                    if *st > 100 {
+                        Step::Done
+                    } else {
+                        Step::Ran
+                    }
+                })
+                .with_invariant(move |st| {
+                    if *st == trip {
+                        Err(format!("tripped at {st}"))
+                    } else {
+                        Ok(())
+                    }
+                })
+        };
+        let ex = Explorer::new(50, 0xD00D);
+        let v = ex.run(build).expect_err("always trips");
+        let v2 = ex.replay(v.seed, build).expect_err("replay trips too");
+        assert_eq!(v, v2, "replay must reproduce the identical violation");
+        assert!(v.to_string().contains("MOLPACK_RACE_SEED"));
+    }
+
+    #[test]
+    fn from_env_defaults_without_override() {
+        // avoid set_var (process-global, racy under parallel tests):
+        // branch on whether the variable is already present.
+        let ex = Explorer::from_env(123, 1);
+        match std::env::var("MOLPACK_RACE_SCHEDULES") {
+            Err(_) => assert_eq!(ex.schedules, 123),
+            Ok(v) => assert_eq!(ex.schedules, v.trim().parse::<u64>().unwrap_or(123)),
+        }
+    }
+
+    #[test]
+    fn parse_seed_accepts_hex_and_decimal() {
+        assert_eq!(parse_seed("42"), Some(42));
+        assert_eq!(parse_seed("0x2a"), Some(42));
+        assert_eq!(parse_seed(" 0X2A "), Some(42));
+        assert_eq!(parse_seed("nope"), None);
+    }
+}
