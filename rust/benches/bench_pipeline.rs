@@ -25,16 +25,27 @@
 //!   bitwise-identical stream, zero molecule/edge recomputation —
 //!   written as `BENCH_persist.json`.
 //!
-//! Flags (after `--`): `--assembly-only` / `--persist-only` run a single
-//! section (the `make bench-smoke` CI entry points); `--graphs N` sizes
-//! their dataset; `--out PATH` / `--persist-out PATH` move the JSON
-//! (defaults `BENCH_assembly.json` / `BENCH_persist.json`).
+//! * zero-copy mapped load (ISSUE 7): epoch 1 restored from the same
+//!   cache file via `MapMode::Mapped` (the file *is* the arena) vs
+//!   `MapMode::Owned` (bulk read) — asserted ≥ 1.2× and
+//!   bitwise-identical, with a two-plane RSS check that mapped planes
+//!   share page-cache pages — written as `BENCH_mmap.json`; plus the
+//!   `fill_pack` u8→i32 widen micro-bench.
+//!
+//! Flags (after `--`): `--assembly-only` / `--persist-only` /
+//! `--mmap-only` / `--widen-only` run a single section (the
+//! `make bench-smoke` CI entry points); `--graphs N` sizes their
+//! dataset; `--out PATH` / `--persist-out PATH` / `--mmap-out PATH` move
+//! the JSON (defaults `BENCH_assembly.json` / `BENCH_persist.json` /
+//! `BENCH_mmap.json`).
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use molpack::coordinator::{stream_epoch, Batcher, DataPlane, JobSpec, PipelineConfig};
-use molpack::datasets::{HydroNet, CACHE_FILE};
+use molpack::coordinator::{
+    stream_epoch, widen_u8_to_i32, Batcher, DataPlane, JobSpec, PipelineConfig,
+};
+use molpack::datasets::{HydroNet, MapMode, MoleculeSource, PreparedSource, CACHE_FILE};
 use molpack::runtime::{BatchGeometry, HostBatch};
 use molpack::util::stats::summarize;
 
@@ -299,6 +310,181 @@ fn persist_cold_vs_warm(n: usize, workers: usize, out: &str) {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Linux resident-set size in bytes from `/proc/self/status`, when the
+/// proc filesystem exists (None elsewhere — the RSS assertion is skipped).
+fn rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmRSS:"))?;
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
+/// Epoch-1 style touch of every byte a training epoch reads — molecule
+/// tensors plus the `(6.0, 12)` edge topology — folded into one FNV-1a
+/// fingerprint so "bitwise-identical across load modes" is literal.
+fn prepared_epoch_fingerprint(prep: &PreparedSource) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    let topo = prep.topology(6.0, 12);
+    for i in 0..prep.len() {
+        let m = prep.molecule(i);
+        m.z.iter().for_each(|&x| eat(x as u64));
+        m.pos.iter().for_each(|&x| eat(x.to_bits() as u64));
+        eat(m.energy.to_bits() as u64);
+        let (e, _) = prep.edges(&topo, i);
+        e.src.iter().for_each(|&x| eat(x as u64));
+        e.dst.iter().for_each(|&x| eat(x as u64));
+    }
+    h
+}
+
+/// Zero-copy mmap load (ISSUE 7 acceptance): epoch 1 on a plane that
+/// memory-maps the cache vs one that bulk-reads it into an owned arena.
+/// Same file, same stream — the only difference is `MapMode`. Asserts
+/// mapped >= 1.2x owned and a bitwise-identical stream, then checks that
+/// a *second* mapped plane shares page-cache pages instead of paying a
+/// second resident copy. Writes `BENCH_mmap.json`.
+fn persist_mmap(n: usize, out: &str) {
+    println!("persist-mmap: epoch 1, mapped vs owned cache load — {n} graphs:");
+    let dir = std::env::temp_dir().join(format!("molpack-bench-mmap-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("creating bench cache dir");
+    let path = dir.join(CACHE_FILE);
+    std::fs::remove_file(&path).ok(); // always start from a fresh file
+
+    let source: Arc<dyn MoleculeSource> = Arc::new(HydroNet::with_max_molecules(n, 1, 25));
+    let builder = PreparedSource::new(Arc::clone(&source));
+    builder.warm(6.0, 12);
+    let file_bytes = builder.save(&path).expect("persisting bench cache");
+    drop(builder);
+
+    // Interleave the modes rep by rep so page-cache temperature and CPU
+    // clocks are shared fairly; keep the min per mode.
+    let reps = 3;
+    let mut best = [f64::INFINITY; 2]; // [owned, mapped]
+    let mut prints = [0u64; 2];
+    for _ in 0..reps {
+        for (slot, mode) in [(0, MapMode::Owned), (1, MapMode::Mapped)] {
+            let t0 = Instant::now();
+            let prep = PreparedSource::load_with(Arc::clone(&source), &path, mode)
+                .expect("bench cache loads");
+            prints[slot] = prepared_epoch_fingerprint(&prep);
+            best[slot] = best[slot].min(t0.elapsed().as_secs_f64());
+            assert_eq!(prep.stats().map_fallbacks, 0, "bench cache hit a lazy fallback");
+        }
+    }
+    let [owned_secs, mapped_secs] = best;
+    assert_eq!(
+        prints[0], prints[1],
+        "mapped load is not bitwise-identical to owned load"
+    );
+    let speedup = owned_secs / mapped_secs;
+    println!("  owned  load + epoch-1 touch: {owned_secs:>8.4}s");
+    println!("  mapped load + epoch-1 touch: {mapped_secs:>8.4}s");
+    println!(
+        "  mapped over owned {speedup:.2}x | cache file {:.1} MB",
+        file_bytes as f64 / 1e6
+    );
+    if molpack::util::mmap::SUPPORTED {
+        assert!(
+            speedup >= 1.2,
+            "mapped epoch-1 load must be >= 1.2x owned ({speedup:.2}x)"
+        );
+    } else {
+        println!("  (mmap unsupported on this platform — Mapped fell back to a bulk read)");
+    }
+
+    // Page sharing: with one mapped plane resident, a second mapped
+    // plane over the same file must not pay a second copy of the data —
+    // its RSS growth stays well under the file size because both map the
+    // same page-cache pages.
+    let mut rss_shared_fraction = -1.0f64;
+    if molpack::util::mmap::SUPPORTED && rss_bytes().is_some() {
+        let a = PreparedSource::load_with(Arc::clone(&source), &path, MapMode::Mapped)
+            .expect("bench cache loads");
+        prepared_epoch_fingerprint(&a); // fault every page in
+        let rss_one = rss_bytes().expect("proc rss");
+        let b = PreparedSource::load_with(Arc::clone(&source), &path, MapMode::Mapped)
+            .expect("bench cache loads");
+        prepared_epoch_fingerprint(&b);
+        let rss_two = rss_bytes().expect("proc rss");
+        let delta = rss_two.saturating_sub(rss_one);
+        rss_shared_fraction = 1.0 - delta as f64 / file_bytes as f64;
+        println!(
+            "  second mapped plane RSS delta: {:.1} MB over a {:.1} MB file ({:.0}% shared)",
+            delta as f64 / 1e6,
+            file_bytes as f64 / 1e6,
+            100.0 * rss_shared_fraction,
+        );
+        // The second plane re-faults shared pages (no new physical
+        // copy) plus its own edge-slot bookkeeping; half the file
+        // size is a generous ceiling that still catches an
+        // accidental owned-copy regression.
+        assert!(
+            (delta as f64) < 0.5 * file_bytes as f64,
+            "second mapped plane grew RSS by {delta} bytes (file is {file_bytes}) — \
+             pages are not being shared"
+        );
+    }
+
+    let fields = [
+        "  \"bench\": \"persist_mmap\"".to_string(),
+        "  \"dataset\": \"synthetic-500K-subset\"".to_string(),
+        format!("  \"graphs\": {n}"),
+        format!("  \"owned_load_secs\": {owned_secs:.6}"),
+        format!("  \"mapped_load_secs\": {mapped_secs:.6}"),
+        format!("  \"mapped_over_owned_speedup\": {speedup:.3}"),
+        "  \"bitwise_identical\": true".to_string(),
+        format!("  \"cache_file_bytes\": {file_bytes}"),
+        format!("  \"rss_shared_fraction\": {rss_shared_fraction:.3}"),
+    ];
+    let json = format!("{{\n{}\n}}\n", fields.join(",\n"));
+    std::fs::write(out, json).expect("writing mmap bench JSON");
+    println!("  wrote {out}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Micro-bench for the `fill_pack` z-widen: the unit-stride
+/// `widen_u8_to_i32` block loop vs the naive scalar loop, over a
+/// batch-sized span repeated enough to be timeable. Correctness is
+/// asserted; throughput is reported (the block loop autovectorizes to
+/// `pmovzxbd`-class code, the scalar loop may not).
+fn widen_micro() {
+    println!("widen micro-bench — fill_pack u8 -> i32 z-widen:");
+    let len = 96 * 1024; // many pack-sized rows
+    let src: Vec<u8> = (0..len).map(|i| (i * 7 + 3) as u8).collect();
+    let mut out = vec![0i32; len];
+    let mut scalar = vec![0i32; len];
+    let reps = 2000;
+
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for (o, &s) in scalar.iter_mut().zip(&src) {
+            *o = i32::from(s);
+        }
+        std::hint::black_box(&scalar);
+    }
+    let scalar_secs = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        widen_u8_to_i32(&src, &mut out);
+        std::hint::black_box(&out);
+    }
+    let widen_secs = t0.elapsed().as_secs_f64();
+
+    assert_eq!(out, scalar, "widen_u8_to_i32 diverged from the scalar loop");
+    let bytes = (len * reps) as f64;
+    println!(
+        "  scalar loop: {:>8.1} MB/s | widen_u8_to_i32: {:>8.1} MB/s ({:.2}x)",
+        bytes / scalar_secs / 1e6,
+        bytes / widen_secs / 1e6,
+        scalar_secs / widen_secs,
+    );
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let flag_val = |key: &str| {
@@ -310,6 +496,7 @@ fn main() {
     let out = flag_val("--out").unwrap_or_else(|| "BENCH_assembly.json".to_string());
     let persist_out =
         flag_val("--persist-out").unwrap_or_else(|| "BENCH_persist.json".to_string());
+    let mmap_out = flag_val("--mmap-out").unwrap_or_else(|| "BENCH_mmap.json".to_string());
     let assembly_graphs: usize = flag_val("--graphs")
         .map(|v| v.parse().expect("--graphs takes an integer"))
         .unwrap_or(20_000);
@@ -325,6 +512,18 @@ fn main() {
         // fresh-process persistence section on a CI-sized dataset.
         persist_cold_vs_warm(assembly_graphs, 4, &persist_out);
         println!("\nbench_pipeline persist smoke OK");
+        return;
+    }
+    if args.iter().any(|a| a == "--mmap-only") {
+        // CI smoke entry point (`make bench-smoke`): just the ISSUE 7
+        // zero-copy mapped-load section on a CI-sized dataset.
+        persist_mmap(assembly_graphs, &mmap_out);
+        println!("\nbench_pipeline mmap smoke OK");
+        return;
+    }
+    if args.iter().any(|a| a == "--widen-only") {
+        widen_micro();
+        println!("\nbench_pipeline widen micro OK");
         return;
     }
 
@@ -426,6 +625,17 @@ fn main() {
     // zero recomputation). Emits BENCH_persist.json.
     println!();
     persist_cold_vs_warm(assembly_graphs, 4, &persist_out);
+
+    // (f) zero-copy mapped load: mapped vs owned epoch-1 restore off the
+    // same cache file, plus the two-plane page-sharing check (ISSUE 7
+    // acceptance: >= 1.2x, bitwise-identical). Emits BENCH_mmap.json.
+    println!();
+    persist_mmap(assembly_graphs, &mmap_out);
+
+    // (g) the fill_pack z-widen micro-bench rides along — it is cheap
+    // and keeps the block loop's scalar-equivalence asserted in CI.
+    println!();
+    widen_micro();
 
     println!("\nbench_pipeline OK");
 }

@@ -40,6 +40,28 @@ pub struct AssemblyStats {
     pub edge_misses: u64,
 }
 
+/// Widen a `u8` span into an `i32` span of the same length. The arena
+/// stores `z` at source width (4× smaller arena and cache file); batches
+/// carry it at the compiled `i32` dtype, so every pack fill pays one
+/// widening pass. Fixed 16-lane blocks keep the loop branch-free and
+/// unit-stride — the shape autovectorizers turn into `pmovzxbd`-class
+/// code, same cost class as the straight memcpy it replaces (measured by
+/// `bench_pipeline -- --widen-only`; the hot-loop half of ROADMAP
+/// item 3).
+pub fn widen_u8_to_i32(src: &[u8], out: &mut [i32]) {
+    assert_eq!(src.len(), out.len(), "widen spans must be the same length");
+    let mut blocks = src.chunks_exact(16);
+    let mut outs = out.chunks_exact_mut(16);
+    for (sb, ob) in (&mut blocks).zip(&mut outs) {
+        for (o, &s) in ob.iter_mut().zip(sb) {
+            *o = i32::from(s);
+        }
+    }
+    for (x, y) in blocks.remainder().iter().zip(outs.into_remainder()) {
+        *y = i32::from(*x);
+    }
+}
+
 /// Assembles packs into batches for a fixed geometry.
 #[derive(Debug, Clone)]
 pub struct Batcher {
@@ -64,6 +86,7 @@ impl Batcher {
 
     /// Build one `HostBatch` from up to `packs_per_batch` packs. Fewer
     /// packs leave fully padded windows (end of epoch).
+    #[must_use = "an unchecked assembly error means the batch was never built"]
     pub fn assemble(&self, packs: &[Pack], prepared: &PreparedSource) -> Result<HostBatch> {
         // A freshly built buffer is already in the reset state — no
         // second zeroing pass.
@@ -79,6 +102,7 @@ impl Batcher {
     /// [`assemble_into_with`](Batcher::assemble_into_with) with a
     /// session-held topology instead, keeping the topology lookup — and
     /// its lock — off the per-batch path entirely.
+    #[must_use = "an unchecked assembly error leaves the recycled buffer dirty, not filled"]
     pub fn assemble_into(
         &self,
         b: &mut HostBatch,
@@ -94,6 +118,7 @@ impl Batcher {
     /// different cutoffs coexist on one prepared source without
     /// cross-talk). `topo` must come from `prepared`'s own cache — this
     /// is the zero-lock, zero-allocation steady-state path.
+    #[must_use = "an unchecked assembly error leaves the recycled buffer dirty, not filled"]
     pub fn assemble_into_with(
         &self,
         b: &mut HostBatch,
@@ -169,14 +194,7 @@ impl Batcher {
             if base + n > n0 + g.nodes_per_pack {
                 bail!("graph {item} overflows pack node window ({n} atoms at {base})");
             }
-            // `z` lives in the arena at source width (`u8`, 4× smaller
-            // arena and cache files); widen to the batch dtype in the
-            // copy itself — a branch-free unit-stride loop the compiler
-            // vectorizes, same cost class as the straight memcpy it
-            // replaces.
-            for (out, &zi) in b.z[base..base + n].iter_mut().zip(mol.z) {
-                *out = zi as i32;
-            }
+            widen_u8_to_i32(mol.z, &mut b.z[base..base + n]);
             b.pos[base * 3..(base + n) * 3].copy_from_slice(mol.pos);
             b.graph_id[base..base + n].fill((g0 + slot) as i32);
             b.node_mask[base..base + n].fill(1.0);
@@ -196,7 +214,7 @@ impl Batcher {
                 );
             }
             let base32 = base as i32;
-            for (s, d) in edges.src.iter().zip(&edges.dst) {
+            for (s, d) in edges.src.iter().zip(edges.dst) {
                 b.src[edge_cursor] = base32 + *s as i32;
                 b.dst[edge_cursor] = base32 + *d as i32;
                 edge_cursor += 1;
@@ -243,6 +261,29 @@ mod tests {
     fn packed(ds: &dyn MoleculeSource, n: usize) -> Packing {
         let sizes: Vec<usize> = (0..n).map(|i| ds.n_atoms(i)).collect();
         lpfhp(&sizes, 96, Some(4))
+    }
+
+    #[test]
+    fn widen_matches_scalar_conversion_at_every_length() {
+        // Block size is 16, so sweep lengths around every boundary shape:
+        // empty, sub-block, exact blocks, blocks + remainder.
+        for len in [0usize, 1, 7, 15, 16, 17, 31, 32, 33, 96, 255, 256, 1000] {
+            let src: Vec<u8> = (0..len).map(|i| (i * 131 + 17) as u8).collect();
+            let mut out = vec![-1i32; len];
+            widen_u8_to_i32(&src, &mut out);
+            for (i, (&s, &o)) in src.iter().zip(&out).enumerate() {
+                assert_eq!(o, i32::from(s), "len {len}, lane {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn widen_rejects_mismatched_spans() {
+        let r = std::panic::catch_unwind(|| {
+            let mut out = vec![0i32; 3];
+            widen_u8_to_i32(&[1, 2], &mut out);
+        });
+        assert!(r.is_err(), "length mismatch must not silently truncate");
     }
 
     #[test]

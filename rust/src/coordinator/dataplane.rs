@@ -784,6 +784,7 @@ impl DataPlane {
     /// Returns `Ok(None)` when there is nothing to do — no `cache_dir`
     /// configured, or the cache this plane loaded from disk is still
     /// complete — and `Ok(Some(bytes))` after a write.
+    #[must_use = "an unchecked save error means the prepared cache was not persisted"]
     pub fn save_prepared(&self) -> Result<Option<u64>> {
         let Some(dir) = &self.cfg.cache_dir else {
             return Ok(None);
@@ -818,6 +819,15 @@ impl DataPlane {
                 "persisting prepared cache: materializing {cold} cold segments (of {}) and \
                  {missing_edges} missing edge entries first",
                 s.segments_total
+            );
+        }
+        if s.map_fallbacks > 0 {
+            // A mapped section failed its lazy checksum mid-run; the
+            // plane served cold rebuilds instead, and the rewrite below
+            // replaces the damaged file.
+            eprintln!(
+                "prepared cache: {} mapped section(s) failed verification — rewriting",
+                s.map_fallbacks
             );
         }
         match self.save_prepared() {

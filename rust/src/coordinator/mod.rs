@@ -21,7 +21,7 @@ pub mod replicas;
 /// Session-layer vocabulary: job specs, QoS classes, metrics.
 pub mod session;
 
-pub use batcher::{AssemblyStats, Batcher};
+pub use batcher::{widen_u8_to_i32, AssemblyStats, Batcher};
 pub use dataplane::{BatchLease, BatchStream, BufferPool, DataPlane, PipelineConfig, Session};
 pub use pipeline::{plan_epoch, stream_epoch, EpochStream};
 pub use replicas::{CollectiveStats, DataParallel};

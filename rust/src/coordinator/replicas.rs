@@ -47,6 +47,7 @@ impl DataParallel {
     /// Build a `replicas`-way data-parallel trainer over `engine`;
     /// `merged` selects the single fused all-reduce over per-tensor
     /// collectives.
+    #[must_use = "an unchecked construction error means no replica group exists"]
     pub fn new(engine: &Engine, replicas: usize, merged: bool) -> Result<Self> {
         if replicas == 0 {
             bail!("need at least one replica");
@@ -63,6 +64,7 @@ impl DataParallel {
     /// replica). Returns the mean replica loss. Accepts anything that
     /// borrows as `HostBatch` — owned batches or data-plane
     /// `BatchLease`s — so the replica path rides the recycling pool.
+    #[must_use = "an unchecked step error silently loses the failed micro-batch"]
     pub fn step<B: std::borrow::Borrow<HostBatch>>(
         &mut self,
         engine: &Engine,
@@ -104,6 +106,7 @@ impl DataParallel {
     /// plane keep their QoS while replicas train. Leases return to the
     /// plane's buffer pool after each step. Returns (mean step loss,
     /// dp-steps run).
+    #[must_use = "an unchecked epoch error means training silently stopped mid-epoch"]
     pub fn run_epoch(
         &mut self,
         engine: &Engine,

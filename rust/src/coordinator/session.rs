@@ -94,6 +94,7 @@ impl QosWeights {
     /// weight would starve its class outright (the smooth-WRR counter
     /// never accumulates), and absurdly large weights erode counter
     /// headroom without changing any achievable ratio.
+    #[must_use = "an unchecked validation error admits an invalid job spec"]
     pub fn validate(&self) -> anyhow::Result<()> {
         for (class, w) in QosClass::ALL.iter().zip(self.lane_weights()) {
             if w == 0 {

@@ -4,8 +4,9 @@
 //! abstraction the loader pipeline consumes, the epoch-invariant
 //! prepared source (`prepared`: SoA arena + memoized edge topologies)
 //! the data-plane assembles from, and its on-disk persistence format
-//! (`persist`: versioned, checksummed, fingerprinted — epoch 1 of a
-//! fresh process runs warm).
+//! (`persist`: versioned, checksummed, fingerprinted, and served
+//! in place from a memory-mapped cache file — epoch 1 of a fresh
+//! process runs warm off page-cache pages shared host-wide).
 
 /// Two-level molecule cache (per-worker LRU over a shared source).
 pub mod cache;
@@ -22,8 +23,8 @@ pub mod store;
 
 pub use cache::{CacheStats, CachedSource, LruCache};
 pub use hydronet::HydroNet;
-pub use persist::{fingerprint, SourceFingerprint, CACHE_FILE};
-pub use prepared::{EdgeTopology, MoleculeView, PreparedSource, PreparedStats};
+pub use persist::{fingerprint, paranoid_hash, MapMode, MappedCache, SourceFingerprint, CACHE_FILE};
+pub use prepared::{EdgeRef, EdgeTopology, MoleculeView, PreparedSource, PreparedStats};
 pub use qm9::Qm9;
 pub use store::{write_store, Store};
 

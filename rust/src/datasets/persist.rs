@@ -1,93 +1,133 @@
-//! On-disk persistence format for the prepared-dataset cache: the
+//! On-disk persistence format (v2) for the prepared-dataset cache: the
 //! paper's "compressed serialized binary representation" (section 4.2.3)
 //! extended to *derived* data — the SoA molecule arena plus the memoized
-//! per-`(r_cut, k_max)` edge topologies — so epoch 1 of a **fresh
-//! process** starts with the cache already warm.
+//! per-`(r_cut, k_max)` edge topologies — laid out so the cache file can
+//! be **memory-mapped and served in place**: epoch 1 of a fresh process
+//! starts warm without copying the image, pages fault in lazily, and
+//! every plane in every process on the host shares one physical copy.
 //!
-//! This module owns only the byte format and its validation ladder;
-//! [`PreparedSource::save`]/[`PreparedSource::load_or_wrap`]
-//! (`datasets::prepared`) translate between the live cache and the
-//! neutral [`CacheImage`] defined here.
+//! This module owns the byte format, its validation ladder, the
+//! streaming writer, and the mapped/owned reader ([`MappedCache`]);
+//! `datasets::prepared` translates between the live cache and this
+//! layer.
 //!
-//! # Layout (little endian)
+//! # v2 layout (little endian; all section payloads 8-byte aligned)
 //!
 //! ```text
-//! header (40 bytes):
-//!   magic "MPPC" | u32 version
-//!   u64 payload_len        -- exact byte length of the payload region
-//!   u64 payload_checksum   -- FNV-1a 64 over the payload bytes
-//!   u64 fp_molecules       -- source fingerprint: molecule count
-//!   u64 fp_content_hash    -- source fingerprint: sampled content hash
-//! payload:
-//!   u64 n                  -- molecules (== fp_molecules)
-//!   u64 arena_offsets[n+1] -- global CSR atom offsets
-//!   u8  z[total_atoms]     -- atomic numbers at source width
-//!   f32 pos[3*total_atoms] -- flat positions
-//!   f32 energy[n]
-//!   u32 n_topologies
-//!   per topology:
-//!     u32 r_cut_bits | u32 k_max
-//!     u64 edge_offsets[n+1]
-//!     u32 src[total_edges] | u32 dst[total_edges]
+//! header (88 bytes):
+//!    0  magic "MPPC" | u32 version = 2
+//!    8  u64 fp_molecules       -- source fingerprint: molecule count
+//!   16  u64 fp_content_hash    -- source fingerprint: sampled hash
+//!   24  u64 n_molecules        -- == fp_molecules (cross-checked)
+//!   32  u64 n_sections
+//!   40  u64 table_offset       -- 8-aligned, >= 88
+//!   48  u64 file_len           -- logical end of the cache image
+//!   56  u64 flags              -- bit 0: paranoid hash present
+//!   64  u64 paranoid_hash      -- whole-dataset FNV (0 when absent)
+//!   72  u64 table_checksum     -- FNV-1a 64 over the section table
+//!   80  u64 header_checksum    -- FNV-1a 64 over header bytes 0..80
+//! sections (each at an 8-aligned offset, zero-padded to 8 bytes):
+//!   raw little-endian spans, reinterpreted in place on load
+//! section table (n_sections x 40 bytes, at table_offset):
+//!   u32 kind | u32 encoding | u64 param | u64 offset | u64 len
+//!   | u64 checksum          -- FNV-1a 64 over the unpadded payload
 //! ```
 //!
-//! # Validation ladder (any failure ⇒ the caller rebuilds cold)
+//! Section kinds: `0` arena CSR atom offsets (`u64[n+1]`), `1` arena `z`
+//! (`u8[total_atoms]`), `2` arena positions (`f32[3*total_atoms]`), `3`
+//! energies (`f32[n]`), `4`/`5`/`6` one edge topology's CSR edge
+//! offsets (`u64[n+1]`) / `src` / `dst` (`u32[total_edges]`), with
+//! `param = r_cut_bits << 32 | k_max`. Kinds 4–6 always appear as a
+//! complete triple per key. Encodings: `0` raw (in-place span), `1`
+//! delta+LEB128-varint (offsets kinds only, chosen when it saves ≥ 25%;
+//! decoded into an owned vector on first use).
 //!
-//! 1. header present, magic and version match;
-//! 2. `payload_len` equals the bytes actually on disk — a truncated or
-//!    grown file is rejected before any decoding;
-//! 3. `payload_checksum` matches — bit rot and partial overwrites are
-//!    rejected (writes also go through a temp file + atomic rename, so a
-//!    crashed writer leaves the old cache intact, never a torn one);
-//! 4. the stored fingerprint equals the fingerprint of the source the
-//!    caller is about to stream — a cache built from different data
-//!    (count, shapes, or sampled content) is *stale* and rejected.
-//!    This check is **sampled** (see [`fingerprint`]): it catches the
-//!    realistic staleness modes (regenerated/reseeded/resized corpora)
-//!    but, by construction, not an in-place edit confined to unprobed
-//!    records that leaves the count and every probe bit-identical —
-//!    the prepared source's immutable-source contract is what rules
-//!    that out, for the disk cache exactly as for the in-memory one
-//!    (a whole-corpus hash option is a ROADMAP follow-up);
-//! 5. structural decode with bounds checks and CSR-monotonicity checks
-//!    (belt-and-braces: unreachable behind a valid checksum, but decode
-//!    must never panic on hostile bytes).
+//! # Checksum ladder (header-first: validation never force-faults the
+//! # whole mapping)
 //!
-//! Loading is one bulk `fs::read` + in-memory slicing: at dataset-cache
-//! sizes the sequential read runs at device bandwidth, and the offline
-//! crate set has no mmap wrapper — the "zero-recompute" property (no
-//! molecule materialization, no `knn_edges`) is what the days→hours
-//! speedup comes from, not the copy.
+//! 1. **Eager, O(header+table):** magic/version, `header_checksum`,
+//!    fingerprint vs the source about to be streamed, `file_len` fits
+//!    the bytes on disk (a longer physical file is tolerated — see the
+//!    append protocol), section-table bounds/alignment/overlap checks,
+//!    `table_checksum`.
+//! 2. **Eager, O(n):** the arena *offsets* section alone is checksummed
+//!    and CSR-validated up front — `n_atoms` drives shard planning
+//!    before any batch is assembled, so it must be trustworthy first.
+//!    The z/pos/energy section *lengths* are cross-checked against it.
+//! 3. **Lazy, first touch:** z/pos/energy checksums verify once on the
+//!    first molecule access ([`MappedCache::verify_arena`]); each
+//!    topology's checksums + CSR + per-molecule endpoint-range checks
+//!    verify once on that topology's first use
+//!    ([`MappedCache::verify_topology`]). A lazy failure makes the
+//!    caller fall back to the cold build path for the failing span —
+//!    **never** a wrong batch.
+//!
+//! # Write / append protocol
+//!
+//! Full writes stream section-at-a-time through [`CacheWriter`] into a
+//! writer-unique temp file (pid+seq) renamed into place — a crashed or
+//! concurrent writer can never tear `CACHE_FILE`. Newly memoized
+//! topologies are **appended**: new sections land after the existing
+//! image (the old table is left intact), a new table is written after
+//! them, both are synced, and only then is the 88-byte header rewritten
+//! in place to point at the new table. A crash before the header flip
+//! leaves the old image valid; a torn header write fails the header
+//! checksum and the loader rebuilds cold. Appends only ever *grow* the
+//! file and renames only ever *replace* it, so a live mapping's pages
+//! stay valid for the mapping's lifetime (no SIGBUS by protocol).
 
-use std::path::Path;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
 
 use anyhow::{bail, Context, Result};
 
+use crate::datasets::prepared::{AlignedBytes, ArenaBytes};
 use crate::datasets::MoleculeSource;
+use crate::util::mmap::Mmap;
 
 /// File name of the prepared cache inside a `cache_dir`.
 pub const CACHE_FILE: &str = "prepared.mppc";
 
 const MAGIC: &[u8; 4] = b"MPPC";
-const VERSION: u32 = 1;
-const HEADER_LEN: usize = 40;
+const VERSION: u32 = 2;
+const HEADER_LEN: usize = 88;
+const ENTRY_LEN: usize = 40;
+
+pub(crate) const K_ARENA_OFFSETS: u32 = 0;
+pub(crate) const K_ARENA_Z: u32 = 1;
+pub(crate) const K_ARENA_POS: u32 = 2;
+pub(crate) const K_ARENA_ENERGY: u32 = 3;
+pub(crate) const K_TOPO_OFFSETS: u32 = 4;
+pub(crate) const K_TOPO_SRC: u32 = 5;
+pub(crate) const K_TOPO_DST: u32 = 6;
+
+pub(crate) const ENC_RAW: u32 = 0;
+pub(crate) const ENC_DELTA_VARINT: u32 = 1;
+
+const FLAG_PARANOID: u64 = 1;
 
 /// How many molecules contribute their `n_atoms` to the fingerprint.
 const FP_SHAPE_PROBES: usize = 64;
 /// How many molecules contribute their full content to the fingerprint.
 const FP_CONTENT_PROBES: usize = 8;
 
-/// FNV-1a 64 — the repo's standing content-hash primitive (cheap,
-/// dependency-free, good avalanche for change detection; not
-/// cryptographic, which the threat model here — stale or torn files, not
-/// adversaries — does not need).
-pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+pub(crate) const FNV_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+pub(crate) fn fnv1a64_update(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x1_0000_0001_b3);
     }
     h
+}
+
+/// FNV-1a 64 — the repo's standing content-hash primitive (cheap,
+/// dependency-free, good avalanche for change detection; not
+/// cryptographic, which the threat model here — stale or torn files, not
+/// adversaries — does not need).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_update(FNV_SEED, bytes)
 }
 
 /// Identity of the dataset a cache was built from. A cache whose
@@ -108,12 +148,14 @@ pub struct SourceFingerprint {
 /// very cold pass the cache exists to avoid; sampled probes catch the
 /// realistic staleness modes (different generator seed, different count,
 /// regenerated or re-sorted stores) at O(1) cost. The file itself is
-/// separately guarded by the payload checksum.
+/// separately guarded by the section checksums, and callers that want
+/// certainty over sampling can opt into [`paranoid_hash`].
 ///
 /// A probe whose record panics (a corrupt entry the per-record
 /// quarantine would absorb during streaming) yields `Err`, never a
 /// panic — a crash-at-construction here would defeat the quarantine's
 /// blast-radius guarantee. Callers fall back to the cold path.
+#[must_use = "the fingerprint decides cache validity; an unchecked Err hides a corrupt source"]
 pub fn fingerprint(source: &dyn MoleculeSource) -> Result<SourceFingerprint> {
     let n = source.len();
     let mut bytes: Vec<u8> = Vec::with_capacity(1024);
@@ -141,6 +183,38 @@ pub fn fingerprint(source: &dyn MoleculeSource) -> Result<SourceFingerprint> {
         bytes.extend_from_slice(&m.energy.to_bits().to_le_bytes());
     }
     Ok(SourceFingerprint { molecules: n as u64, content_hash: fnv1a64(&bytes) })
+}
+
+/// Whole-dataset content hash for `prepare --paranoid`: every molecule's
+/// z bytes, position bits, and energy bits, in index order. O(dataset) —
+/// this costs the full cold scan the sampled [`fingerprint`] avoids, so
+/// it is opt-in. Recorded in the v2 header and re-verified on load when
+/// the loader also opts in.
+///
+/// A panicking record yields `Err` (the whole pass is wrapped — per-record
+/// granularity is pointless here because any corrupt record means the
+/// hash cannot be produced at all).
+#[must_use = "the paranoid hash gates cache validity; dropping it skips the check"]
+pub fn paranoid_hash(source: &dyn MoleculeSource) -> Result<u64> {
+    let n = source.len();
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut h = fnv1a64_update(FNV_SEED, &(n as u64).to_le_bytes());
+        let mut buf: Vec<u8> = Vec::with_capacity(4096);
+        for idx in 0..n {
+            let m = source.get(idx);
+            buf.clear();
+            buf.extend_from_slice(&m.z);
+            for p in &m.pos {
+                for c in p {
+                    buf.extend_from_slice(&c.to_bits().to_le_bytes());
+                }
+            }
+            buf.extend_from_slice(&m.energy.to_bits().to_le_bytes());
+            h = fnv1a64_update(h, &buf);
+        }
+        h
+    }))
+    .map_err(|_| anyhow::anyhow!("source panicked during whole-dataset hash"))
 }
 
 /// Up to `k` distinct indices spread evenly over `0..n`, always
@@ -182,7 +256,8 @@ pub struct TopologyImage {
 }
 
 /// Everything a warm [`PreparedSource`] needs, in serialization-neutral
-/// form.
+/// form. Retained as the writer-input / test-oracle representation; the
+/// zero-copy read path is [`MappedCache`].
 ///
 /// [`PreparedSource`]: crate::datasets::PreparedSource
 #[derive(Debug, Clone, PartialEq)]
@@ -199,183 +274,7 @@ impl CacheImage {
     }
 }
 
-// ---------------------------------------------------------------- write
-
-fn put_u64s(buf: &mut Vec<u8>, vals: &[u64]) {
-    buf.reserve(8 * vals.len());
-    for v in vals {
-        buf.extend_from_slice(&v.to_le_bytes());
-    }
-}
-
-fn put_u32s(buf: &mut Vec<u8>, vals: &[u32]) {
-    buf.reserve(4 * vals.len());
-    for v in vals {
-        buf.extend_from_slice(&v.to_le_bytes());
-    }
-}
-
-fn put_f32s(buf: &mut Vec<u8>, vals: &[f32]) {
-    buf.reserve(4 * vals.len());
-    for v in vals {
-        buf.extend_from_slice(&v.to_le_bytes());
-    }
-}
-
-/// Serialize `image` to `path`. The bytes land in a sibling temp file
-/// first and are atomically renamed into place, so a crash mid-write can
-/// never leave a torn `CACHE_FILE` — the old cache (if any) survives
-/// until the new one is durable. Returns the total bytes written.
-pub fn write_cache(path: &Path, image: &CacheImage) -> Result<u64> {
-    let n = image.molecules();
-    if image.arena.offsets.len() != n + 1 {
-        bail!("arena offsets length {} != molecules + 1 ({})", image.arena.offsets.len(), n + 1);
-    }
-    if image.fingerprint.molecules != n as u64 {
-        bail!("fingerprint count {} != arena molecules {n}", image.fingerprint.molecules);
-    }
-    let total_atoms = checked_usize(
-        *image.arena.offsets.last().expect("offsets length checked to n + 1 above"),
-        "arena atom span",
-    )?;
-    if image.arena.z.len() != total_atoms || image.arena.pos.len() != 3 * total_atoms {
-        bail!(
-            "arena spans (z {}, pos {}) disagree with offsets ({total_atoms} atoms)",
-            image.arena.z.len(),
-            image.arena.pos.len()
-        );
-    }
-
-    let mut payload = Vec::new();
-    put_u64s(&mut payload, &[n as u64]);
-    put_u64s(&mut payload, &image.arena.offsets);
-    payload.extend_from_slice(&image.arena.z);
-    put_f32s(&mut payload, &image.arena.pos);
-    put_f32s(&mut payload, &image.arena.energy);
-    put_u32s(&mut payload, &[checked_u32(image.topologies.len(), "topology count")?]);
-    for t in &image.topologies {
-        if t.edge_offsets.len() != n + 1 {
-            bail!("topology edge offsets length {} != molecules + 1", t.edge_offsets.len());
-        }
-        let total_edges = checked_usize(
-            *t.edge_offsets.last().expect("edge offsets length checked to n + 1 above"),
-            "topology edge span",
-        )?;
-        if t.src.len() != total_edges || t.dst.len() != total_edges {
-            bail!(
-                "topology edge arrays ({}, {}) disagree with offsets ({total_edges})",
-                t.src.len(),
-                t.dst.len()
-            );
-        }
-        put_u32s(&mut payload, &[t.r_cut_bits, t.k_max]);
-        put_u64s(&mut payload, &t.edge_offsets);
-        put_u32s(&mut payload, &t.src);
-        put_u32s(&mut payload, &t.dst);
-    }
-
-    let mut header = Vec::with_capacity(HEADER_LEN);
-    header.extend_from_slice(MAGIC);
-    header.extend_from_slice(&VERSION.to_le_bytes());
-    header.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-    header.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
-    header.extend_from_slice(&image.fingerprint.molecules.to_le_bytes());
-    header.extend_from_slice(&image.fingerprint.content_hash.to_le_bytes());
-
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)
-            .with_context(|| format!("creating cache dir {dir:?}"))?;
-    }
-    // Unique temp name per writer (pid + in-process counter): concurrent
-    // savers sharing a cache_dir (`serve` and `train` both persisting on
-    // exit) must never truncate each other's half-written temp file and
-    // rename a torn one into place — each rename is of a file its writer
-    // alone produced, so `CACHE_FILE` is always either the old cache or
-    // a complete new one.
-    static WRITE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-    let seq = WRITE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-    let tmp = path.with_extension(format!("mppc.tmp.{}.{seq}", std::process::id()));
-    // Header and payload go to the file as two writes — no concatenated
-    // whole-file Vec (the payload alone is the dominant transient copy;
-    // streaming the sections to drop it too is a ROADMAP follow-up).
-    // Either arm failing must not strand the uniquely-named temp file —
-    // a disk-full condition (the very failure the exit-path save
-    // tolerates) would otherwise accumulate one partial file per run
-    // and make itself worse.
-    let written = (|| -> std::io::Result<()> {
-        use std::io::Write;
-        let mut f = std::fs::File::create(&tmp)?;
-        f.write_all(&header)?;
-        f.write_all(&payload)?;
-        f.flush()
-    })();
-    if let Err(e) = written {
-        std::fs::remove_file(&tmp).ok();
-        return Err(anyhow::Error::new(e).context(format!("writing cache temp {tmp:?}")));
-    }
-    std::fs::rename(&tmp, path).map_err(|e| {
-        std::fs::remove_file(&tmp).ok();
-        anyhow::Error::new(e).context(format!("renaming cache into place at {path:?}"))
-    })?;
-    Ok((HEADER_LEN + payload.len()) as u64)
-}
-
-// ----------------------------------------------------------------- read
-
-/// Bounds-checked little-endian reader over the payload bytes.
-struct Reader<'a> {
-    bytes: &'a [u8],
-    at: usize,
-}
-
-impl<'a> Reader<'a> {
-    fn take(&mut self, len: usize) -> Result<&'a [u8]> {
-        let end = self
-            .at
-            .checked_add(len)
-            .filter(|&e| e <= self.bytes.len())
-            .ok_or_else(|| anyhow::anyhow!("cache payload truncated at byte {}", self.at))?;
-        let s = &self.bytes[self.at..end];
-        self.at = end;
-        Ok(s)
-    }
-
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("take(4) returns 4 bytes")))
-    }
-
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("take(8) returns 8 bytes")))
-    }
-
-    fn u64s(&mut self, count: usize) -> Result<Vec<u64>> {
-        let raw = self.take(8 * count)?;
-        Ok(raw
-            .chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().expect("chunks_exact(8) yields 8-byte chunks")))
-            .collect())
-    }
-
-    fn u32s(&mut self, count: usize) -> Result<Vec<u32>> {
-        let raw = self.take(4 * count)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().expect("chunks_exact(4) yields 4-byte chunks")))
-            .collect())
-    }
-
-    fn f32s(&mut self, count: usize) -> Result<Vec<f32>> {
-        let raw = self.take(4 * count)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().expect("chunks_exact(4) yields 4-byte chunks")))
-            .collect())
-    }
-
-    fn done(&self) -> bool {
-        self.at == self.bytes.len()
-    }
-}
+// ------------------------------------------------------------- helpers
 
 /// Checked `u64 -> usize` narrowing for section lengths and counts:
 /// decode must stay total on 32-bit hosts too, so every count routes
@@ -391,11 +290,7 @@ fn checked_u32(v: usize, what: &str) -> Result<u32> {
     u32::try_from(v).map_err(|_| anyhow::anyhow!("{what} {v} does not fit in u32"))
 }
 
-/// CSR sanity: offsets start at 0 and never decrease. (The final offset
-/// is the span *definition*, not something to cross-check — the spans it
-/// sizes are validated downstream by the bounds-checked `Reader` takes
-/// plus the trailing-bytes check, which together pin every section's
-/// length against the payload.)
+/// CSR sanity: offsets start at 0 and never decrease.
 fn check_csr(offsets: &[u64], what: &str) -> Result<()> {
     if offsets.first() != Some(&0) {
         bail!("{what} offsets do not start at 0");
@@ -406,111 +301,1231 @@ fn check_csr(offsets: &[u64], what: &str) -> Result<()> {
     Ok(())
 }
 
-/// Read and fully validate the cache at `path` against `expect` (the
-/// fingerprint of the source about to be streamed). Every failure mode —
-/// missing file, bad magic/version, truncation, checksum mismatch, stale
-/// fingerprint, structural corruption — returns `Err`, and the caller
-/// falls back to the cold path; a cache can therefore never produce
-/// wrong batches, only a slower first epoch.
-pub fn read_cache(path: &Path, expect: &SourceFingerprint) -> Result<CacheImage> {
-    let bytes = std::fs::read(path).with_context(|| format!("reading cache {path:?}"))?;
-    if bytes.len() < HEADER_LEN {
-        bail!("cache file too short for a header: {} bytes", bytes.len());
+fn align8(x: usize) -> usize {
+    (x + 7) & !7
+}
+
+/// Pack a topology key into the section-table `param` field.
+pub(crate) fn topo_param(r_cut_bits: u32, k_max: u32) -> u64 {
+    (r_cut_bits as u64) << 32 | k_max as u64
+}
+
+fn unpack_topo_param(param: u64) -> (u32, u32) {
+    let r_cut_bits = u32::try_from(param >> 32).expect("shifted right by 32, fits in u32");
+    let k_max = u32::try_from(param & 0xffff_ffff).expect("masked to 32 bits, fits in u32");
+    (r_cut_bits, k_max)
+}
+
+pub(crate) fn put_u64s(buf: &mut Vec<u8>, vals: &[u64]) {
+    buf.reserve(8 * vals.len());
+    for v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
     }
-    if &bytes[0..4] != MAGIC {
-        bail!("bad magic in cache file");
+}
+
+pub(crate) fn put_u32s(buf: &mut Vec<u8>, vals: &[u32]) {
+    buf.reserve(4 * vals.len());
+    for v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
     }
-    let version = u32::from_le_bytes(bytes[4..8].try_into().expect("header slice is 4 bytes"));
-    if version != VERSION {
-        bail!("unsupported cache version {version} (expected {VERSION})");
+}
+
+pub(crate) fn put_f32s(buf: &mut Vec<u8>, vals: &[f32]) {
+    buf.reserve(4 * vals.len());
+    for v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
     }
-    let payload_len = checked_usize(
-        u64::from_le_bytes(bytes[8..16].try_into().expect("header slice is 8 bytes")),
-        "payload length",
+}
+
+// ------------------------------------------- in-place span reinterpretation
+
+/// Reinterpret 8-aligned little-endian bytes as `&[u64]` in place.
+/// Alignment and length are asserted — callers only reach this through
+/// sections the open-time ladder has already bounds/alignment-checked.
+fn cast_u64s(bytes: &[u8]) -> &[u64] {
+    if bytes.is_empty() {
+        return &[];
+    }
+    assert!(bytes.len() % 8 == 0, "u64 span length must be a multiple of 8");
+    assert!(bytes.as_ptr().align_offset(8) == 0, "u64 span must be 8-byte aligned");
+    // SAFETY: alignment and length asserted above; every bit pattern is a
+    // valid u64; the returned slice borrows `bytes`, so it cannot outlive
+    // the mapping (or owned buffer) backing it. Only correct on
+    // little-endian hosts — open() rejects the format on big-endian.
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr().cast::<u64>(), bytes.len() / 8) }
+}
+
+/// Reinterpret 4-aligned little-endian bytes as `&[u32]` in place.
+fn cast_u32s(bytes: &[u8]) -> &[u32] {
+    if bytes.is_empty() {
+        return &[];
+    }
+    assert!(bytes.len() % 4 == 0, "u32 span length must be a multiple of 4");
+    assert!(bytes.as_ptr().align_offset(4) == 0, "u32 span must be 4-byte aligned");
+    // SAFETY: as for cast_u64s.
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr().cast::<u32>(), bytes.len() / 4) }
+}
+
+/// Reinterpret 4-aligned little-endian bytes as `&[f32]` in place.
+fn cast_f32s(bytes: &[u8]) -> &[f32] {
+    if bytes.is_empty() {
+        return &[];
+    }
+    assert!(bytes.len() % 4 == 0, "f32 span length must be a multiple of 4");
+    assert!(bytes.as_ptr().align_offset(4) == 0, "f32 span must be 4-byte aligned");
+    // SAFETY: as for cast_u64s; every bit pattern is a valid f32.
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr().cast::<f32>(), bytes.len() / 4) }
+}
+
+// --------------------------------------------------- varint CSR encoding
+
+/// Delta + LEB128 encoding of a monotone CSR offsets array. CSR deltas
+/// are per-molecule span sizes (atoms or edges), almost always < 128, so
+/// this typically shrinks the section ~8x.
+fn encode_varint_deltas(offsets: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(offsets.len() * 2);
+    let mut prev = 0u64;
+    for &v in offsets {
+        let mut delta = v.wrapping_sub(prev);
+        prev = v;
+        loop {
+            let byte = (delta & 0x7f) as u8;
+            delta >>= 7;
+            if delta == 0 {
+                out.push(byte);
+                break;
+            }
+            out.push(byte | 0x80);
+        }
+    }
+    out
+}
+
+/// Decode exactly `count` delta+LEB128 values, consuming all of `bytes`.
+/// Total on hostile input: truncation, trailing bytes, overlong varints,
+/// and u64 overflow all return `Err`.
+fn decode_varint_deltas(bytes: &[u8], count: usize) -> Result<Vec<u64>> {
+    let mut out = Vec::with_capacity(count);
+    let mut at = 0usize;
+    let mut acc = 0u64;
+    for _ in 0..count {
+        let mut delta = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let Some(&b) = bytes.get(at) else {
+                bail!("varint offsets truncated at byte {at}");
+            };
+            at += 1;
+            if shift >= 64 || (shift == 63 && b > 1) {
+                bail!("varint offset overflows u64 at byte {at}");
+            }
+            delta |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                break;
+            }
+            shift += 7;
+        }
+        acc = acc
+            .checked_add(delta)
+            .ok_or_else(|| anyhow::anyhow!("varint offset sum overflows u64 at byte {at}"))?;
+        out.push(acc);
+    }
+    if at != bytes.len() {
+        bail!("{} trailing bytes after varint offsets", bytes.len() - at);
+    }
+    Ok(out)
+}
+
+/// Choose the section encoding for a CSR offsets array: delta+varint
+/// when it is measurably smaller (<= 75% of raw), raw otherwise (raw
+/// stays reinterpretable in place with zero decode cost).
+pub(crate) fn encode_offsets(offsets: &[u64]) -> (u32, Vec<u8>) {
+    let varint = encode_varint_deltas(offsets);
+    if varint.len() * 4 <= offsets.len() * 8 * 3 {
+        (ENC_DELTA_VARINT, varint)
+    } else {
+        let mut raw = Vec::new();
+        put_u64s(&mut raw, offsets);
+        (ENC_RAW, raw)
+    }
+}
+
+// ---------------------------------------------------------------- write
+
+/// One parsed section-table entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct SectionEntry {
+    kind: u32,
+    encoding: u32,
+    param: u64,
+    offset: u64,
+    len: u64,
+    checksum: u64,
+}
+
+impl SectionEntry {
+    fn to_bytes(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.kind.to_le_bytes());
+        out.extend_from_slice(&self.encoding.to_le_bytes());
+        out.extend_from_slice(&self.param.to_le_bytes());
+        out.extend_from_slice(&self.offset.to_le_bytes());
+        out.extend_from_slice(&self.len.to_le_bytes());
+        out.extend_from_slice(&self.checksum.to_le_bytes());
+    }
+}
+
+fn serialize_table(entries: &[SectionEntry]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(entries.len() * ENTRY_LEN);
+    for e in entries {
+        e.to_bytes(&mut out);
+    }
+    out
+}
+
+fn serialize_header(
+    fp: &SourceFingerprint,
+    n: u64,
+    n_sections: u64,
+    table_offset: u64,
+    file_len: u64,
+    paranoid: Option<u64>,
+) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[0..4].copy_from_slice(MAGIC);
+    h[4..8].copy_from_slice(&VERSION.to_le_bytes());
+    h[8..16].copy_from_slice(&fp.molecules.to_le_bytes());
+    h[16..24].copy_from_slice(&fp.content_hash.to_le_bytes());
+    h[24..32].copy_from_slice(&n.to_le_bytes());
+    h[32..40].copy_from_slice(&n_sections.to_le_bytes());
+    h[40..48].copy_from_slice(&table_offset.to_le_bytes());
+    h[48..56].copy_from_slice(&file_len.to_le_bytes());
+    let flags = if paranoid.is_some() { FLAG_PARANOID } else { 0 };
+    h[56..64].copy_from_slice(&flags.to_le_bytes());
+    h[64..72].copy_from_slice(&paranoid.unwrap_or(0).to_le_bytes());
+    // table_checksum is patched in by the caller (it needs the table
+    // bytes); header_checksum is sealed last, over bytes 0..80.
+    h
+}
+
+fn seal_header(h: &mut [u8; HEADER_LEN], table_checksum: u64) {
+    h[72..80].copy_from_slice(&table_checksum.to_le_bytes());
+    let hc = fnv1a64(&h[0..80]);
+    h[80..88].copy_from_slice(&hc.to_le_bytes());
+}
+
+/// Monotone per-writer sequence for temp-file names: concurrent savers
+/// sharing a cache_dir must never truncate each other's half-written
+/// temp file and rename a torn one into place.
+static WRITE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+fn temp_sibling(path: &Path) -> PathBuf {
+    let seq = WRITE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    path.with_extension(format!("mppc.tmp.{}.{seq}", std::process::id()))
+}
+
+/// Streaming v2 cache writer: sections are written one at a time (at
+/// most one section's bytes are ever transient — the whole-image
+/// concatenation of the v1 writer is gone), each checksummed on the fly,
+/// then the table and sealed header land last. The bytes accumulate in a
+/// writer-unique temp file that [`CacheWriter::finish`] atomically
+/// renames into place; dropping an unfinished writer removes the temp.
+#[derive(Debug)]
+pub struct CacheWriter {
+    w: std::io::BufWriter<std::fs::File>,
+    at: u64,
+    entries: Vec<SectionEntry>,
+    /// (kind, encoding, param, start, running checksum, running len).
+    open_section: Option<(u32, u32, u64, u64, u64, u64)>,
+    fingerprint: SourceFingerprint,
+    n: u64,
+    paranoid: Option<u64>,
+    tmp: PathBuf,
+    dest: PathBuf,
+    finished: bool,
+}
+
+impl CacheWriter {
+    /// Start a v2 cache write destined for `path`. `molecules` must
+    /// equal `fingerprint.molecules`; the paranoid hash, when given, is
+    /// recorded in the header for load-time whole-dataset verification.
+    #[must_use = "an unused writer leaves no cache behind"]
+    pub fn create(
+        path: &Path,
+        fingerprint: SourceFingerprint,
+        molecules: u64,
+        paranoid: Option<u64>,
+    ) -> Result<CacheWriter> {
+        if fingerprint.molecules != molecules {
+            bail!("fingerprint count {} != molecules {molecules}", fingerprint.molecules);
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating cache dir {dir:?}"))?;
+        }
+        let tmp = temp_sibling(path);
+        let f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating cache temp {tmp:?}"))?;
+        let mut w = std::io::BufWriter::new(f);
+        // Header placeholder; the sealed header is written over it in
+        // finish() once the table offset and checksums are known.
+        w.write_all(&[0u8; HEADER_LEN])
+            .with_context(|| format!("writing cache temp {tmp:?}"))?;
+        Ok(CacheWriter {
+            w,
+            at: HEADER_LEN as u64,
+            entries: Vec::new(),
+            open_section: None,
+            fingerprint,
+            n: molecules,
+            paranoid,
+            tmp,
+            dest: path.to_path_buf(),
+            finished: false,
+        })
+    }
+
+    fn pad_to_8(&mut self) -> Result<()> {
+        let pad = (8 - usize::try_from(self.at % 8).expect("mod 8 fits usize")) % 8;
+        if pad > 0 {
+            self.w
+                .write_all(&[0u8; 8][..pad])
+                .with_context(|| format!("padding cache temp {:?}", self.tmp))?;
+            self.at += pad as u64;
+        }
+        Ok(())
+    }
+
+    /// Open a new section. Exactly one section may be open at a time.
+    #[must_use = "a failed begin leaves the writer unusable for this section"]
+    pub fn begin_section(&mut self, kind: u32, encoding: u32, param: u64) -> Result<()> {
+        if self.open_section.is_some() {
+            bail!("cache writer: section already open");
+        }
+        self.pad_to_8()?;
+        self.open_section = Some((kind, encoding, param, self.at, FNV_SEED, 0));
+        Ok(())
+    }
+
+    /// Append bytes to the open section, checksumming on the fly.
+    #[must_use = "a failed chunk write leaves a torn section"]
+    pub fn write_chunk(&mut self, bytes: &[u8]) -> Result<()> {
+        let Some(state) = self.open_section.as_mut() else {
+            bail!("cache writer: no section open");
+        };
+        state.4 = fnv1a64_update(state.4, bytes);
+        state.5 += bytes.len() as u64;
+        self.w
+            .write_all(bytes)
+            .with_context(|| format!("writing cache temp {:?}", self.tmp))?;
+        self.at += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Close the open section, recording its table entry.
+    #[must_use = "an unclosed section is missing from the table"]
+    pub fn end_section(&mut self) -> Result<()> {
+        let Some((kind, encoding, param, start, checksum, len)) = self.open_section.take()
+        else {
+            bail!("cache writer: no section open");
+        };
+        self.entries.push(SectionEntry { kind, encoding, param, offset: start, len, checksum });
+        Ok(())
+    }
+
+    /// Convenience: write a whole section from one byte slice.
+    #[must_use = "a failed section write leaves a torn cache temp"]
+    pub fn section(&mut self, kind: u32, encoding: u32, param: u64, bytes: &[u8]) -> Result<()> {
+        self.begin_section(kind, encoding, param)?;
+        self.write_chunk(bytes)?;
+        self.end_section()
+    }
+
+    /// Write the table, seal the header, fsync, and atomically rename
+    /// the temp into place. Returns the total file length in bytes.
+    #[must_use = "the returned length is the only success signal of the rename"]
+    pub fn finish(mut self) -> Result<u64> {
+        if self.open_section.is_some() {
+            bail!("cache writer: finish with a section still open");
+        }
+        self.pad_to_8()?;
+        let table_offset = self.at;
+        let table = serialize_table(&self.entries);
+        self.w
+            .write_all(&table)
+            .with_context(|| format!("writing cache table to {:?}", self.tmp))?;
+        self.at += table.len() as u64;
+        let file_len = self.at;
+        let mut header = serialize_header(
+            &self.fingerprint,
+            self.n,
+            self.entries.len() as u64,
+            table_offset,
+            file_len,
+            self.paranoid,
+        );
+        seal_header(&mut header, fnv1a64(&table));
+        self.w
+            .seek(SeekFrom::Start(0))
+            .and_then(|_| self.w.write_all(&header))
+            .and_then(|_| self.w.flush())
+            .with_context(|| format!("sealing cache header in {:?}", self.tmp))?;
+        self.w
+            .get_ref()
+            .sync_all()
+            .with_context(|| format!("syncing cache temp {:?}", self.tmp))?;
+        std::fs::rename(&self.tmp, &self.dest)
+            .with_context(|| format!("renaming cache into place at {:?}", self.dest))?;
+        self.finished = true;
+        Ok(file_len)
+    }
+}
+
+impl Drop for CacheWriter {
+    fn drop(&mut self) {
+        // An abandoned writer (error path anywhere above) must not
+        // strand its uniquely-named temp file — a disk-full condition
+        // would otherwise accumulate one partial file per run and make
+        // itself worse.
+        if !self.finished {
+            std::fs::remove_file(&self.tmp).ok();
+        }
+    }
+}
+
+/// Writer-side structural validation shared by full writes and appends.
+fn validate_image_arena(image: &CacheImage) -> Result<usize> {
+    let n = image.molecules();
+    if image.arena.offsets.len() != n + 1 {
+        bail!("arena offsets length {} != molecules + 1 ({})", image.arena.offsets.len(), n + 1);
+    }
+    if image.fingerprint.molecules != n as u64 {
+        bail!("fingerprint count {} != arena molecules {n}", image.fingerprint.molecules);
+    }
+    check_csr(&image.arena.offsets, "arena")?;
+    let total_atoms = checked_usize(
+        *image.arena.offsets.last().expect("offsets length checked to n + 1 above"),
+        "arena atom span",
     )?;
-    let checksum = u64::from_le_bytes(bytes[16..24].try_into().expect("header slice is 8 bytes"));
-    let stored = SourceFingerprint {
-        molecules: u64::from_le_bytes(bytes[24..32].try_into().expect("header slice is 8 bytes")),
-        content_hash: u64::from_le_bytes(bytes[32..40].try_into().expect("header slice is 8 bytes")),
-    };
-    let payload = &bytes[HEADER_LEN..];
-    if payload.len() != payload_len {
-        bail!("cache truncated: payload {} bytes, header says {payload_len}", payload.len());
-    }
-    if fnv1a64(payload) != checksum {
-        bail!("cache payload checksum mismatch");
-    }
-    if stored != *expect {
+    if image.arena.z.len() != total_atoms || image.arena.pos.len() != 3 * total_atoms {
         bail!(
-            "stale cache: built for {} molecules (hash {:#x}), source has {} (hash {:#x})",
-            stored.molecules,
-            stored.content_hash,
-            expect.molecules,
-            expect.content_hash
+            "arena spans (z {}, pos {}) disagree with offsets ({total_atoms} atoms)",
+            image.arena.z.len(),
+            image.arena.pos.len()
         );
     }
+    Ok(n)
+}
 
-    let mut r = Reader { bytes: payload, at: 0 };
-    let n = checked_usize(r.u64()?, "molecule count")?;
-    if n as u64 != stored.molecules {
-        bail!("payload molecule count {n} != fingerprint {}", stored.molecules);
+fn validate_topology(t: &TopologyImage, n: usize) -> Result<()> {
+    if t.edge_offsets.len() != n + 1 {
+        bail!("topology edge offsets length {} != molecules + 1", t.edge_offsets.len());
     }
-    let offsets = r.u64s(n + 1)?;
-    let total_atoms = *offsets.last().unwrap_or(&0);
-    // Guard the multiplication below against absurd counts before
-    // allocating (a corrupt-but-checksummed file cannot get here, but
-    // decode must stay total regardless).
-    if total_atoms > u32::MAX as u64 {
-        bail!("cache claims {total_atoms} atoms — refusing");
+    check_csr(&t.edge_offsets, "topology")?;
+    let total_edges = checked_usize(
+        *t.edge_offsets.last().expect("edge offsets length checked to n + 1 above"),
+        "topology edge span",
+    )?;
+    if t.src.len() != total_edges || t.dst.len() != total_edges {
+        bail!(
+            "topology edge arrays ({}, {}) disagree with offsets ({total_edges})",
+            t.src.len(),
+            t.dst.len()
+        );
     }
-    check_csr(&offsets, "arena")?;
-    let total_atoms = checked_usize(total_atoms, "arena atom span")?;
-    let z = r.take(total_atoms)?.to_vec();
-    let pos = r.f32s(3 * total_atoms)?;
-    let energy = r.f32s(n)?;
+    Ok(())
+}
 
-    let n_topologies = checked_usize(u64::from(r.u32()?), "topology count")?;
-    // Bound the pre-allocation by what the remaining payload could
-    // possibly hold (each topology needs ≥ its 8-byte key + (n+1) u64
-    // offsets): a forged-but-checksummed count must hit the Err path,
-    // not an allocator abort — decode stays total.
-    let min_topo_bytes = 8 + 8 * (n + 1);
-    if n_topologies > (payload.len() - r.at) / min_topo_bytes {
-        bail!("cache claims {n_topologies} topologies — more than the payload can hold");
+fn write_topology_sections(w: &mut CacheWriter, t: &TopologyImage, buf: &mut Vec<u8>) -> Result<()> {
+    let key = topo_param(t.r_cut_bits, t.k_max);
+    let (enc, offsets_bytes) = encode_offsets(&t.edge_offsets);
+    w.section(K_TOPO_OFFSETS, enc, key, &offsets_bytes)?;
+    buf.clear();
+    put_u32s(buf, &t.src);
+    w.section(K_TOPO_SRC, ENC_RAW, key, buf)?;
+    buf.clear();
+    put_u32s(buf, &t.dst);
+    w.section(K_TOPO_DST, ENC_RAW, key, buf)
+}
+
+/// Serialize `image` to `path` with an optional paranoid whole-dataset
+/// hash in the header. Streams through [`CacheWriter`] (temp file +
+/// atomic rename — a crash mid-write can never leave a torn
+/// `CACHE_FILE`). Returns the total bytes written.
+#[must_use = "an unchecked write error means no cache was persisted"]
+pub fn write_cache_with(path: &Path, image: &CacheImage, paranoid: Option<u64>) -> Result<u64> {
+    let n = validate_image_arena(image)?;
+    for t in &image.topologies {
+        validate_topology(t, n)?;
     }
-    let mut topologies = Vec::with_capacity(n_topologies);
-    for _ in 0..n_topologies {
-        let r_cut_bits = r.u32()?;
-        let k_max = r.u32()?;
-        let edge_offsets = r.u64s(n + 1)?;
-        let total_edges = *edge_offsets.last().unwrap_or(&0);
-        if total_edges > u32::MAX as u64 {
-            bail!("cache claims {total_edges} edges in one topology — refusing");
+    let _ = checked_u32(image.topologies.len(), "topology count")?;
+    let mut w = CacheWriter::create(path, image.fingerprint, n as u64, paranoid)?;
+    let (enc, offsets_bytes) = encode_offsets(&image.arena.offsets);
+    w.section(K_ARENA_OFFSETS, enc, 0, &offsets_bytes)?;
+    w.section(K_ARENA_Z, ENC_RAW, 0, &image.arena.z)?;
+    let mut buf = Vec::new();
+    put_f32s(&mut buf, &image.arena.pos);
+    w.section(K_ARENA_POS, ENC_RAW, 0, &buf)?;
+    buf.clear();
+    put_f32s(&mut buf, &image.arena.energy);
+    w.section(K_ARENA_ENERGY, ENC_RAW, 0, &buf)?;
+    for t in &image.topologies {
+        write_topology_sections(&mut w, t, &mut buf)?;
+    }
+    w.finish()
+}
+
+/// Serialize `image` to `path` (no paranoid hash). See
+/// [`write_cache_with`].
+#[must_use = "an unchecked write error means no cache was persisted"]
+pub fn write_cache(path: &Path, image: &CacheImage) -> Result<u64> {
+    write_cache_with(path, image, None)
+}
+
+/// Append newly memoized topology sections to an existing v2 cache
+/// in place, instead of rewriting the whole file.
+///
+/// Protocol (see the module docs): new sections are written *after* the
+/// current image — the live table is left untouched — then a new table
+/// (old entries + new) lands after them, everything is synced, and only
+/// then is the header rewritten to point at the new table. A crash
+/// before the header flip leaves the old image fully valid; a torn
+/// header fails its checksum and the loader rebuilds cold. The file only
+/// ever grows, so concurrent mapped readers of the old image are safe.
+///
+/// Fails (caller falls back to a full rewrite) if the on-disk header no
+/// longer matches `base` — another writer got there first — or if a key
+/// being appended already exists.
+#[must_use = "an unchecked append error means the new topologies were not persisted"]
+pub fn append_topologies(path: &Path, base: &MappedCache, new: &[TopologyImage]) -> Result<u64> {
+    if new.is_empty() {
+        return Ok(base.file_len as u64);
+    }
+    let n = base.n;
+    let mut keys: Vec<u64> = base.topos.iter().map(|t| t.param).collect();
+    for t in new {
+        validate_topology(t, n)?;
+        let key = topo_param(t.r_cut_bits, t.k_max);
+        if keys.contains(&key) {
+            bail!("appending topology key already present in cache");
         }
-        check_csr(&edge_offsets, "topology")?;
-        let total_edges = checked_usize(total_edges, "topology edge span")?;
-        let src = r.u32s(total_edges)?;
-        let dst = r.u32s(total_edges)?;
-        // Endpoint validation — the other half of staying total: edge
-        // lists are molecule-local indices the batcher rebases into pack
-        // windows, so a forged-but-checksummed endpoint >= the owning
-        // molecule's atom count would silently corrupt batch
-        // connectivity, not fail. Reject it here instead.
-        for idx in 0..n {
-            // tidy: allow(unchecked-narrowing): per-molecule span ≤ total_atoms ≤ u32::MAX, guarded above
-            let atoms = (offsets[idx + 1] - offsets[idx]) as u32;
-            // tidy: allow(unchecked-narrowing): edge offsets ≤ total_edges ≤ u32::MAX, guarded above
-            let (a, b) = (edge_offsets[idx] as usize, edge_offsets[idx + 1] as usize);
+        keys.push(key);
+    }
+    let mut f = std::fs::OpenOptions::new()
+        .read(true)
+        .write(true)
+        .open(path)
+        .with_context(|| format!("opening cache for append at {path:?}"))?;
+    let mut on_disk = [0u8; HEADER_LEN];
+    f.read_exact(&mut on_disk)
+        .with_context(|| format!("re-reading cache header at {path:?}"))?;
+    if on_disk != base.header_bytes {
+        bail!("cache file changed since it was opened; refusing to append");
+    }
+
+    let mut at = align8(base.data_end) as u64;
+    f.seek(SeekFrom::Start(at))
+        .with_context(|| format!("seeking to append position in {path:?}"))?;
+    let mut w = std::io::BufWriter::new(f);
+    let mut entries = base.entries.clone();
+    for t in new {
+        let key = topo_param(t.r_cut_bits, t.k_max);
+        let (enc, offsets_bytes) = encode_offsets(&t.edge_offsets);
+        let mut src_bytes = Vec::new();
+        put_u32s(&mut src_bytes, &t.src);
+        let mut dst_bytes = Vec::new();
+        put_u32s(&mut dst_bytes, &t.dst);
+        for (kind, encoding, bytes) in [
+            (K_TOPO_OFFSETS, enc, &offsets_bytes),
+            (K_TOPO_SRC, ENC_RAW, &src_bytes),
+            (K_TOPO_DST, ENC_RAW, &dst_bytes),
+        ] {
+            entries.push(SectionEntry {
+                kind,
+                encoding,
+                param: key,
+                offset: at,
+                len: bytes.len() as u64,
+                checksum: fnv1a64(bytes),
+            });
+            w.write_all(bytes)
+                .with_context(|| format!("appending cache section to {path:?}"))?;
+            at += bytes.len() as u64;
+            let pad = (8 - usize::try_from(at % 8).expect("mod 8 fits usize")) % 8;
+            if pad > 0 {
+                w.write_all(&[0u8; 8][..pad])
+                    .with_context(|| format!("padding appended section in {path:?}"))?;
+                at += pad as u64;
+            }
+        }
+    }
+    let table_offset = at;
+    let table = serialize_table(&entries);
+    w.write_all(&table)
+        .with_context(|| format!("appending cache table to {path:?}"))?;
+    at += table.len() as u64;
+    w.flush().with_context(|| format!("flushing append to {path:?}"))?;
+    w.get_ref()
+        .sync_all()
+        .with_context(|| format!("syncing appended sections in {path:?}"))?;
+    // Only now flip the header: everything it will reference is durable.
+    let mut header = serialize_header(
+        &base.fingerprint,
+        n as u64,
+        entries.len() as u64,
+        table_offset,
+        at,
+        base.paranoid,
+    );
+    seal_header(&mut header, fnv1a64(&table));
+    let mut f = w.into_inner().with_context(|| format!("unwrapping append writer for {path:?}"))?;
+    f.seek(SeekFrom::Start(0))
+        .and_then(|_| f.write_all(&header))
+        .and_then(|_| f.sync_all())
+        .with_context(|| format!("rewriting cache header at {path:?}"))?;
+    Ok(at)
+}
+
+// ----------------------------------------------------------------- read
+
+/// How [`MappedCache::open`] backs the cache bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapMode {
+    /// Memory-map the file (zero-copy, lazy faulting, pages shared
+    /// host-wide). Falls back to `Owned` automatically when mapping is
+    /// unavailable (non-Linux target, exotic filesystem, map failure).
+    Mapped,
+    /// Bulk-read the file into an 8-aligned owned buffer. Same
+    /// validation ladder and span accessors, one private copy.
+    Owned,
+}
+
+/// Where a decoded CSR offsets array lives: borrowed in place from the
+/// raw section bytes, or owned because the section was varint-encoded.
+#[derive(Debug)]
+enum OffsetsRepr {
+    /// Raw section: `u64[count]` starting at this byte offset.
+    Borrowed { start: usize, count: usize },
+    Owned(Vec<u64>),
+}
+
+impl OffsetsRepr {
+    fn resolve<'a>(&'a self, bytes: &'a [u8]) -> &'a [u64] {
+        match self {
+            OffsetsRepr::Borrowed { start, count } => {
+                cast_u64s(&bytes[*start..*start + 8 * *count])
+            }
+            OffsetsRepr::Owned(v) => v,
+        }
+    }
+}
+
+/// Byte range of one validated section inside the cache bytes.
+#[derive(Debug, Clone, Copy)]
+struct SectionSpan {
+    start: usize,
+    len: usize,
+    checksum: u64,
+    encoding: u32,
+}
+
+impl SectionSpan {
+    fn bytes<'a>(&self, all: &'a [u8]) -> &'a [u8] {
+        &all[self.start..self.start + self.len]
+    }
+
+    fn verify(&self, all: &[u8], what: &str) -> Result<()> {
+        if fnv1a64(self.bytes(all)) != self.checksum {
+            bail!("{what} section checksum mismatch");
+        }
+        Ok(())
+    }
+}
+
+/// Decoded, fully validated runtime state of one topology (built on
+/// first touch by [`MappedCache::verify_topology`]).
+#[derive(Debug)]
+struct TopoRuntime {
+    offsets: OffsetsRepr,
+    total_edges: usize,
+}
+
+/// One topology's sections plus its lazily built runtime state.
+#[derive(Debug)]
+struct TopoSections {
+    param: u64,
+    offsets: SectionSpan,
+    src: SectionSpan,
+    dst: SectionSpan,
+    runtime: OnceLock<std::result::Result<TopoRuntime, String>>,
+}
+
+/// A validated v2 cache, served in place from mapped (or owned) bytes.
+///
+/// Construction runs the eager half of the checksum ladder (header,
+/// table, structure, arena offsets — see the module docs); molecule and
+/// edge spans are reinterpreted in place and their checksums verify
+/// once on first touch via [`MappedCache::verify_arena`] /
+/// [`MappedCache::verify_topology`]. All accessors that hand out spans
+/// require the corresponding verify to have succeeded.
+#[derive(Debug)]
+pub struct MappedCache {
+    bytes: ArenaBytes,
+    mapped: bool,
+    file_len: usize,
+    n: usize,
+    fingerprint: SourceFingerprint,
+    paranoid: Option<u64>,
+    header_bytes: [u8; HEADER_LEN],
+    entries: Vec<SectionEntry>,
+    /// Greatest 8-aligned end of any section or the table — where an
+    /// append writes next.
+    data_end: usize,
+    arena_z: SectionSpan,
+    arena_pos: SectionSpan,
+    arena_energy: SectionSpan,
+    arena_offsets: OffsetsRepr,
+    total_atoms: usize,
+    arena_ok: OnceLock<std::result::Result<(), String>>,
+    topos: Vec<TopoSections>,
+}
+
+fn header_u64(h: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(h[at..at + 8].try_into().expect("fixed 8-byte header field"))
+}
+
+impl MappedCache {
+    /// Open and eagerly validate the cache at `path` against `expect`.
+    /// Every eager failure mode — missing file, bad magic/version, torn
+    /// header, truncation, stale fingerprint, malformed table or
+    /// sections, corrupt arena offsets — returns `Err` and the caller
+    /// falls back to the cold path.
+    #[must_use = "dropping the opened cache discards the mapping"]
+    pub fn open(path: &Path, expect: &SourceFingerprint, mode: MapMode) -> Result<MappedCache> {
+        if cfg!(target_endian = "big") {
+            // In-place span reinterpretation assumes a little-endian
+            // host; the owned path shares the cast helpers, so refuse
+            // outright (cold rebuild) rather than serve byte-swapped
+            // data.
+            bail!("cache format requires a little-endian host");
+        }
+        let (bytes, mapped) = match mode {
+            MapMode::Mapped => {
+                let file = std::fs::File::open(path)
+                    .with_context(|| format!("opening cache {path:?}"))?;
+                match Mmap::map(&file) {
+                    Ok(m) => {
+                        m.advise_willneed();
+                        (ArenaBytes::Mapped(m), true)
+                    }
+                    // Unsupported target or map failure: same bytes, one
+                    // private copy, identical validation.
+                    Err(_) => (ArenaBytes::Owned(AlignedBytes::read_file(path)?), false),
+                }
+            }
+            MapMode::Owned => (ArenaBytes::Owned(AlignedBytes::read_file(path)?), false),
+        };
+        let all: &[u8] = &bytes;
+        if all.len() < HEADER_LEN {
+            bail!("cache file too short for a header: {} bytes", all.len());
+        }
+        if &all[0..4] != MAGIC {
+            bail!("bad magic in cache file");
+        }
+        let version = u32::from_le_bytes(all[4..8].try_into().expect("header slice is 4 bytes"));
+        if version != VERSION {
+            bail!("unsupported cache version {version} (expected {VERSION})");
+        }
+        let mut header_bytes = [0u8; HEADER_LEN];
+        header_bytes.copy_from_slice(&all[0..HEADER_LEN]);
+        if fnv1a64(&all[0..80]) != header_u64(all, 80) {
+            bail!("cache header checksum mismatch");
+        }
+        let stored = SourceFingerprint {
+            molecules: header_u64(all, 8),
+            content_hash: header_u64(all, 16),
+        };
+        if stored != *expect {
+            bail!(
+                "stale cache: built for {} molecules (hash {:#x}), source has {} (hash {:#x})",
+                stored.molecules,
+                stored.content_hash,
+                expect.molecules,
+                expect.content_hash
+            );
+        }
+        let n_u64 = header_u64(all, 24);
+        if n_u64 != stored.molecules {
+            bail!("header molecule count {n_u64} != fingerprint {}", stored.molecules);
+        }
+        let file_len = checked_usize(header_u64(all, 48), "cache file length")?;
+        // The physical file may be *longer* than the logical image (an
+        // append that crashed before its header flip leaves a garbage
+        // tail); it must never be shorter.
+        if file_len > all.len() || file_len < HEADER_LEN {
+            bail!(
+                "cache truncated: header says {file_len} bytes, file has {}",
+                all.len()
+            );
+        }
+        // Bound n before any n-sized allocation: a real image stores 4
+        // bytes of energy per molecule, so n can never exceed file_len.
+        if n_u64 > file_len as u64 {
+            bail!("cache claims {n_u64} molecules — more than the file could hold");
+        }
+        let n = checked_usize(n_u64, "molecule count")?;
+        let flags = header_u64(all, 56);
+        if flags & !FLAG_PARANOID != 0 {
+            bail!("unknown cache flags {flags:#x}");
+        }
+        let paranoid =
+            if flags & FLAG_PARANOID != 0 { Some(header_u64(all, 64)) } else { None };
+
+        // ---- section table ----
+        let n_sections = checked_usize(header_u64(all, 32), "section count")?;
+        if n_sections > (file_len - HEADER_LEN) / ENTRY_LEN {
+            bail!("cache claims {n_sections} sections — more than the file could hold");
+        }
+        let table_offset = checked_usize(header_u64(all, 40), "table offset")?;
+        let table_len = n_sections * ENTRY_LEN;
+        if table_offset < HEADER_LEN
+            || table_offset % 8 != 0
+            || table_offset.checked_add(table_len).filter(|&e| e <= file_len).is_none()
+        {
+            bail!("cache section table out of bounds");
+        }
+        let table = &all[table_offset..table_offset + table_len];
+        if fnv1a64(table) != header_u64(all, 72) {
+            bail!("cache table checksum mismatch");
+        }
+        let mut entries = Vec::with_capacity(n_sections);
+        for raw in table.chunks_exact(ENTRY_LEN) {
+            entries.push(SectionEntry {
+                kind: u32::from_le_bytes(raw[0..4].try_into().expect("entry slice is 4 bytes")),
+                encoding: u32::from_le_bytes(
+                    raw[4..8].try_into().expect("entry slice is 4 bytes"),
+                ),
+                param: u64::from_le_bytes(raw[8..16].try_into().expect("entry slice is 8 bytes")),
+                offset: u64::from_le_bytes(
+                    raw[16..24].try_into().expect("entry slice is 8 bytes"),
+                ),
+                len: u64::from_le_bytes(raw[24..32].try_into().expect("entry slice is 8 bytes")),
+                checksum: u64::from_le_bytes(
+                    raw[32..40].try_into().expect("entry slice is 8 bytes"),
+                ),
+            });
+        }
+
+        // ---- section structure ----
+        let mut spans: Vec<(usize, usize)> = Vec::with_capacity(n_sections + 1);
+        spans.push((table_offset, table_offset + table_len));
+        let mut arena: [Option<SectionSpan>; 4] = [None, None, None, None];
+        let mut topos: Vec<TopoSections> = Vec::new();
+        // param -> (offsets, src, dst) triple under assembly, in
+        // first-seen order.
+        let mut open_triples: Vec<(u64, [Option<SectionSpan>; 3])> = Vec::new();
+        for e in &entries {
+            let start = checked_usize(e.offset, "section offset")?;
+            let len = checked_usize(e.len, "section length")?;
+            if start < HEADER_LEN
+                || start % 8 != 0
+                || start.checked_add(len).filter(|&end| end <= file_len).is_none()
+            {
+                bail!("cache section out of bounds");
+            }
+            spans.push((start, align8(start + len)));
+            let offsets_kind = e.kind == K_ARENA_OFFSETS || e.kind == K_TOPO_OFFSETS;
+            match e.encoding {
+                ENC_RAW => {}
+                ENC_DELTA_VARINT if offsets_kind => {}
+                other => bail!("cache section kind {} has unknown encoding {other}", e.kind),
+            }
+            let span =
+                SectionSpan { start, len, checksum: e.checksum, encoding: e.encoding };
+            match e.kind {
+                K_ARENA_OFFSETS | K_ARENA_Z | K_ARENA_POS | K_ARENA_ENERGY => {
+                    let slot = &mut arena[usize::try_from(e.kind)
+                        .expect("arena kind is 0..=3, fits usize")];
+                    if slot.is_some() {
+                        bail!("duplicate arena section kind {}", e.kind);
+                    }
+                    *slot = Some(span);
+                }
+                K_TOPO_OFFSETS | K_TOPO_SRC | K_TOPO_DST => {
+                    let at = match open_triples.iter().position(|(p, _)| *p == e.param) {
+                        Some(i) => i,
+                        None => {
+                            open_triples.push((e.param, [None, None, None]));
+                            open_triples.len() - 1
+                        }
+                    };
+                    let triple = &mut open_triples[at].1;
+                    let slot = &mut triple[usize::try_from(e.kind - K_TOPO_OFFSETS)
+                        .expect("topology kind is 4..=6, slot fits usize")];
+                    if slot.is_some() {
+                        bail!("duplicate topology section (kind {}, key {:#x})", e.kind, e.param);
+                    }
+                    *slot = Some(span);
+                }
+                other => bail!("unknown cache section kind {other}"),
+            }
+        }
+        let [Some(offsets_span), Some(z_span), Some(pos_span), Some(energy_span)] = arena
+        else {
+            bail!("cache is missing an arena section");
+        };
+        for (param, triple) in open_triples {
+            let [Some(offsets), Some(src), Some(dst)] = triple else {
+                bail!("cache topology {param:#x} is missing a section");
+            };
+            topos.push(TopoSections { param, offsets, src, dst, runtime: OnceLock::new() });
+        }
+        spans.sort_unstable();
+        if spans.windows(2).any(|w| w[1].0 < w[0].1) {
+            bail!("cache sections overlap");
+        }
+        let data_end = spans.iter().map(|&(_, end)| end).max().unwrap_or(HEADER_LEN);
+
+        // ---- arena offsets: eagerly checksummed + decoded ----
+        // n_atoms drives shard planning before any batch is assembled,
+        // so the offsets must be trustworthy before first use; z/pos/
+        // energy content is only *touched* at assembly time and verifies
+        // lazily there.
+        offsets_span.verify(all, "arena offsets")?;
+        let arena_offsets = decode_offsets_section(all, &offsets_span, n + 1, "arena")?;
+        let offs = arena_offsets.resolve(all);
+        check_csr(offs, "arena")?;
+        let total_atoms_u64 = *offs.last().expect("offsets decoded to n + 1 >= 1 values");
+        if total_atoms_u64 > u32::MAX as u64 {
+            bail!("cache claims {total_atoms_u64} atoms — refusing");
+        }
+        let total_atoms = checked_usize(total_atoms_u64, "arena atom span")?;
+        if z_span.len as u64 != total_atoms_u64
+            || pos_span.len as u64 != 12 * total_atoms_u64
+            || energy_span.len as u64 != 4 * n_u64
+        {
+            bail!(
+                "arena section lengths (z {}, pos {}, energy {}) disagree with {total_atoms} atoms / {n} molecules",
+                z_span.len,
+                pos_span.len,
+                energy_span.len
+            );
+        }
+
+        Ok(MappedCache {
+            bytes,
+            mapped,
+            file_len,
+            n,
+            fingerprint: stored,
+            paranoid,
+            header_bytes,
+            entries,
+            data_end,
+            arena_z: z_span,
+            arena_pos: pos_span,
+            arena_energy: energy_span,
+            arena_offsets,
+            total_atoms,
+            arena_ok: OnceLock::new(),
+            topos,
+        })
+    }
+
+    /// Molecule count.
+    pub fn molecules(&self) -> usize {
+        self.n
+    }
+
+    /// True when the bytes are served from a shared file mapping (false:
+    /// owned bulk-read fallback).
+    pub fn is_mapped(&self) -> bool {
+        self.mapped
+    }
+
+    /// Logical size of the cache image in bytes.
+    pub fn file_bytes(&self) -> u64 {
+        self.file_len as u64
+    }
+
+    /// The fingerprint the cache was built for.
+    pub fn fingerprint(&self) -> SourceFingerprint {
+        self.fingerprint
+    }
+
+    /// The whole-dataset hash recorded by `prepare --paranoid`, if any.
+    pub fn paranoid(&self) -> Option<u64> {
+        self.paranoid
+    }
+
+    /// Global CSR atom offsets (length `n + 1`), eagerly validated at
+    /// open.
+    pub fn arena_offsets(&self) -> &[u64] {
+        self.arena_offsets.resolve(&self.bytes)
+    }
+
+    /// Atom count of molecule `idx` straight from the offsets span.
+    pub fn n_atoms(&self, idx: usize) -> usize {
+        let o = self.arena_offsets();
+        usize::try_from(o[idx + 1] - o[idx]).expect("atom span <= u32::MAX, checked at open")
+    }
+
+    fn arena_state(&self) -> std::result::Result<(), &str> {
+        self.arena_ok
+            .get_or_init(|| {
+                let all: &[u8] = &self.bytes;
+                for (span, what) in [
+                    (&self.arena_z, "arena z"),
+                    (&self.arena_pos, "arena pos"),
+                    (&self.arena_energy, "arena energy"),
+                ] {
+                    if let Err(e) = span.verify(all, what) {
+                        return Err(format!("{e:#}"));
+                    }
+                }
+                Ok(())
+            })
+            .as_ref()
+            .map(|_| ())
+            .map_err(String::as_str)
+    }
+
+    /// Verify the arena content sections (z/pos/energy checksums) once;
+    /// cached. Must return true before any molecule span accessor is
+    /// used — on false the caller rebuilds those molecules cold.
+    pub fn verify_arena(&self) -> bool {
+        self.arena_state().is_ok()
+    }
+
+    /// Has the arena already been verified *and* failed? A peek — never
+    /// forces the verification pass itself, so stats/skip-policy callers
+    /// can ask without faulting the whole arena in.
+    pub fn arena_failed(&self) -> bool {
+        matches!(self.arena_ok.get(), Some(Err(_)))
+    }
+
+    /// Has topology `ti` already been verified *and* failed? A peek,
+    /// like [`MappedCache::arena_failed`].
+    pub fn topology_failed(&self, ti: usize) -> bool {
+        matches!(self.topos[ti].runtime.get(), Some(Err(_)))
+    }
+
+    /// `z` span of molecule `idx`. Requires a prior successful
+    /// [`MappedCache::verify_arena`].
+    pub fn molecule_z(&self, idx: usize) -> &[u8] {
+        debug_assert!(self.verify_arena(), "molecule_z before verify_arena");
+        let o = self.arena_offsets();
+        let (a, b) = (
+            usize::try_from(o[idx]).expect("offset <= total_atoms, checked at open"),
+            usize::try_from(o[idx + 1]).expect("offset <= total_atoms, checked at open"),
+        );
+        &self.arena_z.bytes(&self.bytes)[a..b]
+    }
+
+    /// Position span of molecule `idx` (3 f32 per atom). Requires a
+    /// prior successful [`MappedCache::verify_arena`].
+    pub fn molecule_pos(&self, idx: usize) -> &[f32] {
+        debug_assert!(self.verify_arena(), "molecule_pos before verify_arena");
+        let o = self.arena_offsets();
+        let (a, b) = (
+            usize::try_from(o[idx]).expect("offset <= total_atoms, checked at open"),
+            usize::try_from(o[idx + 1]).expect("offset <= total_atoms, checked at open"),
+        );
+        &cast_f32s(self.arena_pos.bytes(&self.bytes))[3 * a..3 * b]
+    }
+
+    /// Energy of molecule `idx`. Requires a prior successful
+    /// [`MappedCache::verify_arena`].
+    pub fn molecule_energy(&self, idx: usize) -> f32 {
+        debug_assert!(self.verify_arena(), "molecule_energy before verify_arena");
+        cast_f32s(self.arena_energy.bytes(&self.bytes))[idx]
+    }
+
+    /// Number of persisted edge topologies.
+    pub fn topology_count(&self) -> usize {
+        self.topos.len()
+    }
+
+    /// `(r_cut_bits, k_max)` key of topology `ti`.
+    pub fn topology_key(&self, ti: usize) -> (u32, u32) {
+        unpack_topo_param(self.topos[ti].param)
+    }
+
+    /// On-disk bytes of topology `ti` (offsets + src + dst sections).
+    pub fn topology_bytes(&self, ti: usize) -> u64 {
+        let t = &self.topos[ti];
+        (t.offsets.len + t.src.len + t.dst.len) as u64
+    }
+
+    fn topo_check(&self, ti: usize) -> Result<TopoRuntime> {
+        let all: &[u8] = &self.bytes;
+        let t = &self.topos[ti];
+        t.offsets.verify(all, "topology offsets")?;
+        let offsets = decode_offsets_section(all, &t.offsets, self.n + 1, "topology")?;
+        let offs = offsets.resolve(all);
+        check_csr(offs, "topology")?;
+        let total_edges_u64 = *offs.last().expect("offsets decoded to n + 1 >= 1 values");
+        if total_edges_u64 > u32::MAX as u64 {
+            bail!("cache claims {total_edges_u64} edges in one topology — refusing");
+        }
+        if t.src.len as u64 != 4 * total_edges_u64 || t.dst.len as u64 != 4 * total_edges_u64 {
+            bail!(
+                "topology edge sections ({}, {}) disagree with {total_edges_u64} edges",
+                t.src.len,
+                t.dst.len
+            );
+        }
+        t.src.verify(all, "topology src")?;
+        t.dst.verify(all, "topology dst")?;
+        let total_edges = checked_usize(total_edges_u64, "topology edge span")?;
+        // Endpoint validation — edge lists are molecule-local indices
+        // the batcher rebases into pack windows, so a forged-but-
+        // checksummed endpoint >= the owning molecule's atom count would
+        // silently corrupt batch connectivity, not fail. Reject here.
+        let src = cast_u32s(t.src.bytes(all));
+        let dst = cast_u32s(t.dst.bytes(all));
+        let arena = self.arena_offsets();
+        for idx in 0..self.n {
+            // tidy: allow(unchecked-narrowing): per-molecule span <= total_atoms <= u32::MAX, guarded at open
+            let atoms = (arena[idx + 1] - arena[idx]) as u32;
+            // tidy: allow(unchecked-narrowing): edge offsets <= total_edges <= u32::MAX, guarded above
+            let (a, b) = (offs[idx] as usize, offs[idx + 1] as usize);
             if src[a..b].iter().chain(&dst[a..b]).any(|&v| v >= atoms) {
                 bail!("cache edge endpoint out of range for molecule {idx} ({atoms} atoms)");
             }
         }
-        topologies.push(TopologyImage { r_cut_bits, k_max, edge_offsets, src, dst });
+        Ok(TopoRuntime { offsets, total_edges })
     }
-    if !r.done() {
-        bail!("{} trailing bytes after cache payload", payload.len() - r.at);
+
+    fn topo_state(&self, ti: usize) -> std::result::Result<&TopoRuntime, &str> {
+        self.topos[ti]
+            .runtime
+            .get_or_init(|| self.topo_check(ti).map_err(|e| format!("{e:#}")))
+            .as_ref()
+            .map_err(String::as_str)
     }
-    Ok(CacheImage { fingerprint: stored, arena: ArenaImage { offsets, z, pos, energy }, topologies })
+
+    /// Verify topology `ti` (checksums, CSR, endpoint ranges) once;
+    /// cached. Must return true before any edge accessor for `ti` is
+    /// used — on false the caller recomputes that topology cold.
+    pub fn verify_topology(&self, ti: usize) -> bool {
+        self.topo_state(ti).is_ok()
+    }
+
+    /// Total edges of topology `ti`. Requires a prior successful
+    /// [`MappedCache::verify_topology`].
+    pub fn topology_total_edges(&self, ti: usize) -> usize {
+        self.topo_state(ti).expect("topology_total_edges before verify_topology").total_edges
+    }
+
+    /// Edge count of molecule `idx` in topology `ti`. Requires a prior
+    /// successful [`MappedCache::verify_topology`].
+    pub fn topology_edge_count(&self, ti: usize, idx: usize) -> usize {
+        let rt = self.topo_state(ti).expect("topology_edge_count before verify_topology");
+        let o = rt.offsets.resolve(&self.bytes);
+        usize::try_from(o[idx + 1] - o[idx]).expect("edge span <= u32::MAX, checked at verify")
+    }
+
+    /// `(src, dst)` spans of molecule `idx` in topology `ti`, served in
+    /// place. Requires a prior successful
+    /// [`MappedCache::verify_topology`].
+    pub fn topology_edges(&self, ti: usize, idx: usize) -> (&[u32], &[u32]) {
+        let rt = self.topo_state(ti).expect("topology_edges before verify_topology");
+        let o = rt.offsets.resolve(&self.bytes);
+        let (a, b) = (
+            usize::try_from(o[idx]).expect("edge offset <= u32::MAX, checked at verify"),
+            usize::try_from(o[idx + 1]).expect("edge offset <= u32::MAX, checked at verify"),
+        );
+        let t = &self.topos[ti];
+        (
+            &cast_u32s(t.src.bytes(&self.bytes))[a..b],
+            &cast_u32s(t.dst.bytes(&self.bytes))[a..b],
+        )
+    }
+
+    /// Force the whole lazy half of the ladder (arena + every
+    /// topology). Used by [`read_cache`]-style full decodes and by
+    /// `prepare`'s verification pass; streaming consumers rely on the
+    /// per-span lazy checks instead.
+    #[must_use = "an unchecked verification error defeats the ladder"]
+    pub fn verify_all(&self) -> Result<()> {
+        if let Err(e) = self.arena_state() {
+            bail!("arena verification failed: {e}");
+        }
+        for ti in 0..self.topos.len() {
+            if let Err(e) = self.topo_state(ti) {
+                bail!("topology {ti} verification failed: {e}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Fully materialize the cache into an owned [`CacheImage`]
+    /// (verifies everything first). The test oracle and compatibility
+    /// path — the hot path serves spans without this copy.
+    #[must_use = "materializing without using the image does all the work for nothing"]
+    pub fn to_image(&self) -> Result<CacheImage> {
+        self.verify_all()?;
+        let arena = ArenaImage {
+            offsets: self.arena_offsets().to_vec(),
+            z: self.arena_z.bytes(&self.bytes).to_vec(),
+            pos: cast_f32s(self.arena_pos.bytes(&self.bytes)).to_vec(),
+            energy: cast_f32s(self.arena_energy.bytes(&self.bytes)).to_vec(),
+        };
+        let mut topologies = Vec::with_capacity(self.topos.len());
+        for (ti, t) in self.topos.iter().enumerate() {
+            let rt = self
+                .topo_state(ti)
+                .map_err(|e| anyhow::anyhow!("topology {ti} verification failed: {e}"))?;
+            let (r_cut_bits, k_max) = unpack_topo_param(t.param);
+            topologies.push(TopologyImage {
+                r_cut_bits,
+                k_max,
+                edge_offsets: rt.offsets.resolve(&self.bytes).to_vec(),
+                src: cast_u32s(t.src.bytes(&self.bytes)).to_vec(),
+                dst: cast_u32s(t.dst.bytes(&self.bytes)).to_vec(),
+            });
+        }
+        Ok(CacheImage { fingerprint: self.fingerprint, arena, topologies })
+    }
+}
+
+/// Decode an offsets section (raw in-place or delta+varint) to exactly
+/// `count` values.
+fn decode_offsets_section(
+    all: &[u8],
+    span: &SectionSpan,
+    count: usize,
+    what: &str,
+) -> Result<OffsetsRepr> {
+    match span.encoding {
+        ENC_RAW => {
+            if span.len != 8 * count {
+                bail!("{what} offsets section is {} bytes, expected {}", span.len, 8 * count);
+            }
+            Ok(OffsetsRepr::Borrowed { start: span.start, count })
+        }
+        ENC_DELTA_VARINT => {
+            Ok(OffsetsRepr::Owned(decode_varint_deltas(span.bytes(all), count)?))
+        }
+        other => bail!("{what} offsets section has unknown encoding {other}"),
+    }
+}
+
+/// Read and fully validate the cache at `path` against `expect`,
+/// materializing an owned image — the v1-era bulk API, kept for tests
+/// and as the owned-mode oracle. Every failure mode returns `Err` and
+/// the caller falls back to the cold path; a cache can therefore never
+/// produce wrong batches, only a slower first epoch.
+#[must_use = "an unchecked read error hides a cold-fallback condition"]
+pub fn read_cache(path: &Path, expect: &SourceFingerprint) -> Result<CacheImage> {
+    read_cache_with(path, expect, MapMode::Owned)
+}
+
+/// [`read_cache`] with an explicit backing mode — the dual-mode
+/// mutation-fuzz tests drive both paths through this.
+#[must_use = "an unchecked read error hides a cold-fallback condition"]
+pub fn read_cache_with(path: &Path, expect: &SourceFingerprint, mode: MapMode) -> Result<CacheImage> {
+    MappedCache::open(path, expect, mode)?.to_image()
 }
 
 #[cfg(test)]
@@ -522,6 +1537,10 @@ mod tests {
         let dir = std::env::temp_dir().join("molpack-persist-tests");
         std::fs::create_dir_all(&dir).unwrap();
         dir.join(format!("{name}-{}.mppc", std::process::id()))
+    }
+
+    fn both_modes() -> [MapMode; 2] {
+        [MapMode::Owned, MapMode::Mapped]
     }
 
     fn sample_image(n: usize) -> CacheImage {
@@ -566,15 +1585,75 @@ mod tests {
         }
     }
 
+    fn second_topology(n: usize) -> TopologyImage {
+        // A denser chain-plus-self-loop-free topology with a different key.
+        let img = sample_image(n);
+        let base = &img.topologies[0];
+        TopologyImage {
+            r_cut_bits: 8.5f32.to_bits(),
+            k_max: 16,
+            edge_offsets: base.edge_offsets.clone(),
+            // reverse direction so content differs from topology 0
+            src: base.dst.clone(),
+            dst: base.src.clone(),
+        }
+    }
+
     #[test]
-    fn round_trip_preserves_image() {
+    fn round_trip_preserves_image_in_both_modes() {
         let img = sample_image(7);
         let path = tmppath("roundtrip");
         let bytes = write_cache(&path, &img).unwrap();
         assert!(bytes > HEADER_LEN as u64);
         assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
-        let back = read_cache(&path, &img.fingerprint).unwrap();
-        assert_eq!(back, img);
+        for mode in both_modes() {
+            let back = read_cache_with(&path, &img.fingerprint, mode).unwrap();
+            assert_eq!(back, img, "{mode:?}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn mapped_mode_actually_maps_on_supported_targets() {
+        let img = sample_image(5);
+        let path = tmppath("ismapped");
+        write_cache(&path, &img).unwrap();
+        let cache = MappedCache::open(&path, &img.fingerprint, MapMode::Mapped).unwrap();
+        assert_eq!(cache.is_mapped(), crate::util::mmap::SUPPORTED);
+        let owned = MappedCache::open(&path, &img.fingerprint, MapMode::Owned).unwrap();
+        assert!(!owned.is_mapped());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn span_accessors_serve_the_image_in_place() {
+        let img = sample_image(9);
+        let path = tmppath("spans");
+        write_cache(&path, &img).unwrap();
+        for mode in both_modes() {
+            let cache = MappedCache::open(&path, &img.fingerprint, mode).unwrap();
+            assert_eq!(cache.molecules(), 9);
+            assert_eq!(cache.arena_offsets(), &img.arena.offsets[..]);
+            assert!(cache.verify_arena());
+            assert_eq!(cache.topology_count(), 1);
+            assert!(cache.verify_topology(0));
+            assert_eq!(cache.topology_key(0), (6.0f32.to_bits(), 12));
+            for i in 0..9 {
+                let (a, b) =
+                    (img.arena.offsets[i] as usize, img.arena.offsets[i + 1] as usize);
+                assert_eq!(cache.n_atoms(i), b - a);
+                assert_eq!(cache.molecule_z(i), &img.arena.z[a..b]);
+                assert_eq!(cache.molecule_pos(i), &img.arena.pos[3 * a..3 * b]);
+                assert_eq!(cache.molecule_energy(i), img.arena.energy[i]);
+                let t = &img.topologies[0];
+                let (ea, eb) =
+                    (t.edge_offsets[i] as usize, t.edge_offsets[i + 1] as usize);
+                let (src, dst) = cache.topology_edges(0, i);
+                assert_eq!(src, &t.src[ea..eb]);
+                assert_eq!(dst, &t.dst[ea..eb]);
+                assert_eq!(cache.topology_edge_count(0, i), eb - ea);
+            }
+        }
         std::fs::remove_file(path).ok();
     }
 
@@ -592,7 +1671,9 @@ mod tests {
         };
         let path = tmppath("empty");
         write_cache(&path, &img).unwrap();
-        assert_eq!(read_cache(&path, &img.fingerprint).unwrap(), img);
+        for mode in both_modes() {
+            assert_eq!(read_cache_with(&path, &img.fingerprint, mode).unwrap(), img);
+        }
         std::fs::remove_file(path).ok();
     }
 
@@ -618,57 +1699,92 @@ mod tests {
         write_cache(&path, &img).unwrap();
         let full = std::fs::read(&path).unwrap();
         for cut in [0usize, 3, HEADER_LEN - 1, HEADER_LEN, HEADER_LEN + 9, full.len() - 1] {
-            let p = tmppath(&format!("trunc-{cut}"));
-            std::fs::write(&p, &full[..cut]).unwrap();
-            assert!(read_cache(&p, &img.fingerprint).is_err(), "prefix {cut} accepted");
-            std::fs::remove_file(p).ok();
+            for mode in both_modes() {
+                let p = tmppath(&format!("trunc-{cut}"));
+                std::fs::write(&p, &full[..cut]).unwrap();
+                assert!(
+                    read_cache_with(&p, &img.fingerprint, mode).is_err(),
+                    "prefix {cut} accepted in {mode:?}"
+                );
+                std::fs::remove_file(p).ok();
+            }
         }
         std::fs::remove_file(path).ok();
     }
 
     #[test]
-    fn bit_flip_is_rejected_by_checksum() {
+    fn bit_flip_at_every_position_is_rejected_or_harmless() {
+        // Flip one byte at every position of the file in turn. Decode
+        // must never panic and never return a *different* image; the
+        // checksum ladder must reject the overwhelming majority (only
+        // flips in alignment padding are invisible).
         let img = sample_image(6);
         let path = tmppath("bitflip");
         write_cache(&path, &img).unwrap();
-        let mut bytes = std::fs::read(&path).unwrap();
-        let mid = HEADER_LEN + (bytes.len() - HEADER_LEN) / 2;
-        bytes[mid] ^= 0x40;
-        std::fs::write(&path, &bytes).unwrap();
-        let err = read_cache(&path, &img.fingerprint).unwrap_err();
-        assert!(err.to_string().contains("checksum"), "{err}");
-        std::fs::remove_file(path).ok();
+        let pristine = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let mut oks = 0usize;
+        let mut checksum_errs = 0usize;
+        for at in 0..pristine.len() {
+            let mut bytes = pristine.clone();
+            bytes[at] ^= 0x40;
+            let p = tmppath("bitflip-case");
+            std::fs::write(&p, &bytes).unwrap();
+            match read_cache(&p, &img.fingerprint) {
+                Ok(decoded) => {
+                    assert_eq!(decoded, img, "flip at {at} decoded a differing stream");
+                    oks += 1;
+                }
+                Err(e) => {
+                    if format!("{e:#}").contains("checksum") {
+                        checksum_errs += 1;
+                    }
+                }
+            }
+            std::fs::remove_file(&p).ok();
+        }
+        assert!(checksum_errs > 0, "no flip was caught by a checksum");
+        assert!(
+            oks <= pristine.len() / 8,
+            "{oks}/{} single-byte flips were invisible — padding should be rare",
+            pristine.len()
+        );
     }
 
-    /// Mutation fuzz: ~1000 seeded cases, each XOR-flipping 1–8 random
-    /// bytes anywhere in the file (header or payload). The decoder must
-    /// stay *total* (never panic) and *honest* (never return `Ok` with
-    /// an image differing from the pristine one) — the generalization
-    /// of the fixed truncation/bit-flip cases above to arbitrary
-    /// corruption.
+    /// Mutation fuzz: ~1000 seeded cases per mode, each XOR-flipping 1–8
+    /// random bytes anywhere in the file (header, table, or sections).
+    /// The decoder must stay *total* (never panic) and *honest* (never
+    /// return `Ok` with an image differing from the pristine one) — in
+    /// the mapped mode exactly as in the owned mode.
     #[test]
-    fn mutation_fuzz_decoder_is_total_and_honest() {
+    fn mutation_fuzz_decoder_is_total_and_honest_in_both_modes() {
         use std::sync::atomic::{AtomicU64, Ordering};
         let img = sample_image(6);
         let base = tmppath("fuzz-base");
         write_cache(&base, &img).unwrap();
         let pristine = std::fs::read(&base).unwrap();
         std::fs::remove_file(&base).ok();
-        let case = AtomicU64::new(0);
-        crate::util::proptest::check(1000, |rng| {
-            let mut bytes = pristine.clone();
-            for _ in 0..rng.range(1, 9) {
-                let pos = rng.range(0, bytes.len());
-                bytes[pos] ^= rng.range(1, 256) as u8;
-            }
-            let path = tmppath(&format!("fuzz-{}", case.fetch_add(1, Ordering::Relaxed)));
-            std::fs::write(&path, &bytes).unwrap();
-            let out = read_cache(&path, &img.fingerprint);
-            std::fs::remove_file(&path).ok();
-            if let Ok(decoded) = out {
-                assert_eq!(decoded, img, "corrupted cache decoded Ok with a differing stream");
-            }
-        });
+        for mode in both_modes() {
+            let case = AtomicU64::new(0);
+            crate::util::proptest::check(1000, |rng| {
+                let mut bytes = pristine.clone();
+                for _ in 0..rng.range(1, 9) {
+                    let pos = rng.range(0, bytes.len());
+                    bytes[pos] ^= rng.range(1, 256) as u8;
+                }
+                let path =
+                    tmppath(&format!("fuzz-{mode:?}-{}", case.fetch_add(1, Ordering::Relaxed)));
+                std::fs::write(&path, &bytes).unwrap();
+                let out = read_cache_with(&path, &img.fingerprint, mode);
+                std::fs::remove_file(&path).ok();
+                if let Ok(decoded) = out {
+                    assert_eq!(
+                        decoded, img,
+                        "corrupted cache decoded Ok with a differing stream ({mode:?})"
+                    );
+                }
+            });
+        }
     }
 
     #[test]
@@ -681,40 +1797,31 @@ mod tests {
         bytes[0] = b'X';
         std::fs::write(&path, &bytes).unwrap();
         assert!(read_cache(&path, &img.fingerprint).is_err());
+        // A v1-era file (version field 1) must be rejected by version,
+        // not misparsed: the caller rebuilds cold and rewrites as v2.
         let mut bytes = good;
-        bytes[4] = 99; // version
+        bytes[4] = 1;
         std::fs::write(&path, &bytes).unwrap();
-        assert!(read_cache(&path, &img.fingerprint).is_err());
+        let err = read_cache(&path, &img.fingerprint).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
         std::fs::remove_file(path).ok();
     }
 
     #[test]
-    fn forged_topology_count_with_valid_checksum_is_an_error_not_an_abort() {
-        // An attacker-or-bitrot payload whose u32 topology count is huge
-        // but whose FNV checksum has been made to match (FNV is not
-        // cryptographic) must take the Err path — never a giant
-        // Vec::with_capacity that aborts the process.
+    fn forged_section_count_with_valid_checksum_is_an_error_not_an_abort() {
+        // A header whose n_sections is huge but whose header checksum
+        // has been re-sealed (FNV is not cryptographic) must take the
+        // Err path — never a giant Vec::with_capacity that aborts.
         let img = sample_image(5);
         let path = tmppath("forged-count");
         write_cache(&path, &img).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
-        // locate the n_topologies u32: header + u64 n + (n+1) u64 offsets
-        // + z + pos f32s + energy f32s
-        let n = 5usize;
-        let total_atoms = *img.arena.offsets.last().unwrap() as usize;
-        let off = HEADER_LEN + 8 + 8 * (n + 1) + total_atoms + 4 * 3 * total_atoms + 4 * n;
-        assert_eq!(
-            u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()),
-            1,
-            "test must patch the real count field"
-        );
-        bytes[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
-        // re-seal the forged payload so only the count check can reject it
-        let checksum = fnv1a64(&bytes[HEADER_LEN..]);
-        bytes[16..24].copy_from_slice(&checksum.to_le_bytes());
+        bytes[32..40].copy_from_slice(&u64::MAX.to_le_bytes());
+        let hc = fnv1a64(&bytes[0..80]);
+        bytes[80..88].copy_from_slice(&hc.to_le_bytes());
         std::fs::write(&path, &bytes).unwrap();
         let err = read_cache(&path, &img.fingerprint).unwrap_err();
-        assert!(err.to_string().contains("topologies"), "{err}");
+        assert!(err.to_string().contains("sections"), "{err}");
         std::fs::remove_file(path).ok();
     }
 
@@ -733,13 +1840,141 @@ mod tests {
         write_cache(&path, &img).unwrap();
         let err = read_cache(&path, &img.fingerprint).unwrap_err();
         assert!(err.to_string().contains("endpoint"), "{err}");
+        // And the lazy API agrees: open succeeds (eager ladder passes),
+        // the topology verify fails, the arena stays usable.
+        let cache = MappedCache::open(&path, &img.fingerprint, MapMode::Owned).unwrap();
+        assert!(cache.verify_arena());
+        assert!(!cache.verify_topology(0));
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn append_extends_the_image_in_place() {
+        let img = sample_image(6);
+        let path = tmppath("append");
+        let first_len = write_cache(&path, &img).unwrap();
+        let cache = MappedCache::open(&path, &img.fingerprint, MapMode::Owned).unwrap();
+        let extra = second_topology(6);
+        let new_len = append_topologies(&path, &cache, std::slice::from_ref(&extra)).unwrap();
+        assert!(new_len > first_len, "append must grow the file");
+        drop(cache);
+        let mut want = img.clone();
+        want.topologies.push(extra);
+        for mode in both_modes() {
+            assert_eq!(read_cache_with(&path, &img.fingerprint, mode).unwrap(), want);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn append_refuses_duplicate_keys_and_changed_files() {
+        let img = sample_image(4);
+        let path = tmppath("append-dup");
+        write_cache(&path, &img).unwrap();
+        let cache = MappedCache::open(&path, &img.fingerprint, MapMode::Owned).unwrap();
+        let dup = img.topologies[0].clone();
+        assert!(append_topologies(&path, &cache, std::slice::from_ref(&dup)).is_err());
+        // Rewrite the file under the open handle: the header re-read
+        // must notice and refuse, leaving the new file intact.
+        let mut img2 = img.clone();
+        img2.topologies.push(second_topology(4));
+        write_cache(&path, &img2).unwrap();
+        let extra = TopologyImage { k_max: 99, ..second_topology(4) };
+        let err = append_topologies(&path, &cache, std::slice::from_ref(&extra)).unwrap_err();
+        assert!(err.to_string().contains("changed"), "{err}");
+        assert_eq!(read_cache(&path, &img.fingerprint).unwrap(), img2);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn interrupted_append_tail_is_ignored() {
+        // An append that crashed after writing section bytes but before
+        // the header flip leaves a garbage tail past file_len; the old
+        // image must still load cleanly in both modes.
+        let img = sample_image(6);
+        let path = tmppath("append-tail");
+        write_cache(&path, &img).unwrap();
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[0xAB; 513]).unwrap();
+        drop(f);
+        for mode in both_modes() {
+            assert_eq!(read_cache_with(&path, &img.fingerprint, mode).unwrap(), img);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn paranoid_hash_round_trips_and_is_header_protected() {
+        let img = sample_image(5);
+        let path = tmppath("paranoid");
+        write_cache_with(&path, &img, Some(0x1234_5678_9abc_def0)).unwrap();
+        let cache = MappedCache::open(&path, &img.fingerprint, MapMode::Owned).unwrap();
+        assert_eq!(cache.paranoid(), Some(0x1234_5678_9abc_def0));
+        // Flipping a paranoid-hash byte must fail the header checksum.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[64] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_cache(&path, &img.fingerprint).unwrap_err();
+        assert!(err.to_string().contains("header checksum"), "{err}");
+        // Without the flag, no hash is reported.
+        write_cache(&path, &img).unwrap();
+        let cache = MappedCache::open(&path, &img.fingerprint, MapMode::Owned).unwrap();
+        assert_eq!(cache.paranoid(), None);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn paranoid_hash_is_deterministic_and_content_sensitive() {
+        let a = HydroNet::new(32, 7);
+        let ha = paranoid_hash(&a).unwrap();
+        assert_eq!(ha, paranoid_hash(&a).unwrap());
+        assert_ne!(ha, paranoid_hash(&HydroNet::new(32, 8)).unwrap());
+        assert_ne!(ha, paranoid_hash(&HydroNet::new(33, 7)).unwrap());
+    }
+
+    #[test]
+    fn varint_offsets_round_trip_and_reject_malformed_input() {
+        for offsets in [
+            vec![0u64],
+            vec![0, 1, 2, 3],
+            vec![0, 0, 0],
+            vec![0, 127, 128, 300, 300, 100_000, u32::MAX as u64],
+        ] {
+            let bytes = encode_varint_deltas(&offsets);
+            assert_eq!(decode_varint_deltas(&bytes, offsets.len()).unwrap(), offsets);
+        }
+        // truncated
+        let bytes = encode_varint_deltas(&[0, 1000, 2000]);
+        assert!(decode_varint_deltas(&bytes[..bytes.len() - 1], 3).is_err());
+        // trailing
+        assert!(decode_varint_deltas(&bytes, 2).is_err());
+        // overlong / overflowing
+        assert!(decode_varint_deltas(&[0x80; 11], 1).is_err());
+        assert!(decode_varint_deltas(&[0xff; 10], 1).is_err());
+    }
+
+    #[test]
+    fn csr_sections_choose_varint_when_smaller() {
+        // Small per-molecule deltas: varint must win and shrink the file
+        // well below the raw encoding.
+        let img = sample_image(512);
+        let (enc, bytes) = encode_offsets(&img.arena.offsets);
+        assert_eq!(enc, ENC_DELTA_VARINT);
+        assert!(bytes.len() * 4 <= img.arena.offsets.len() * 8 * 3);
+        // Pathological deltas: raw must win (varint would be larger).
+        let huge: Vec<u64> = (0..64u64).map(|i| i * (u32::MAX as u64)).collect();
+        let (enc, bytes) = encode_offsets(&huge);
+        assert_eq!(enc, ENC_RAW);
+        assert_eq!(bytes.len(), huge.len() * 8);
     }
 
     #[test]
     fn missing_file_is_an_error_not_a_panic() {
         let fp = SourceFingerprint { molecules: 1, content_hash: 2 };
         assert!(read_cache(Path::new("/nonexistent/dir/nope.mppc"), &fp).is_err());
+        for mode in both_modes() {
+            assert!(MappedCache::open(Path::new("/nonexistent/nope.mppc"), &fp, mode).is_err());
+        }
     }
 
     #[test]
@@ -776,6 +2011,9 @@ mod tests {
         let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| fingerprint(&src)));
         let inner = got.expect("fingerprint must not panic");
         assert!(inner.is_err(), "corrupt probe must surface as Err");
+        let got =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| paranoid_hash(&src)));
+        assert!(got.expect("paranoid_hash must not panic").is_err());
     }
 
     #[test]
@@ -801,5 +2039,23 @@ mod tests {
         let mut img = sample_image(4);
         img.fingerprint.molecules = 9;
         assert!(write_cache(&tmppath("badimg2"), &img).is_err());
+        let mut img = sample_image(4);
+        img.topologies[0].src.pop();
+        assert!(write_cache(&tmppath("badimg3"), &img).is_err());
+    }
+
+    #[test]
+    fn writer_cleans_up_temp_files_on_failure_paths() {
+        let dir = std::env::temp_dir().join(format!("molpack-persist-drop-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.mppc");
+        let fp = SourceFingerprint { molecules: 1, content_hash: 2 };
+        let mut w = CacheWriter::create(&path, fp, 1, None).unwrap();
+        w.begin_section(K_ARENA_OFFSETS, ENC_RAW, 0).unwrap();
+        w.write_chunk(&[0u8; 16]).unwrap();
+        drop(w); // never finished: temp must be gone, dest never created
+        let leftovers: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert!(leftovers.is_empty(), "stranded files: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -67,6 +67,7 @@ fn decode_record(bytes: &[u8]) -> Result<Molecule> {
 }
 
 /// Write all molecules from `source` into a store file at `path`.
+#[must_use = "an unchecked write error means the store file is absent or torn"]
 pub fn write_store(path: impl AsRef<Path>, mols: &[Molecule]) -> Result<()> {
     let f = File::create(path.as_ref())
         .with_context(|| format!("creating store {:?}", path.as_ref()))?;
@@ -105,6 +106,7 @@ pub struct Store {
 impl Store {
     /// Open a store file, validating magic/version and decoding the
     /// per-record size index.
+    #[must_use = "an unchecked open error means no store handle exists"]
     pub fn open(path: impl AsRef<Path>) -> Result<Store> {
         let f = File::open(path.as_ref())
             .with_context(|| format!("opening store {:?}", path.as_ref()))?;
@@ -140,6 +142,7 @@ impl Store {
     }
 
     /// Decode record `idx` from disk.
+    #[must_use = "an unchecked read error serves no record"]
     pub fn read(&self, idx: usize) -> Result<Molecule> {
         if idx >= self.sizes.len() {
             bail!("index {idx} out of range {}", self.sizes.len());

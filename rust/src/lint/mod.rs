@@ -47,6 +47,7 @@ impl fmt::Display for Finding {
 /// Run every tidy rule against the repo rooted at `root` (the directory
 /// holding `rust/` and the `Makefile`). Returns all findings sorted by
 /// file then line; an empty vec means the gate passes.
+#[must_use = "an unchecked tidy error hides the findings the gate should surface"]
 pub fn run_tidy(root: &Path) -> io::Result<Vec<Finding>> {
     let src_root = root.join("rust").join("src");
     let mut files = Vec::new();

@@ -7,6 +7,10 @@
 //! * `unchecked-narrowing` — the persist decoder only.
 //! * `lock-across-send` — every file (lost-wakeup hazard anywhere).
 //! * `pub-item-hygiene` — `coordinator/` and `datasets/`.
+//! * `must-use-result` — every file: crate-public fns returning
+//!   `Result` carry `#[must_use = "<why>"]` so call sites state why an
+//!   ignored error would be a bug (and clippy's `-D warnings` keeps the
+//!   messages, not bare attributes).
 //! * `makefile-bench-drift` — the Makefile against `rust/benches/`.
 //!
 //! Every rule honours `// tidy: allow(<rule>): <invariant>` on the same
@@ -17,11 +21,12 @@ use super::Finding;
 
 /// Rule ids, in reporting order. Kept public so docs/tests can
 /// enumerate the gate's coverage.
-pub const RULES: [&str; 5] = [
+pub const RULES: [&str; 6] = [
     "unwrap-in-hot-path",
     "unchecked-narrowing",
     "lock-across-send",
     "pub-item-hygiene",
+    "must-use-result",
     "makefile-bench-drift",
 ];
 
@@ -50,6 +55,7 @@ pub fn lint_source(rel: &str, text: &str) -> Vec<Finding> {
     rule_narrow(rel, &s, &tests, &mut findings);
     rule_lock(rel, &s, &tests, &mut findings);
     rule_hygiene(rel, &s, &tests, &mut findings);
+    rule_must_use_result(rel, &s, &tests, &mut findings);
     findings
 }
 
@@ -194,13 +200,7 @@ fn rule_hygiene(rel: &str, s: &Sanitized, tests: &[bool], findings: &mut Vec<Fin
         }
         if kind == "fn" {
             // gather the signature (bounded) to spot consuming builders
-            let mut sig = String::new();
-            for code_line in s.code.iter().take((ln + 12).min(s.code.len())).skip(ln) {
-                sig.push_str(code_line);
-                if code_line.contains('{') || code_line.contains(';') {
-                    break;
-                }
-            }
+            let sig = gather_signature(s, ln);
             let params = sig.split_once('(').map_or("", |(_, p)| p);
             let first = params.trim_start();
             let consuming = first.starts_with("self") || first.starts_with("mut self");
@@ -220,6 +220,119 @@ fn rule_hygiene(rel: &str, s: &Sanitized, tests: &[bool], findings: &mut Vec<Fin
             }
         }
     }
+}
+
+/// Gather a (bounded) signature starting at line `ln`: concatenated
+/// code lines up to and including the first one holding `{` or `;`.
+fn gather_signature(s: &Sanitized, ln: usize) -> String {
+    let mut sig = String::new();
+    for code_line in s.code.iter().take((ln + 12).min(s.code.len())).skip(ln) {
+        sig.push_str(code_line);
+        // line boundaries are token boundaries ("-> usize" + "where"
+        // must not fuse into one identifier)
+        sig.push(' ');
+        if code_line.contains('{') || code_line.contains(';') {
+            break;
+        }
+    }
+    sig
+}
+
+fn rule_must_use_result(rel: &str, s: &Sanitized, tests: &[bool], findings: &mut Vec<Finding>) {
+    for ln in 0..s.code.len() {
+        if tests[ln] {
+            continue;
+        }
+        let Some(("fn", name)) = pub_item(&s.code[ln]) else {
+            continue;
+        };
+        let sig = gather_signature(s, ln);
+        let Some(ret) = return_segment(&sig) else {
+            continue;
+        };
+        if !has_word(ret, "Result") {
+            continue;
+        }
+        // walk the attribute stack above the item for a must_use
+        let mut must_use = false;
+        let mut k = ln;
+        while k > 0 {
+            k -= 1;
+            let t = s.code[k].trim();
+            if t.starts_with("#[") {
+                if t.contains("must_use") {
+                    must_use = true;
+                }
+                continue;
+            }
+            break;
+        }
+        if !must_use && !allowed("must-use-result", ln, &s.comments) {
+            findings.push(Finding {
+                rule: "must-use-result",
+                file: rel.to_string(),
+                line: ln + 1,
+                message: format!(
+                    "pub fn `{name}` returns Result without #[must_use = \"<why>\"] — \
+                     say what an ignored Err would silently lose"
+                ),
+            });
+        }
+    }
+}
+
+/// The return-type segment of a fn signature: everything after the
+/// `->` that follows the parameter list's closing paren, truncated
+/// before any body/terminator and any `where` clause (so `Result` in a
+/// closure parameter or a bound never counts as the return type).
+fn return_segment(sig: &str) -> Option<&str> {
+    let start = sig.find('(')?;
+    let b = sig.as_bytes();
+    let mut depth = 0i64;
+    let mut i = start;
+    while i < b.len() {
+        match b[i] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    if i >= b.len() {
+        return None;
+    }
+    let rest = &sig[i + 1..];
+    let rest = &rest[..rest.find(|c| c == '{' || c == ';').unwrap_or(rest.len())];
+    let arrow = rest.find("->")?;
+    let ret = &rest[arrow + 2..];
+    Some(&ret[..find_word(ret, "where").unwrap_or(ret.len())])
+}
+
+/// Byte offset of `word` in `hay` at identifier boundaries.
+fn find_word(hay: &str, word: &str) -> Option<usize> {
+    let b = hay.as_bytes();
+    let w = word.len();
+    let mut from = 0;
+    while let Some(off) = hay[from..].find(word) {
+        let pos = from + off;
+        from = pos + 1;
+        let before_ok = pos == 0 || !is_ident(b[pos - 1]);
+        let after_ok = pos + w >= b.len() || !is_ident(b[pos + w]);
+        if before_ok && after_ok {
+            return Some(pos);
+        }
+    }
+    None
+}
+
+/// Does `hay` contain `word` at identifier boundaries?
+fn has_word(hay: &str, word: &str) -> bool {
+    find_word(hay, word).is_some()
 }
 
 /// Check the Makefile's `cargo bench --bench X -- <flags>` lines against
@@ -653,6 +766,59 @@ mod tests {
         assert_eq!(pub_item("pub unsafe fn raw() {}"), Some(("fn", "raw".to_string())));
         assert_eq!(pub_item("pub(crate) fn hidden() {}"), None);
         assert_eq!(pub_item("pub use foo::bar;"), None);
+    }
+
+    // ---- must-use-result ----
+
+    #[test]
+    fn result_fn_without_must_use_flagged_repo_wide() {
+        let src = "/// Saves.\npub fn save(&self) -> Result<u64> {\n    Ok(0)\n}\n";
+        let f = lint_source("graph/radius.rs", src);
+        assert_eq!(rules_of(&f), ["must-use-result"]);
+        assert!(f[0].message.contains("`save`"), "{}", f[0].message);
+        let ok = "/// Saves.\n#[must_use = \"unchecked save error loses the cache\"]\npub fn save(&self) -> Result<u64> {\n    Ok(0)\n}\n";
+        assert!(lint_source("graph/radius.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn qualified_and_aliased_result_types_count() {
+        let io = "/// Reads.\npub fn read(p: &Path) -> std::io::Result<Vec<u8>> {\n    todo!()\n}\n";
+        assert_eq!(rules_of(&lint_source("util/x.rs", io)), ["must-use-result"]);
+        let multi = "/// Parses.\npub fn parse(\n    s: &str,\n) -> Result<Json, JsonError> {\n    todo!()\n}\n";
+        assert_eq!(rules_of(&lint_source("util/x.rs", multi)), ["must-use-result"]);
+    }
+
+    #[test]
+    fn non_result_closure_params_and_private_fns_pass() {
+        // Result in a closure *parameter* is not a Result return
+        let cb = "/// Runs.\npub fn run(f: impl Fn() -> Result<()>) -> usize {\n    0\n}\n";
+        assert!(lint_source("util/x.rs", cb).is_empty(), "closure param misread as return");
+        // Result only in a where-clause bound is not a Result return
+        let wh = "/// Runs.\npub fn run<F>(f: F) -> usize\nwhere\n    F: Fn() -> Result<()>,\n{\n    0\n}\n";
+        assert!(lint_source("util/x.rs", wh).is_empty(), "where-bound misread as return");
+        // plain returns, pub(crate), and free Result-naming idents pass
+        assert!(lint_source("util/x.rs", "/// N.\npub fn n(&self) -> usize {\n    0\n}\n").is_empty());
+        assert!(lint_source("util/x.rs", "pub(crate) fn f() -> Result<()> {\n    Ok(())\n}\n").is_empty());
+        assert!(lint_source("util/x.rs", "/// R.\npub fn r(&self) -> ResultSet {\n    todo!()\n}\n").is_empty());
+    }
+
+    #[test]
+    fn must_use_result_honors_tests_and_allow() {
+        let t = "#[cfg(test)]\nmod tests {\n    pub fn helper() -> Result<()> {\n        Ok(())\n    }\n}\n";
+        assert!(lint_source("util/x.rs", t).is_empty());
+        let a = "/// F.\n// tidy: allow(must-use-result): diagnostic-only helper, Err is advisory\npub fn f() -> Result<()> {\n    Ok(())\n}\n";
+        assert!(lint_source("util/x.rs", a).is_empty());
+    }
+
+    #[test]
+    fn return_segment_extraction_is_paren_aware() {
+        assert_eq!(return_segment("pub fn f(x: u8) -> Result<()> {"), Some(" Result<()> "));
+        assert_eq!(return_segment("pub fn f(c: impl Fn() -> u8) -> bool {"), Some(" bool "));
+        assert_eq!(return_segment("pub fn f()"), None);
+        assert_eq!(return_segment("pub fn f() -> usize;"), Some(" usize"));
+        assert!(!has_word(" Result<()> ", "where"));
+        assert!(has_word("io::Result<u8>", "Result"));
+        assert!(!has_word("ResultSet", "Result"));
     }
 
     // ---- makefile-bench-drift ----

@@ -10,12 +10,16 @@
 //!                                            training session on one plane
 //!   prepare [--graphs N] [--cache-dir DIR]   offline prepared-cache build:
 //!           [--r-cut R] [--k-max K]          materialize arena + edges,
-//!                                            persist, verify warm reload
+//!           [--paranoid]                     persist, verify warm reload
+//!                                            (--paranoid embeds + checks a
+//!                                            whole-dataset content hash)
 //!   characterize                             Fig. 5 dataset profiles
 //!   pack [--dataset NAME] [--s-m N]          run LPFHP + baselines once
 //!   plan [--edges E] [--nodes N] [--feat F]  scatter/gather planner demo
 //!   tidy [--root DIR]                        project lint gate over
 //!                                            rust/src + the Makefile
+//!   benchdiff --baseline F --current F       compare bench snapshots and
+//!             [--tolerance T]                fail on perf regression
 //!
 //! (Hand-rolled argument parsing: the offline crate set has no clap.)
 
@@ -386,10 +390,18 @@ fn cmd_prepare(args: &Args) -> Result<()> {
     }
     let dir = args.cache_dir().unwrap_or_else(|| PathBuf::from("cache"));
     let path = dir.join(CACHE_FILE);
+    // --paranoid records a whole-dataset content hash in the cache
+    // header; every later load (train/serve/prepare) re-hashes the
+    // source and refuses the cache on any drift the sampled fingerprint
+    // cannot see. Costs one full source scan at save and at each load.
+    let paranoid = args.get("paranoid").is_some();
     // Same corpus parameterization as `train` (HydroNet, seed 42 by
     // default) — prepare/train pairs must fingerprint-match.
     let source: Arc<dyn MoleculeSource> = Arc::new(HydroNet::new(graphs, seed));
-    println!("prepare: {graphs} graphs (seed {seed}), r_cut={r_cut}, k_max={k_max}");
+    println!(
+        "prepare: {graphs} graphs (seed {seed}), r_cut={r_cut}, k_max={k_max}{}",
+        if paranoid { ", paranoid content hash" } else { "" }
+    );
 
     // Idempotent re-runs (CI/deploy scripts call prepare unconditionally):
     // a current cache loads warm, warm() is then a no-op on resident
@@ -402,7 +414,7 @@ fn cmd_prepare(args: &Args) -> Result<()> {
         bail!("{} corrupt record(s) hit during materialization — fix the dataset", stats.quarantined);
     }
     let t0 = std::time::Instant::now();
-    let Some(bytes) = prep.save_if_stale(&path)? else {
+    let Some(bytes) = prep.save_if_stale_with(&path, paranoid)? else {
         println!(
             "cache at {} is already current ({:.1} MB arena + {:.1} MB edges verified warm in {warm_secs:.2}s) — nothing to write",
             path.display(),
@@ -436,7 +448,60 @@ fn cmd_prepare(args: &Args) -> Result<()> {
         s.edge_entries,
         warm_secs / load_secs.max(1e-9),
     );
+    if paranoid {
+        println!("paranoid: whole-dataset content hash checked on reload");
+    }
     println!("prepare OK");
+    Ok(())
+}
+
+/// `molpack benchdiff`: compare a fresh bench snapshot against a
+/// committed baseline from `BENCH_history/` and fail on regression.
+/// Metric directions are inferred from names (see `util::ledger`), so a
+/// new field in the snapshot becomes guarded as soon as `make
+/// bench-record` folds it into the baseline.
+fn cmd_benchdiff(args: &Args) -> Result<()> {
+    let baseline = PathBuf::from(
+        args.get("baseline").ok_or_else(|| anyhow::anyhow!("benchdiff needs --baseline FILE"))?,
+    );
+    let current = PathBuf::from(
+        args.get("current").ok_or_else(|| anyhow::anyhow!("benchdiff needs --current FILE"))?,
+    );
+    let tolerance = match args.get("tolerance") {
+        None => 0.25,
+        Some(v) => v.parse().map_err(|_| {
+            anyhow::anyhow!("invalid value for --tolerance: {v:?} (expected a number, e.g. 0.25)")
+        })?,
+    };
+    let report = molpack::util::ledger::compare_files(&baseline, &current, tolerance)?;
+    println!(
+        "benchdiff: {} vs {} (tolerance {:.0}%)",
+        current.display(),
+        baseline.display(),
+        tolerance * 100.0
+    );
+    for d in &report.deltas {
+        let verdict = if d.regressed { "REGRESSED" } else { "ok" };
+        println!(
+            "  {:9} {:45} baseline {:>12.6} current {:>12.6} ({:+.1}%)",
+            verdict,
+            d.metric,
+            d.baseline,
+            d.current,
+            d.worse_pct()
+        );
+    }
+    for name in &report.missing {
+        println!("  MISSING   {name} (guarded in baseline, absent from current run)");
+    }
+    if !report.is_pass() {
+        bail!(
+            "benchdiff: {} regression(s), {} vanished metric(s)",
+            report.regressions().len(),
+            report.missing.len()
+        );
+    }
+    println!("benchdiff: pass ({} metrics within tolerance)", report.deltas.len());
     Ok(())
 }
 
@@ -540,17 +605,19 @@ fn cmd_tidy(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: molpack <figures|train|serve|prepare|pack|plan|characterize|tidy> [flags]\n\
+const USAGE: &str = "usage: molpack <figures|train|serve|prepare|pack|plan|characterize|tidy|benchdiff> [flags]\n\
   figures [--fig 5..13 | --table 1 | --all]\n\
   train [--graphs N] [--epochs E] [--workers W] [--prefetch D] [--shard S]\n\
         [--max-batches B] [--replicas R [--no-merged]] [--cache-dir DIR]\n\
   serve [--tenants T] [--requests N] [--train-graphs N] [--workers W]\n\
         [--prefetch D] [--shard S] [--cache-dir DIR] [--qos S:T:B]\n\
   prepare [--graphs N] [--seed S] [--r-cut R] [--k-max K] [--cache-dir DIR]\n\
+          [--paranoid]\n\
   pack [--dataset QM9|500K|2.7M|4.5M] [--s-m N] [--sample N]\n\
   plan [--edges I] [--nodes M] [--feat N]\n\
   characterize\n\
-  tidy [--root DIR]";
+  tidy [--root DIR]\n\
+  benchdiff --baseline FILE --current FILE [--tolerance T]";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -568,6 +635,7 @@ fn main() -> Result<()> {
         "plan" => cmd_plan(&args),
         "characterize" => cmd_characterize(),
         "tidy" => cmd_tidy(&args),
+        "benchdiff" => cmd_benchdiff(&args),
         other => bail!("unknown command {other}\n{USAGE}"),
     }
 }

@@ -127,6 +127,7 @@ fn parse_artifact(v: &Json) -> Result<ArtifactSpec> {
 }
 
 impl Manifest {
+    #[must_use = "an unchecked load error means no artifact was loaded"]
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
@@ -186,6 +187,7 @@ impl Manifest {
     }
 
     /// Internal consistency checks (the compile-path contract).
+    #[must_use = "an unchecked validation error accepts a broken artifact"]
     pub fn validate(&self) -> Result<()> {
         let mut off = 0;
         for e in &self.param_layout {
@@ -222,6 +224,7 @@ impl Manifest {
     }
 
     /// Read `init_params.bin` (little-endian f32) into a vector.
+    #[must_use = "an unchecked load error means parameters were not restored"]
     pub fn load_init_params(&self) -> Result<Vec<f32>> {
         let path = self.dir.join(&self.init_params_file);
         let bytes =

@@ -183,6 +183,7 @@ impl HostBatch {
     /// The counts are maintained exclusively by `add_real_counts` during
     /// assembly (after a `reset`) and by `recount`, which is what makes
     /// the O(1) `real_*()` accessors trustworthy in release.
+    #[must_use = "an unchecked validation error accepts inconsistent batch tensors"]
     pub fn validate(&self, g: &BatchGeometry) -> Result<()> {
         if self.z.len() != g.n_nodes
             || self.pos.len() != g.n_nodes * 3

@@ -16,6 +16,7 @@ pub struct CheckpointMeta {
 }
 
 /// Write `params` (+ meta) to `path` (.bin) and `path`.json.
+#[must_use = "an unchecked save error means the checkpoint was not written"]
 pub fn save(path: impl AsRef<Path>, params: &[f32], meta: &CheckpointMeta) -> Result<()> {
     if params.len() != meta.param_count {
         bail!("meta.param_count {} != params.len {}", meta.param_count, params.len());
@@ -39,6 +40,7 @@ pub fn save(path: impl AsRef<Path>, params: &[f32], meta: &CheckpointMeta) -> Re
 }
 
 /// Load a checkpoint written by [`save`].
+#[must_use = "an unchecked load error means the checkpoint was not restored"]
 pub fn load(path: impl AsRef<Path>) -> Result<(Vec<f32>, CheckpointMeta)> {
     let path = path.as_ref();
     let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;

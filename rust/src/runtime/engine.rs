@@ -56,6 +56,7 @@ fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
 
 impl Engine {
     /// Load and compile both artifacts from `dir` on the CPU PJRT client.
+    #[must_use = "an unchecked load error means no engine exists"]
     pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
         let manifest = Manifest::load(&dir)?;
         let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
@@ -84,6 +85,7 @@ impl Engine {
     }
 
     /// Fresh training state from `init_params.bin`.
+    #[must_use = "an unchecked init error means no device state exists"]
     pub fn init_state(&self) -> Result<TrainState> {
         let p = self.manifest.load_init_params()?;
         let zeros = vec![0f32; p.len()];
@@ -97,6 +99,7 @@ impl Engine {
     }
 
     /// Restore state from a flat parameter vector (checkpoint resume).
+    #[must_use = "an unchecked init error means no device state exists"]
     pub fn state_from_params(&self, params: &[f32]) -> Result<TrainState> {
         if params.len() != self.manifest.param_count {
             bail!(
@@ -135,6 +138,7 @@ impl Engine {
     }
 
     /// One optimizer step; updates `state` in place and returns the loss.
+    #[must_use = "an unchecked step error silently loses the failed batch"]
     pub fn train_step(&self, state: &mut TrainState, batch: &HostBatch) -> Result<f32> {
         let mut s = self.stats.get();
         let t0 = Instant::now();
@@ -167,6 +171,7 @@ impl Engine {
 
     /// Loss + flat gradient for one replica's batch (data-parallel path).
     /// Requires artifacts built with the `grad_step` entry.
+    #[must_use = "an unchecked step error silently loses the failed batch"]
     pub fn grad_step(&self, params: &Literal, batch: &HostBatch) -> Result<(f32, Vec<f32>)> {
         let exe = self
             .grad_exe
@@ -182,6 +187,7 @@ impl Engine {
     }
 
     /// Forward-only energies for a batch (serving path).
+    #[must_use = "an unchecked predict error returns no energies"]
     pub fn predict(&self, params: &Literal, batch: &HostBatch) -> Result<Vec<f32>> {
         let batch_lits = self.batch_literals(batch, false)?;
         let mut args: Vec<&Literal> = vec![params];
@@ -192,6 +198,7 @@ impl Engine {
     }
 
     /// Copy the current flat parameter vector back to the host.
+    #[must_use = "an unchecked transfer error leaves the host parameters stale"]
     pub fn params_to_host(&self, state: &TrainState) -> Result<Vec<f32>> {
         Ok(state.params.to_vec::<f32>()?)
     }

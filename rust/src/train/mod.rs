@@ -74,6 +74,7 @@ impl Default for TrainConfig {
 }
 
 /// Run the training loop; returns per-epoch records (the loss curve).
+#[must_use = "an unchecked training error means the run did not complete"]
 pub fn train<S: MoleculeSource + 'static>(
     engine: &Engine,
     state: &mut TrainState,

@@ -35,6 +35,7 @@ pub enum JsonError {
 }
 
 impl Json {
+    #[must_use = "an unchecked parse error hides malformed JSON"]
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let b = s.as_bytes();
         let mut p = Parser { b, i: 0 };
@@ -49,6 +50,7 @@ impl Json {
 
     // ---- typed accessors -------------------------------------------------
 
+    #[must_use = "the Err reports a missing key the caller assumed present"]
     pub fn get(&self, key: &str) -> Result<&Json, JsonError> {
         match self {
             Json::Obj(pairs) => pairs
@@ -67,6 +69,7 @@ impl Json {
         }
     }
 
+    #[must_use = "the Err reports a type mismatch; ignoring it serves garbage"]
     pub fn as_f64(&self) -> Result<f64, JsonError> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -74,6 +77,7 @@ impl Json {
         }
     }
 
+    #[must_use = "the Err reports a type mismatch; ignoring it serves garbage"]
     pub fn as_usize(&self) -> Result<usize, JsonError> {
         let x = self.as_f64()?;
         if x < 0.0 || x.fract() != 0.0 {
@@ -82,6 +86,7 @@ impl Json {
         Ok(x as usize)
     }
 
+    #[must_use = "the Err reports a type mismatch; ignoring it serves garbage"]
     pub fn as_str(&self) -> Result<&str, JsonError> {
         match self {
             Json::Str(s) => Ok(s),
@@ -89,6 +94,7 @@ impl Json {
         }
     }
 
+    #[must_use = "the Err reports a type mismatch; ignoring it serves garbage"]
     pub fn as_arr(&self) -> Result<&[Json], JsonError> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -96,6 +102,7 @@ impl Json {
         }
     }
 
+    #[must_use = "the Err reports a type mismatch; ignoring it serves garbage"]
     pub fn as_obj(&self) -> Result<&[(String, Json)], JsonError> {
         match self {
             Json::Obj(v) => Ok(v),
@@ -103,6 +110,7 @@ impl Json {
         }
     }
 
+    #[must_use = "the Err reports a type mismatch; ignoring it serves garbage"]
     pub fn as_bool(&self) -> Result<bool, JsonError> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -111,6 +119,7 @@ impl Json {
     }
 
     /// `[1, 2, 3]` -> `vec![1, 2, 3]`.
+    #[must_use = "the Err reports a type mismatch; ignoring it serves garbage"]
     pub fn as_usize_arr(&self) -> Result<Vec<usize>, JsonError> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }

@@ -1,0 +1,279 @@
+//! Perf ledger: compare a fresh bench snapshot against the committed
+//! baseline in `BENCH_history/` and flag regressions beyond a tolerance
+//! band.
+//!
+//! Bench sections emit flat JSON objects of metrics
+//! (`BENCH_assembly.json`, `BENCH_persist.json`); `make bench-record`
+//! copies them into `BENCH_history/` together with gate wall times, and
+//! `make bench-check` replays the benches and runs `molpack benchdiff`
+//! against that baseline. Which way "better" points is inferred from the
+//! metric name, so new bench fields join the guard without schema
+//! changes:
+//!
+//! * `*_secs` / `*_ms` / `*_bytes` — lower is better (latency, wall
+//!   time, footprint);
+//! * `*per_sec*` / `*speedup` / `*hit_rate` — higher is better
+//!   (throughput, ratios);
+//! * anything else (counts, labels, flags) — informational, never
+//!   compared.
+//!
+//! Nested objects are flattened to dotted paths (`gates.lint_secs`), so
+//! one baseline file can hold several sections. A directional metric
+//! present in the baseline but missing from the current run is reported
+//! (and fails the check): silently dropping a guarded metric is itself a
+//! regression of the guard.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Which way "better" points for one metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Timings, footprints: regression = current above baseline.
+    LowerIsBetter,
+    /// Throughput, speedups, hit rates: regression = current below.
+    HigherIsBetter,
+}
+
+/// Infer the comparison direction from a metric name (see module docs);
+/// `None` marks an informational metric that is never compared.
+pub fn direction(name: &str) -> Option<Direction> {
+    let last = name.rsplit('.').next().unwrap_or(name);
+    if last.ends_with("_secs") || last.ends_with("_ms") || last.ends_with("_bytes") {
+        Some(Direction::LowerIsBetter)
+    } else if last.contains("per_sec") || last.ends_with("speedup") || last.ends_with("hit_rate")
+    {
+        Some(Direction::HigherIsBetter)
+    } else {
+        None
+    }
+}
+
+/// One compared metric: baseline vs current, and the verdict under the
+/// tolerance the comparison ran with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Delta {
+    /// Dotted metric path (e.g. `persist.warm_epoch1_secs`).
+    pub metric: String,
+    /// Value recorded in the committed baseline.
+    pub baseline: f64,
+    /// Value from the fresh run.
+    pub current: f64,
+    /// Which way "better" points for this metric.
+    pub direction: Direction,
+    /// True when `current` is worse than `baseline` beyond tolerance.
+    pub regressed: bool,
+}
+
+impl Delta {
+    /// Signed relative change in percent, positive = worse. Returns 0
+    /// for a zero baseline (no meaningful ratio).
+    pub fn worse_pct(&self) -> f64 {
+        if self.baseline == 0.0 {
+            return 0.0;
+        }
+        let rel = (self.current - self.baseline) / self.baseline * 100.0;
+        match self.direction {
+            Direction::LowerIsBetter => rel,
+            Direction::HigherIsBetter => -rel,
+        }
+    }
+}
+
+/// Outcome of one baseline/current comparison.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Every directional metric found in both files.
+    pub deltas: Vec<Delta>,
+    /// Directional baseline metrics absent from the current run.
+    pub missing: Vec<String>,
+}
+
+impl Report {
+    /// The failing subset of [`deltas`](Report::deltas).
+    pub fn regressions(&self) -> Vec<&Delta> {
+        self.deltas.iter().filter(|d| d.regressed).collect()
+    }
+
+    /// Overall verdict: no regressions and no vanished metrics.
+    pub fn is_pass(&self) -> bool {
+        self.missing.is_empty() && self.deltas.iter().all(|d| !d.regressed)
+    }
+}
+
+/// Flatten nested objects into `(dotted.path, value)` pairs, keeping
+/// only numeric leaves.
+fn collect(prefix: &str, v: &Json, out: &mut Vec<(String, f64)>) {
+    match v {
+        Json::Num(x) => out.push((prefix.to_string(), *x)),
+        Json::Obj(pairs) => {
+            for (k, child) in pairs {
+                let path =
+                    if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                collect(&path, child, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Compare two parsed snapshots under a relative `tolerance` (0.25 =
+/// current may be up to 25% worse than baseline before failing).
+/// Metrics only present in the current run are ignored — a new bench
+/// field becomes guarded once `make bench-record` folds it into the
+/// baseline.
+#[must_use = "an unchecked comparison error hides an unreadable snapshot"]
+pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<Report> {
+    if !(0.0..10.0).contains(&tolerance) {
+        bail!("tolerance {tolerance} out of range [0, 10)");
+    }
+    let mut base = Vec::new();
+    collect("", baseline, &mut base);
+    let mut cur = Vec::new();
+    collect("", current, &mut cur);
+    let mut report = Report::default();
+    for (name, b) in base {
+        let Some(dir) = direction(&name) else { continue };
+        let Some(&(_, c)) = cur.iter().find(|(n, _)| *n == name) else {
+            report.missing.push(name);
+            continue;
+        };
+        let regressed = match dir {
+            Direction::LowerIsBetter => c > b * (1.0 + tolerance) + 1e-12,
+            Direction::HigherIsBetter => c < b * (1.0 - tolerance) - 1e-12,
+        };
+        report.deltas.push(Delta {
+            metric: name,
+            baseline: b,
+            current: c,
+            direction: dir,
+            regressed,
+        });
+    }
+    Ok(report)
+}
+
+/// [`compare`] over files on disk (the `molpack benchdiff` entry point).
+#[must_use = "an unchecked comparison error hides an unreadable snapshot"]
+pub fn compare_files(
+    baseline: &std::path::Path,
+    current: &std::path::Path,
+    tolerance: f64,
+) -> Result<Report> {
+    let read = |p: &std::path::Path| -> Result<Json> {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading snapshot {p:?}"))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing snapshot {p:?}: {e}"))
+    };
+    compare(&read(baseline)?, &read(current)?, tolerance)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn direction_inference_covers_the_bench_schema() {
+        assert_eq!(direction("cold_epoch1_secs"), Some(Direction::LowerIsBetter));
+        assert_eq!(direction("queue_wait_ms"), Some(Direction::LowerIsBetter));
+        assert_eq!(direction("cache_file_bytes"), Some(Direction::LowerIsBetter));
+        assert_eq!(direction("warm_graphs_per_sec"), Some(Direction::HigherIsBetter));
+        assert_eq!(direction("speedup"), Some(Direction::HigherIsBetter));
+        assert_eq!(direction("edge_hit_rate"), Some(Direction::HigherIsBetter));
+        assert_eq!(direction("gates.lint_secs"), Some(Direction::LowerIsBetter));
+        assert_eq!(direction("graphs"), None);
+        assert_eq!(direction("bench"), None);
+        assert_eq!(direction("bitwise_identical"), None);
+    }
+
+    #[test]
+    fn within_tolerance_passes_and_beyond_fails_both_directions() {
+        let base = parse(r#"{"warm_secs": 1.0, "speedup": 2.0, "graphs": 100}"#);
+        let ok = parse(r#"{"warm_secs": 1.2, "speedup": 1.7, "graphs": 50}"#);
+        let r = compare(&base, &ok, 0.25).unwrap();
+        assert!(r.is_pass(), "{r:?}");
+        assert_eq!(r.deltas.len(), 2, "informational keys must not be compared");
+
+        let slow = parse(r#"{"warm_secs": 1.3, "speedup": 2.0}"#);
+        let r = compare(&base, &slow, 0.25).unwrap();
+        assert!(!r.is_pass());
+        assert_eq!(r.regressions().len(), 1);
+        assert_eq!(r.regressions()[0].metric, "warm_secs");
+        assert!(r.regressions()[0].worse_pct() > 29.0);
+
+        let weak = parse(r#"{"warm_secs": 1.0, "speedup": 1.4}"#);
+        let r = compare(&base, &weak, 0.25).unwrap();
+        assert_eq!(r.regressions().len(), 1);
+        assert_eq!(r.regressions()[0].metric, "speedup");
+    }
+
+    #[test]
+    fn improvements_never_fail() {
+        let base = parse(r#"{"warm_secs": 1.0, "speedup": 2.0}"#);
+        let better = parse(r#"{"warm_secs": 0.01, "speedup": 50.0}"#);
+        assert!(compare(&base, &better, 0.0).unwrap().is_pass());
+    }
+
+    #[test]
+    fn vanished_guarded_metric_fails_the_check() {
+        let base = parse(r#"{"warm_secs": 1.0, "speedup": 2.0}"#);
+        let cur = parse(r#"{"warm_secs": 1.0}"#);
+        let r = compare(&base, &cur, 0.25).unwrap();
+        assert!(!r.is_pass());
+        assert_eq!(r.missing, vec!["speedup".to_string()]);
+        // but a vanished *informational* key is fine
+        let base = parse(r#"{"warm_secs": 1.0, "graphs": 9}"#);
+        assert!(compare(&base, &cur, 0.25).unwrap().is_pass());
+    }
+
+    #[test]
+    fn nested_sections_flatten_to_dotted_paths() {
+        let base = parse(r#"{"gates": {"lint_secs": 10.0, "race_secs": 60.0}}"#);
+        let cur = parse(r#"{"gates": {"lint_secs": 30.0, "race_secs": 55.0}}"#);
+        let r = compare(&base, &cur, 0.5).unwrap();
+        assert_eq!(r.deltas.len(), 2);
+        let bad = r.regressions();
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].metric, "gates.lint_secs");
+    }
+
+    #[test]
+    fn zero_baseline_is_stable() {
+        let base = parse(r#"{"warm_secs": 0.0}"#);
+        // any positive time regresses from a zero baseline ...
+        let r = compare(&base, &parse(r#"{"warm_secs": 0.5}"#), 0.25).unwrap();
+        assert!(!r.is_pass());
+        assert_eq!(r.deltas[0].worse_pct(), 0.0, "no ratio from a zero baseline");
+        // ... while exactly zero passes
+        assert!(compare(&base, &base, 0.25).unwrap().is_pass());
+    }
+
+    #[test]
+    fn bad_tolerance_is_rejected() {
+        let j = parse("{}");
+        assert!(compare(&j, &j, -0.1).is_err());
+        assert!(compare(&j, &j, 10.0).is_err());
+    }
+
+    #[test]
+    fn compare_files_round_trips() {
+        let dir = std::env::temp_dir().join("molpack-ledger-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let pid = std::process::id();
+        let b = dir.join(format!("base-{pid}.json"));
+        let c = dir.join(format!("cur-{pid}.json"));
+        std::fs::write(&b, r#"{"speedup": 2.0}"#).unwrap();
+        std::fs::write(&c, r#"{"speedup": 2.1}"#).unwrap();
+        assert!(compare_files(&b, &c, 0.25).unwrap().is_pass());
+        assert!(compare_files(&b, &dir.join("absent.json"), 0.25).is_err());
+        std::fs::write(&c, "not json").unwrap();
+        assert!(compare_files(&b, &c, 0.25).is_err());
+        std::fs::remove_file(b).ok();
+        std::fs::remove_file(c).ok();
+    }
+}

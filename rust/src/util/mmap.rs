@@ -1,0 +1,349 @@
+//! Read-only `mmap(2)` without libc: a raw-syscall shim over
+//! `std::os::fd`, so the persist cache file can be served as
+//! page-cache-backed memory (one physical copy shared by every plane in
+//! every process on the host) with zero crate dependencies.
+//!
+//! Supported targets are Linux on x86_64/aarch64 — the shim issues the
+//! `mmap`/`munmap`/`madvise` syscalls directly via inline asm. On any
+//! other target [`Mmap::map`] returns `ErrorKind::Unsupported` and
+//! callers (see `datasets::persist`) fall back to an owned bulk read,
+//! so the build stays portable without a feature flag.
+//!
+//! Mappings are `PROT_READ` + `MAP_SHARED`: readers can never mutate the
+//! cache through the map, and all processes mapping the same file share
+//! physical pages. The SIGBUS caveat of shared file mappings (touching a
+//! page past a truncated file's end) is handled by protocol, not by
+//! signal handling: cache writers only ever *replace* the file via
+//! temp-file + `rename` or *grow* it by appending — an existing file is
+//! never truncated in place — so a live mapping's pages stay valid for
+//! the mapping's lifetime.
+
+use std::fs::File;
+use std::io;
+use std::ops::Deref;
+
+/// Whether this build target has the raw-syscall mapping path at all.
+/// When false, [`Mmap::map`] always returns `ErrorKind::Unsupported`.
+pub const SUPPORTED: bool = cfg!(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+));
+
+#[cfg(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+))]
+mod sys {
+    //! The actual syscall shim. Numbers differ per architecture; flag
+    //! and protection constants below are identical on both.
+
+    pub const PROT_READ: usize = 1;
+    pub const MAP_SHARED: usize = 1;
+    pub const MADV_WILLNEED: usize = 3;
+
+    #[cfg(target_arch = "x86_64")]
+    pub const SYS_MMAP: usize = 9;
+    #[cfg(target_arch = "x86_64")]
+    pub const SYS_MUNMAP: usize = 11;
+    #[cfg(target_arch = "x86_64")]
+    pub const SYS_MADVISE: usize = 28;
+
+    #[cfg(target_arch = "aarch64")]
+    pub const SYS_MMAP: usize = 222;
+    #[cfg(target_arch = "aarch64")]
+    pub const SYS_MUNMAP: usize = 215;
+    #[cfg(target_arch = "aarch64")]
+    pub const SYS_MADVISE: usize = 233;
+
+    /// Raw six-argument syscall. Returns the kernel's raw result:
+    /// `-4095..=-1` encodes `-errno`, anything else is success.
+    ///
+    /// # Safety
+    /// The caller must uphold the invariants of the specific syscall
+    /// being issued (valid addresses, lengths, fds).
+    #[cfg(target_arch = "x86_64")]
+    pub unsafe fn syscall6(
+        n: usize,
+        a: usize,
+        b: usize,
+        c: usize,
+        d: usize,
+        e: usize,
+        f: usize,
+    ) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") n as isize => ret,
+            in("rdi") a,
+            in("rsi") b,
+            in("rdx") c,
+            in("r10") d,
+            in("r8") e,
+            in("r9") f,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    /// Raw six-argument syscall (aarch64 calling convention).
+    ///
+    /// # Safety
+    /// As for the x86_64 variant.
+    #[cfg(target_arch = "aarch64")]
+    pub unsafe fn syscall6(
+        n: usize,
+        a: usize,
+        b: usize,
+        c: usize,
+        d: usize,
+        e: usize,
+        f: usize,
+    ) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "svc 0",
+            in("x8") n,
+            inlateout("x0") a => ret,
+            in("x1") b,
+            in("x2") c,
+            in("x3") d,
+            in("x4") e,
+            in("x5") f,
+            options(nostack),
+        );
+        ret
+    }
+
+    /// Convert a raw syscall result to `io::Result<usize>`.
+    pub(crate) fn decode(ret: isize) -> std::io::Result<usize> {
+        if (-4095..0).contains(&(ret as i64)) {
+            Err(std::io::Error::from_raw_os_error(-(ret as i32)))
+        } else {
+            Ok(ret as usize)
+        }
+    }
+}
+
+/// A read-only, shared memory mapping of an entire file.
+///
+/// Dereferences to `&[u8]` over the file's bytes at map time. The
+/// mapping is unmapped on drop. `Send + Sync`: the pages are immutable
+/// through this mapping and the kernel keeps them alive until `munmap`.
+#[derive(Debug)]
+pub struct Mmap {
+    /// Page-aligned base address; null iff `len == 0` (zero-length
+    /// mappings are invalid at the syscall level, so empty files are
+    /// represented without one).
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ — no writes can occur through it —
+// and its lifetime is tied to this struct, so sharing references across
+// threads is sound.
+unsafe impl Send for Mmap {}
+// SAFETY: as above; &Mmap only permits reads of immutable pages.
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map the whole of `file` read-only and shared.
+    ///
+    /// Fails with `ErrorKind::Unsupported` on targets without the
+    /// syscall shim (see [`SUPPORTED`]); callers should treat that the
+    /// same as any other map failure and fall back to a bulk read.
+    #[must_use = "the mapping is the only handle to the mapped bytes"]
+    pub fn map(file: &File) -> io::Result<Mmap> {
+        #[cfg(all(
+            target_os = "linux",
+            any(target_arch = "x86_64", target_arch = "aarch64")
+        ))]
+        {
+            use std::os::fd::AsRawFd;
+            let len = file.metadata()?.len();
+            if len > usize::MAX as u64 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    "file too large to map on this platform",
+                ));
+            }
+            let len = len as usize;
+            if len == 0 {
+                return Ok(Mmap {
+                    ptr: std::ptr::null(),
+                    len: 0,
+                });
+            }
+            // SAFETY: addr=0 lets the kernel pick a placement; fd/len
+            // come from the live `File`; PROT_READ + MAP_SHARED request
+            // a read-only view, so no aliasing writes are possible
+            // through the returned pages.
+            let ret = unsafe {
+                sys::syscall6(
+                    sys::SYS_MMAP,
+                    0,
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_SHARED,
+                    file.as_raw_fd() as usize,
+                    0,
+                )
+            };
+            let addr = sys::decode(ret)?;
+            Ok(Mmap {
+                ptr: addr as *const u8,
+                len,
+            })
+        }
+        #[cfg(not(all(
+            target_os = "linux",
+            any(target_arch = "x86_64", target_arch = "aarch64")
+        )))]
+        {
+            let _ = file;
+            Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "mmap is not supported on this target; use the owned bulk-read path",
+            ))
+        }
+    }
+
+    /// Mapped length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the mapped file was empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Best-effort `madvise(MADV_WILLNEED)` over the whole mapping:
+    /// asks the kernel to start faulting pages in ahead of first touch.
+    /// Errors are ignored — this is purely a prefetch hint.
+    pub fn advise_willneed(&self) {
+        #[cfg(all(
+            target_os = "linux",
+            any(target_arch = "x86_64", target_arch = "aarch64")
+        ))]
+        if self.len > 0 {
+            // SAFETY: ptr/len describe exactly the live mapping owned by
+            // self; MADV_WILLNEED does not change the mapping.
+            let ret = unsafe {
+                sys::syscall6(
+                    sys::SYS_MADVISE,
+                    self.ptr as usize,
+                    self.len,
+                    sys::MADV_WILLNEED,
+                    0,
+                    0,
+                    0,
+                )
+            };
+            let _ = sys::decode(ret);
+        }
+    }
+}
+
+impl Deref for Mmap {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        if self.len == 0 {
+            &[]
+        } else {
+            // SAFETY: ptr is the base of a live mapping of exactly `len`
+            // readable bytes (established in `map`, torn down only in
+            // `drop`), and the writer protocol (module docs) guarantees
+            // the backing file is never truncated under the mapping.
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(
+            target_os = "linux",
+            any(target_arch = "x86_64", target_arch = "aarch64")
+        ))]
+        if self.len > 0 {
+            // SAFETY: ptr/len are exactly what mmap returned; after this
+            // call nothing dereferences them (self is being dropped).
+            let ret = unsafe {
+                sys::syscall6(sys::SYS_MUNMAP, self.ptr as usize, self.len, 0, 0, 0, 0)
+            };
+            debug_assert!(sys::decode(ret).is_ok(), "munmap of a live mapping failed");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmppath(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("molpack-mmap-{}-{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn maps_file_contents_exactly() {
+        if !SUPPORTED {
+            return;
+        }
+        let path = tmppath("basic");
+        let payload: Vec<u8> = (0..100_000u32).map(|i| (i * 2654435761) as u8).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let f = File::open(&path).unwrap();
+        let m = Mmap::map(&f).unwrap();
+        m.advise_willneed();
+        assert_eq!(m.len(), payload.len());
+        assert_eq!(&m[..], &payload[..]);
+        drop(m);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_slice() {
+        if !SUPPORTED {
+            return;
+        }
+        let path = tmppath("empty");
+        std::fs::write(&path, b"").unwrap();
+        let f = File::open(&path).unwrap();
+        let m = Mmap::map(&f).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(&m[..], b"");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn two_mappings_of_one_file_agree() {
+        if !SUPPORTED {
+            return;
+        }
+        let path = tmppath("twice");
+        let mut f = File::create(&path).unwrap();
+        f.write_all(&[7u8; 4096 * 3 + 17]).unwrap();
+        f.sync_all().unwrap();
+        drop(f);
+        let f = File::open(&path).unwrap();
+        let a = Mmap::map(&f).unwrap();
+        let b = Mmap::map(&f).unwrap();
+        assert_eq!(&a[..], &b[..]);
+        // Exercise Send/Sync: read the first map from another thread
+        // while this one holds the second.
+        let a = std::sync::Arc::new(a);
+        let a2 = std::sync::Arc::clone(&a);
+        let sum: u64 = std::thread::spawn(move || a2.iter().map(|&x| x as u64).sum())
+            .join()
+            .unwrap();
+        assert_eq!(sum, 7 * (4096 * 3 + 17));
+        std::fs::remove_file(&path).unwrap();
+    }
+}

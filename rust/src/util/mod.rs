@@ -2,6 +2,8 @@
 //! property testing, and a deterministic schedule explorer.
 
 pub mod json;
+pub mod ledger;
+pub mod mmap;
 pub mod plot;
 pub mod proptest;
 pub mod rng;

@@ -145,6 +145,7 @@ impl Explorer {
     /// Run the full exploration. `build` constructs a fresh scenario per
     /// schedule (use the provided rng for randomized shapes). Returns
     /// the first violation, or stats for a clean run.
+    #[must_use = "an unchecked exploration error drops a found schedule violation"]
     pub fn run<S>(
         &self,
         build: impl Fn(&mut Rng) -> Scenario<S>,
@@ -159,6 +160,7 @@ impl Explorer {
 
     /// Re-run exactly one schedule by its seed (from a violation
     /// report, or `MOLPACK_RACE_SEED`).
+    #[must_use = "an unchecked replay error drops the violation it should reproduce"]
     pub fn replay<S>(
         &self,
         seed: u64,

@@ -316,6 +316,62 @@ fn prepared_cache_persists_next_to_the_store() {
     std::fs::remove_dir_all(dir).ok();
 }
 
+/// True fresh-process persistence: a spawned `molpack prepare` child
+/// builds the cache on disk (own address space, nothing shared), then
+/// this process memory-maps the child's file and must stream warm,
+/// bitwise-identical batches against a cold rebuild of the same corpus.
+/// `--paranoid` makes the load re-hash the whole source against the
+/// recorded content hash, so the round trip also covers that path.
+#[test]
+fn prepare_child_process_cache_loads_warm_here() {
+    use molpack::datasets::CACHE_FILE;
+
+    let dir = std::env::temp_dir().join(format!("molpack-int-xproc-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_molpack"))
+        .args(["prepare", "--graphs", "96", "--seed", "7", "--r-cut", "6.0"])
+        .args(["--k-max", "12", "--paranoid", "--cache-dir"])
+        .arg(&dir)
+        .output()
+        .expect("spawning molpack prepare");
+    assert!(
+        out.status.success(),
+        "child prepare failed:\n{}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+    let path = dir.join(CACHE_FILE);
+    assert!(path.exists(), "child wrote no cache file");
+
+    // Same corpus parameterization as the child: HydroNet(96, seed 7).
+    let warm =
+        PreparedSource::load(Arc::new(HydroNet::new(96, 7)), &path).expect("child cache loads");
+    let s = warm.stats();
+    assert!(s.loaded_from_disk);
+    assert_eq!(s.mapped, molpack::util::mmap::SUPPORTED, "mapped when the platform supports it");
+    assert_eq!(s.molecule_misses, 0);
+
+    let cold = PreparedSource::wrap(HydroNet::new(96, 7));
+    let tw = warm.topology(6.0, 12);
+    let tc = cold.topology(6.0, 12);
+    for i in 0..96 {
+        let (mw, mc) = (warm.molecule(i), cold.molecule(i));
+        assert_eq!(mw.z, mc.z, "molecule {i} z diverged across processes");
+        assert_eq!(mw.pos, mc.pos, "molecule {i} pos diverged across processes");
+        assert_eq!(mw.energy.to_bits(), mc.energy.to_bits(), "molecule {i} energy diverged");
+        let (ew, hit) = warm.edges(&tw, i);
+        let (ec, _) = cold.edges(&tc, i);
+        assert!(hit, "molecule {i} edges were not served from the child's cache");
+        assert_eq!(ew, ec, "molecule {i} edges diverged across processes");
+    }
+    let s = warm.stats();
+    assert_eq!(s.edge_misses, 0, "warm plane rebuilt edge lists despite the child's cache");
+    assert_eq!(s.map_fallbacks, 0, "child cache failed a lazy checksum");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// The predict path answers every real graph slot and ignores padding.
 #[test]
 fn predict_respects_masks() {
