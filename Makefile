@@ -21,18 +21,23 @@
 #                     assembly cold-vs-warm (>= 2x warm-epoch bar,
 #                     BENCH_assembly.json), the fresh-process persist
 #                     section (>= 1.5x warm-from-disk epoch-1 bar,
-#                     bitwise-identical stream, BENCH_persist.json), and
-#                     the zero-copy mapped-load section (>= 1.2x mapped
-#                     over owned, page-sharing RSS check, BENCH_mmap.json).
+#                     bitwise-identical stream, BENCH_persist.json), the
+#                     zero-copy mapped-load section (>= 1.2x mapped
+#                     over owned, page-sharing RSS check, BENCH_mmap.json),
+#                     and the multi-plane fleet sim (stream equivalence,
+#                     >= 1.15x overlapped-collective bar, elastic
+#                     join/leave, BENCH_fleet.json).
 #   make bench-check  the perf ledger gate: bench-smoke, then `molpack
 #                     benchdiff` of each fresh snapshot against the
 #                     committed baselines in BENCH_history/ — fails on
-#                     any guarded metric regressing beyond tolerance or
+#                     any guarded metric regressing beyond 25% or
 #                     vanishing from the snapshot.
 #   make bench-record refresh the BENCH_history/ baselines from a fresh
-#                     bench-smoke run and record `make lint` / `make
-#                     race` gate wall-times into BENCH_history/gates.json
-#                     (run on a quiet machine; commit the result).
+#                     bench-smoke run, record `make lint` / `make race`
+#                     gate wall-times into BENCH_history/gates.json, and
+#                     file the per-PR trajectory snapshot under
+#                     BENCH_history/trajectory/<short-sha>/ (run on a
+#                     quiet machine; commit the result).
 
 .PHONY: check fmt clippy lint test race bench-build bench-smoke bench-check bench-record artifacts
 
@@ -62,30 +67,39 @@ bench-smoke:
 	cargo bench --bench bench_pipeline -- --persist-only --graphs 4000 --persist-out BENCH_persist.json
 	cargo bench --bench bench_pipeline -- --mmap-only --graphs 4000 --mmap-out BENCH_mmap.json
 	cargo bench --bench bench_pipeline -- --widen-only
+	cargo run --release -q -- fleet --replicas 3 --graphs 480 --epochs 3 --out BENCH_fleet.json
 
 # Perf ledger gate: fresh smoke snapshots vs the committed baselines.
-# Tolerance 0.5 = a guarded metric may be up to 50% worse before failing
-# (wall-clock metrics are noisy across CI machines; the hard acceptance
-# bars — 2x/1.5x/1.2x — are asserted inside the bench itself, this gate
-# catches slower drift and vanished metrics).
+# Tolerance 0.25 = a guarded metric may be up to 25% worse before
+# failing (wall-clock metrics are noisy across CI machines; the hard
+# acceptance bars — 2x/1.5x/1.2x/1.15x — are asserted inside the
+# benches themselves, this gate catches slower drift and vanished
+# metrics).
 bench-check: bench-smoke
-	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_assembly.json --current BENCH_assembly.json --tolerance 0.5
-	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_persist.json --current BENCH_persist.json --tolerance 0.5
-	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_mmap.json --current BENCH_mmap.json --tolerance 0.5
+	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_assembly.json --current BENCH_assembly.json --tolerance 0.25
+	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_persist.json --current BENCH_persist.json --tolerance 0.25
+	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_mmap.json --current BENCH_mmap.json --tolerance 0.25
+	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_fleet.json --current BENCH_fleet.json --tolerance 0.25
 
 # Refresh the committed baselines (run on a quiet machine, then commit
 # BENCH_history/). Also times the lint and race gates so gate cost is
-# part of the ledger.
+# part of the ledger, and files a per-PR trajectory snapshot of all four
+# bench JSONs under BENCH_history/trajectory/<short-sha>/ so regressions
+# can be bisected against the ledger after the fact.
 bench-record: bench-smoke
 	mkdir -p BENCH_history
-	cp BENCH_assembly.json BENCH_persist.json BENCH_mmap.json BENCH_history/
+	cp BENCH_assembly.json BENCH_persist.json BENCH_mmap.json BENCH_fleet.json BENCH_history/
 	t0=$$(date +%s%N); $(MAKE) lint >/dev/null; t1=$$(date +%s%N); \
 	$(MAKE) race >/dev/null; t2=$$(date +%s%N); \
 	{ printf '{\n  "gates": {\n'; \
 	  awk -v a=$$t0 -v b=$$t1 -v c=$$t2 \
 	    'BEGIN{printf "    \"lint_secs\": %.3f,\n    \"race_secs\": %.3f\n", (b-a)/1e9, (c-b)/1e9}'; \
 	  printf '  }\n}\n'; } > BENCH_history/gates.json
-	@echo "baselines + gate timings recorded into BENCH_history/ — commit them"
+	sha=$$(git rev-parse --short HEAD) && \
+	mkdir -p BENCH_history/trajectory/$$sha && \
+	cp BENCH_assembly.json BENCH_persist.json BENCH_mmap.json BENCH_fleet.json \
+	  BENCH_history/gates.json BENCH_history/trajectory/$$sha/
+	@echo "baselines + gate timings + trajectory snapshot recorded into BENCH_history/ — commit them"
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../rust/artifacts

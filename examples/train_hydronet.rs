@@ -60,6 +60,7 @@ fn main() -> Result<()> {
         },
         max_batches_per_epoch: 0,
         log_every: 0,
+        overlap_epochs: true,
     };
 
     let records = train(&engine, &mut state, source, &cfg, |_, _, _| {})?;

@@ -81,6 +81,24 @@
 //! * **quarantine** — a molecule quarantined by a failed assembly stays
 //!   quarantined (membership is monotonic per plane lifetime).
 //!
+//! Fleet invariants (the [`fleet`](crate::fleet) subsystem drives many
+//! planes as one data-parallel fleet; these extend the catalog to the
+//! multi-plane protocol):
+//!
+//! * **F1: partition** — within one membership generation, every
+//!   dataset shard is owned by exactly one active member: the union of
+//!   the fleet's subset sessions is the whole dataset and the
+//!   intersection is empty (no shard streamed twice, none orphaned).
+//! * **F2: warm survivors** — a generation flip (join/leave rebalance)
+//!   never rebuilds a surviving member's plane: its prepared arena and
+//!   memoized edge topologies are pointer-identical across the flip;
+//!   only the subset of ids it streams changes.
+//! * **F3: fleet credit conservation** — the per-session *credits*
+//!   invariant holds independently for every member's sessions across
+//!   join/leave: a departing member's in-flight admissions drain to
+//!   zero before its plane drops, and a joiner starts at zero — fleet
+//!   membership changes neither leak nor mint credits.
+//!
 //! Locking discipline, enforced by the `lock-across-send` and
 //! `unwrap-in-hot-path` lints: no `MutexGuard` is held across a
 //! `send`/`notify_*` (lost-wakeup/priority-inversion hazard), and
@@ -738,10 +756,26 @@ impl DataPlane {
         let topology = source.topology(r_cut, self.batcher.geometry.k_max());
 
         let n = source.len();
-        let mut ids: Vec<u32> = (0..n as u32).collect();
+        let mut ids: Vec<u32> = match &spec.subset {
+            // Data-parallel shard membership: stream exactly these ids.
+            // An empty subset is legal (a fleet member that owns no
+            // shards this generation) and yields a session that closes
+            // after zero batches.
+            Some(subset) => {
+                for &id in subset.iter() {
+                    assert!(
+                        (id as usize) < n,
+                        "subset id {id} out of range for source of {n} molecules"
+                    );
+                }
+                subset.as_ref().clone()
+            }
+            None => (0..n as u32).collect(),
+        };
         if let Some(epoch) = spec.epoch {
             // Training semantics: epoch-seeded shuffle, identical order
-            // for the same plane config and epoch.
+            // for the same plane config and epoch. A subset shuffles
+            // within itself — membership is epoch-invariant.
             let mut rng = Rng::new(epoch_shuffle_seed(self.cfg.shuffle_seed, epoch));
             rng.shuffle(&mut ids);
         }

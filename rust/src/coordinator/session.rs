@@ -159,6 +159,13 @@ pub struct JobSpec {
     /// edge-topology cache, so sessions with different cutoffs coexist
     /// without cross-contaminating each other's cached edges.
     pub r_cut: Option<f32>,
+    /// Restrict the stream to these molecule ids (data-parallel shard
+    /// membership, e.g. a fleet member's manifest-assigned ids); `None`
+    /// streams the whole source. Ids must be in range for the session's
+    /// source; an epoch shuffle permutes *within* the subset, so the
+    /// subset's membership — not its order — defines what the session
+    /// streams.
+    pub subset: Option<Arc<Vec<u32>>>,
 }
 
 impl JobSpec {
@@ -172,6 +179,7 @@ impl JobSpec {
             epoch,
             credits: None,
             r_cut: None,
+            subset: None,
         }
     }
 
@@ -249,6 +257,15 @@ impl JobSpec {
         self.r_cut = Some(r_cut);
         self
     }
+
+    /// Stream only these molecule ids (a data-parallel shard). The
+    /// `Arc` is shared, not copied — a fleet can hand the same subset
+    /// to successive epoch sessions for free.
+    #[must_use]
+    pub fn with_subset(mut self, subset: Arc<Vec<u32>>) -> JobSpec {
+        self.subset = Some(subset);
+        self
+    }
 }
 
 impl std::fmt::Debug for JobSpec {
@@ -262,6 +279,7 @@ impl std::fmt::Debug for JobSpec {
             .field("epoch", &self.epoch)
             .field("credits", &self.credits)
             .field("r_cut", &self.r_cut)
+            .field("subset", &self.subset.as_ref().map(|s| s.len()))
             .finish()
     }
 }

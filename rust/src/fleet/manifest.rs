@@ -1,0 +1,422 @@
+//! The shard manifest: deterministic molecule-shard → member assignment
+//! layered on the persist source fingerprint.
+//!
+//! Wire format, derivation rule, and the rendezvous-hashing owner
+//! function are specified in the [module docs](crate::fleet). The key
+//! properties, each pinned by a test below:
+//!
+//! * **Complete & exclusive** — every shard has exactly one owner under
+//!   any non-empty member set (invariant F1 of the dataplane catalog).
+//! * **Deterministic** — the assignment is a pure function of
+//!   `(fingerprint, shard_len, member set)`; two hosts never disagree.
+//! * **Minimal movement** — adding a member moves only the shards it
+//!   wins; removing one moves only the shards it owned.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+
+use anyhow::{bail, Result};
+
+use crate::datasets::persist::{fnv1a64_update, FNV_SEED};
+use crate::datasets::SourceFingerprint;
+use crate::fleet::membership::{MemberState, Membership};
+
+/// Fleet-unique member identifier (stable across generations; in the
+/// in-process sim these are small integers, on real hosts a host hash).
+pub type MemberId = u64;
+
+/// Index of one fixed-length molecule-id shard in the manifest.
+pub type ShardId = u32;
+
+/// Manifest magic: "MPFM" (molpack fleet manifest).
+const MAGIC: &[u8; 4] = b"MPFM";
+const VERSION: u16 = 1;
+/// Fixed-length prefix before the member table (see module docs).
+const HEADER_LEN: usize = 44;
+/// Bytes per encoded member table entry (u64 id + u8 state).
+const MEMBER_LEN: usize = 9;
+
+/// The shard manifest: cuts a fingerprinted dataset into fixed-length
+/// molecule-id shards and derives each shard's owning member by
+/// rendezvous hashing. Immutable once built — membership changes
+/// produce new [`Assignment`]s, never a new manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardManifest {
+    fingerprint: SourceFingerprint,
+    shard_len: u32,
+    n_shards: u32,
+}
+
+impl ShardManifest {
+    /// Build the manifest for a fingerprinted source. `shard_len` is
+    /// the rebalance granularity: small shards spread load evenly,
+    /// large shards keep per-member id runs contiguous (better for the
+    /// plane's shard-incremental planner).
+    #[must_use = "an unchecked manifest error leaves the fleet without a shard map"]
+    pub fn new(fingerprint: SourceFingerprint, shard_len: usize) -> Result<ShardManifest> {
+        if shard_len == 0 {
+            bail!("manifest shard_len must be >= 1");
+        }
+        if shard_len > u32::MAX as usize {
+            bail!("manifest shard_len {shard_len} exceeds u32 range");
+        }
+        let n = fingerprint.molecules;
+        let shards = n.div_ceil(shard_len as u64);
+        if shards > u32::MAX as u64 {
+            bail!("{n} molecules at shard_len {shard_len} overflows the u32 shard space");
+        }
+        Ok(ShardManifest {
+            fingerprint,
+            shard_len: shard_len as u32,
+            n_shards: shards as u32,
+        })
+    }
+
+    /// The source fingerprint this manifest is keyed by.
+    pub fn fingerprint(&self) -> SourceFingerprint {
+        self.fingerprint
+    }
+
+    /// Molecules per shard (the last shard may be shorter).
+    pub fn shard_len(&self) -> usize {
+        self.shard_len as usize
+    }
+
+    /// Total shards (`ceil(molecules / shard_len)`).
+    pub fn n_shards(&self) -> u32 {
+        self.n_shards
+    }
+
+    /// Molecule-id range `[start, end)` covered by shard `shard`.
+    pub fn shard_range(&self, shard: ShardId) -> Range<u32> {
+        debug_assert!(shard < self.n_shards, "shard {shard} out of range");
+        let start = shard * self.shard_len;
+        let end = ((shard as u64 + 1) * self.shard_len as u64).min(self.fingerprint.molecules);
+        start..end as u32
+    }
+
+    /// Rendezvous score of `member` for `shard` — the owner is the
+    /// member with the highest score (ties toward the larger id).
+    fn score(&self, shard: ShardId, member: MemberId) -> u64 {
+        let mut h = FNV_SEED;
+        h = fnv1a64_update(h, &self.fingerprint.content_hash.to_le_bytes());
+        h = fnv1a64_update(h, &self.fingerprint.molecules.to_le_bytes());
+        h = fnv1a64_update(h, &shard.to_le_bytes());
+        h = fnv1a64_update(h, &member.to_le_bytes());
+        h
+    }
+
+    /// The owning member of `shard` under `members` (rendezvous
+    /// winner). `members` must be non-empty.
+    pub fn owner(&self, shard: ShardId, members: &[MemberId]) -> MemberId {
+        assert!(!members.is_empty(), "owner() over an empty member set");
+        let mut best = (self.score(shard, members[0]), members[0]);
+        for &m in &members[1..] {
+            let s = (self.score(shard, m), m);
+            if s > best {
+                best = s;
+            }
+        }
+        best.1
+    }
+
+    /// Derive the full assignment for `members` at `generation`: every
+    /// shard mapped to its rendezvous winner. Pure — the same inputs
+    /// always produce the same assignment on every host.
+    pub fn assign(&self, generation: u64, members: &[MemberId]) -> Assignment {
+        assert!(!members.is_empty(), "assign() over an empty member set");
+        let mut by_member: BTreeMap<MemberId, Vec<ShardId>> =
+            members.iter().map(|&m| (m, Vec::new())).collect();
+        for shard in 0..self.n_shards {
+            let owner = self.owner(shard, members);
+            by_member
+                .get_mut(&owner)
+                .expect("owner() returned a member outside the member set")
+                .push(shard);
+        }
+        Assignment { generation, by_member }
+    }
+
+    /// Encode the manifest plus the current membership into the v1 wire
+    /// format (module docs) — the bytes a joining host bootstraps from.
+    pub fn encode(&self, membership: &Membership) -> Vec<u8> {
+        let members = membership.all();
+        let mut out = Vec::with_capacity(HEADER_LEN + members.len() * MEMBER_LEN + 8);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&self.fingerprint.molecules.to_le_bytes());
+        out.extend_from_slice(&self.fingerprint.content_hash.to_le_bytes());
+        out.extend_from_slice(&self.shard_len.to_le_bytes());
+        out.extend_from_slice(&self.n_shards.to_le_bytes());
+        out.extend_from_slice(&membership.generation().to_le_bytes());
+        out.extend_from_slice(&(members.len() as u32).to_le_bytes());
+        for (id, state) in &members {
+            out.extend_from_slice(&id.to_le_bytes());
+            out.push(match state {
+                MemberState::Joining => 0,
+                MemberState::Active => 1,
+                MemberState::Draining => 2,
+            });
+        }
+        let sum = fnv1a64_update(FNV_SEED, &out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Decode a v1 wire image back into `(manifest, membership)`,
+    /// validating magic, version, lengths, shard geometry, and the
+    /// trailing checksum before trusting any field.
+    #[must_use = "an unchecked decode error would let a fleet bootstrap from a torn manifest"]
+    pub fn decode(bytes: &[u8]) -> Result<(ShardManifest, Membership)> {
+        if bytes.len() < HEADER_LEN + 8 {
+            bail!("manifest image truncated: {} bytes", bytes.len());
+        }
+        if &bytes[0..4] != MAGIC {
+            bail!("bad manifest magic");
+        }
+        let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+        if version != VERSION {
+            bail!("unsupported manifest version {version}");
+        }
+        let u64_at = |off: usize| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&bytes[off..off + 8]);
+            u64::from_le_bytes(b)
+        };
+        let u32_at = |off: usize| {
+            let mut b = [0u8; 4];
+            b.copy_from_slice(&bytes[off..off + 4]);
+            u32::from_le_bytes(b)
+        };
+        let n_members = u32_at(40) as usize;
+        let want = HEADER_LEN + n_members * MEMBER_LEN + 8;
+        if bytes.len() != want {
+            bail!(
+                "manifest image length {} does not match {} members (want {want})",
+                bytes.len(),
+                n_members
+            );
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let sum = fnv1a64_update(FNV_SEED, body);
+        let stored = u64_at(bytes.len() - 8);
+        if sum != stored {
+            bail!("manifest checksum mismatch: computed {sum:#x}, stored {stored:#x}");
+        }
+        let fingerprint = SourceFingerprint {
+            molecules: u64_at(8),
+            content_hash: u64_at(16),
+        };
+        let shard_len = u32_at(24);
+        let manifest = ShardManifest::new(fingerprint, shard_len as usize)?;
+        let n_shards = u32_at(28);
+        if n_shards != manifest.n_shards {
+            bail!(
+                "manifest shard count {n_shards} disagrees with fingerprint ({} expected)",
+                manifest.n_shards
+            );
+        }
+        let generation = u64_at(32);
+        let mut members = Vec::with_capacity(n_members);
+        for i in 0..n_members {
+            let off = HEADER_LEN + i * MEMBER_LEN;
+            let id = u64_at(off);
+            let state = match bytes[off + 8] {
+                0 => MemberState::Joining,
+                1 => MemberState::Active,
+                2 => MemberState::Draining,
+                other => bail!("unknown member state byte {other}"),
+            };
+            members.push((id, state));
+        }
+        let membership = Membership::from_parts(generation, members)?;
+        Ok((manifest, membership))
+    }
+}
+
+/// One generation's shard → member map, derived by
+/// [`ShardManifest::assign`]. Owners are keyed by [`MemberId`]; shard
+/// lists are sorted ascending (the derivation visits shards in order).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Assignment {
+    generation: u64,
+    by_member: BTreeMap<MemberId, Vec<ShardId>>,
+}
+
+impl Assignment {
+    /// The membership generation this assignment was derived for.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Members holding at least a map entry (every member passed to
+    /// `assign`, including ones that won zero shards).
+    pub fn members(&self) -> impl Iterator<Item = MemberId> + '_ {
+        self.by_member.keys().copied()
+    }
+
+    /// Shards owned by `member` this generation (empty when the member
+    /// is unknown or won nothing).
+    pub fn shards(&self, member: MemberId) -> &[ShardId] {
+        self.by_member.get(&member).map_or(&[], |v| v.as_slice())
+    }
+
+    /// The owner of `shard`, if any member holds it.
+    pub fn owner_of(&self, shard: ShardId) -> Option<MemberId> {
+        self.by_member
+            .iter()
+            .find(|(_, shards)| shards.binary_search(&shard).is_ok())
+            .map(|(&m, _)| m)
+    }
+
+    /// Concatenated molecule ids of every shard `member` owns, in shard
+    /// order — the exact [`JobSpec::with_subset`] payload for that
+    /// member's epoch session.
+    ///
+    /// [`JobSpec::with_subset`]: crate::coordinator::JobSpec::with_subset
+    pub fn subset_ids(&self, manifest: &ShardManifest, member: MemberId) -> Vec<u32> {
+        let mut ids = Vec::new();
+        for &shard in self.shards(member) {
+            ids.extend(manifest.shard_range(shard));
+        }
+        ids
+    }
+
+    /// Shards whose owner differs from `prev` — the rebalance traffic a
+    /// generation flip causes (rendezvous keeps this minimal).
+    pub fn moved_from(&self, prev: &Assignment) -> usize {
+        let mut moved = 0;
+        for (&m, shards) in &self.by_member {
+            for &s in shards {
+                if prev.owner_of(s) != Some(m) {
+                    moved += 1;
+                }
+            }
+        }
+        moved
+    }
+
+    /// Total shards assigned (== the manifest's shard count: F1).
+    pub fn total_shards(&self) -> usize {
+        self.by_member.values().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp(molecules: u64) -> SourceFingerprint {
+        SourceFingerprint { molecules, content_hash: 0xfeed_beef_dead_cafe }
+    }
+
+    fn manifest(molecules: u64, shard_len: usize) -> ShardManifest {
+        ShardManifest::new(fp(molecules), shard_len).unwrap()
+    }
+
+    #[test]
+    fn shard_geometry_covers_the_dataset_exactly() {
+        let m = manifest(103, 10);
+        assert_eq!(m.n_shards(), 11);
+        let mut seen = Vec::new();
+        for s in 0..m.n_shards() {
+            seen.extend(m.shard_range(s));
+        }
+        assert_eq!(seen, (0u32..103).collect::<Vec<_>>());
+        // single-shard and exact-multiple cases
+        assert_eq!(manifest(10, 10).n_shards(), 1);
+        assert_eq!(manifest(100, 10).n_shards(), 10);
+        assert!(ShardManifest::new(fp(10), 0).is_err());
+    }
+
+    #[test]
+    fn assignment_is_complete_exclusive_and_deterministic() {
+        let m = manifest(1000, 16);
+        let members = [3u64, 17, 42, 99];
+        let a = m.assign(5, &members);
+        assert_eq!(a.generation(), 5);
+        assert_eq!(a.total_shards(), m.n_shards() as usize, "F1: complete");
+        for s in 0..m.n_shards() {
+            let owner = a.owner_of(s).expect("F1: no orphan shards");
+            assert!(members.contains(&owner));
+            assert_eq!(owner, m.owner(s, &members));
+        }
+        // deterministic: member order must not matter
+        let b = m.assign(5, &[99, 42, 17, 3]);
+        assert_eq!(a, b);
+        // roughly balanced: no member holds everything
+        for &mem in &members {
+            let n = a.shards(mem).len();
+            assert!(n > 0 && n < m.n_shards() as usize, "member {mem} holds {n}");
+        }
+    }
+
+    #[test]
+    fn rendezvous_movement_is_minimal_on_join_and_leave() {
+        let m = manifest(2000, 8);
+        let old = m.assign(1, &[1, 2, 3]);
+        let joined = m.assign(2, &[1, 2, 3, 4]);
+        // join: exactly the shards the newcomer wins move, nothing else
+        assert_eq!(joined.moved_from(&old), joined.shards(4).len());
+        for s in 0..m.n_shards() {
+            if joined.owner_of(s) != Some(4) {
+                assert_eq!(joined.owner_of(s), old.owner_of(s));
+            }
+        }
+        // leave: exactly the leaver's shards move
+        let left = m.assign(3, &[1, 3]);
+        assert_eq!(left.moved_from(&old), old.shards(2).len());
+        for s in 0..m.n_shards() {
+            if old.owner_of(s) != Some(2) {
+                assert_eq!(left.owner_of(s), old.owner_of(s));
+            }
+        }
+    }
+
+    #[test]
+    fn subset_ids_partition_the_id_space() {
+        let m = manifest(517, 32);
+        let members = [10u64, 20, 30];
+        let a = m.assign(0, &members);
+        let mut all: Vec<u32> = members
+            .iter()
+            .flat_map(|&mem| a.subset_ids(&m, mem))
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0u32..517).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_manifest_and_membership() {
+        let m = manifest(4096, 64);
+        let mut ms = Membership::new();
+        ms.join(7).unwrap();
+        ms.join(9).unwrap();
+        ms.flip();
+        ms.join(11).unwrap(); // staged joiner survives the round-trip
+        ms.leave(7).unwrap(); // staged leaver too
+        let bytes = m.encode(&ms);
+        let (m2, ms2) = ShardManifest::decode(&bytes).unwrap();
+        assert_eq!(m, m2);
+        assert_eq!(ms.generation(), ms2.generation());
+        assert_eq!(ms.all(), ms2.all());
+    }
+
+    #[test]
+    fn decode_rejects_torn_images() {
+        let m = manifest(128, 16);
+        let ms = Membership::new();
+        let good = m.encode(&ms);
+        assert!(ShardManifest::decode(&good[..good.len() - 1]).is_err(), "truncated");
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert!(ShardManifest::decode(&bad_magic).is_err(), "magic");
+        let mut bad_sum = good.clone();
+        *bad_sum.last_mut().unwrap() ^= 0xff;
+        assert!(ShardManifest::decode(&bad_sum).is_err(), "checksum");
+        let mut bad_body = good.clone();
+        bad_body[24] ^= 0x01; // shard_len — checksum catches it first
+        assert!(ShardManifest::decode(&bad_body).is_err(), "body flip");
+    }
+}

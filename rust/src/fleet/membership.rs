@@ -1,0 +1,226 @@
+//! The fleet membership/epoch protocol: staged joins and leaves applied
+//! at generation flips on epoch boundaries.
+//!
+//! State machine and transition rules are specified in the
+//! [module docs](crate::fleet). The contract the scheduler builds on:
+//! between two flips the **active set is frozen** — an epoch always
+//! runs under exactly one generation — and a flip is the only operation
+//! that changes it, so "which member owns shard s" has a single answer
+//! at every point of a run.
+
+use anyhow::{bail, Result};
+
+use crate::fleet::manifest::MemberId;
+use std::collections::BTreeMap;
+
+/// Lifecycle state of one fleet member (module-doc state machine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemberState {
+    /// Staged by `join`; owns nothing until the next flip.
+    Joining,
+    /// In the current generation's active set; owns its assigned shards.
+    Active,
+    /// Staged by `leave`; keeps serving owned shards until the flip.
+    Draining,
+}
+
+/// What one generation flip changed: the (possibly unchanged)
+/// generation number plus the members promoted in and retired out.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GenerationChange {
+    /// Generation in force after the flip.
+    pub generation: u64,
+    /// Members promoted Joining → Active by this flip.
+    pub joined: Vec<MemberId>,
+    /// Members removed (were Draining) by this flip.
+    pub left: Vec<MemberId>,
+}
+
+impl GenerationChange {
+    /// True when the flip changed the active set (and thus the
+    /// generation number).
+    pub fn changed(&self) -> bool {
+        !self.joined.is_empty() || !self.left.is_empty()
+    }
+}
+
+/// The fleet's membership ledger: per-member state plus the generation
+/// counter. All mutation is staged (`join`/`leave`) and applied by
+/// [`flip`](Membership::flip).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Membership {
+    generation: u64,
+    members: BTreeMap<MemberId, MemberState>,
+}
+
+impl Membership {
+    /// An empty ledger at generation 0.
+    pub fn new() -> Membership {
+        Membership::default()
+    }
+
+    /// Rebuild a ledger from decoded wire parts (see
+    /// [`ShardManifest::decode`](crate::fleet::ShardManifest::decode)).
+    /// Rejects duplicate member ids.
+    #[must_use = "an unchecked rebuild error would admit a manifest with duplicate members"]
+    pub fn from_parts(generation: u64, members: Vec<(MemberId, MemberState)>) -> Result<Membership> {
+        let mut map = BTreeMap::new();
+        for (id, state) in members {
+            if map.insert(id, state).is_some() {
+                bail!("duplicate member {id:#x} in manifest image");
+            }
+        }
+        Ok(Membership { generation, members: map })
+    }
+
+    /// Generation currently in force.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Stage `id` to join at the next flip. Errors if the id is already
+    /// present in any state (ids are fleet-unique).
+    #[must_use = "an unchecked join error means the member was never staged"]
+    pub fn join(&mut self, id: MemberId) -> Result<()> {
+        if self.members.contains_key(&id) {
+            bail!("member {id:#x} already present");
+        }
+        self.members.insert(id, MemberState::Joining);
+        Ok(())
+    }
+
+    /// Stage `id` to leave: an Active member drains until the next
+    /// flip; a still-Joining member is unstaged immediately (it never
+    /// owned anything). Errors on unknown or already-draining ids.
+    #[must_use = "an unchecked leave error means the member is still in the fleet"]
+    pub fn leave(&mut self, id: MemberId) -> Result<()> {
+        match self.members.get(&id) {
+            None => bail!("member {id:#x} not in the fleet"),
+            Some(MemberState::Draining) => bail!("member {id:#x} is already draining"),
+            Some(MemberState::Joining) => {
+                self.members.remove(&id);
+            }
+            Some(MemberState::Active) => {
+                self.members.insert(id, MemberState::Draining);
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply staged changes at an epoch boundary: promote Joining →
+    /// Active, remove Draining, and bump the generation iff the active
+    /// set changed. A flip with nothing staged is a no-op (same
+    /// generation, empty change).
+    pub fn flip(&mut self) -> GenerationChange {
+        let joined: Vec<MemberId> = self
+            .members
+            .iter()
+            .filter(|(_, s)| **s == MemberState::Joining)
+            .map(|(&id, _)| id)
+            .collect();
+        let left: Vec<MemberId> = self
+            .members
+            .iter()
+            .filter(|(_, s)| **s == MemberState::Draining)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in &joined {
+            self.members.insert(*id, MemberState::Active);
+        }
+        for id in &left {
+            self.members.remove(id);
+        }
+        if !joined.is_empty() || !left.is_empty() {
+            self.generation += 1;
+        }
+        GenerationChange { generation: self.generation, joined, left }
+    }
+
+    /// Current state of `id`, if present.
+    pub fn state(&self, id: MemberId) -> Option<MemberState> {
+        self.members.get(&id).copied()
+    }
+
+    /// The active set, ascending — the member list assignments are
+    /// derived from.
+    pub fn active(&self) -> Vec<MemberId> {
+        self.members
+            .iter()
+            .filter(|(_, s)| matches!(s, MemberState::Active | MemberState::Draining))
+            .map(|(&id, _)| id)
+            .collect()
+    }
+
+    /// Every member with its state, ascending by id (wire encoding and
+    /// diagnostics).
+    pub fn all(&self) -> Vec<(MemberId, MemberState)> {
+        self.members.iter().map(|(&id, &s)| (id, s)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_flip_leave_flip_walks_the_state_machine() {
+        let mut m = Membership::new();
+        assert_eq!(m.generation(), 0);
+        m.join(1).unwrap();
+        m.join(2).unwrap();
+        assert_eq!(m.state(1), Some(MemberState::Joining));
+        assert!(m.active().is_empty(), "joiners own nothing before the flip");
+        let c = m.flip();
+        assert_eq!((c.generation, c.joined.as_slice()), (1, &[1u64, 2][..]));
+        assert!(c.changed());
+        assert_eq!(m.active(), vec![1, 2]);
+        // leave: active drains, stays in the active set until the flip
+        m.leave(1).unwrap();
+        assert_eq!(m.state(1), Some(MemberState::Draining));
+        assert_eq!(m.active(), vec![1, 2], "drainer serves until the flip");
+        let c = m.flip();
+        assert_eq!((c.generation, c.left.as_slice()), (2, &[1u64][..]));
+        assert_eq!(m.active(), vec![2]);
+        assert_eq!(m.state(1), None);
+    }
+
+    #[test]
+    fn noop_flip_keeps_the_generation() {
+        let mut m = Membership::new();
+        m.join(5).unwrap();
+        m.flip();
+        let c = m.flip();
+        assert!(!c.changed());
+        assert_eq!(c.generation, 1, "no staged change, no bump");
+        assert_eq!(m.generation(), 1);
+    }
+
+    #[test]
+    fn join_leave_errors_are_rejected() {
+        let mut m = Membership::new();
+        m.join(1).unwrap();
+        assert!(m.join(1).is_err(), "duplicate join");
+        assert!(m.leave(2).is_err(), "unknown leave");
+        // leaving a joiner unstages it without a generation bump
+        m.leave(1).unwrap();
+        assert_eq!(m.state(1), None);
+        assert!(!m.flip().changed());
+        // double leave
+        m.join(3).unwrap();
+        m.flip();
+        m.leave(3).unwrap();
+        assert!(m.leave(3).is_err(), "already draining");
+    }
+
+    #[test]
+    fn from_parts_rejects_duplicates() {
+        assert!(Membership::from_parts(
+            0,
+            vec![(1, MemberState::Active), (1, MemberState::Joining)]
+        )
+        .is_err());
+        let m = Membership::from_parts(3, vec![(1, MemberState::Active)]).unwrap();
+        assert_eq!(m.generation(), 3);
+        assert_eq!(m.active(), vec![1]);
+    }
+}

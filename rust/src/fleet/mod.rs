@@ -1,0 +1,110 @@
+//! Fleet orchestration: N data-planes trained as one elastic
+//! data-parallel fleet — the paper's replicated-pod training story
+//! (days → under two hours) grown onto the PR 2–7 data-plane, plus the
+//! heterogeneous-fleet direction of "Reducing Down(stream)time".
+//!
+//! Three pieces, composed by [`Fleet`]:
+//!
+//! * [`manifest`] — a **shard manifest** layered on the persist source
+//!   fingerprint ([`datasets::persist::SourceFingerprint`]): the dataset
+//!   is cut into fixed-length molecule-id shards, and each shard is
+//!   deterministically assigned to exactly one fleet member by
+//!   rendezvous (highest-random-weight) hashing, so any two hosts that
+//!   agree on the fingerprint and the member set derive the *same*
+//!   assignment with no coordinator round-trip — and a membership
+//!   change moves only the shards whose rendezvous winner changed.
+//! * [`membership`] — the **membership/epoch protocol**: members join
+//!   and leave mid-run; changes are staged and applied at a
+//!   generation flip on an epoch boundary, so an in-flight epoch always
+//!   runs under one fixed, numbered generation.
+//! * [`scheduler`] — the **overlapped collective schedule**: epoch
+//!   `e+1`'s sessions are opened (admission-credited, PR 3) while epoch
+//!   `e`'s tail drains and its gradient all-reduce runs, so the planes'
+//!   worker pools fill the next epoch's credit windows inside the
+//!   collective's shadow instead of idling.
+//!
+//! # Manifest wire format v1 (little endian)
+//!
+//! The manifest is derived state — `fingerprint + shard_len + member
+//! set` fully determine it — so only those inputs go on the wire. The
+//! encoding exists for cross-host exchange (a joiner bootstraps from
+//! any member's bytes) and follows the `datasets::persist` conventions:
+//! magic + version first, FNV-1a 64 checksum last, decode validates
+//! before trusting anything.
+//!
+//! ```text
+//!    0  magic "MPFM" | u16 version = 1 | u16 reserved = 0
+//!    8  u64 fp_molecules       -- source fingerprint: molecule count
+//!   16  u64 fp_content_hash    -- source fingerprint: sampled hash
+//!   24  u32 shard_len          -- molecules per shard (>= 1)
+//!   28  u32 n_shards           -- ceil(fp_molecules / shard_len)
+//!   32  u64 generation         -- membership generation at encode time
+//!   40  u32 n_members
+//!   44  members, n_members x 9 bytes each:
+//!          u64 member id | u8 state (0 joining, 1 active, 2 draining)
+//!    .  u64 checksum           -- FNV-1a 64 over all preceding bytes
+//! ```
+//!
+//! Shard `s` covers molecule ids `[s*shard_len, min((s+1)*shard_len,
+//! fp_molecules))`. The owner of shard `s` under member set `M` is
+//! `argmax_{m in M} fnv1a64(fp_content_hash ‖ fp_molecules ‖ s ‖ m)`
+//! (ties break toward the larger member id). Decode rejects a bad
+//! magic/version, a truncated buffer, a member-count/length mismatch,
+//! `shard_len = 0`, an `n_shards` that disagrees with the fingerprint,
+//! and a checksum mismatch.
+//!
+//! # Membership state machine
+//!
+//! ```text
+//!            join()                    flip()
+//!   (absent) ------->  Joining  ----------------->  Active
+//!                         |                           |
+//!                         | leave()                   | leave()
+//!                         v                           v
+//!                      (absent)                    Draining
+//!                         ^                           |
+//!                         |          flip()           |
+//!                         +---------------------------+
+//! ```
+//!
+//! * `join` stages a member as **Joining**: it owns nothing and may
+//!   warm its plane (cache restore, arena build) while the current
+//!   generation keeps running untouched.
+//! * `leave` on an Active member stages it as **Draining**: it keeps
+//!   serving its owned shards until the flip. `leave` on a Joining
+//!   member just unstages it.
+//! * `flip` (epoch boundary only) promotes every Joining member to
+//!   **Active**, removes every Draining member, and — iff the active
+//!   set changed — bumps the generation and re-derives the assignment.
+//!   Warm survivors are *never* rebuilt: rebalance changes which shard
+//!   ids a member streams, not its plane, its prepared arena, or its
+//!   memoized edge topologies (invariants F1–F3 in the
+//!   [`coordinator::dataplane`](crate::coordinator::dataplane) catalog).
+//!
+//! # Overlap schedule
+//!
+//! Within one generation, [`Fleet::run_epochs`] pipelines epochs using
+//! nothing but session admission credits: epoch `e+1`'s per-member
+//! sessions are opened before epoch `e`'s tail is drained, and epoch
+//! `e`'s (modeled) gradient all-reduce runs on a side thread while the
+//! main thread already drains `e+1`. The worker pools therefore
+//! assemble `e+1`'s credit window during exactly the wall time the
+//! serial schedule spends blocked on the collective — the schedule the
+//! PR 3 credit system was designed to admit. Epoch results (gradient
+//! stream fingerprint, weighted-mean gradient) are identical between
+//! the serial and overlapped schedules; only the wall clock differs.
+//!
+//! [`datasets::persist::SourceFingerprint`]: crate::datasets::SourceFingerprint
+
+/// Shard manifest: fingerprint-keyed shards + rendezvous assignment.
+pub mod manifest;
+/// Membership/epoch protocol: staged joins/leaves, generation flips.
+pub mod membership;
+/// Multi-plane epoch scheduler with the overlapped collective schedule.
+pub mod scheduler;
+
+pub use manifest::{Assignment, MemberId, ShardId, ShardManifest};
+pub use membership::{GenerationChange, MemberState, Membership};
+pub use scheduler::{
+    reference_epoch, Fleet, FleetConfig, FleetEpochReport, GradSketch, RebalanceReport, Schedule,
+};

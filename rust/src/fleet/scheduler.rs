@@ -1,0 +1,698 @@
+//! The fleet epoch scheduler: N in-process data-planes driven as one
+//! data-parallel training fleet, with the overlapped collective
+//! schedule the PR 3 admission credits were designed to admit.
+//!
+//! Each member owns a full [`DataPlane`] (worker pool + prepared arena
+//! + edge cache); one epoch opens one subset session per active member
+//! — the member's manifest-assigned shard ids via
+//! [`JobSpec::with_subset`] — so the union of the fleet's streams is
+//! exactly the dataset, every epoch, under any generation. Per-member
+//! gradients are combined with
+//! [`optim::collective::allreduce_mean_weighted`] (weights = graphs
+//! streamed, so unequal shard loads still produce the global mean), and
+//! the *wall cost* of the pod-scale collective is modeled by the BSP
+//! layer ([`ipu::collectives`](crate::ipu::collectives)) and applied as
+//! real wait time by the sim.
+//!
+//! # Gradient stream equivalence
+//!
+//! The sim has no device attached, so "the gradient" is a deterministic
+//! per-graph pseudo-gradient ([`GradSketch`]): each real graph hashes
+//! its `z`/`pos`/`target` content to a 64-bit signature, and the
+//! signature seeds the graph's contribution vector. Two properties make
+//! this a faithful stand-in for equivalence checks: it is a pure
+//! function of graph *content* (placement in a pack, batch, member, or
+//! epoch order cannot change it), and it combines by summation exactly
+//! like real per-graph gradients under data parallelism. The
+//! order-independent XOR of signatures is the stream fingerprint: an
+//! N-member fleet matches the single-plane reference iff it streamed
+//! the same multiset of graphs.
+//!
+//! [`JobSpec::with_subset`]: crate::coordinator::JobSpec::with_subset
+//! [`optim::collective::allreduce_mean_weighted`]: crate::optim::collective::allreduce_mean_weighted
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::dataplane::{DataPlane, PipelineConfig, Session};
+use crate::coordinator::session::JobSpec;
+use crate::datasets::persist::{fnv1a64_update, FNV_SEED};
+use crate::datasets::{fingerprint, MoleculeSource, PreparedStats};
+use crate::fleet::manifest::{Assignment, MemberId, ShardManifest};
+use crate::fleet::membership::{GenerationChange, Membership};
+use crate::optim::collective::allreduce_mean_weighted;
+use crate::runtime::HostBatch;
+
+/// How one call to [`Fleet::run_epochs`] sequences epochs against the
+/// modeled gradient collective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Reference schedule: open epoch `e`, drain it, wait out the
+    /// collective, only then open `e+1` — every collective is dead time
+    /// for the planes' worker pools.
+    Serial,
+    /// Overlapped schedule: epoch `e+1`'s sessions are opened before
+    /// `e`'s tail drains, and `e`'s collective runs on a side thread
+    /// while `e+1` streams — worker pools fill `e+1`'s credit windows
+    /// inside the collective's shadow.
+    Overlapped,
+}
+
+/// Fleet construction parameters.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Manifest shard granularity in molecules (rebalance unit).
+    pub shard_len: usize,
+    /// Per-member plane configuration (each member gets its own worker
+    /// pool, prepared arena, and — when `cache_dir` is set — a warm
+    /// restore of the persisted cache at join time).
+    pub pipeline: PipelineConfig,
+    /// Width of the pseudo-gradient vector (module docs).
+    pub grad_dim: usize,
+    /// Admission credits per member epoch session. Sized generously so
+    /// an overlapped next-epoch session can pre-assemble a deep window
+    /// during the collective's shadow.
+    pub session_credits: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            shard_len: 64,
+            pipeline: PipelineConfig::default(),
+            grad_dim: 16,
+            session_credits: 64,
+        }
+    }
+}
+
+/// Order-independent accumulator of a gradient stream: XOR of per-graph
+/// content signatures plus the f64 sum of per-graph pseudo-gradient
+/// contributions (module docs).
+#[derive(Debug, Clone)]
+pub struct GradSketch {
+    /// XOR of every absorbed graph's 64-bit content signature — equal
+    /// between two runs iff they streamed the same multiset of graphs.
+    pub xor: u64,
+    /// Per-dimension sum of graph contributions (f64 so reordering
+    /// across members cannot drift the equivalence check).
+    sum: Vec<f64>,
+    /// Real graphs absorbed.
+    pub graphs: usize,
+    /// Batches absorbed.
+    pub batches: usize,
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl GradSketch {
+    /// Empty sketch of the given gradient dimension.
+    pub fn new(dim: usize) -> GradSketch {
+        GradSketch { xor: 0, sum: vec![0.0; dim], graphs: 0, batches: 0 }
+    }
+
+    /// Gradient dimension this sketch accumulates.
+    pub fn dim(&self) -> usize {
+        self.sum.len()
+    }
+
+    /// Absorb every real graph of one assembled batch: hash each
+    /// graph's `z`/`pos` (by node, in pack order — which is molecule
+    /// atom order, invariant to placement) and its target, then fold
+    /// the signature into the XOR fingerprint and the contribution sum.
+    pub fn absorb(&mut self, batch: &HostBatch) {
+        let n_slots = batch.graph_mask.len();
+        let mut state = vec![FNV_SEED; n_slots];
+        for (i, &mask) in batch.node_mask.iter().enumerate() {
+            if mask != 1.0 {
+                continue;
+            }
+            let g = batch.graph_id[i] as usize;
+            let mut h = state[g];
+            h = fnv1a64_update(h, &batch.z[i].to_le_bytes());
+            for &p in &batch.pos[3 * i..3 * i + 3] {
+                h = fnv1a64_update(h, &p.to_bits().to_le_bytes());
+            }
+            state[g] = h;
+        }
+        for (g, &mask) in batch.graph_mask.iter().enumerate() {
+            if mask != 1.0 {
+                continue;
+            }
+            let sig = fnv1a64_update(state[g], &batch.target[g].to_bits().to_le_bytes());
+            self.xor ^= sig;
+            self.graphs += 1;
+            for (d, s) in self.sum.iter_mut().enumerate() {
+                let bits = splitmix64(sig ^ (d as u64).wrapping_mul(0xA076_1D64_78BD_642F));
+                // top 53 bits -> [-1, 1)
+                *s += ((bits >> 11) as f64 / (1u64 << 52) as f64) - 1.0;
+            }
+        }
+        self.batches += 1;
+    }
+
+    /// Fold another member's sketch into this one (graph multisets
+    /// union; sums add).
+    pub fn merge(&mut self, other: &GradSketch) {
+        debug_assert_eq!(self.dim(), other.dim(), "merging sketches of different dims");
+        self.xor ^= other.xor;
+        for (a, b) in self.sum.iter_mut().zip(&other.sum) {
+            *a += b;
+        }
+        self.graphs += other.graphs;
+        self.batches += other.batches;
+    }
+
+    /// Per-graph mean contribution in f32 — this member's collective
+    /// input (weight = `graphs`). Zeros when nothing was absorbed.
+    pub fn mean_f32(&self) -> Vec<f32> {
+        let n = self.graphs.max(1) as f64;
+        self.sum.iter().map(|&s| (s / n) as f32).collect()
+    }
+
+    /// Per-graph mean contribution in f64 (equivalence checks).
+    pub fn mean_f64(&self) -> Vec<f64> {
+        let n = self.graphs.max(1) as f64;
+        self.sum.iter().map(|&s| s / n).collect()
+    }
+}
+
+/// One epoch's fleet-level result.
+#[derive(Debug, Clone)]
+pub struct FleetEpochReport {
+    /// Epoch number (seeds the per-member shuffles).
+    pub epoch: u64,
+    /// Membership generation the epoch ran under.
+    pub generation: u64,
+    /// Active members that streamed this epoch.
+    pub members: usize,
+    /// Batches delivered across all members.
+    pub batches: usize,
+    /// Real graphs streamed across all members.
+    pub graphs: usize,
+    /// Wall time of this epoch from this schedule's perspective (the
+    /// serial schedule includes its inline collective wait).
+    pub secs: f64,
+    /// Modeled collective wall applied for this epoch.
+    pub allreduce_secs: f64,
+    /// Summed worker assembly time across the epoch's sessions.
+    pub assembly_secs: f64,
+    /// Order-independent gradient stream fingerprint (XOR of per-graph
+    /// signatures) — compare against the single-plane reference.
+    pub stream_xor: u64,
+    /// Fleet-combined gradient: graphs-weighted mean of the member
+    /// means (== the global per-graph mean).
+    pub grad: Vec<f32>,
+}
+
+/// What one [`Fleet::rebalance`] flip did.
+#[derive(Debug, Clone)]
+pub struct RebalanceReport {
+    /// The membership change (generation, joined, left).
+    pub change: GenerationChange,
+    /// Shards whose owner changed versus the previous assignment.
+    pub shards_moved: usize,
+    /// Members that were active before and after the flip.
+    pub survivors: usize,
+    /// Survivors whose prepared arena is byte-for-byte the same object
+    /// after the flip (pointer identity + monotonic build stats). By
+    /// invariant F2 this must always equal `survivors`.
+    pub survivor_arenas_kept: usize,
+}
+
+struct FleetMember {
+    id: MemberId,
+    plane: DataPlane,
+}
+
+/// The fleet orchestrator: membership + manifest + one [`DataPlane`]
+/// per member, driven epoch-by-epoch (see the crate-level
+/// [`fleet`](crate::fleet) docs for the protocol).
+pub struct Fleet {
+    source: Arc<dyn MoleculeSource>,
+    batcher: Batcher,
+    cfg: FleetConfig,
+    manifest: ShardManifest,
+    membership: Membership,
+    assignment: Option<Assignment>,
+    members: Vec<FleetMember>,
+}
+
+impl Fleet {
+    /// Fingerprint the source and build an empty fleet (no members, no
+    /// assignment) over it.
+    #[must_use = "an unchecked construction error leaves no fleet to run"]
+    pub fn new(
+        source: Arc<dyn MoleculeSource>,
+        batcher: Batcher,
+        cfg: FleetConfig,
+    ) -> Result<Fleet> {
+        let fp = fingerprint(source.as_ref()).context("fingerprinting the fleet source")?;
+        let manifest = ShardManifest::new(fp, cfg.shard_len)?;
+        Ok(Fleet {
+            source,
+            batcher,
+            cfg,
+            manifest,
+            membership: Membership::new(),
+            assignment: None,
+            members: Vec::new(),
+        })
+    }
+
+    /// The manifest the fleet assigns shards from.
+    pub fn manifest(&self) -> &ShardManifest {
+        &self.manifest
+    }
+
+    /// The membership ledger (generation, per-member states).
+    pub fn membership(&self) -> &Membership {
+        &self.membership
+    }
+
+    /// The current generation's assignment, once at least one
+    /// rebalance has run with active members.
+    pub fn assignment(&self) -> Option<&Assignment> {
+        self.assignment.as_ref()
+    }
+
+    /// Stage `id` to join and construct its plane immediately — a
+    /// joiner warms (restores the persisted cache, spins up workers)
+    /// while the current generation keeps running untouched.
+    #[must_use = "an unchecked join error means the member has no plane and was not staged"]
+    pub fn join(&mut self, id: MemberId) -> Result<()> {
+        self.membership.join(id)?;
+        let plane = DataPlane::new(
+            Arc::clone(&self.source),
+            self.batcher.clone(),
+            self.cfg.pipeline.clone(),
+        );
+        self.members.push(FleetMember { id, plane });
+        Ok(())
+    }
+
+    /// Stage `id` to leave. An Active member drains until the next
+    /// [`rebalance`](Fleet::rebalance); a still-Joining member is
+    /// unstaged (and its plane dropped) immediately.
+    #[must_use = "an unchecked leave error means the member is still serving shards"]
+    pub fn leave(&mut self, id: MemberId) -> Result<()> {
+        self.membership.leave(id)?;
+        if self.membership.state(id).is_none() {
+            // was Joining: unstaged immediately, plane goes with it
+            self.members.retain(|m| m.id != id);
+        }
+        Ok(())
+    }
+
+    /// Apply staged membership changes at an epoch boundary: flip the
+    /// generation, drop departed members' planes, derive the new
+    /// assignment, and verify invariant F2 (no survivor's prepared
+    /// arena was rebuilt) — the fleet-wide analogue of the serve
+    /// restart cost PR 5 killed for one process.
+    pub fn rebalance(&mut self) -> RebalanceReport {
+        // Survivor evidence *before* the flip: arena identity + how much
+        // of it is materialized.
+        let before: Vec<(MemberId, usize, u64)> = self
+            .members
+            .iter()
+            .map(|m| {
+                let stats = m.plane.prepared_stats();
+                (m.id, Arc::as_ptr(m.plane.prepared()) as *const u8 as usize, stats.segments_built)
+            })
+            .collect();
+        let change = self.membership.flip();
+        self.members.retain(|m| !change.left.contains(&m.id));
+        let active = self.membership.active();
+        let prev = self.assignment.take();
+        let next = if active.is_empty() {
+            None
+        } else {
+            Some(self.manifest.assign(self.membership.generation(), &active))
+        };
+        let shards_moved = match (&prev, &next) {
+            (Some(p), Some(n)) => n.moved_from(p),
+            (None, Some(n)) => n.total_shards(),
+            _ => 0,
+        };
+        self.assignment = next;
+        let mut survivors = 0;
+        let mut kept = 0;
+        for m in &self.members {
+            let Some(&(_, ptr, built)) = before.iter().find(|(id, _, _)| *id == m.id) else {
+                continue; // fresh joiner, not a survivor
+            };
+            if change.joined.contains(&m.id) {
+                continue; // promoted this flip, was not active before
+            }
+            survivors += 1;
+            let stats = m.plane.prepared_stats();
+            let same = Arc::as_ptr(m.plane.prepared()) as *const u8 as usize == ptr
+                && stats.segments_built >= built;
+            if same {
+                kept += 1;
+            }
+        }
+        debug_assert_eq!(kept, survivors, "F2: a rebalance rebuilt a warm arena");
+        RebalanceReport { change, shards_moved, survivors, survivor_arenas_kept: kept }
+    }
+
+    /// Prepared-cache statistics of one member's plane (warm-arena
+    /// evidence for the bench).
+    pub fn member_prepared_stats(&self, id: MemberId) -> Option<PreparedStats> {
+        self.members.iter().find(|m| m.id == id).map(|m| m.plane.prepared_stats())
+    }
+
+    /// Pointer identity of one member's prepared arena — stable across
+    /// rebalances for every surviving member (invariant F2).
+    pub fn member_arena_ptr(&self, id: MemberId) -> Option<usize> {
+        self.members
+            .iter()
+            .find(|m| m.id == id)
+            .map(|m| Arc::as_ptr(m.plane.prepared()) as *const u8 as usize)
+    }
+
+    /// Open epoch `epoch`'s subset session on every active member.
+    fn open_epoch_sessions(&self, epoch: u64) -> Result<Vec<(MemberId, Session)>> {
+        let Some(assignment) = &self.assignment else {
+            bail!("no assignment: join members and rebalance before running epochs");
+        };
+        let mut sessions = Vec::with_capacity(self.members.len());
+        for m in &self.members {
+            if self.membership.state(m.id).is_none() {
+                continue;
+            }
+            // Joining members have a plane but own nothing yet; their
+            // subset is empty and they stream zero batches this epoch.
+            let ids = assignment.subset_ids(&self.manifest, m.id);
+            let spec = JobSpec::training(epoch)
+                .with_subset(Arc::new(ids))
+                .with_credits(self.cfg.session_credits);
+            sessions.push((m.id, m.plane.open_session(spec)));
+        }
+        Ok(sessions)
+    }
+
+    /// Drain every member's session into a per-member sketch.
+    fn drain_sessions(
+        &self,
+        sessions: Vec<(MemberId, Session)>,
+    ) -> Result<(Vec<(MemberId, GradSketch)>, f64, usize)> {
+        let mut parts = Vec::with_capacity(sessions.len());
+        let mut assembly_secs = 0.0;
+        let mut batches = 0usize;
+        for (id, mut session) in sessions {
+            let mut sketch = GradSketch::new(self.cfg.grad_dim);
+            for lease in session.by_ref() {
+                let batch =
+                    lease.with_context(|| format!("fleet member {id:#x} epoch stream"))?;
+                sketch.absorb(&batch);
+            }
+            let metrics = session.metrics();
+            assembly_secs += metrics.assembly_time.as_secs_f64();
+            batches += metrics.batches as usize;
+            parts.push((id, sketch));
+        }
+        Ok((parts, assembly_secs, batches))
+    }
+
+    /// Combine member sketches into the fleet gradient + fingerprint.
+    fn combine(&self, epoch: u64, parts: &[(MemberId, GradSketch)]) -> FleetEpochReport {
+        let mut total = GradSketch::new(self.cfg.grad_dim);
+        for (_, sketch) in parts {
+            total.merge(sketch);
+        }
+        let means: Vec<Vec<f32>> =
+            parts.iter().filter(|(_, s)| s.graphs > 0).map(|(_, s)| s.mean_f32()).collect();
+        let weights: Vec<f64> = parts
+            .iter()
+            .filter(|(_, s)| s.graphs > 0)
+            .map(|(_, s)| s.graphs as f64)
+            .collect();
+        let grad = if means.is_empty() {
+            vec![0.0; self.cfg.grad_dim]
+        } else {
+            allreduce_mean_weighted(&means, &weights)
+        };
+        FleetEpochReport {
+            epoch,
+            generation: self.membership.generation(),
+            members: parts.len(),
+            batches: total.batches,
+            graphs: total.graphs,
+            secs: 0.0,
+            allreduce_secs: 0.0,
+            assembly_secs: 0.0,
+            stream_xor: total.xor,
+            grad,
+        }
+    }
+
+    /// Run one epoch under the serial schedule (drain, then wait out
+    /// the modeled collective inline). The elastic protocol interleaves
+    /// calls to this with [`rebalance`](Fleet::rebalance).
+    #[must_use = "an unchecked epoch error means the gradient step never happened"]
+    pub fn run_epoch(&mut self, epoch: u64, allreduce_secs: f64) -> Result<FleetEpochReport> {
+        let mut reports = self.run_epochs(epoch, 1, Schedule::Serial, allreduce_secs)?;
+        Ok(reports.remove(0))
+    }
+
+    /// Run `n_epochs` consecutive epochs under `schedule`, applying
+    /// `allreduce_secs` of modeled collective wall per epoch.
+    /// Membership is frozen for the whole call (rebalance between
+    /// calls). Returns one report per epoch; the gradient results are
+    /// schedule-independent — only the wall clock differs.
+    #[must_use = "an unchecked run error means some epochs never streamed"]
+    pub fn run_epochs(
+        &mut self,
+        first_epoch: u64,
+        n_epochs: u64,
+        schedule: Schedule,
+        allreduce_secs: f64,
+    ) -> Result<Vec<FleetEpochReport>> {
+        let mut reports = Vec::with_capacity(n_epochs as usize);
+        let mut pending: Option<Vec<(MemberId, Session)>> = None;
+        let mut collective: Option<std::thread::JoinHandle<()>> = None;
+        let wait = Duration::from_secs_f64(allreduce_secs.max(0.0));
+        for epoch in first_epoch..first_epoch + n_epochs {
+            let t0 = Instant::now();
+            let sessions = match pending.take() {
+                Some(s) => s,
+                None => self.open_epoch_sessions(epoch)?,
+            };
+            if schedule == Schedule::Overlapped && epoch + 1 < first_epoch + n_epochs {
+                // Open e+1 while e's tail drains below — the planes'
+                // dispatchers now hold both epochs' jobs, and admission
+                // credits bound each epoch's window independently.
+                pending = Some(self.open_epoch_sessions(epoch + 1)?);
+            }
+            let (parts, assembly_secs, batches) = self.drain_sessions(sessions)?;
+            let mut report = self.combine(epoch, &parts);
+            match schedule {
+                Schedule::Serial => {
+                    if !wait.is_zero() {
+                        std::thread::sleep(wait);
+                    }
+                }
+                Schedule::Overlapped => {
+                    // The previous epoch's collective overlapped this
+                    // epoch's stream; settle it before starting ours.
+                    if let Some(h) = collective.take() {
+                        h.join().expect("fleet collective timer panicked");
+                    }
+                    if !wait.is_zero() {
+                        collective = Some(
+                            std::thread::Builder::new()
+                                .name("fleet-allreduce".into())
+                                .spawn(move || std::thread::sleep(wait))
+                                .expect("spawning fleet collective timer"),
+                        );
+                    }
+                }
+            }
+            report.secs = t0.elapsed().as_secs_f64();
+            report.allreduce_secs = allreduce_secs;
+            report.assembly_secs = assembly_secs;
+            report.batches = batches;
+            reports.push(report);
+        }
+        // The last epoch's collective is still on the critical path.
+        if let Some(h) = collective.take() {
+            h.join().expect("fleet collective timer panicked");
+        }
+        Ok(reports)
+    }
+}
+
+/// Stream one full-dataset epoch from a single reference plane into a
+/// sketch — the 1-plane baseline the fleet's gradient stream must match
+/// for fixed membership.
+#[must_use = "an unchecked reference error leaves nothing to compare the fleet against"]
+pub fn reference_epoch(plane: &DataPlane, epoch: u64, grad_dim: usize) -> Result<GradSketch> {
+    let mut sketch = GradSketch::new(grad_dim);
+    let mut session = plane.open_session(JobSpec::training(epoch));
+    for lease in session.by_ref() {
+        let batch = lease.context("reference epoch stream")?;
+        sketch.absorb(&batch);
+    }
+    Ok(sketch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::HydroNet;
+    use crate::runtime::BatchGeometry;
+
+    fn geometry() -> BatchGeometry {
+        BatchGeometry {
+            n_nodes: 192,
+            n_edges: 2304,
+            n_graphs: 8,
+            packs_per_batch: 2,
+            nodes_per_pack: 96,
+            edges_per_pack: 1152,
+            graphs_per_pack: 4,
+        }
+    }
+
+    fn cfg() -> FleetConfig {
+        FleetConfig {
+            shard_len: 16,
+            pipeline: PipelineConfig {
+                workers: 2,
+                prefetch_depth: 2,
+                shard_size: 16,
+                ..Default::default()
+            },
+            grad_dim: 8,
+            session_credits: 16,
+        }
+    }
+
+    fn fleet(n_mol: usize, members: &[MemberId]) -> Fleet {
+        let source = Arc::new(HydroNet::new(n_mol, 11));
+        let mut f = Fleet::new(source, Batcher::new(geometry(), 6.0), cfg()).unwrap();
+        for &m in members {
+            f.join(m).unwrap();
+        }
+        let r = f.rebalance();
+        assert_eq!(r.change.joined.len(), members.len());
+        f
+    }
+
+    #[test]
+    fn fleet_gradient_stream_matches_single_plane_reference() {
+        let n = 120;
+        let mut f = fleet(n, &[1, 2, 3]);
+        let report = f.run_epoch(4, 0.0).unwrap();
+        assert_eq!(report.graphs, n, "fleet must stream every molecule once");
+
+        let reference = DataPlane::new(
+            Arc::new(HydroNet::new(n, 11)),
+            Batcher::new(geometry(), 6.0),
+            cfg().pipeline,
+        );
+        let want = reference_epoch(&reference, 4, 8).unwrap();
+        assert_eq!(want.graphs, n);
+        assert_eq!(report.stream_xor, want.xor, "stream multiset diverged");
+        let fleet_mean = report.grad;
+        let ref_mean = want.mean_f64();
+        for (a, b) in fleet_mean.iter().zip(&ref_mean) {
+            assert!(
+                (*a as f64 - b).abs() < 1e-5,
+                "gradient diverged: fleet {a} vs reference {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn overlapped_schedule_preserves_epoch_results() {
+        let mut serial = fleet(96, &[7, 8]);
+        let mut overlapped = fleet(96, &[7, 8]);
+        let a = serial.run_epochs(0, 3, Schedule::Serial, 0.0).unwrap();
+        let b = overlapped.run_epochs(0, 3, Schedule::Overlapped, 0.0).unwrap();
+        assert_eq!(a.len(), 3);
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.stream_xor, rb.stream_xor, "epoch {} diverged", ra.epoch);
+            assert_eq!(ra.graphs, rb.graphs);
+            assert_eq!(ra.grad, rb.grad, "combined gradient must be schedule-independent");
+        }
+    }
+
+    #[test]
+    fn elastic_join_leave_rebalances_without_rebuilding_warm_arenas() {
+        let n = 128;
+        let mut f = fleet(n, &[1, 2]);
+        // epoch 0 warms members 1 and 2
+        let r0 = f.run_epoch(0, 0.0).unwrap();
+        assert_eq!(r0.graphs, n);
+        let ptr1 = f.member_arena_ptr(1).unwrap();
+        let built1 = f.member_prepared_stats(1).unwrap().segments_built;
+
+        // member 3 joins mid-run; flip at the epoch boundary
+        f.join(3).unwrap();
+        let r = f.rebalance();
+        assert_eq!(r.change.joined, vec![3]);
+        assert_eq!(r.change.generation, 2);
+        assert!(r.shards_moved > 0, "the joiner must win some shards");
+        assert_eq!(r.survivor_arenas_kept, r.survivors, "F2 violated on join");
+        assert_eq!(r.survivors, 2);
+        assert_eq!(f.member_arena_ptr(1).unwrap(), ptr1, "member 1 arena rebuilt");
+        assert!(f.member_prepared_stats(1).unwrap().segments_built >= built1);
+        let r1 = f.run_epoch(1, 0.0).unwrap();
+        assert_eq!(r1.graphs, n, "post-join epoch must still cover the dataset");
+        assert_eq!(r1.generation, 2);
+
+        // member 2 leaves mid-run
+        f.leave(2).unwrap();
+        let r = f.rebalance();
+        assert_eq!(r.change.left, vec![2]);
+        assert_eq!(r.survivor_arenas_kept, r.survivors, "F2 violated on leave");
+        let r2 = f.run_epoch(2, 0.0).unwrap();
+        assert_eq!(r2.graphs, n, "post-leave epoch must still cover the dataset");
+        assert_eq!(f.member_arena_ptr(1).unwrap(), ptr1);
+        assert!(f.member_arena_ptr(2).is_none(), "departed member keeps no plane");
+    }
+
+    #[test]
+    fn epochs_without_assignment_fail_loudly() {
+        let source = Arc::new(HydroNet::new(16, 3));
+        let mut f = Fleet::new(source, Batcher::new(geometry(), 6.0), cfg()).unwrap();
+        assert!(f.run_epoch(0, 0.0).is_err(), "no members, no epochs");
+        f.join(1).unwrap();
+        assert!(f.run_epoch(0, 0.0).is_err(), "joiner owns nothing before the flip");
+        f.rebalance();
+        assert!(f.run_epoch(0, 0.0).is_ok());
+    }
+
+    #[test]
+    fn sketch_is_placement_invariant() {
+        // one batch absorbed as a whole vs the same content split across
+        // two sketches must agree on xor and sum
+        let source = Arc::new(HydroNet::new(24, 9));
+        let plane = DataPlane::new(source, Batcher::new(geometry(), 6.0), cfg().pipeline);
+        let whole = reference_epoch(&plane, 1, 4).unwrap();
+        let mut halves = GradSketch::new(4);
+        let mut session = plane.open_session(JobSpec::training(1));
+        for lease in session.by_ref() {
+            let b = lease.unwrap();
+            let mut part = GradSketch::new(4);
+            part.absorb(&b);
+            assert_eq!(part.graphs, b.real_graphs(), "absorb must count real graphs");
+            halves.merge(&part);
+        }
+        assert_eq!(whole.xor, halves.xor);
+        assert_eq!(whole.graphs, halves.graphs);
+        for (a, b) in whole.mean_f64().iter().zip(halves.mean_f64()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

@@ -42,6 +42,60 @@ pub fn allreduce_time(cfg: AllReduceConfig, arch: &IpuArch) -> f64 {
     pod_sync + collectives as f64 * latency + bw_time
 }
 
+/// A fleet-scale all-reduce: `planes` replicated pods, each holding
+/// `replicas_per_plane` IPUs, combining one gradient of `total_bytes`.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetAllReduceConfig {
+    /// Data-parallel planes (pods) in the fleet.
+    pub planes: usize,
+    /// IPU replicas inside each plane (the intra-pod ring).
+    pub replicas_per_plane: usize,
+    /// Total gradient payload in bytes.
+    pub total_bytes: usize,
+    /// Number of weight tensors (≈ collectives when unmerged).
+    pub n_tensors: usize,
+    /// Merge all tensors into one collective per level?
+    pub merged: bool,
+}
+
+/// Fixed multiplier on the per-collective latency for the cross-plane
+/// stage: host-mediated sync is an order of magnitude slower than an
+/// intra-pod program switch.
+const HOST_LATENCY_FACTOR: f64 = 10.0;
+
+/// Seconds for one hierarchical gradient all-reduce across a fleet.
+///
+/// Two stages, the standard hierarchical decomposition: (1) each plane
+/// reduces locally over its IPU-link ring ([`allreduce_time`]); (2) one
+/// representative per plane runs a cross-plane ring over the host links
+/// (`host_pcie_bps`), whose result the local ring of stage 1 already
+/// positioned every replica to consume — the intra-plane broadcast is
+/// folded into stage 1's ring factor. A single-plane fleet degenerates
+/// to [`allreduce_time`] exactly, so the fleet model is a strict
+/// extension of the single-pod one.
+pub fn fleet_allreduce_time(cfg: FleetAllReduceConfig, arch: &IpuArch) -> f64 {
+    assert!(cfg.planes >= 1);
+    let local = allreduce_time(
+        AllReduceConfig {
+            replicas: cfg.replicas_per_plane,
+            total_bytes: cfg.total_bytes,
+            n_tensors: cfg.n_tensors,
+            merged: cfg.merged,
+        },
+        arch,
+    );
+    if cfg.planes == 1 {
+        return local;
+    }
+    let p = cfg.planes as f64;
+    let ring_factor = 2.0 * (p - 1.0) / p;
+    let collectives = if cfg.merged { 1 } else { cfg.n_tensors.max(1) };
+    let sync = 3.75e-6 * p.powf(1.5) * HOST_LATENCY_FACTOR.sqrt();
+    let latency = arch.collective_latency_s * HOST_LATENCY_FACTOR * (1.0 + p.log2());
+    let bw_time = ring_factor * cfg.total_bytes as f64 / arch.host_pcie_bps;
+    local + sync + collectives as f64 * latency + bw_time
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,6 +139,40 @@ mod tests {
         let t8 = allreduce_time(cfg(8, true), &a);
         let t64 = allreduce_time(cfg(64, true), &a);
         assert!(t64 > t8);
+    }
+
+    fn fleet_cfg(planes: usize, replicas_per_plane: usize) -> FleetAllReduceConfig {
+        FleetAllReduceConfig {
+            planes,
+            replicas_per_plane,
+            total_bytes: 4 * 233_000,
+            n_tensors: 40,
+            merged: true,
+        }
+    }
+
+    #[test]
+    fn single_plane_fleet_degenerates_to_the_pod_model() {
+        let a = arch();
+        for r in [1, 4, 16] {
+            assert_eq!(
+                fleet_allreduce_time(fleet_cfg(1, r), &a),
+                allreduce_time(cfg(r, true), &a),
+                "replicas_per_plane {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn cross_plane_stage_costs_more_than_pod_links() {
+        let a = arch();
+        // the same 8 replicas arranged as 2 planes of 4 must pay the
+        // host-link stage the flat 8-replica ring does not
+        let flat = allreduce_time(cfg(8, true), &a);
+        let fleet = fleet_allreduce_time(fleet_cfg(2, 4), &a);
+        assert!(fleet > flat, "fleet {fleet} vs flat {flat}");
+        // and more planes cost more
+        assert!(fleet_allreduce_time(fleet_cfg(4, 4), &a) > fleet);
     }
 
     #[test]

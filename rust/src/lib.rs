@@ -46,6 +46,7 @@ pub mod baseline;
 pub mod coordinator;
 pub mod datasets;
 pub mod figures;
+pub mod fleet;
 pub mod graph;
 pub mod ipu;
 pub mod lint;

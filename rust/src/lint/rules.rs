@@ -31,19 +31,23 @@ pub const RULES: [&str; 6] = [
 ];
 
 /// Files whose non-test code must not `.unwrap()` / `.expect("")`:
-/// the dispatcher, session admission, batcher, and cache decoder.
-const HOT_PATH_FILES: [&str; 4] = [
+/// the dispatcher, session admission, batcher, cache decoder, and the
+/// fleet control plane (manifest/membership/scheduler).
+const HOT_PATH_FILES: [&str; 7] = [
     "coordinator/batcher.rs",
     "coordinator/dataplane.rs",
     "coordinator/session.rs",
     "datasets/persist.rs",
+    "fleet/manifest.rs",
+    "fleet/membership.rs",
+    "fleet/scheduler.rs",
 ];
 
 /// Files where `as usize` / `as u32` must route through checked helpers.
 const NARROWING_FILES: [&str; 1] = ["datasets/persist.rs"];
 
 /// Module prefixes under the doc/`#[must_use]` hygiene rule.
-const HYGIENE_PREFIXES: [&str; 2] = ["coordinator/", "datasets/"];
+const HYGIENE_PREFIXES: [&str; 3] = ["coordinator/", "datasets/", "fleet/"];
 
 /// Lint one source file. `rel` is the path relative to `rust/src`
 /// (forward slashes); `text` is the raw file contents.

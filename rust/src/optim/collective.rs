@@ -47,6 +47,28 @@ pub fn allreduce_mean_per_tensor(grads: &[Vec<f32>], layout: &[ParamEntry]) -> V
     out
 }
 
+/// Weighted merged collective: each replica's mean gradient is scaled
+/// by its sample count before reduction, so replicas that streamed
+/// unequal shard loads (an elastic fleet mid-rebalance) still combine
+/// to the *global* per-sample mean — a plain mean-of-means would bias
+/// toward small shards. Accumulates in f64 so the result is independent
+/// of replica order.
+pub fn allreduce_mean_weighted(grads: &[Vec<f32>], weights: &[f64]) -> Vec<f32> {
+    assert!(!grads.is_empty());
+    assert_eq!(grads.len(), weights.len(), "one weight per replica");
+    let n = grads[0].len();
+    assert!(grads.iter().all(|g| g.len() == n), "ragged gradient set");
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "weights must sum to a positive total");
+    let mut acc = vec![0.0f64; n];
+    for (g, &w) in grads.iter().zip(weights) {
+        for (a, &x) in acc.iter_mut().zip(g) {
+            *a += w * x as f64;
+        }
+    }
+    acc.into_iter().map(|a| (a / total) as f32).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,5 +123,23 @@ mod tests {
     #[should_panic(expected = "ragged")]
     fn rejects_ragged_grads() {
         allreduce_mean_merged(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    fn weighted_mean_recovers_the_global_per_sample_mean() {
+        // replica A: 3 samples with mean 1.0; replica B: 1 sample with
+        // mean 5.0 -> global mean (3*1 + 1*5)/4 = 2.0
+        let grads = vec![vec![1.0f32, 1.0], vec![5.0, 5.0]];
+        let out = allreduce_mean_weighted(&grads, &[3.0, 1.0]);
+        assert_eq!(out, vec![2.0, 2.0]);
+        // equal weights degenerate to the plain merged mean
+        let eq = allreduce_mean_weighted(&grads, &[1.0, 1.0]);
+        assert_eq!(eq, allreduce_mean_merged(&grads));
+    }
+
+    #[test]
+    #[should_panic(expected = "one weight per replica")]
+    fn weighted_rejects_mismatched_weights() {
+        allreduce_mean_weighted(&[vec![1.0]], &[1.0, 2.0]);
     }
 }

@@ -15,6 +15,7 @@ pub mod workload;
 
 pub use workload::WorkloadProfile;
 
+use crate::ipu::collectives::{fleet_allreduce_time, FleetAllReduceConfig};
 use crate::ipu::{allreduce_time, AllReduceConfig, IpuArch};
 use crate::planner::{plan_gather, plan_scatter, OpDims};
 
@@ -267,6 +268,74 @@ pub fn estimate_epoch(
     }
 }
 
+/// Model output for one fleet-scale evaluation: `planes` replicated
+/// pods splitting the epoch, under the serial and overlapped collective
+/// schedules. The overlap bound is the BSP one the fleet sim is
+/// measured against: a stream and a collective that fully shadow each
+/// other, with one exposed tail.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetEpochEstimate {
+    /// Data-parallel planes in the fleet.
+    pub planes: usize,
+    /// Per-plane steps in one fleet epoch.
+    pub steps_per_epoch: f64,
+    /// Stream wall per epoch (device compute + host I/O, no collective).
+    pub epoch_stream_secs: f64,
+    /// Total hierarchical collective wall per epoch.
+    pub epoch_allreduce_secs: f64,
+    /// Epoch wall under the serial schedule (stream + collective).
+    pub epoch_secs_serial: f64,
+    /// Epoch wall under the overlapped schedule
+    /// (`max(stream, collective)` + one exposed tail).
+    pub epoch_secs_overlapped: f64,
+    /// `epoch_secs_serial / epoch_secs_overlapped` — how much of the
+    /// collective the overlap hides.
+    pub overlap_speedup: f64,
+    /// Fleet throughput under the overlapped schedule.
+    pub throughput_graphs_per_s: f64,
+}
+
+/// Estimate one epoch of fleet training: `planes` pods, each configured
+/// as `setup`, splitting the dataset evenly (the shard manifest's
+/// rendezvous balance) and combining gradients with the hierarchical
+/// collective ([`fleet_allreduce_time`]). Built on [`estimate_epoch`]'s
+/// per-step terms so the single-plane fleet agrees with the pod model.
+pub fn estimate_fleet_epoch(
+    w: &WorkloadProfile,
+    setup: &TrainSetup,
+    planes: usize,
+    arch: &IpuArch,
+) -> FleetEpochEstimate {
+    assert!(planes >= 1, "a fleet has at least one plane");
+    let base = estimate_epoch(w, setup, arch);
+    let steps = (base.steps_per_epoch / planes as f64).ceil();
+    let stream_step = base.step_device_secs + base.step_host_secs;
+    let ar_step = fleet_allreduce_time(
+        FleetAllReduceConfig {
+            planes,
+            replicas_per_plane: setup.n_ipus,
+            total_bytes: 4 * setup.model.param_count(),
+            n_tensors: 9 * setup.model.n_interactions + 4,
+            merged: setup.opts.merged_allreduce,
+        },
+        arch,
+    );
+    let epoch_stream = steps * stream_step;
+    let epoch_ar = steps * ar_step;
+    let serial = epoch_stream + epoch_ar;
+    let overlapped = epoch_stream.max(epoch_ar) + stream_step.min(ar_step);
+    FleetEpochEstimate {
+        planes,
+        steps_per_epoch: steps,
+        epoch_stream_secs: epoch_stream,
+        epoch_allreduce_secs: epoch_ar,
+        epoch_secs_serial: serial,
+        epoch_secs_overlapped: overlapped,
+        overlap_speedup: serial / overlapped,
+        throughput_graphs_per_s: w.n_graphs as f64 / overlapped,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -408,5 +477,30 @@ mod tests {
         s.model.n_interactions = 8;
         let deep = estimate_epoch(&w, &s, &arch).epoch_secs;
         assert!(wide > base && deep > base);
+    }
+
+    #[test]
+    fn fleet_epochs_shrink_with_planes_and_overlap_hides_the_collective() {
+        let arch = IpuArch::bow();
+        let w = water45();
+        let s = setup(16, OptFlags::ALL);
+        let one = estimate_fleet_epoch(&w, &s, 1, &arch);
+        let four = estimate_fleet_epoch(&w, &s, 4, &arch);
+        // more planes -> fewer per-plane steps -> shorter epochs, even
+        // though each collective now crosses host links
+        assert!(four.epoch_secs_serial < one.epoch_secs_serial);
+        assert!(four.steps_per_epoch < one.steps_per_epoch);
+        // overlap never loses, and strictly wins whenever there is a
+        // collective to hide
+        for planes in [1usize, 2, 4, 8] {
+            let e = estimate_fleet_epoch(&w, &s, planes, &arch);
+            assert!(e.overlap_speedup >= 1.0, "{planes} planes");
+            assert!(e.epoch_secs_overlapped <= e.epoch_secs_serial);
+            assert!(
+                e.epoch_secs_overlapped
+                    >= e.epoch_stream_secs.max(e.epoch_allreduce_secs) - 1e-12,
+                "overlap cannot beat the BSP bound at {planes} planes"
+            );
+        }
     }
 }

@@ -60,6 +60,14 @@ pub struct TrainConfig {
     /// keeps the examples CI-sized.
     pub max_batches_per_epoch: usize,
     pub log_every: usize,
+    /// Open epoch `e+1`'s session while epoch `e` is still streaming
+    /// (the overlapped schedule, see [`fleet`](crate::fleet)): the
+    /// plane's workers fill the next epoch's admission-credit window
+    /// during this epoch's device steps and end-of-epoch bookkeeping,
+    /// so epoch boundaries cost no pipeline refill. Credits bound the
+    /// lookahead — the next session pre-assembles at most its credit
+    /// window before stalling, never starving the current epoch.
+    pub overlap_epochs: bool,
 }
 
 impl Default for TrainConfig {
@@ -69,6 +77,7 @@ impl Default for TrainConfig {
             pipeline: PipelineConfig::default(),
             max_batches_per_epoch: 0,
             log_every: 50,
+            overlap_epochs: true,
         }
     }
 }
@@ -85,9 +94,19 @@ pub fn train<S: MoleculeSource + 'static>(
     let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
     let plane = DataPlane::new(source, batcher, cfg.pipeline.clone());
     let mut records = Vec::new();
+    // Overlapped schedule: the next epoch's session, opened while the
+    // current one still streams (admission credits keep the lookahead
+    // bounded; see TrainConfig::overlap_epochs).
+    let mut pending: Option<crate::coordinator::Session> = None;
     for epoch in 0..cfg.epochs {
         let t0 = Instant::now();
-        let mut session = plane.open_session(JobSpec::training(epoch));
+        let mut session = match pending.take() {
+            Some(s) => s,
+            None => plane.open_session(JobSpec::training(epoch)),
+        };
+        if cfg.overlap_epochs && epoch + 1 < cfg.epochs {
+            pending = Some(plane.open_session(JobSpec::training(epoch + 1)));
+        }
         let mut loss_sum = 0.0f64;
         let mut batches = 0usize;
         let mut graphs = 0usize;
@@ -157,6 +176,7 @@ mod tests {
             pipeline: PipelineConfig { workers: 2, prefetch_depth: 2, ..Default::default() },
             max_batches_per_epoch: 0,
             log_every: 0,
+            overlap_epochs: true,
         };
         let records = train(&engine, &mut state, source, &cfg, |_, _, _| {}).unwrap();
         assert_eq!(records.len(), 6);

@@ -39,6 +39,7 @@ fn training_is_deterministic() {
             pipeline: PipelineConfig { workers: 2, ..Default::default() },
             max_batches_per_epoch: 0,
             log_every: 0,
+            overlap_epochs: true,
         };
         train(&engine, &mut state, source, &cfg, |_, _, _| {})
             .unwrap()
@@ -67,6 +68,7 @@ fn store_backed_training_matches_generator() {
         pipeline: PipelineConfig { workers: 1, ..Default::default() },
         max_batches_per_epoch: 0,
         log_every: 0,
+        overlap_epochs: true,
     };
     let mut s1 = engine.init_state().unwrap();
     let r1 = train(&engine, &mut s1, Arc::new(gen), &cfg, |_, _, _| {}).unwrap();
@@ -89,6 +91,7 @@ fn checkpoint_resume_preserves_predictions() {
         pipeline: PipelineConfig::default(),
         max_batches_per_epoch: 2,
         log_every: 0,
+        overlap_epochs: true,
     };
     train(&engine, &mut state, Arc::clone(&source), &cfg, |_, _, _| {}).unwrap();
 
@@ -133,6 +136,7 @@ fn qm9_trains_through_same_artifacts() {
         pipeline: PipelineConfig::default(),
         max_batches_per_epoch: 0,
         log_every: 0,
+        overlap_epochs: true,
     };
     let records = train(&engine, &mut state, source, &cfg, |_, _, _| {}).unwrap();
     let first = records.first().unwrap().mean_loss;

@@ -25,8 +25,19 @@
 //! cancel, stale dirty-reset watermark) and asserts the exploration
 //! finds it and that the violation replays identically from its seed.
 
-use std::collections::{HashSet, VecDeque};
+//! A second scenario family (`fleet_*`) drives the *real*
+//! `fleet::{ShardManifest, Membership}` through seeded membership churn
+//! and checks the fleet invariants from the same catalog: F1 (every
+//! shard owned by exactly one active member in every generation — never
+//! double-owned, never orphaned across a flip) and F3 (admission
+//! credits are conserved across join/leave). Its teeth test seeds a
+//! rebalance that abandons a draining member's in-flight admission
+//! without returning the credit, and asserts the explorer finds it.
 
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use molpack::datasets::SourceFingerprint;
+use molpack::fleet::{Assignment, MemberId, Membership, ShardId, ShardManifest};
 use molpack::util::sched::{parse_seed, Explorer, Scenario, Step, Violation};
 use molpack::util::Rng;
 
@@ -498,4 +509,289 @@ fn catches_forgotten_credit_on_cancel() {
 #[test]
 fn catches_stale_dirty_reset() {
     assert_catches(Bug::StaleDirtyReset, &["dirty reset left residue"]);
+}
+
+// ---------------------------------------------------------------------------
+// Fleet membership/rebalance scenario (invariants F1 + F3): members
+// stream the shards the *real* rendezvous manifest assigns them while a
+// controller stages joins/leaves and flips generations at epoch
+// barriers. Every claim checks single ownership; every flip re-checks
+// the full partition on the real `Assignment`; quiescence checks that
+// no join/leave leaked an admission credit.
+// ---------------------------------------------------------------------------
+
+/// The seeded fleet bug for the teeth self-test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FleetBug {
+    /// Rebalance flips while a draining member still holds an in-flight
+    /// admission, and the abandoned stream never returns its credit.
+    LeakyRebalance,
+}
+
+/// One scripted membership change, applied at the next generation flip.
+struct Churn {
+    joins: Vec<MemberId>,
+    leaves: Vec<MemberId>,
+}
+
+/// Shared state: the real manifest/membership/assignment plus the
+/// modeled streaming credits.
+struct FleetModel {
+    manifest: ShardManifest,
+    membership: Membership,
+    assignment: Assignment,
+    plan: VecDeque<Churn>,
+    credits: usize,
+    in_flight: usize,
+    /// Shard -> claiming member, reset at each flip. Claims persist
+    /// after delivery so a shard is claimed at most once per generation.
+    claimed: HashMap<ShardId, MemberId>,
+    covered: HashSet<ShardId>,
+    finished: bool,
+    fault: Option<String>,
+}
+
+impl FleetModel {
+    fn n_shards(&self) -> usize {
+        self.manifest.n_shards() as usize
+    }
+}
+
+fn fleet_invariant(m: &FleetModel) -> Result<(), String> {
+    if let Some(f) = &m.fault {
+        return Err(f.clone());
+    }
+    if m.in_flight > m.credits {
+        return Err(format!(
+            "admission overrun: in_flight {} > credits {}",
+            m.in_flight, m.credits
+        ));
+    }
+    Ok(())
+}
+
+fn fleet_finale(m: &FleetModel) -> Result<(), String> {
+    if m.in_flight != 0 {
+        return Err(format!(
+            "credits lost: in_flight {} != 0 at quiescence (a join/leave leaked admissions)",
+            m.in_flight
+        ));
+    }
+    if m.covered.len() != m.n_shards() {
+        return Err(format!(
+            "final generation covered {} of {} shards",
+            m.covered.len(),
+            m.n_shards()
+        ));
+    }
+    Ok(())
+}
+
+/// A fleet member: claim an owned shard (one admission credit), stream
+/// it, deliver (credit back). Rebalanced-away streams are abandoned —
+/// with the credit returned, unless the seeded bug says otherwise.
+fn fleet_member(me: MemberId, bug: Option<FleetBug>) -> impl FnMut(&mut FleetModel) -> Step {
+    let mut streaming: Option<ShardId> = None;
+    move |m: &mut FleetModel| {
+        if let Some(s) = streaming.take() {
+            if !m.assignment.shards(me).contains(&s) {
+                // the shard moved (or this member left) mid-stream: only
+                // reachable when a rebalance flips before the barrier
+                if bug != Some(FleetBug::LeakyRebalance) {
+                    m.in_flight -= 1;
+                }
+                return Step::Ran;
+            }
+            m.covered.insert(s);
+            m.in_flight -= 1;
+            return Step::Ran;
+        }
+        if m.finished {
+            return Step::Done;
+        }
+        let next = m
+            .assignment
+            .shards(me)
+            .iter()
+            .find(|&&s| !m.claimed.contains_key(&s) && !m.covered.contains(&s))
+            .copied();
+        let Some(s) = next else {
+            return Step::Blocked; // nothing owned (yet): wait for a flip
+        };
+        if m.in_flight >= m.credits {
+            return Step::Blocked;
+        }
+        m.in_flight += 1;
+        if let Some(prev) = m.claimed.insert(s, me) {
+            m.fault = Some(format!(
+                "shard {s} owned twice in generation {}: members {prev} and {me}",
+                m.membership.generation()
+            ));
+        }
+        streaming = Some(s);
+        Step::Ran
+    }
+}
+
+/// The rebalance controller: at each epoch barrier (every shard of the
+/// current generation covered), apply the next scripted churn, flip the
+/// real membership, re-derive the real assignment, and check F1 on it.
+/// The seeded bug flips early, while a leaver still streams.
+fn fleet_controller(bug: Option<FleetBug>) -> impl FnMut(&mut FleetModel) -> Step {
+    move |m: &mut FleetModel| {
+        let barrier = m.covered.len() == m.n_shards();
+        let Some(next) = m.plan.front() else {
+            if barrier {
+                m.finished = true;
+                return Step::Done;
+            }
+            return Step::Blocked;
+        };
+        let premature = bug == Some(FleetBug::LeakyRebalance)
+            && next.leaves.iter().any(|l| {
+                m.claimed.iter().any(|(s, owner)| owner == l && !m.covered.contains(s))
+            });
+        if !barrier && !premature {
+            return Step::Blocked;
+        }
+        let churn = m.plan.pop_front().expect("front() was Some");
+        for &j in &churn.joins {
+            m.membership.join(j).expect("scripted join must be legal");
+        }
+        for &l in &churn.leaves {
+            m.membership.leave(l).expect("scripted leave must be legal");
+        }
+        let change = m.membership.flip();
+        let active = m.membership.active();
+        m.assignment = m.manifest.assign(change.generation, &active);
+        // F1 on the real assignment: a full, single-owner partition.
+        if m.assignment.total_shards() != m.n_shards() {
+            m.fault = Some(format!(
+                "generation {}: assigned {} of {} shards",
+                change.generation,
+                m.assignment.total_shards(),
+                m.n_shards()
+            ));
+        }
+        for s in 0..m.manifest.n_shards() {
+            match m.assignment.owner_of(s) {
+                None => {
+                    m.fault =
+                        Some(format!("shard {s} orphaned in generation {}", change.generation));
+                }
+                Some(o) if !active.contains(&o) => {
+                    m.fault = Some(format!(
+                        "shard {s} owned by inactive member {o} in generation {}",
+                        change.generation
+                    ));
+                }
+                Some(_) => {}
+            }
+        }
+        m.claimed.clear();
+        m.covered.clear();
+        Step::Ran
+    }
+}
+
+/// Randomized fleet shapes: dataset/shard geometry, 2-3 founding
+/// members, 1-2 scripted churns (joins of fresh ids, leaves of active
+/// ones), small credit caps so admission pressure is real.
+fn build_fleet(rng: &mut Rng, bug: Option<FleetBug>) -> Scenario<FleetModel> {
+    let molecules = rng.range(24, 97) as u64;
+    let shard_len = rng.range(4, 13);
+    let fingerprint =
+        SourceFingerprint { molecules, content_hash: 0x00D1_5EA5_E001_F1EE ^ molecules };
+    let manifest = ShardManifest::new(fingerprint, shard_len).expect("manifest geometry is legal");
+    let mut membership = Membership::new();
+    let n_initial = rng.range(2, 4) as u64;
+    for id in 1..=n_initial {
+        membership.join(id).expect("founding join");
+    }
+    let change = membership.flip();
+    let assignment = manifest.assign(change.generation, &membership.active());
+    let mut active_now = membership.active();
+    let mut next_join = n_initial + 1;
+    let mut plan = VecDeque::new();
+    for _ in 0..rng.range(1, 3) {
+        let mut joins = Vec::new();
+        let mut leaves = Vec::new();
+        if rng.chance(0.7) {
+            joins.push(next_join);
+            active_now.push(next_join);
+            next_join += 1;
+        }
+        // the seeded bug needs a drain to leak, so buggy plans always leave
+        if (bug.is_some() || rng.chance(0.6)) && active_now.len() > 1 {
+            let l = active_now.remove(rng.range(0, active_now.len()));
+            if joins.contains(&l) {
+                active_now.push(l); // don't leave a same-churn joiner
+            } else {
+                leaves.push(l);
+            }
+        }
+        plan.push_back(Churn { joins, leaves });
+    }
+    let members: Vec<MemberId> = (1..next_join).collect();
+    let model = FleetModel {
+        manifest,
+        membership,
+        assignment,
+        plan,
+        credits: rng.range(1, 4),
+        in_flight: 0,
+        claimed: HashMap::new(),
+        covered: HashSet::new(),
+        finished: false,
+        fault: None,
+    };
+    let mut sc = Scenario::new(model).with_invariant(fleet_invariant).with_finale(fleet_finale);
+    for &id in &members {
+        sc = sc.with_actor(&format!("member-{id}"), fleet_member(id, bug));
+    }
+    sc.with_actor("controller", fleet_controller(bug))
+}
+
+const FLEET_SEED: u64 = 0xF1EE_7A5C;
+
+/// The fleet gate: rendezvous assignment + the membership state machine
+/// keep F1 and F3 over every explored churn interleaving.
+#[test]
+fn fleet_rebalance_protocol_holds_over_seeded_interleavings() {
+    let ex = Explorer::from_env(1500, FLEET_SEED);
+    if let Ok(raw) = std::env::var("MOLPACK_RACE_SEED") {
+        let seed = parse_seed(&raw).expect("MOLPACK_RACE_SEED must be decimal or 0x-hex");
+        match ex.replay(seed, |rng| build_fleet(rng, None)) {
+            Ok(steps) => println!("fleet seed {seed:#x}: clean ({steps} steps)"),
+            Err(v) => panic!("{v}"),
+        }
+        return;
+    }
+    match ex.run(|rng| build_fleet(rng, None)) {
+        Ok(stats) => println!(
+            "fleet race explorer: {} schedules, {} steps, F1/F3 held",
+            stats.schedules, stats.steps
+        ),
+        Err(v) => panic!("{v}"),
+    }
+}
+
+/// Teeth: a rebalance that abandons a draining member's in-flight
+/// admission must be caught — either as the leaked credit at quiescence
+/// or as the admission starvation (deadlock) it causes downstream — and
+/// must replay identically from its seed.
+#[test]
+fn catches_leaked_admission_on_rebalance() {
+    let ex = Explorer::new(800, FLEET_SEED);
+    let v = ex
+        .run(|rng| build_fleet(rng, Some(FleetBug::LeakyRebalance)))
+        .expect_err("LeakyRebalance must be caught within 800 schedules");
+    assert!(
+        v.message.contains("credits lost") || v.message.contains("deadlock"),
+        "caught, but with unexpected message: {v}"
+    );
+    let v2 = ex
+        .replay(v.seed, |rng| build_fleet(rng, Some(FleetBug::LeakyRebalance)))
+        .expect_err("replaying the reported seed must fail again");
+    assert_eq!(*v, *v2, "replay diverged from the original violation");
 }
