@@ -26,7 +26,16 @@
 #                     over owned, page-sharing RSS check, BENCH_mmap.json),
 #                     and the multi-plane fleet sim (stream equivalence,
 #                     >= 1.15x overlapped-collective bar, elastic
-#                     join/leave, BENCH_fleet.json).
+#                     join/leave, BENCH_fleet.json), then the chaos
+#                     sweep (`make chaos`).
+#   make chaos        seeded fault-injection sweep: 5 deterministic
+#                     chaos schedules through the fleet watchdog
+#                     (stall/crash/slow-drain/open-fail/collective-fail/
+#                     damaged-cache), asserting detection, force-leave
+#                     recovery, gradient equivalence to the single-plane
+#                     reference, and bit-identical replay
+#                     (BENCH_chaos.json). A failing seed replays with
+#                     `-- fleet --chaos --schedules 1 --chaos-seed <s>`.
 #   make bench-check  the perf ledger gate: bench-smoke, then `molpack
 #                     benchdiff` of each fresh snapshot against the
 #                     committed baselines in BENCH_history/ — fails on
@@ -39,7 +48,7 @@
 #                     BENCH_history/trajectory/<short-sha>/ (run on a
 #                     quiet machine; commit the result).
 
-.PHONY: check fmt clippy lint test race bench-build bench-smoke bench-check bench-record artifacts
+.PHONY: check fmt clippy lint test race chaos bench-build bench-smoke bench-check bench-record artifacts
 
 check: fmt clippy lint test race bench-build
 
@@ -58,6 +67,12 @@ test:
 race:
 	MOLPACK_RACE_SCHEDULES=10000 cargo test -q --test race
 
+# Deterministic chaos sweep: every invariant is asserted inside the
+# driver; the snapshot's chaos_virtual_secs is virtual-clock time, so
+# it is machine-independent and the ledger guards it tightly.
+chaos:
+	cargo run --release -q -- fleet --chaos --schedules 5 --graphs 480 --epochs 3 --out BENCH_chaos.json
+
 # Benches must at least compile in CI even though they only run on demand.
 bench-build:
 	cargo bench --no-run
@@ -68,6 +83,7 @@ bench-smoke:
 	cargo bench --bench bench_pipeline -- --mmap-only --graphs 4000 --mmap-out BENCH_mmap.json
 	cargo bench --bench bench_pipeline -- --widen-only
 	cargo run --release -q -- fleet --replicas 3 --graphs 480 --epochs 3 --out BENCH_fleet.json
+	$(MAKE) chaos
 
 # Perf ledger gate: fresh smoke snapshots vs the committed baselines.
 # Tolerance 0.25 = a guarded metric may be up to 25% worse before
@@ -80,15 +96,16 @@ bench-check: bench-smoke
 	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_persist.json --current BENCH_persist.json --tolerance 0.25
 	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_mmap.json --current BENCH_mmap.json --tolerance 0.25
 	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_fleet.json --current BENCH_fleet.json --tolerance 0.25
+	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_chaos.json --current BENCH_chaos.json --tolerance 0.25
 
 # Refresh the committed baselines (run on a quiet machine, then commit
 # BENCH_history/). Also times the lint and race gates so gate cost is
-# part of the ledger, and files a per-PR trajectory snapshot of all four
+# part of the ledger, and files a per-PR trajectory snapshot of all five
 # bench JSONs under BENCH_history/trajectory/<short-sha>/ so regressions
 # can be bisected against the ledger after the fact.
 bench-record: bench-smoke
 	mkdir -p BENCH_history
-	cp BENCH_assembly.json BENCH_persist.json BENCH_mmap.json BENCH_fleet.json BENCH_history/
+	cp BENCH_assembly.json BENCH_persist.json BENCH_mmap.json BENCH_fleet.json BENCH_chaos.json BENCH_history/
 	t0=$$(date +%s%N); $(MAKE) lint >/dev/null; t1=$$(date +%s%N); \
 	$(MAKE) race >/dev/null; t2=$$(date +%s%N); \
 	{ printf '{\n  "gates": {\n'; \
@@ -97,7 +114,7 @@ bench-record: bench-smoke
 	  printf '  }\n}\n'; } > BENCH_history/gates.json
 	sha=$$(git rev-parse --short HEAD) && \
 	mkdir -p BENCH_history/trajectory/$$sha && \
-	cp BENCH_assembly.json BENCH_persist.json BENCH_mmap.json BENCH_fleet.json \
+	cp BENCH_assembly.json BENCH_persist.json BENCH_mmap.json BENCH_fleet.json BENCH_chaos.json \
 	  BENCH_history/gates.json BENCH_history/trajectory/$$sha/
 	@echo "baselines + gate timings + trajectory snapshot recorded into BENCH_history/ — commit them"
 

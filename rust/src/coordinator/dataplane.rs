@@ -98,6 +98,26 @@
 //!   join/leave: a departing member's in-flight admissions drain to
 //!   zero before its plane drops, and a joiner starts at zero — fleet
 //!   membership changes neither leak nor mint credits.
+//! * **F4: watchdog deadline monotonicity** — a straggler's drain
+//!   deadline only ever moves *forward*: every `Late` probe extends it
+//!   by the (exponentially backed-off) probe interval, and nothing ever
+//!   shortens it. A member judged `Dead` was therefore late against a
+//!   strictly growing sequence of deadlines — the watchdog can be
+//!   eager-probed without spuriously killing a member that was healthy
+//!   against an earlier, tighter deadline.
+//! * **F5: force-leave shard conservation** — when the watchdog
+//!   force-leaves a member mid-epoch, every shard in that epoch's
+//!   manifest is folded into the epoch gradient **exactly once**: the
+//!   partial drains the dead member completed are kept, its unfinished
+//!   shards are re-streamed by survivors through the rendezvous
+//!   manifest, and no shard is lost or double-reduced. The guarded
+//!   epoch's weighted gradient mean equals the single-plane reference
+//!   over the drained-shard union.
+//! * **F6: retry-budget exhaustion escalates** — transient session-open
+//!   and collective failures get a bounded retry budget with
+//!   exponential backoff; a member that exhausts the budget is
+//!   *escalated to force-leave* (F5 then covers its shards), never
+//!   retried forever and never silently dropped with its shards.
 //!
 //! Locking discipline, enforced by the `lock-across-send` and
 //! `unwrap-in-hot-path` lints: no `MutexGuard` is held across a
@@ -602,6 +622,14 @@ pub(crate) fn epoch_shuffle_seed(shuffle_seed: u64, epoch: u64) -> u64 {
     shuffle_seed ^ epoch.wrapping_mul(0x9E37_79B9)
 }
 
+/// A fault-injection hook consulted by
+/// [`open_session_checked`](DataPlane::open_session_checked) before a
+/// session is admitted. Returning an error makes the open fail without
+/// touching plane state — the seeded chaos schedules
+/// ([`fleet::faults`](crate::fleet::faults)) use this to exercise the
+/// F6 retry-then-escalate path deterministically.
+pub type SessionOpenHook = Arc<dyn Fn(&JobSpec) -> Result<()> + Send + Sync>;
+
 /// The persistent multi-tenant streaming data-plane. Construct once,
 /// open sessions against it from any number of tenants; dropping it
 /// joins the worker pool.
@@ -616,6 +644,10 @@ pub struct DataPlane {
     batcher: Batcher,
     cfg: PipelineConfig,
     next_session: AtomicU64,
+    /// Fault-injection hook for `open_session_checked` (chaos schedules
+    /// only; `None` in production). Behind a poison-tolerant mutex so a
+    /// hook that panicked in one open cannot wedge the plane.
+    open_hook: Mutex<Option<SessionOpenHook>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -680,6 +712,7 @@ impl DataPlane {
             batcher,
             cfg,
             next_session: AtomicU64::new(1),
+            open_hook: Mutex::new(None),
             workers,
         }
     }
@@ -807,6 +840,37 @@ impl DataPlane {
                 shared: Arc::clone(&self.shared),
             },
         }
+    }
+
+    /// Install (or clear, with `None`) the session-open fault hook
+    /// consulted by [`open_session_checked`](DataPlane::open_session_checked).
+    /// Plain [`open_session`](DataPlane::open_session) never consults
+    /// it, so production paths are unaffected by a stale hook.
+    pub fn set_session_open_hook(&self, hook: Option<SessionOpenHook>) {
+        *self.open_hook.lock().unwrap_or_else(PoisonError::into_inner) = hook;
+    }
+
+    /// [`open_session`](DataPlane::open_session) behind the
+    /// fault-injection hook: the hook (if any) sees the spec first and
+    /// may veto the open, in which case no plane state changes — no
+    /// session id is consumed, no credits are registered, no job is
+    /// dispatched. Without a hook this is exactly `open_session`.
+    /// Chaos schedules drive their bounded retry-with-backoff (F6)
+    /// through this entry point.
+    #[must_use = "an unchecked open failure means the member has no session and its shards will not stream"]
+    pub fn open_session_checked(&self, spec: JobSpec) -> Result<Session> {
+        // Clone the hook out so it runs without the lock held — a hook
+        // is free to (re)configure the plane or panic without wedging
+        // other opens.
+        let hook = self
+            .open_hook
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone();
+        if let Some(hook) = hook {
+            hook(&spec)?;
+        }
+        Ok(self.open_session(spec))
     }
 
     /// Persist the prepared cache (arena + every memoized edge topology)
@@ -1131,11 +1195,13 @@ fn worker_loop(shared: &Shared, batcher: &Batcher) {
                         &sess.topology,
                     )
                 }));
+                let mut graphs = 0u64;
                 let payload = match assembled {
                     Ok(Ok(stats)) => {
                         sess.record_edge_cache(stats.edge_hits, stats.edge_misses);
                         buf.serves += 1;
                         debug_assert!(buf.serves < buf.resets, "batch served without reset");
+                        graphs = buf.real_graphs() as u64;
                         Ok(BatchLease::new(buf, Arc::clone(&shared.pool)))
                     }
                     Ok(Err(e)) => {
@@ -1151,7 +1217,7 @@ fn worker_loop(shared: &Shared, batcher: &Batcher) {
                         ))
                     }
                 };
-                sess.record_assembly(t0.elapsed());
+                sess.record_assembly(t0.elapsed(), graphs);
                 deliver(shared, &tx, Delivery { idx: batch_idx, credited: true, payload });
             }
         }

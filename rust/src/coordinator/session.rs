@@ -289,6 +289,10 @@ impl std::fmt::Debug for JobSpec {
 pub struct SessionMetrics {
     /// Batches delivered into the session's stream so far.
     pub batches: u64,
+    /// Real (non-padding) graphs assembled into those batches — the
+    /// drain-progress signal the fleet watchdog probes against its
+    /// perfmodel-derived deadline.
+    pub graphs: u64,
     /// Total time assembly jobs spent queued before a worker picked
     /// them up (dispatcher latency, the QoS signal).
     pub queue_wait: Duration,
@@ -358,6 +362,7 @@ pub(crate) struct SessionState {
     pub(crate) topology: Arc<EdgeTopology>,
     // --- metrics ---
     batches: AtomicU64,
+    graphs: AtomicU64,
     queue_wait_ns: AtomicU64,
     assembly_ns: AtomicU64,
     credits_blocked_ns: AtomicU64,
@@ -413,6 +418,7 @@ impl SessionState {
             shard_size,
             topology,
             batches: AtomicU64::new(0),
+            graphs: AtomicU64::new(0),
             queue_wait_ns: AtomicU64::new(0),
             assembly_ns: AtomicU64::new(0),
             credits_blocked_ns: AtomicU64::new(0),
@@ -447,9 +453,10 @@ impl SessionState {
             .fetch_add(blocked.as_nanos() as u64, Ordering::Relaxed);
     }
 
-    pub(crate) fn record_assembly(&self, took: Duration) {
+    pub(crate) fn record_assembly(&self, took: Duration, graphs: u64) {
         self.assembly_ns.fetch_add(took.as_nanos() as u64, Ordering::Relaxed);
         self.batches.fetch_add(1, Ordering::Relaxed);
+        self.graphs.fetch_add(graphs, Ordering::Relaxed);
     }
 
     /// Attribute one assembly's edge-cache traffic to this session.
@@ -461,6 +468,7 @@ impl SessionState {
     pub(crate) fn metrics(&self) -> SessionMetrics {
         SessionMetrics {
             batches: self.batches.load(Ordering::Relaxed),
+            graphs: self.graphs.load(Ordering::Relaxed),
             queue_wait: Duration::from_nanos(self.queue_wait_ns.load(Ordering::Relaxed)),
             assembly_time: Duration::from_nanos(self.assembly_ns.load(Ordering::Relaxed)),
             credits_blocked: Duration::from_nanos(self.credits_blocked_ns.load(Ordering::Relaxed)),
@@ -557,12 +565,13 @@ mod tests {
         assert_eq!(st.credits, 1);
         let t = Instant::now();
         st.record_dispatch(t);
-        st.record_assembly(Duration::from_millis(2));
+        st.record_assembly(Duration::from_millis(2), 6);
         st.record_credit_stall_onset();
         st.record_credit_stall_cleared(Duration::from_millis(5));
         st.record_edge_cache(3, 1);
         let m = st.metrics();
         assert_eq!(m.batches, 1);
+        assert_eq!(m.graphs, 6, "drain progress counts real graphs");
         assert!(m.assembly_time >= Duration::from_millis(2));
         assert!(m.credits_blocked >= Duration::from_millis(5));
         assert_eq!(m.credit_stalls, 1);

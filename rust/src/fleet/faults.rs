@@ -1,0 +1,341 @@
+//! Deterministic fault injection for the fleet: seeded `FaultPlan`s
+//! replayable bit-for-bit.
+//!
+//! Chaos testing is only useful if a failing schedule can be replayed
+//! exactly, so nothing here reads a wall clock or an OS entropy source:
+//! a [`FaultPlan`] is a pure function of `(seed, member set, epoch
+//! count)` drawn from the project's own [`crate::util::Rng`]. The plan
+//! maps `(epoch, member)` slots to [`FaultKind`]s; the guarded epoch
+//! driver (`Fleet::run_epoch_guarded`) consults it at explicit hook
+//! points — session open, shard drain, collective join — and injects
+//! the corresponding failure on the watchdog's virtual clock.
+//!
+//! Generation keeps one seeded **anchor member** fault-free across the
+//! whole schedule, so however many members the plan kills, every epoch
+//! retains at least one survivor to absorb reassigned shards — a chaos
+//! schedule exercises recovery, never a no-quorum dead end. Damaged-
+//! cache faults only make sense before a plane first materializes its
+//! arena, so they are drawn for epoch 0 only.
+
+use std::collections::BTreeMap;
+
+use crate::fleet::manifest::MemberId;
+use crate::util::Rng;
+
+/// One injected failure mode for a `(epoch, member)` slot.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// The member drains only a `keep_fraction` prefix of its shards
+    /// and then stops responding; the watchdog must force-leave it.
+    Stall {
+        /// Fraction (0..1) of its shard list drained before the stall.
+        keep_fraction: f64,
+    },
+    /// The member drains everything, but `factor`× slower than the BSP
+    /// estimate. Must be absorbed (within deadline slack), not killed.
+    SlowDrain {
+        /// Virtual-time multiplier over the healthy drain cost (> 1).
+        factor: f64,
+    },
+    /// The member dies before draining anything this epoch.
+    Crash,
+    /// The member's `open_session` fails `times` times before
+    /// succeeding; recovered by bounded retry unless `times` exceeds
+    /// the retry budget (then escalation per invariant F6).
+    SessionOpenFail {
+        /// Consecutive open attempts that fail.
+        times: u32,
+    },
+    /// The member's contribution to the gradient collective fails
+    /// `times` times before joining; same retry/escalation contract.
+    CollectiveFail {
+        /// Consecutive collective-join attempts that fail.
+        times: u32,
+    },
+    /// The member boots from a corrupted v2 prepared-cache file and
+    /// must fall back to the cold path (`map_fallbacks` counted)
+    /// without failing or stalling the epoch. Epoch 0 only.
+    DamagedCache,
+}
+
+impl FaultKind {
+    /// Stable lowercase label for reports and the chaos JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Stall { .. } => "stall",
+            FaultKind::SlowDrain { .. } => "slow_drain",
+            FaultKind::Crash => "crash",
+            FaultKind::SessionOpenFail { .. } => "session_open_fail",
+            FaultKind::CollectiveFail { .. } => "collective_fail",
+            FaultKind::DamagedCache => "damaged_cache",
+        }
+    }
+
+    /// Whether this fault must end in a force-leave given the retry
+    /// budget (stalls and crashes always; open/collective failures
+    /// only when they outlast the budget — invariant F6).
+    pub fn is_fatal(&self, retry_budget: u32) -> bool {
+        match self {
+            FaultKind::Stall { .. } | FaultKind::Crash => true,
+            FaultKind::SessionOpenFail { times } | FaultKind::CollectiveFail { times } => {
+                *times > retry_budget
+            }
+            FaultKind::SlowDrain { .. } | FaultKind::DamagedCache => false,
+        }
+    }
+}
+
+/// Knobs for drawing a [`FaultPlan`]. Like
+/// [`WatchdogConfig`](super::watchdog::WatchdogConfig), this is the one
+/// home for fault-timing constants under `fleet/` (the
+/// `timeout-literal` tidy rule points here).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Seed for the plan; same seed + members + epochs => same plan.
+    pub seed: u64,
+    /// Epochs the plan covers (slots are drawn per epoch).
+    pub epochs: u64,
+    /// Probability a given (epoch, non-anchor member) slot faults.
+    pub fault_rate: f64,
+    /// Stall keep-fraction is drawn uniformly from this range.
+    pub stall_keep_min: f64,
+    /// Upper bound of the stall keep-fraction range.
+    pub stall_keep_max: f64,
+    /// Slow-drain factor is drawn uniformly from this range. Keep the
+    /// max below the watchdog's `slack` so slow members are absorbed.
+    pub slow_factor_min: f64,
+    /// Upper bound of the slow-drain factor range.
+    pub slow_factor_max: f64,
+    /// Session-open failure counts are drawn from `1..=open_fail_max`;
+    /// values beyond the retry budget escalate to force-leave.
+    pub open_fail_max: u32,
+    /// Collective failure counts are drawn from
+    /// `1..=collective_fail_max`.
+    pub collective_fail_max: u32,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0xC7A0_5EED,
+            epochs: 3,
+            fault_rate: 0.35,
+            stall_keep_min: 0.0,
+            stall_keep_max: 0.8,
+            slow_factor_min: 1.2,
+            slow_factor_max: 2.2,
+            open_fail_max: 5,
+            collective_fail_max: 5,
+        }
+    }
+}
+
+/// A seeded schedule of faults: `(epoch, member) -> FaultKind`.
+/// Deterministic and replayable; see the module docs.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    by_slot: BTreeMap<(u64, MemberId), FaultKind>,
+}
+
+impl FaultPlan {
+    /// The empty plan: a guarded epoch with no faults injected.
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Draw a plan for `members` from `cfg`. One seeded anchor member
+    /// is never faulted in any epoch (see module docs); all other
+    /// `(epoch, member)` slots fault independently with
+    /// `cfg.fault_rate`.
+    pub fn generate(cfg: &FaultConfig, members: &[MemberId]) -> Self {
+        let mut sorted: Vec<MemberId> = members.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        let mut rng = Rng::new(cfg.seed);
+        let anchor = if sorted.is_empty() { None } else { Some(sorted[rng.range(0, sorted.len())]) };
+        let mut plan = FaultPlan { seed: cfg.seed, by_slot: BTreeMap::new() };
+        for epoch in 0..cfg.epochs {
+            for &m in &sorted {
+                if Some(m) == anchor || !rng.chance(cfg.fault_rate) {
+                    continue;
+                }
+                plan.by_slot.insert((epoch, m), Self::draw(&mut rng, cfg, epoch));
+            }
+        }
+        plan
+    }
+
+    /// Draw one fault kind; damaged-cache only exists at epoch 0.
+    fn draw(rng: &mut Rng, cfg: &FaultConfig, epoch: u64) -> FaultKind {
+        let kinds = if epoch == 0 { 6 } else { 5 };
+        match rng.range(0, kinds) {
+            0 => FaultKind::Stall {
+                keep_fraction: rng.uniform(cfg.stall_keep_min, cfg.stall_keep_max),
+            },
+            1 => FaultKind::SlowDrain {
+                factor: rng.uniform(cfg.slow_factor_min, cfg.slow_factor_max),
+            },
+            2 => FaultKind::Crash,
+            3 => FaultKind::SessionOpenFail {
+                times: rng.range(1, cfg.open_fail_max.max(1) as usize + 1) as u32,
+            },
+            4 => FaultKind::CollectiveFail {
+                times: rng.range(1, cfg.collective_fail_max.max(1) as usize + 1) as u32,
+            },
+            _ => FaultKind::DamagedCache,
+        }
+    }
+
+    /// The fault (if any) planned for `member` in `epoch`.
+    pub fn fault(&self, epoch: u64, member: MemberId) -> Option<&FaultKind> {
+        self.by_slot.get(&(epoch, member))
+    }
+
+    /// Insert a fault by hand (tests and hand-built scenarios).
+    pub fn insert(&mut self, epoch: u64, member: MemberId, kind: FaultKind) {
+        self.by_slot.insert((epoch, member), kind);
+    }
+
+    /// All planned `(epoch, member, kind)` slots in deterministic order.
+    pub fn slots(&self) -> impl Iterator<Item = (u64, MemberId, &FaultKind)> {
+        self.by_slot.iter().map(|(&(e, m), k)| (e, m, k))
+    }
+
+    /// Number of planned fault slots.
+    pub fn len(&self) -> usize {
+        self.by_slot.len()
+    }
+
+    /// Whether the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.by_slot.is_empty()
+    }
+
+    /// The seed this plan was drawn from (0 for hand-built plans).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+/// What the guarded epoch driver did about one injected fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryAction {
+    /// Degradation absorbed in place (slow drain within slack,
+    /// damaged cache falling back cold) — nothing left the fleet.
+    Absorbed,
+    /// Transient failure recovered by bounded retry-with-backoff.
+    Retried {
+        /// Retry attempts spent before success.
+        attempts: u32,
+    },
+    /// The member was force-left and its shards reassigned.
+    ForceLeft,
+}
+
+/// One fault as actually handled during a guarded epoch: what was
+/// injected, when (virtual seconds) the driver resolved it, and how.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    /// Epoch the fault fired in.
+    pub epoch: u64,
+    /// Member the fault was injected into.
+    pub member: MemberId,
+    /// The injected fault.
+    pub kind: FaultKind,
+    /// Virtual time at which the driver resolved the fault.
+    pub detected_secs: f64,
+    /// How the driver resolved it.
+    pub action: RecoveryAction,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(n: u64) -> Vec<MemberId> {
+        (1..=n).collect()
+    }
+
+    #[test]
+    fn same_seed_same_plan() {
+        let cfg = FaultConfig { seed: 7, epochs: 5, ..Default::default() };
+        let a = FaultPlan::generate(&cfg, &ids(6));
+        let b = FaultPlan::generate(&cfg, &ids(6));
+        assert_eq!(a, b);
+        let c = FaultPlan::generate(&FaultConfig { seed: 8, ..cfg }, &ids(6));
+        assert_ne!(a, c, "different seeds draw different plans");
+    }
+
+    #[test]
+    fn some_member_survives_every_epoch() {
+        for seed in 0..20 {
+            let cfg =
+                FaultConfig { seed, epochs: 4, fault_rate: 1.0, ..Default::default() };
+            let plan = FaultPlan::generate(&cfg, &ids(5));
+            let anchored = ids(5).into_iter().any(|m| {
+                (0..cfg.epochs).all(|e| plan.fault(e, m).is_none())
+            });
+            assert!(anchored, "seed {seed}: no fault-free anchor member");
+        }
+    }
+
+    #[test]
+    fn damaged_cache_only_at_epoch_zero() {
+        for seed in 0..50 {
+            let cfg =
+                FaultConfig { seed, epochs: 6, fault_rate: 1.0, ..Default::default() };
+            let plan = FaultPlan::generate(&cfg, &ids(8));
+            for (epoch, _, kind) in plan.slots() {
+                if *kind == FaultKind::DamagedCache {
+                    assert_eq!(epoch, 0, "seed {seed}: damaged cache after boot");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn drawn_parameters_respect_config_ranges() {
+        let cfg = FaultConfig { seed: 3, epochs: 8, fault_rate: 1.0, ..Default::default() };
+        let plan = FaultPlan::generate(&cfg, &ids(10));
+        assert!(!plan.is_empty());
+        for (_, _, kind) in plan.slots() {
+            match kind {
+                FaultKind::Stall { keep_fraction } => {
+                    assert!((cfg.stall_keep_min..cfg.stall_keep_max)
+                        .contains(keep_fraction));
+                }
+                FaultKind::SlowDrain { factor } => {
+                    assert!((cfg.slow_factor_min..cfg.slow_factor_max).contains(factor));
+                }
+                FaultKind::SessionOpenFail { times } => {
+                    assert!(*times >= 1 && *times <= cfg.open_fail_max);
+                }
+                FaultKind::CollectiveFail { times } => {
+                    assert!(*times >= 1 && *times <= cfg.collective_fail_max);
+                }
+                FaultKind::Crash | FaultKind::DamagedCache => {}
+            }
+        }
+    }
+
+    #[test]
+    fn fatality_tracks_the_retry_budget() {
+        assert!(FaultKind::Crash.is_fatal(3));
+        assert!(FaultKind::Stall { keep_fraction: 0.5 }.is_fatal(3));
+        assert!(!FaultKind::SlowDrain { factor: 1.5 }.is_fatal(3));
+        assert!(!FaultKind::DamagedCache.is_fatal(3));
+        assert!(!FaultKind::SessionOpenFail { times: 3 }.is_fatal(3));
+        assert!(FaultKind::SessionOpenFail { times: 4 }.is_fatal(3));
+        assert!(!FaultKind::CollectiveFail { times: 2 }.is_fatal(3));
+        assert!(FaultKind::CollectiveFail { times: 5 }.is_fatal(3));
+    }
+
+    #[test]
+    fn empty_plan_is_empty() {
+        let plan = FaultPlan::none();
+        assert!(plan.is_empty());
+        assert_eq!(plan.len(), 0);
+        assert_eq!(plan.fault(0, 1), None);
+    }
+}

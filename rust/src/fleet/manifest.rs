@@ -137,6 +137,59 @@ impl ShardManifest {
         Assignment { generation, by_member }
     }
 
+    /// Weighted rendezvous key: the classic logarithm trick maps the
+    /// uniform 64-bit score into `u ∈ (0,1)` and scores the member as
+    /// `-ln(u) / weight` — an Exp(weight) draw, so minimizing the key
+    /// gives each member a shard share proportional to its weight while
+    /// keeping the minimal-movement property (each shard's key per
+    /// member is independent of the rest of the member set).
+    fn weighted_key(&self, shard: ShardId, member: MemberId, weight: f64) -> f64 {
+        let u = (self.score(shard, member) as f64 + 0.5) / (u64::MAX as f64 + 1.0);
+        -u.ln() / weight
+    }
+
+    /// The owning member of `shard` under weighted rendezvous: expected
+    /// shard share is proportional to each member's weight. Weights
+    /// must be finite and > 0; a uniform weight vector delegates to the
+    /// unweighted [`owner`](ShardManifest::owner) so existing fleets
+    /// keep their exact assignments (ties toward the larger id, like
+    /// the unweighted path).
+    pub fn owner_weighted(&self, shard: ShardId, members: &[(MemberId, f64)]) -> MemberId {
+        assert!(!members.is_empty(), "owner_weighted() over an empty member set");
+        for &(m, w) in members {
+            assert!(w.is_finite() && w > 0.0, "member {m:#x} has invalid weight {w}");
+        }
+        if members.iter().all(|&(_, w)| w == members[0].1) {
+            let ids: Vec<MemberId> = members.iter().map(|&(m, _)| m).collect();
+            return self.owner(shard, &ids);
+        }
+        let mut best = (self.weighted_key(shard, members[0].0, members[0].1), members[0].0);
+        for &(m, w) in &members[1..] {
+            let key = self.weighted_key(shard, m, w);
+            if key < best.0 || (key == best.0 && m > best.1) {
+                best = (key, m);
+            }
+        }
+        best.1
+    }
+
+    /// Weighted counterpart of [`assign`](ShardManifest::assign): every
+    /// shard mapped to its weighted-rendezvous winner. A uniform weight
+    /// vector produces exactly the unweighted assignment.
+    pub fn assign_weighted(&self, generation: u64, members: &[(MemberId, f64)]) -> Assignment {
+        assert!(!members.is_empty(), "assign_weighted() over an empty member set");
+        let mut by_member: BTreeMap<MemberId, Vec<ShardId>> =
+            members.iter().map(|&(m, _)| (m, Vec::new())).collect();
+        for shard in 0..self.n_shards {
+            let owner = self.owner_weighted(shard, members);
+            by_member
+                .get_mut(&owner)
+                .expect("owner_weighted() returned a member outside the member set")
+                .push(shard);
+        }
+        Assignment { generation, by_member }
+    }
+
     /// Encode the manifest plus the current membership into the v1 wire
     /// format (module docs) — the bytes a joining host bootstraps from.
     pub fn encode(&self, membership: &Membership) -> Vec<u8> {
@@ -370,6 +423,51 @@ mod tests {
         for s in 0..m.n_shards() {
             if old.owner_of(s) != Some(2) {
                 assert_eq!(left.owner_of(s), old.owner_of(s));
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_weights_reproduce_the_unweighted_assignment() {
+        let m = manifest(1000, 16);
+        let members = [3u64, 17, 42, 99];
+        let weighted: Vec<(MemberId, f64)> = members.iter().map(|&id| (id, 1.0)).collect();
+        assert_eq!(m.assign_weighted(5, &weighted), m.assign(5, &members));
+        // Any other uniform weight too — only the *ratios* matter.
+        let scaled: Vec<(MemberId, f64)> = members.iter().map(|&id| (id, 2.5)).collect();
+        assert_eq!(m.assign_weighted(5, &scaled), m.assign(5, &members));
+    }
+
+    #[test]
+    fn weighted_assignment_is_complete_and_tracks_weights() {
+        let m = manifest(4000, 8); // 500 shards: enough for share statistics
+        let members = [(1u64, 4.0), (2u64, 1.0), (3u64, 1.0), (4u64, 0.25)];
+        let a = m.assign_weighted(0, &members);
+        assert_eq!(a.total_shards(), m.n_shards() as usize, "F1: complete");
+        for s in 0..m.n_shards() {
+            assert!(a.owner_of(s).is_some(), "F1: no orphan shards");
+        }
+        let (heavy, light) = (a.shards(1).len(), a.shards(4).len());
+        let mid = a.shards(2).len().max(a.shards(3).len());
+        assert!(heavy > mid, "weight 4.0 member owns the most shards ({heavy} vs {mid})");
+        assert!(light < a.shards(2).len().min(a.shards(3).len()), "weight 0.25 owns least");
+        // deterministic: member order must not matter
+        let b = m.assign_weighted(0, &[(4, 0.25), (3, 1.0), (2, 1.0), (1, 4.0)]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn weighted_movement_is_minimal_on_leave() {
+        let m = manifest(2000, 8);
+        let members = [(1u64, 2.0), (2u64, 1.0), (3u64, 0.5)];
+        let old = m.assign_weighted(1, &members);
+        let survivors = [(1u64, 2.0), (3u64, 0.5)];
+        let new = m.assign_weighted(2, &survivors);
+        // Only the leaver's shards move: survivors keep every shard
+        // they already owned (per-member keys are set-independent).
+        for s in 0..m.n_shards() {
+            if old.owner_of(s) != Some(2) {
+                assert_eq!(new.owner_of(s), old.owner_of(s));
             }
         }
     }

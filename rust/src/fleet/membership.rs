@@ -107,6 +107,30 @@ impl Membership {
         Ok(())
     }
 
+    /// Remove `id` from the fleet **immediately**, bumping the
+    /// generation: the recovery flip the watchdog uses when a member
+    /// misses its drain deadline mid-epoch. Unlike
+    /// [`leave`](Membership::leave)+[`flip`](Membership::flip), this
+    /// removes *only* the dead member — staged Joining members stay
+    /// staged (a recovery flip must not smuggle a cold plane into a
+    /// half-drained epoch) and Draining members keep draining. Errors
+    /// on unknown ids and on Joining ids (a joiner owns nothing, so
+    /// there is nothing to force out — unstage it with `leave`).
+    #[must_use = "an unchecked force-leave error means the dead member still owns shards"]
+    pub fn force_leave(&mut self, id: MemberId) -> Result<GenerationChange> {
+        match self.members.get(&id) {
+            None => bail!("member {id:#x} not in the fleet"),
+            Some(MemberState::Joining) => {
+                bail!("member {id:#x} is still joining; unstage it with leave()")
+            }
+            Some(MemberState::Active | MemberState::Draining) => {
+                self.members.remove(&id);
+            }
+        }
+        self.generation += 1;
+        Ok(GenerationChange { generation: self.generation, joined: Vec::new(), left: vec![id] })
+    }
+
     /// Apply staged changes at an epoch boundary: promote Joining →
     /// Active, remove Draining, and bump the generation iff the active
     /// set changed. A flip with nothing staged is a no-op (same
@@ -210,6 +234,37 @@ mod tests {
         m.flip();
         m.leave(3).unwrap();
         assert!(m.leave(3).is_err(), "already draining");
+    }
+
+    #[test]
+    fn force_leave_removes_only_the_dead_member() {
+        let mut m = Membership::new();
+        m.join(1).unwrap();
+        m.join(2).unwrap();
+        m.flip();
+        m.join(3).unwrap(); // staged joiner must survive the recovery flip
+        let gen_before = m.generation();
+        let c = m.force_leave(2).unwrap();
+        assert_eq!(c.generation, gen_before + 1, "recovery flip bumps the generation");
+        assert_eq!(c.left, vec![2]);
+        assert!(c.joined.is_empty(), "recovery flip never promotes joiners");
+        assert_eq!(m.active(), vec![1]);
+        assert_eq!(m.state(3), Some(MemberState::Joining), "joiner still staged");
+        // The staged joiner promotes at the next ordinary flip.
+        let c = m.flip();
+        assert_eq!(c.joined, vec![3]);
+    }
+
+    #[test]
+    fn force_leave_rejects_unknown_and_joining_members() {
+        let mut m = Membership::new();
+        assert!(m.force_leave(9).is_err(), "unknown member");
+        m.join(1).unwrap();
+        assert!(m.force_leave(1).is_err(), "joiner owns nothing to force out");
+        m.flip();
+        m.leave(1).unwrap(); // draining members can still die mid-epoch
+        assert!(m.force_leave(1).is_ok());
+        assert_eq!(m.state(1), None);
     }
 
     #[test]

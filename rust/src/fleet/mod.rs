@@ -94,17 +94,54 @@
 //! stream fingerprint, weighted-mean gradient) are identical between
 //! the serial and overlapped schedules; only the wall clock differs.
 //!
+//! # Chaos and self-healing
+//!
+//! Two further modules harden the fleet against the failures pod scale
+//! makes routine:
+//!
+//! * [`faults`] — a seeded, deterministic [`FaultPlan`] (stall, slow
+//!   drain, crash, session-open failure, collective failure, damaged
+//!   cache) injected through explicit hooks in
+//!   [`Fleet::run_epoch_guarded`] and the `DataPlane` session-open
+//!   path. No wall-clock randomness anywhere: any schedule replays
+//!   bit-for-bit from its seed.
+//! * [`watchdog`] — per-member drain progress vs a deadline derived
+//!   from the `perfmodel` BSP estimate, on a pure virtual clock, with
+//!   exponential backoff on re-probes (invariant F4). A member that
+//!   misses its deadline is force-left via a **recovery generation
+//!   flip** ([`Membership::force_leave`] — removes only the dead
+//!   member, never promotes staged joiners), its unfinished shards are
+//!   reassigned to survivors through the rendezvous manifest, and the
+//!   epoch completes with the weighted gradient mean still exactly
+//!   equal to the single-plane reference over the drained-shard union
+//!   (invariant F5). Session-open and collective failures get bounded
+//!   retry-with-backoff before escalating to force-leave (invariant
+//!   F6). Measured per-member drain rates feed
+//!   [`Fleet::reweight_from_rates`], so a chronically slow plane owns
+//!   fewer shards next generation ([`ShardManifest::assign_weighted`])
+//!   instead of being repeatedly force-left.
+//!
+//! `molpack fleet --chaos` drives seeded fault schedules end-to-end and
+//! asserts the recovery invariants; `make chaos` is the CI entry point.
+//!
 //! [`datasets::persist::SourceFingerprint`]: crate::datasets::SourceFingerprint
 
+/// Deterministic seeded fault injection (chaos schedules).
+pub mod faults;
 /// Shard manifest: fingerprint-keyed shards + rendezvous assignment.
 pub mod manifest;
 /// Membership/epoch protocol: staged joins/leaves, generation flips.
 pub mod membership;
 /// Multi-plane epoch scheduler with the overlapped collective schedule.
 pub mod scheduler;
+/// Straggler watchdog: virtual-clock deadlines, probes, drain rates.
+pub mod watchdog;
 
+pub use faults::{FaultConfig, FaultEvent, FaultKind, FaultPlan, RecoveryAction};
 pub use manifest::{Assignment, MemberId, ShardId, ShardManifest};
 pub use membership::{GenerationChange, MemberState, Membership};
 pub use scheduler::{
-    reference_epoch, Fleet, FleetConfig, FleetEpochReport, GradSketch, RebalanceReport, Schedule,
+    reference_epoch, Fleet, FleetConfig, FleetEpochReport, GradSketch, GuardedEpochReport,
+    RebalanceReport, Schedule,
 };
+pub use watchdog::{Verdict, Watchdog, WatchdogConfig};

@@ -31,18 +31,22 @@
 //! [`JobSpec::with_subset`]: crate::coordinator::JobSpec::with_subset
 //! [`optim::collective::allreduce_mean_weighted`]: crate::optim::collective::allreduce_mean_weighted
 
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::dataplane::{DataPlane, PipelineConfig, Session};
 use crate::coordinator::session::JobSpec;
 use crate::datasets::persist::{fnv1a64_update, FNV_SEED};
 use crate::datasets::{fingerprint, MoleculeSource, PreparedStats};
-use crate::fleet::manifest::{Assignment, MemberId, ShardManifest};
-use crate::fleet::membership::{GenerationChange, Membership};
+use crate::fleet::faults::{FaultEvent, FaultKind, FaultPlan, RecoveryAction};
+use crate::fleet::manifest::{Assignment, MemberId, ShardId, ShardManifest};
+use crate::fleet::membership::{GenerationChange, MemberState, Membership};
+use crate::fleet::watchdog::{Verdict, Watchdog};
 use crate::optim::collective::allreduce_mean_weighted;
 use crate::runtime::HostBatch;
 
@@ -104,6 +108,15 @@ pub struct GradSketch {
     pub graphs: usize,
     /// Batches absorbed.
     pub batches: usize,
+}
+
+/// Clamp a rate ratio into the manifest weight band `[0.25, 4.0]` and
+/// quantize to sixteenths: measurement noise must not churn shard
+/// assignments every epoch, and uniform fleets must stay *exactly*
+/// uniform (the weighted manifest delegates to the unweighted owner
+/// function only on exact equality).
+fn quantize_weight(ratio: f64) -> f64 {
+    (ratio.clamp(0.25, 4.0) * 16.0).round() / 16.0
 }
 
 fn splitmix64(mut x: u64) -> u64 {
@@ -228,6 +241,34 @@ pub struct RebalanceReport {
     pub survivor_arenas_kept: usize,
 }
 
+/// One epoch's fleet-level result under fault injection: the ordinary
+/// [`FleetEpochReport`] plus what went wrong and how recovery resolved
+/// it. Produced by [`Fleet::run_epoch_guarded`].
+#[derive(Debug, Clone)]
+pub struct GuardedEpochReport {
+    /// The epoch result — `stream_xor`/`grad` must equal the
+    /// single-plane reference over the drained-shard union despite
+    /// every injected fault.
+    pub report: FleetEpochReport,
+    /// Every injected fault with its detection time and resolution.
+    pub events: Vec<FaultEvent>,
+    /// Members force-left by recovery flips this epoch, in order.
+    pub forced_leaves: Vec<MemberId>,
+    /// Shards reassigned to survivors after force-leaves (F5: exactly
+    /// the shards the dead members never drained).
+    pub makeup_shards: usize,
+    /// Retry attempts spent on session-open/collective failures.
+    pub retries: u32,
+    /// Virtual seconds the epoch took on the watchdog clock (drains,
+    /// backoffs, and probe waits — deterministic under replay).
+    pub virtual_secs: f64,
+    /// Members active before the epoch that are still in the fleet.
+    pub survivors: usize,
+    /// Survivors whose prepared arena was kept byte-for-byte (F2; must
+    /// equal `survivors`).
+    pub survivor_arenas_kept: usize,
+}
+
 struct FleetMember {
     id: MemberId,
     plane: DataPlane,
@@ -244,6 +285,9 @@ pub struct Fleet {
     membership: Membership,
     assignment: Option<Assignment>,
     members: Vec<FleetMember>,
+    /// Per-member throughput weights for the weighted shard manifest
+    /// (1.0 = nominal; fed by `reweight_from_rates`).
+    weights: BTreeMap<MemberId, f64>,
 }
 
 impl Fleet {
@@ -265,6 +309,7 @@ impl Fleet {
             membership: Membership::new(),
             assignment: None,
             members: Vec::new(),
+            weights: BTreeMap::new(),
         })
     }
 
@@ -289,13 +334,19 @@ impl Fleet {
     /// while the current generation keeps running untouched.
     #[must_use = "an unchecked join error means the member has no plane and was not staged"]
     pub fn join(&mut self, id: MemberId) -> Result<()> {
+        self.join_with_pipeline(id, self.cfg.pipeline.clone())
+    }
+
+    /// [`join`](Fleet::join) with a member-specific plane
+    /// configuration — e.g. a distinct `cache_dir` per member, so one
+    /// member can boot from a (possibly damaged) persisted cache while
+    /// the rest build cold.
+    #[must_use = "an unchecked join error means the member has no plane and was not staged"]
+    pub fn join_with_pipeline(&mut self, id: MemberId, pipeline: PipelineConfig) -> Result<()> {
         self.membership.join(id)?;
-        let plane = DataPlane::new(
-            Arc::clone(&self.source),
-            self.batcher.clone(),
-            self.cfg.pipeline.clone(),
-        );
+        let plane = DataPlane::new(Arc::clone(&self.source), self.batcher.clone(), pipeline);
         self.members.push(FleetMember { id, plane });
+        self.weights.entry(id).or_insert(1.0);
         Ok(())
     }
 
@@ -308,6 +359,7 @@ impl Fleet {
         if self.membership.state(id).is_none() {
             // was Joining: unstaged immediately, plane goes with it
             self.members.retain(|m| m.id != id);
+            self.weights.remove(&id);
         }
         Ok(())
     }
@@ -318,24 +370,60 @@ impl Fleet {
     /// arena was rebuilt) — the fleet-wide analogue of the serve
     /// restart cost PR 5 killed for one process.
     pub fn rebalance(&mut self) -> RebalanceReport {
-        // Survivor evidence *before* the flip: arena identity + how much
-        // of it is materialized.
-        let before: Vec<(MemberId, usize, u64)> = self
-            .members
+        let before = self.arena_evidence();
+        let change = self.membership.flip();
+        self.settle(change, &before)
+    }
+
+    /// Remove `id` from the fleet *immediately* — the recovery flip the
+    /// watchdog escalates to when a member misses its drain deadline
+    /// mid-epoch. Bumps the generation, drops the dead member's plane,
+    /// and re-derives the (weighted) assignment for the survivors;
+    /// staged joiners stay staged (see
+    /// [`Membership::force_leave`]). The in-flight epoch keeps running
+    /// under its pre-flip assignment snapshot; the caller reassigns the
+    /// dead member's unfinished shards via the manifest (F5).
+    #[must_use = "an unchecked force-leave error means the dead member still owns shards"]
+    pub fn force_leave(&mut self, id: MemberId) -> Result<RebalanceReport> {
+        let before = self.arena_evidence();
+        let change = self.membership.force_leave(id)?;
+        Ok(self.settle(change, &before))
+    }
+
+    /// Survivor evidence *before* a flip: per-member arena identity +
+    /// how much of it is materialized (the F2 witnesses).
+    fn arena_evidence(&self) -> Vec<(MemberId, usize, u64)> {
+        self.members
             .iter()
             .map(|m| {
                 let stats = m.plane.prepared_stats();
                 (m.id, Arc::as_ptr(m.plane.prepared()) as *const u8 as usize, stats.segments_built)
             })
-            .collect();
-        let change = self.membership.flip();
+            .collect()
+    }
+
+    /// Apply a membership change to the fleet: drop departed members'
+    /// planes and weights, derive the new generation's (weighted)
+    /// assignment, and verify invariant F2 against the pre-flip
+    /// `before` evidence — no survivor's prepared arena may be rebuilt
+    /// by any flip, ordinary or recovery.
+    fn settle(
+        &mut self,
+        change: GenerationChange,
+        before: &[(MemberId, usize, u64)],
+    ) -> RebalanceReport {
         self.members.retain(|m| !change.left.contains(&m.id));
+        for id in &change.left {
+            self.weights.remove(id);
+        }
         let active = self.membership.active();
         let prev = self.assignment.take();
         let next = if active.is_empty() {
             None
         } else {
-            Some(self.manifest.assign(self.membership.generation(), &active))
+            let weighted: Vec<(MemberId, f64)> =
+                active.iter().map(|&m| (m, self.weight(m))).collect();
+            Some(self.manifest.assign_weighted(self.membership.generation(), &weighted))
         };
         let shards_moved = match (&prev, &next) {
             (Some(p), Some(n)) => n.moved_from(p),
@@ -362,6 +450,53 @@ impl Fleet {
         }
         debug_assert_eq!(kept, survivors, "F2: a rebalance rebuilt a warm arena");
         RebalanceReport { change, shards_moved, survivors, survivor_arenas_kept: kept }
+    }
+
+    /// The throughput weight of `id` in the shard manifest (1.0 =
+    /// nominal; unknown members are nominal).
+    pub fn weight(&self, id: MemberId) -> f64 {
+        self.weights.get(&id).copied().unwrap_or(1.0)
+    }
+
+    /// Feed measured per-member drain rates (graphs per virtual second,
+    /// from [`Watchdog::measured_rates`]) back into the shard manifest:
+    /// each member's weight becomes its rate over the fleet median,
+    /// clamped to `[0.25, 4.0]` and quantized to sixteenths so noise
+    /// cannot churn assignments. The next flip (or `rebalance`) derives
+    /// a weighted assignment where a chronically slow plane owns fewer
+    /// shards instead of being repeatedly force-left. Returns how many
+    /// members' weights changed.
+    pub fn reweight_from_rates(&mut self, rates: &BTreeMap<MemberId, f64>) -> usize {
+        let mut measured: Vec<f64> = self
+            .members
+            .iter()
+            .filter_map(|m| rates.get(&m.id))
+            .copied()
+            .filter(|r| *r > 0.0 && r.is_finite())
+            .collect();
+        if measured.is_empty() {
+            return 0;
+        }
+        measured.sort_by(f64::total_cmp);
+        let median = measured[measured.len() / 2];
+        if median <= 0.0 {
+            return 0;
+        }
+        let mut changed = 0;
+        let ids: Vec<MemberId> = self.members.iter().map(|m| m.id).collect();
+        for id in ids {
+            let Some(&rate) = rates.get(&id) else { continue };
+            if !(rate > 0.0 && rate.is_finite()) {
+                continue;
+            }
+            let w = quantize_weight(rate / median);
+            let entry = self.weights.entry(id).or_insert(1.0);
+            if (*entry - w).abs() > f64::EPSILON {
+                *entry = w;
+                changed += 1;
+            }
+        }
+        changed
     }
 
     /// Prepared-cache statistics of one member's plane (warm-arena
@@ -529,6 +664,445 @@ impl Fleet {
         }
         Ok(reports)
     }
+
+    /// Run one epoch under fault injection and self-healing: consult
+    /// `plan` at every hook point (session open, shard drain,
+    /// collective join), track per-member drain progress on
+    /// `watchdog`'s virtual clock, and recover from every injected
+    /// fault so the epoch's gradient stream still equals the
+    /// single-plane reference over the union of drained shards.
+    ///
+    /// Recovery contract, per fault kind:
+    /// * `Stall`/`Crash` — the member stops mid-drain (or never
+    ///   starts); the watchdog probes it past its deadline (F4), the
+    ///   member is force-left via a recovery generation flip, and its
+    ///   unfinished shards are reassigned to survivors through the
+    ///   weighted rendezvous manifest (F5: each shard folded into the
+    ///   collective exactly once — partial drains are kept).
+    /// * `SlowDrain` — absorbed: the deadline slack covers it; the
+    ///   member's measured rate feeds `reweight_from_rates`.
+    /// * `SessionOpenFail`/`CollectiveFail` — bounded
+    ///   retry-with-backoff on the virtual clock; once the retry budget
+    ///   is exhausted the member escalates to force-leave (F6).
+    /// * `DamagedCache` — absorbed at plane construction (the mapped
+    ///   cache falls back to the cold path); the epoch just records it.
+    ///
+    /// `secs_per_graph` is the BSP-modeled per-graph drain cost from
+    /// [`crate::perfmodel::fleet_secs_per_graph`]; deadlines derive
+    /// from it (expected graphs × cost × slack).
+    #[must_use = "an unchecked guarded-epoch error means recovery failed and the step never happened"]
+    pub fn run_epoch_guarded(
+        &mut self,
+        epoch: u64,
+        watchdog: &mut Watchdog,
+        plan: &FaultPlan,
+        secs_per_graph: f64,
+    ) -> Result<GuardedEpochReport> {
+        let Some(assignment) = self.assignment.clone() else {
+            bail!("no assignment: join members and rebalance before running epochs");
+        };
+        let t0 = Instant::now();
+        let epoch_start = watchdog.now();
+        let before = self.arena_evidence();
+        let budget = watchdog.cfg().retry_budget;
+
+        struct Intent {
+            id: MemberId,
+            shards: Vec<ShardId>,
+            fault: Option<FaultKind>,
+        }
+        let mut intents: Vec<Intent> = Vec::new();
+        for m in &self.members {
+            if self.membership.state(m.id).is_none() {
+                continue;
+            }
+            intents.push(Intent {
+                id: m.id,
+                shards: assignment.shards(m.id).to_vec(),
+                fault: plan.fault(epoch, m.id).cloned(),
+            });
+        }
+        if intents.is_empty() {
+            bail!("guarded epoch {epoch} has no active members");
+        }
+        let expected: Vec<(MemberId, u64)> =
+            intents.iter().map(|i| (i.id, self.shard_graphs(&i.shards))).collect();
+        watchdog.begin_epoch(&expected, secs_per_graph);
+
+        let mut events: Vec<FaultEvent> = Vec::new();
+        let mut parts: Vec<(MemberId, GradSketch)> = Vec::new();
+        let mut makeup: Vec<ShardId> = Vec::new();
+        let mut forced: Vec<MemberId> = Vec::new();
+        let mut retries = 0u32;
+        let mut coverage: BTreeMap<ShardId, u32> = BTreeMap::new();
+        let mut assembly_secs = 0.0;
+        let mut batches = 0usize;
+
+        for intent in &intents {
+            let id = intent.id;
+            match intent.fault.clone() {
+                Some(FaultKind::Crash) => {
+                    // Dead before draining anything: silence until the
+                    // probe budget runs out, then schedule the kill.
+                    await_death(watchdog, id);
+                    events.push(FaultEvent {
+                        epoch,
+                        member: id,
+                        kind: FaultKind::Crash,
+                        detected_secs: watchdog.now(),
+                        action: RecoveryAction::ForceLeft,
+                    });
+                    forced.push(id);
+                    makeup.extend_from_slice(&intent.shards);
+                }
+                Some(FaultKind::Stall { keep_fraction }) => {
+                    // Drains a prefix of its shards, then goes silent.
+                    let keep = ((intent.shards.len() as f64 * keep_fraction) as usize)
+                        .min(intent.shards.len().saturating_sub(1));
+                    let (drained, withheld) = intent.shards.split_at(keep);
+                    if !drained.is_empty() {
+                        let session = self
+                            .member_plane(id)?
+                            .open_session(self.subset_spec(drained, epoch));
+                        let (sketch, a, b) = self.drain_one(id, session)?;
+                        let graphs = sketch.graphs as u64;
+                        let end = epoch_start + graphs as f64 * secs_per_graph;
+                        watchdog.advance_to(end);
+                        watchdog.progress_at(id, graphs, end);
+                        for &s in drained {
+                            *coverage.entry(s).or_insert(0) += 1;
+                        }
+                        assembly_secs += a;
+                        batches += b;
+                        // The partial drain is kept: the collective
+                        // covers the union of drained shards.
+                        parts.push((id, sketch));
+                    }
+                    await_death(watchdog, id);
+                    events.push(FaultEvent {
+                        epoch,
+                        member: id,
+                        kind: FaultKind::Stall { keep_fraction },
+                        detected_secs: watchdog.now(),
+                        action: RecoveryAction::ForceLeft,
+                    });
+                    forced.push(id);
+                    makeup.extend_from_slice(withheld);
+                }
+                Some(FaultKind::SessionOpenFail { times }) => {
+                    match self.open_with_faults(id, &intent.shards, epoch, times, watchdog, &mut retries)? {
+                        Some((session, attempts)) => {
+                            let (sketch, a, b) = self.drain_one(id, session)?;
+                            let graphs = sketch.graphs as u64;
+                            let end = epoch_start + graphs as f64 * secs_per_graph;
+                            watchdog.advance_to(end);
+                            watchdog.progress_at(id, graphs, end);
+                            for &s in &intent.shards {
+                                *coverage.entry(s).or_insert(0) += 1;
+                            }
+                            assembly_secs += a;
+                            batches += b;
+                            parts.push((id, sketch));
+                            events.push(FaultEvent {
+                                epoch,
+                                member: id,
+                                kind: FaultKind::SessionOpenFail { times },
+                                detected_secs: watchdog.now(),
+                                action: RecoveryAction::Retried { attempts },
+                            });
+                        }
+                        None => {
+                            // F6: retry budget exhausted => escalate.
+                            events.push(FaultEvent {
+                                epoch,
+                                member: id,
+                                kind: FaultKind::SessionOpenFail { times },
+                                detected_secs: watchdog.now(),
+                                action: RecoveryAction::ForceLeft,
+                            });
+                            forced.push(id);
+                            makeup.extend_from_slice(&intent.shards);
+                        }
+                    }
+                }
+                Some(FaultKind::CollectiveFail { times }) => {
+                    let session =
+                        self.member_plane(id)?.open_session(self.subset_spec(&intent.shards, epoch));
+                    let (sketch, a, b) = self.drain_one(id, session)?;
+                    let graphs = sketch.graphs as u64;
+                    let end = epoch_start + graphs as f64 * secs_per_graph;
+                    watchdog.advance_to(end);
+                    watchdog.progress_at(id, graphs, end);
+                    // Its contribution now tries to join the collective:
+                    // bounded retry-with-backoff, then escalation (F6).
+                    let mut attempts = 0u32;
+                    let mut failures_left = times;
+                    let joined = loop {
+                        if failures_left == 0 {
+                            break true;
+                        }
+                        if attempts >= budget {
+                            break false;
+                        }
+                        watchdog.advance(watchdog.retry_backoff(attempts));
+                        attempts += 1;
+                        retries += 1;
+                        failures_left -= 1;
+                    };
+                    if joined {
+                        for &s in &intent.shards {
+                            *coverage.entry(s).or_insert(0) += 1;
+                        }
+                        assembly_secs += a;
+                        batches += b;
+                        parts.push((id, sketch));
+                        events.push(FaultEvent {
+                            epoch,
+                            member: id,
+                            kind: FaultKind::CollectiveFail { times },
+                            detected_secs: watchdog.now(),
+                            action: RecoveryAction::Retried { attempts },
+                        });
+                    } else {
+                        // The member's contribution never joined: drop
+                        // its sketch whole and re-stream its shards on
+                        // survivors, keeping every shard single-counted.
+                        events.push(FaultEvent {
+                            epoch,
+                            member: id,
+                            kind: FaultKind::CollectiveFail { times },
+                            detected_secs: watchdog.now(),
+                            action: RecoveryAction::ForceLeft,
+                        });
+                        forced.push(id);
+                        makeup.extend_from_slice(&intent.shards);
+                    }
+                }
+                other => {
+                    // Healthy, SlowDrain (absorbed: slower virtual
+                    // drain within deadline slack), or DamagedCache
+                    // (absorbed at plane construction).
+                    let factor = match &other {
+                        Some(FaultKind::SlowDrain { factor }) => *factor,
+                        _ => 1.0,
+                    };
+                    let session =
+                        self.member_plane(id)?.open_session(self.subset_spec(&intent.shards, epoch));
+                    let (sketch, a, b) = self.drain_one(id, session)?;
+                    let graphs = sketch.graphs as u64;
+                    let end = epoch_start + graphs as f64 * secs_per_graph * factor;
+                    watchdog.advance_to(end);
+                    watchdog.progress_at(id, graphs, end);
+                    for &s in &intent.shards {
+                        *coverage.entry(s).or_insert(0) += 1;
+                    }
+                    assembly_secs += a;
+                    batches += b;
+                    parts.push((id, sketch));
+                    if let Some(kind) = other {
+                        events.push(FaultEvent {
+                            epoch,
+                            member: id,
+                            kind,
+                            detected_secs: watchdog.now(),
+                            action: RecoveryAction::Absorbed,
+                        });
+                    }
+                }
+            }
+        }
+
+        // Recovery flips: one generation bump per dead member. The
+        // running epoch stays on its pre-flip assignment snapshot.
+        for &id in &forced {
+            self.force_leave(id)
+                .with_context(|| format!("force-leaving dead member {id:#x}"))?;
+        }
+
+        // Makeup round: the dead members' unfinished shards, grouped by
+        // their weighted-rendezvous owner among the survivors (F5).
+        let makeup_shards = makeup.len();
+        if !makeup.is_empty() {
+            let survivors: Vec<(MemberId, f64)> = self
+                .members
+                .iter()
+                .filter(|m| {
+                    matches!(
+                        self.membership.state(m.id),
+                        Some(MemberState::Active | MemberState::Draining)
+                    )
+                })
+                .map(|m| (m.id, self.weight(m.id)))
+                .collect();
+            if survivors.is_empty() {
+                bail!(
+                    "epoch {epoch}: every member failed; {} shards unrecoverable",
+                    makeup.len()
+                );
+            }
+            let mut by_owner: BTreeMap<MemberId, Vec<ShardId>> = BTreeMap::new();
+            for &s in &makeup {
+                by_owner.entry(self.manifest.owner_weighted(s, &survivors)).or_default().push(s);
+            }
+            for (id, shards) in by_owner {
+                let session =
+                    self.member_plane(id)?.open_session(self.subset_spec(&shards, epoch));
+                let (sketch, a, b) = self.drain_one(id, session)?;
+                let graphs = sketch.graphs as u64;
+                // Makeup streams after the primary drains: serial
+                // virtual cost on top of the epoch.
+                watchdog.advance(graphs as f64 * secs_per_graph);
+                watchdog.progress(id, graphs);
+                for &s in &shards {
+                    *coverage.entry(s).or_insert(0) += 1;
+                }
+                assembly_secs += a;
+                batches += b;
+                parts.push((id, sketch));
+            }
+        }
+
+        // F5: every shard of the epoch's assignment folded into the
+        // collective exactly once — lost and double-reduced shards both
+        // fail loudly (the XOR fingerprint alone would cancel pairs).
+        for shard in 0..self.manifest.n_shards() {
+            match coverage.get(&shard).copied().unwrap_or(0) {
+                1 => {}
+                0 => bail!("F5: shard {shard} lost in epoch {epoch}"),
+                k => bail!("F5: shard {shard} reduced {k} times in epoch {epoch}"),
+            }
+        }
+
+        // F2 across the whole epoch (including recovery flips): every
+        // surviving member kept its prepared arena.
+        let mut survivors = 0usize;
+        let mut kept = 0usize;
+        for m in &self.members {
+            let Some(&(_, ptr, built)) = before.iter().find(|(id, _, _)| *id == m.id) else {
+                continue;
+            };
+            survivors += 1;
+            let stats = m.plane.prepared_stats();
+            if Arc::as_ptr(m.plane.prepared()) as *const u8 as usize == ptr
+                && stats.segments_built >= built
+            {
+                kept += 1;
+            }
+        }
+
+        let mut report = self.combine(epoch, &parts);
+        report.members = intents.len();
+        report.secs = t0.elapsed().as_secs_f64();
+        report.assembly_secs = assembly_secs;
+        report.batches = batches;
+        Ok(GuardedEpochReport {
+            report,
+            events,
+            forced_leaves: forced,
+            makeup_shards,
+            retries,
+            virtual_secs: watchdog.now() - epoch_start,
+            survivors,
+            survivor_arenas_kept: kept,
+        })
+    }
+
+    /// The plane of member `id`, or an error naming it.
+    fn member_plane(&self, id: MemberId) -> Result<&DataPlane> {
+        self.members
+            .iter()
+            .find(|m| m.id == id)
+            .map(|m| &m.plane)
+            .ok_or_else(|| anyhow!("member {id:#x} has no plane"))
+    }
+
+    /// The training `JobSpec` streaming exactly `shards` in epoch
+    /// `epoch` (molecule ids in shard order, fleet session credits).
+    fn subset_spec(&self, shards: &[ShardId], epoch: u64) -> JobSpec {
+        let mut ids = Vec::new();
+        for &s in shards {
+            ids.extend(self.manifest.shard_range(s));
+        }
+        JobSpec::training(epoch).with_subset(Arc::new(ids)).with_credits(self.cfg.session_credits)
+    }
+
+    /// Total molecules across `shards`.
+    fn shard_graphs(&self, shards: &[ShardId]) -> u64 {
+        shards.iter().map(|&s| self.manifest.shard_range(s).len() as u64).sum()
+    }
+
+    /// Drain one session into a sketch, returning `(sketch,
+    /// assembly_secs, batches)`.
+    fn drain_one(&self, id: MemberId, mut session: Session) -> Result<(GradSketch, f64, usize)> {
+        let mut sketch = GradSketch::new(self.cfg.grad_dim);
+        for lease in session.by_ref() {
+            let batch = lease.with_context(|| format!("fleet member {id:#x} guarded stream"))?;
+            sketch.absorb(&batch);
+        }
+        let metrics = session.metrics();
+        Ok((sketch, metrics.assembly_time.as_secs_f64(), metrics.batches as usize))
+    }
+
+    /// Open a subset session on `id` under an injected open-failure
+    /// countdown: the plane's session-open hook rejects the first
+    /// `fail_times` attempts, and each failure burns one bounded retry
+    /// with exponential virtual backoff. Returns the session and the
+    /// retry attempts spent, or `None` when the retry budget is
+    /// exhausted (F6: the caller must escalate to force-leave).
+    fn open_with_faults(
+        &self,
+        id: MemberId,
+        shards: &[ShardId],
+        epoch: u64,
+        fail_times: u32,
+        watchdog: &mut Watchdog,
+        retries: &mut u32,
+    ) -> Result<Option<(Session, u32)>> {
+        let plane = self.member_plane(id)?;
+        if fail_times > 0 {
+            let countdown = Arc::new(AtomicU32::new(fail_times));
+            plane.set_session_open_hook(Some(Arc::new(move |_spec: &JobSpec| {
+                if countdown
+                    .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+                    .is_ok()
+                {
+                    bail!("injected session-open failure");
+                }
+                Ok(())
+            })));
+        }
+        let budget = watchdog.cfg().retry_budget;
+        let mut attempts = 0u32;
+        let opened = loop {
+            match plane.open_session_checked(self.subset_spec(shards, epoch)) {
+                Ok(s) => break Some((s, attempts)),
+                Err(_) if attempts < budget => {
+                    watchdog.advance(watchdog.retry_backoff(attempts));
+                    attempts += 1;
+                    *retries += 1;
+                }
+                Err(_) => break None, // F6: retry budget exhausted
+            }
+        };
+        plane.set_session_open_hook(None);
+        Ok(opened)
+    }
+}
+
+/// Walk the watchdog's probe protocol for a member that will never
+/// finish: jump the virtual clock to its (F4-monotone) deadline, spend
+/// a `Late` probe extending it, and repeat until the verdict is `Dead`.
+/// Members that owe nothing (`Healthy` with zero expected graphs) fall
+/// straight through — there is nothing to wait for.
+fn await_death(watchdog: &mut Watchdog, id: MemberId) {
+    loop {
+        let Some(deadline) = watchdog.deadline(id) else { return };
+        watchdog.advance_to(deadline);
+        match watchdog.probe(id) {
+            Verdict::Dead | Verdict::Healthy => return,
+            Verdict::Late => continue,
+        }
+    }
 }
 
 /// Stream one full-dataset epoch from a single reference plane into a
@@ -671,6 +1245,243 @@ mod tests {
         assert!(f.run_epoch(0, 0.0).is_err(), "joiner owns nothing before the flip");
         f.rebalance();
         assert!(f.run_epoch(0, 0.0).is_ok());
+    }
+
+    use crate::fleet::watchdog::WatchdogConfig;
+
+    fn wd() -> Watchdog {
+        Watchdog::new(WatchdogConfig {
+            min_deadline_secs: 0.001,
+            retry_backoff_secs: 0.001,
+            ..Default::default()
+        })
+    }
+
+    /// Modeled per-graph drain cost for the guarded-epoch tests — any
+    /// positive constant works; the clock is virtual.
+    const SPG: f64 = 0.001;
+
+    fn single_plane_reference(n: usize, epoch: u64) -> GradSketch {
+        let plane = DataPlane::new(
+            Arc::new(HydroNet::new(n, 11)),
+            Batcher::new(geometry(), 6.0),
+            cfg().pipeline,
+        );
+        reference_epoch(&plane, epoch, cfg().grad_dim).unwrap()
+    }
+
+    fn assert_matches_reference(report: &FleetEpochReport, want: &GradSketch, n: usize) {
+        assert_eq!(report.graphs, n, "drained-shard union must cover the dataset");
+        assert_eq!(report.stream_xor, want.xor, "stream multiset diverged");
+        for (d, (a, b)) in report.grad.iter().zip(want.mean_f64()).enumerate() {
+            assert!((*a as f64 - b).abs() < 1e-5, "gradient dim {d}: fleet {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn guarded_epoch_without_faults_matches_the_plain_epoch() {
+        let n = 120;
+        let mut f = fleet(n, &[1, 2, 3]);
+        let plain = f.run_epoch(4, 0.0).unwrap();
+        let mut w = wd();
+        let g = f.run_epoch_guarded(4, &mut w, &FaultPlan::none(), SPG).unwrap();
+        assert_eq!(g.report.stream_xor, plain.stream_xor);
+        assert_eq!(g.report.graphs, plain.graphs);
+        assert_eq!(g.report.grad, plain.grad, "fault-free guarded epoch is the plain epoch");
+        assert!(g.events.is_empty() && g.forced_leaves.is_empty());
+        assert_eq!((g.makeup_shards, g.retries), (0, 0));
+        assert_eq!(g.survivors, g.survivor_arenas_kept);
+        assert!(g.virtual_secs > 0.0, "the virtual clock must advance with the drains");
+    }
+
+    #[test]
+    fn stalled_member_is_force_left_and_its_shards_made_up() {
+        let n = 160;
+        let mut f = fleet(n, &[1, 2, 3]);
+        let gen_before = f.membership().generation();
+        let mut plan = FaultPlan::none();
+        plan.insert(0, 2, FaultKind::Stall { keep_fraction: 0.5 });
+        let mut w = wd();
+        let g = f.run_epoch_guarded(0, &mut w, &plan, SPG).unwrap();
+        assert_eq!(g.forced_leaves, vec![2]);
+        assert!(g.makeup_shards > 0, "the withheld suffix must be reassigned");
+        assert!(f.membership().state(2).is_none(), "the straggler left the fleet");
+        assert_eq!(f.membership().generation(), gen_before + 1, "one recovery flip");
+        assert_eq!(g.survivors, g.survivor_arenas_kept, "F2 across the recovery flip");
+        assert_matches_reference(&g.report, &single_plane_reference(n, 0), n);
+        // Detection happened past the deadline (that *is* the protocol)
+        // but on the deterministic virtual clock.
+        let e = &g.events[0];
+        assert_eq!(e.action, RecoveryAction::ForceLeft);
+        assert!(e.detected_secs > 0.0);
+        // The next epoch runs on the survivors with full coverage.
+        let next = f.run_epoch(1, 0.0).unwrap();
+        assert_eq!(next.graphs, n);
+    }
+
+    #[test]
+    fn crashed_member_contributes_nothing_but_coverage_survives() {
+        let n = 128;
+        let mut f = fleet(n, &[1, 2, 3]);
+        let dead_shards = f.assignment().unwrap().shards(3).len();
+        assert!(dead_shards > 0, "test needs the crasher to own shards");
+        let mut plan = FaultPlan::none();
+        plan.insert(0, 3, FaultKind::Crash);
+        let mut w = wd();
+        let g = f.run_epoch_guarded(0, &mut w, &plan, SPG).unwrap();
+        assert_eq!(g.forced_leaves, vec![3]);
+        assert_eq!(g.makeup_shards, dead_shards, "every shard of the crasher is made up");
+        assert_matches_reference(&g.report, &single_plane_reference(n, 0), n);
+    }
+
+    #[test]
+    fn open_failures_within_budget_are_retried_not_escalated() {
+        let n = 96;
+        let mut f = fleet(n, &[1, 2]);
+        let mut plan = FaultPlan::none();
+        plan.insert(0, 2, FaultKind::SessionOpenFail { times: 2 });
+        let mut w = wd();
+        let g = f.run_epoch_guarded(0, &mut w, &plan, SPG).unwrap();
+        assert!(g.forced_leaves.is_empty(), "within-budget failures never escalate");
+        assert_eq!(g.retries, 2);
+        assert_eq!(g.events.len(), 1);
+        assert_eq!(g.events[0].action, RecoveryAction::Retried { attempts: 2 });
+        assert!(f.membership().state(2).is_some(), "the member stayed in the fleet");
+        assert_matches_reference(&g.report, &single_plane_reference(n, 0), n);
+    }
+
+    #[test]
+    fn open_failures_beyond_budget_escalate_to_force_leave() {
+        let n = 96;
+        let mut f = fleet(n, &[1, 2]);
+        let mut w = wd();
+        let over_budget = w.cfg().retry_budget + 1;
+        let mut plan = FaultPlan::none();
+        plan.insert(0, 2, FaultKind::SessionOpenFail { times: over_budget });
+        let g = f.run_epoch_guarded(0, &mut w, &plan, SPG).unwrap();
+        assert_eq!(g.forced_leaves, vec![2], "F6: budget exhaustion escalates");
+        assert_eq!(g.retries, w.cfg().retry_budget, "every budgeted retry was spent");
+        assert!(f.membership().state(2).is_none());
+        assert_matches_reference(&g.report, &single_plane_reference(n, 0), n);
+    }
+
+    #[test]
+    fn collective_failures_beyond_budget_drop_and_restream_the_contribution() {
+        let n = 96;
+        let mut f = fleet(n, &[1, 2]);
+        let mut w = wd();
+        let over_budget = w.cfg().retry_budget + 2;
+        let mut plan = FaultPlan::none();
+        plan.insert(0, 1, FaultKind::CollectiveFail { times: over_budget });
+        let g = f.run_epoch_guarded(0, &mut w, &plan, SPG).unwrap();
+        assert_eq!(g.forced_leaves, vec![1]);
+        assert!(g.makeup_shards > 0, "dropped contribution must be re-streamed");
+        // No shard double-reduced even though member 1 streamed its
+        // shards before its collective join failed (F5 held).
+        assert_matches_reference(&g.report, &single_plane_reference(n, 0), n);
+    }
+
+    #[test]
+    fn slow_drain_is_absorbed_and_reweighting_shrinks_its_share() {
+        let n = 480; // 30 shards at shard_len 16
+        let mut f = fleet(n, &[1, 2, 3]);
+        let mut plan = FaultPlan::none();
+        plan.insert(0, 2, FaultKind::SlowDrain { factor: 2.8 });
+        let mut w = wd();
+        let g = f.run_epoch_guarded(0, &mut w, &plan, SPG).unwrap();
+        assert!(g.forced_leaves.is_empty(), "slow is not dead: absorbed within slack");
+        assert_eq!(g.events[0].action, RecoveryAction::Absorbed);
+        assert_matches_reference(&g.report, &single_plane_reference(n, 0), n);
+        // The watchdog measured member 2 draining ~2.8x slower.
+        let r2 = w.drain_rate(2).unwrap();
+        let r1 = w.drain_rate(1).unwrap();
+        assert!(r2 < r1, "slow member must measure a lower rate ({r2} vs {r1})");
+        // Feed the measured rates back: member 2's share shrinks.
+        let before = f.assignment().unwrap().shards(2).len();
+        let changed = f.reweight_from_rates(&w.measured_rates().clone());
+        assert!(changed > 0, "the slow member's weight must change");
+        assert!(f.weight(2) < 1.0, "slow member down-weighted, got {}", f.weight(2));
+        f.rebalance();
+        let after = f.assignment().unwrap().shards(2).len();
+        assert!(after < before, "slow member must own fewer shards ({after} vs {before})");
+        // Coverage is still exact under the weighted assignment.
+        let rep = f.run_epoch(1, 0.0).unwrap();
+        assert_eq!(rep.graphs, n);
+    }
+
+    #[test]
+    fn damaged_cache_member_falls_back_cold_without_stalling_the_epoch() {
+        let n = 96;
+        let dir = std::env::temp_dir()
+            .join("molpack-fleet-chaos-tests")
+            .join(format!("damaged-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cache_cfg = PipelineConfig {
+            workers: 2,
+            prefetch_depth: 2,
+            shard_size: 16,
+            cache_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        // Build a pristine cache from an identical source, then corrupt
+        // it at several positions: depending on where the flip lands it
+        // either fails load-time validation (cold rebuild, no fallback)
+        // or a lazy section checksum (mapped fallback, counted). Every
+        // position must stream correctly; at least one must exercise
+        // the mapped-fallback path.
+        {
+            let builder = DataPlane::new(
+                Arc::new(HydroNet::new(n, 11)),
+                Batcher::new(geometry(), 6.0),
+                cache_cfg.clone(),
+            );
+            let mut s = builder.open_session(JobSpec::training(0));
+            for lease in s.by_ref() {
+                lease.unwrap();
+            }
+            builder.save_prepared().unwrap().expect("cache_dir is set");
+        }
+        let path = dir.join(crate::datasets::CACHE_FILE);
+        let pristine = std::fs::read(&path).unwrap();
+        let len = pristine.len();
+        let want = single_plane_reference(n, 0);
+        let mut fallbacks_seen = 0u64;
+        for pos in [len / 4, len / 3, len / 2, 2 * len / 3, 3 * len / 4] {
+            let mut bytes = pristine.clone();
+            bytes[pos] ^= 0x10;
+            std::fs::write(&path, &bytes).unwrap();
+            let mut f = Fleet::new(
+                Arc::new(HydroNet::new(n, 11)),
+                Batcher::new(geometry(), 6.0),
+                cfg(),
+            )
+            .unwrap();
+            f.join(1).unwrap();
+            f.join_with_pipeline(2, cache_cfg.clone()).unwrap();
+            f.rebalance();
+            let mut w = wd();
+            let mut plan = FaultPlan::none();
+            plan.insert(0, 2, FaultKind::DamagedCache);
+            let g = f.run_epoch_guarded(0, &mut w, &plan, SPG).unwrap();
+            assert!(
+                g.forced_leaves.is_empty(),
+                "byte {pos}: a damaged cache must degrade, never kill the member"
+            );
+            assert_eq!(g.events[0].action, RecoveryAction::Absorbed);
+            assert_matches_reference(&g.report, &want, n);
+            fallbacks_seen += f.member_prepared_stats(2).unwrap().map_fallbacks;
+        }
+        assert!(fallbacks_seen > 0, "no corruption position exercised the mapped fallback");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reweighting_clamps_and_quantizes() {
+        assert_eq!(quantize_weight(0.01), 0.25, "clamped at the floor");
+        assert_eq!(quantize_weight(100.0), 4.0, "clamped at the ceiling");
+        assert_eq!(quantize_weight(1.0), 1.0, "nominal stays exactly nominal");
+        assert_eq!(quantize_weight(1.03), 1.0, "noise quantizes away");
+        assert_eq!(quantize_weight(1.5), 1.5, "sixteenths are representable");
     }
 
     #[test]

@@ -1,0 +1,361 @@
+//! Straggler watchdog: per-member drain progress vs a BSP-derived
+//! deadline, on a **pure virtual clock**.
+//!
+//! The fleet's self-healing loop (`Fleet::run_epoch_guarded`) needs to
+//! decide, deterministically, that a member has stopped draining. Wall
+//! clocks make that decision machine-dependent and unreplayable, so the
+//! watchdog never reads one: the epoch driver *advances* a virtual
+//! `f64` seconds counter by modeled drain costs (graphs ×
+//! secs-per-graph from [`crate::perfmodel::fleet_secs_per_graph`]) and
+//! the watchdog compares that counter against per-member deadlines.
+//! Replaying the same fault schedule replays the same clock, byte for
+//! byte.
+//!
+//! Deadline discipline (invariant F4 in the `coordinator::dataplane`
+//! catalog): a member's deadline for an epoch starts at
+//! `max(min_deadline_secs, expected_graphs × secs_per_graph × slack)`
+//! and every `Late` probe *extends* it by
+//! `base_deadline × probe_backoff^probes` — strictly monotonically —
+//! until `max_probes` extensions are exhausted and the verdict becomes
+//! [`Verdict::Dead`]. Deadlines never shrink, so a verdict reached
+//! once can never un-happen under replay.
+//!
+//! The watchdog also measures per-member drain *rates* (graphs per
+//! virtual second) as members complete, feeding the heterogeneous
+//! shard-weighting loop (`Fleet::reweight_from_rates`): a chronically
+//! slow plane gets fewer shards next generation instead of being
+//! repeatedly force-left.
+//!
+//! Every timeout/backoff constant in the fault-handling stack lives in
+//! [`WatchdogConfig`] (or `FaultConfig`) — the `timeout-literal` tidy
+//! rule rejects hard-coded `Duration`/deadline literals elsewhere under
+//! `fleet/`.
+
+use std::collections::BTreeMap;
+
+use crate::fleet::manifest::MemberId;
+
+/// Every knob of the straggler/retry policy in one place. The tidy
+/// `timeout-literal` rule forbids hard-coded timeout constants in
+/// `fleet/` outside this struct and `FaultConfig`, so policy changes
+/// are single-site and visible in review.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WatchdogConfig {
+    /// Deadline slack multiplier over the modeled healthy drain time.
+    /// A member is probed only after taking `slack`× its BSP estimate.
+    pub slack: f64,
+    /// Floor for any per-member deadline, in virtual seconds — keeps
+    /// tiny shard counts from producing hair-trigger deadlines.
+    pub min_deadline_secs: f64,
+    /// Each `Late` probe extends the deadline by
+    /// `base_deadline * probe_backoff^probes` (exponential backoff).
+    pub probe_backoff: f64,
+    /// `Late` probes allowed before the verdict becomes `Dead`.
+    pub max_probes: u32,
+    /// Bounded retry attempts for session-open / collective failures
+    /// before escalating to force-leave (invariant F6).
+    pub retry_budget: u32,
+    /// First retry waits this many virtual seconds...
+    pub retry_backoff_secs: f64,
+    /// ...and each further retry multiplies the wait by this factor.
+    pub retry_backoff_mult: f64,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> Self {
+        WatchdogConfig {
+            slack: 3.0,
+            min_deadline_secs: 0.050,
+            probe_backoff: 2.0,
+            max_probes: 2,
+            retry_budget: 3,
+            retry_backoff_secs: 0.010,
+            retry_backoff_mult: 2.0,
+        }
+    }
+}
+
+/// Probe outcome for one member at the current virtual time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Drained everything, or its deadline has not yet passed.
+    Healthy,
+    /// Past its deadline but still within the probe budget; the
+    /// deadline was extended (F4: strictly monotonically).
+    Late,
+    /// Probe budget exhausted — the epoch driver must force-leave it.
+    Dead,
+}
+
+/// Per-member epoch tracking state.
+#[derive(Debug, Clone)]
+struct Track {
+    expected_graphs: u64,
+    drained_graphs: u64,
+    /// Current deadline in absolute virtual seconds.
+    deadline: f64,
+    /// Initial slack window; the unit each backoff extension scales.
+    base_deadline: f64,
+    /// `Late` probes issued so far this epoch.
+    probes: u32,
+    /// Virtual time the member's epoch started (for rate measurement).
+    started: f64,
+}
+
+/// Deterministic straggler detector over a virtual clock. One watchdog
+/// outlives many epochs; per-member deadlines reset at `begin_epoch`
+/// while measured drain rates accumulate across epochs.
+#[derive(Debug, Clone)]
+pub struct Watchdog {
+    cfg: WatchdogConfig,
+    now: f64,
+    tracks: BTreeMap<MemberId, Track>,
+    rates: BTreeMap<MemberId, f64>,
+}
+
+impl Watchdog {
+    /// A watchdog at virtual time zero with the given policy.
+    pub fn new(cfg: WatchdogConfig) -> Self {
+        Watchdog { cfg, now: 0.0, tracks: BTreeMap::new(), rates: BTreeMap::new() }
+    }
+
+    /// The policy this watchdog enforces.
+    pub fn cfg(&self) -> &WatchdogConfig {
+        &self.cfg
+    }
+
+    /// Current virtual time in seconds.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance the virtual clock by `secs` (ignored if negative).
+    pub fn advance(&mut self, secs: f64) {
+        if secs > 0.0 {
+            self.now += secs;
+        }
+    }
+
+    /// Advance the virtual clock to the absolute time `secs` if that is
+    /// in the future; a no-op otherwise. Models drains that overlap in
+    /// real time: each member occupies `[epoch_start, epoch_start+d]`,
+    /// so the clock after N parallel drains is the max, not the sum.
+    pub fn advance_to(&mut self, secs: f64) {
+        if secs > self.now {
+            self.now = secs;
+        }
+    }
+
+    /// Start tracking an epoch: each `(member, expected_graphs)` pair
+    /// gets a fresh deadline of
+    /// `max(min_deadline_secs, expected_graphs × secs_per_graph × slack)`
+    /// anchored at the current virtual time.
+    pub fn begin_epoch(&mut self, members: &[(MemberId, u64)], secs_per_graph: f64) {
+        self.tracks.clear();
+        for &(id, expected_graphs) in members {
+            let window = (expected_graphs as f64 * secs_per_graph * self.cfg.slack)
+                .max(self.cfg.min_deadline_secs);
+            self.tracks.insert(
+                id,
+                Track {
+                    expected_graphs,
+                    drained_graphs: 0,
+                    deadline: self.now + window,
+                    base_deadline: window,
+                    probes: 0,
+                    started: self.now,
+                },
+            );
+        }
+    }
+
+    /// Record `graphs` more drained graphs for `member` as of the
+    /// current virtual time. See [`progress_at`](Watchdog::progress_at).
+    pub fn progress(&mut self, member: MemberId, graphs: u64) {
+        let now = self.now;
+        self.progress_at(member, graphs, now);
+    }
+
+    /// Record `graphs` more drained graphs for `member`, completed at
+    /// absolute virtual time `at`. The moment the member first crosses
+    /// its expected quota its drain rate (graphs per virtual second,
+    /// measured against *its own* completion time) is recorded for the
+    /// reweighting loop — under the parallel-drain max clock a member
+    /// must not be charged for a slower sibling that already pushed the
+    /// global clock past its own finish.
+    pub fn progress_at(&mut self, member: MemberId, graphs: u64, at: f64) {
+        if let Some(t) = self.tracks.get_mut(&member) {
+            let before = t.drained_graphs;
+            t.drained_graphs += graphs;
+            let crossed =
+                before < t.expected_graphs && t.drained_graphs >= t.expected_graphs;
+            if crossed && t.expected_graphs > 0 {
+                let elapsed = at - t.started;
+                if elapsed > 0.0 {
+                    self.rates.insert(member, t.expected_graphs as f64 / elapsed);
+                }
+            }
+        }
+    }
+
+    /// Probe `member` at the current virtual time. `Healthy` while it
+    /// has drained its quota or its deadline is still ahead; `Late`
+    /// extends the deadline per F4 and spends one probe; `Dead` once
+    /// the probe budget is gone. Unknown members are `Healthy` (they
+    /// are not this epoch's problem).
+    pub fn probe(&mut self, member: MemberId) -> Verdict {
+        let cfg = self.cfg;
+        let now = self.now;
+        let Some(t) = self.tracks.get_mut(&member) else {
+            return Verdict::Healthy;
+        };
+        if t.drained_graphs >= t.expected_graphs || now < t.deadline {
+            return Verdict::Healthy;
+        }
+        if t.probes >= cfg.max_probes {
+            // Measure the partial rate so a straggler that is merely
+            // slow (not dead) gets down-weighted if it ever rejoins.
+            let elapsed = now - t.started;
+            if elapsed > 0.0 && t.drained_graphs > 0 {
+                self.rates.insert(member, t.drained_graphs as f64 / elapsed);
+            }
+            return Verdict::Dead;
+        }
+        let before = t.deadline;
+        t.deadline += t.base_deadline * cfg.probe_backoff.powi(t.probes as i32);
+        t.probes += 1;
+        debug_assert!(t.deadline > before, "F4: deadlines only ever grow");
+        Verdict::Late
+    }
+
+    /// The member's current deadline in absolute virtual seconds.
+    pub fn deadline(&self, member: MemberId) -> Option<f64> {
+        self.tracks.get(&member).map(|t| t.deadline)
+    }
+
+    /// Graphs the member has reported drained this epoch.
+    pub fn drained(&self, member: MemberId) -> Option<u64> {
+        self.tracks.get(&member).map(|t| t.drained_graphs)
+    }
+
+    /// Last measured drain rate (graphs per virtual second), if any.
+    pub fn drain_rate(&self, member: MemberId) -> Option<f64> {
+        self.rates.get(&member).copied()
+    }
+
+    /// All measured drain rates, for `Fleet::reweight_from_rates`.
+    pub fn measured_rates(&self) -> &BTreeMap<MemberId, f64> {
+        &self.rates
+    }
+
+    /// Virtual seconds to wait before retry number `attempt` (0-based):
+    /// `retry_backoff_secs × retry_backoff_mult^attempt`.
+    pub fn retry_backoff(&self, attempt: u32) -> f64 {
+        self.cfg.retry_backoff_secs * self.cfg.retry_backoff_mult.powi(attempt as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> WatchdogConfig {
+        WatchdogConfig {
+            slack: 2.0,
+            min_deadline_secs: 0.01,
+            probe_backoff: 2.0,
+            max_probes: 2,
+            retry_budget: 3,
+            retry_backoff_secs: 0.5,
+            retry_backoff_mult: 2.0,
+        }
+    }
+
+    #[test]
+    fn deadline_derives_from_estimate_with_slack_and_floor() {
+        let mut w = Watchdog::new(cfg());
+        w.begin_epoch(&[(1, 100), (2, 0)], 0.1);
+        // 100 graphs x 0.1 s/graph x slack 2.0 = 20 s.
+        assert!((w.deadline(1).unwrap() - 20.0).abs() < 1e-12);
+        // Zero expected graphs floors at min_deadline_secs.
+        assert!((w.deadline(2).unwrap() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn healthy_member_is_never_flagged() {
+        let mut w = Watchdog::new(cfg());
+        w.begin_epoch(&[(1, 10)], 1.0);
+        w.advance(10.0); // modeled healthy drain
+        w.progress(1, 10);
+        w.advance(1000.0); // arbitrarily far past the deadline
+        assert_eq!(w.probe(1), Verdict::Healthy);
+    }
+
+    #[test]
+    fn stalled_member_goes_late_then_dead_with_monotone_deadlines() {
+        let mut w = Watchdog::new(cfg());
+        w.begin_epoch(&[(1, 10)], 1.0); // deadline 20 s
+        w.progress(1, 3); // partial drain, then silence
+        let d0 = w.deadline(1).unwrap();
+        w.advance_to(d0);
+        assert_eq!(w.probe(1), Verdict::Late);
+        let d1 = w.deadline(1).unwrap();
+        assert!(d1 > d0, "F4: first extension grows the deadline");
+        w.advance_to(d1);
+        assert_eq!(w.probe(1), Verdict::Late);
+        let d2 = w.deadline(1).unwrap();
+        assert!(d2 - d1 > d1 - d0, "F4: extensions back off exponentially");
+        w.advance_to(d2);
+        assert_eq!(w.probe(1), Verdict::Dead);
+        // The partial rate was measured for the reweight loop.
+        assert!(w.drain_rate(1).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn slow_but_live_member_stays_healthy_within_slack() {
+        let mut w = Watchdog::new(cfg());
+        w.begin_epoch(&[(1, 10)], 1.0); // deadline 20 s
+        w.advance(15.0); // 1.5x the healthy estimate, still < slack
+        w.progress(1, 10);
+        assert_eq!(w.probe(1), Verdict::Healthy);
+        let rate = w.drain_rate(1).unwrap();
+        assert!((rate - 10.0 / 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rate_uses_the_members_own_completion_time() {
+        let mut w = Watchdog::new(cfg());
+        w.begin_epoch(&[(1, 10), (2, 10)], 1.0);
+        // A slow sibling pushed the shared max clock to 30 s, but member
+        // 1 itself finished at 10 s: its rate must not be diluted.
+        w.advance_to(30.0);
+        w.progress_at(1, 10, 10.0);
+        assert!((w.drain_rate(1).unwrap() - 1.0).abs() < 1e-12);
+        // Extra graphs past the quota (makeup rounds) never re-measure.
+        w.advance(100.0);
+        w.progress(1, 5);
+        assert!((w.drain_rate(1).unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retry_backoff_is_exponential() {
+        let w = Watchdog::new(cfg());
+        assert!((w.retry_backoff(0) - 0.5).abs() < 1e-12);
+        assert!((w.retry_backoff(1) - 1.0).abs() < 1e-12);
+        assert!((w.retry_backoff(2) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn new_epoch_resets_deadlines_but_keeps_rates() {
+        let mut w = Watchdog::new(cfg());
+        w.begin_epoch(&[(1, 10)], 1.0);
+        w.advance(5.0);
+        w.progress(1, 10);
+        let rate = w.drain_rate(1).unwrap();
+        w.begin_epoch(&[(1, 10)], 1.0);
+        assert_eq!(w.drained(1), Some(0));
+        assert_eq!(w.drain_rate(1), Some(rate));
+        // Deadlines re-anchor at the current clock, not at zero.
+        assert!((w.deadline(1).unwrap() - (5.0 + 20.0)).abs() < 1e-12);
+    }
+}

@@ -5,8 +5,10 @@
 //! data-plane safe: no panicking unwraps on hot paths, no `MutexGuard`
 //! live across a send/notify (the classic lost-wakeup source), no
 //! unchecked integer narrowing in the cache decoder, doc/`#[must_use]`
-//! hygiene on the public coordinator/datasets surface, and
-//! Makefile↔bench flag drift. See [`rules::RULES`] for the rule ids.
+//! hygiene on the public coordinator/datasets surface, no hard-coded
+//! timeout literals in the fleet chaos layer (waits derive from
+//! `FaultConfig`/`WatchdogConfig`), and Makefile↔bench flag drift.
+//! See [`rules::RULES`] for the rule ids.
 //!
 //! Exemptions are deliberate and local: a finding is silenced only by
 //! an inline `// tidy: allow(<rule>): <invariant>` comment on the same

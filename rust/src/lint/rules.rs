@@ -11,6 +11,11 @@
 //!   `Result` carry `#[must_use = "<why>"]` so call sites state why an
 //!   ignored error would be a bug (and clippy's `-D warnings` keeps the
 //!   messages, not bare attributes).
+//! * `timeout-literal` — `fleet/` only: no hard-coded waits. Every
+//!   deadline, backoff, or sleep in the chaos layer must derive from a
+//!   `FaultConfig`/`WatchdogConfig` field (their `Default` impls and
+//!   struct literals are the single home for the numbers), so a tuning
+//!   change is one edit and chaos replays stay seed-deterministic.
 //! * `makefile-bench-drift` — the Makefile against `rust/benches/`.
 //!
 //! Every rule honours `// tidy: allow(<rule>): <invariant>` on the same
@@ -21,26 +26,30 @@ use super::Finding;
 
 /// Rule ids, in reporting order. Kept public so docs/tests can
 /// enumerate the gate's coverage.
-pub const RULES: [&str; 6] = [
+pub const RULES: [&str; 7] = [
     "unwrap-in-hot-path",
     "unchecked-narrowing",
     "lock-across-send",
     "pub-item-hygiene",
     "must-use-result",
+    "timeout-literal",
     "makefile-bench-drift",
 ];
 
 /// Files whose non-test code must not `.unwrap()` / `.expect("")`:
 /// the dispatcher, session admission, batcher, cache decoder, and the
-/// fleet control plane (manifest/membership/scheduler).
-const HOT_PATH_FILES: [&str; 7] = [
+/// fleet control plane (manifest/membership/scheduler plus the chaos
+/// layer's fault planner and watchdog).
+const HOT_PATH_FILES: [&str; 9] = [
     "coordinator/batcher.rs",
     "coordinator/dataplane.rs",
     "coordinator/session.rs",
     "datasets/persist.rs",
+    "fleet/faults.rs",
     "fleet/manifest.rs",
     "fleet/membership.rs",
     "fleet/scheduler.rs",
+    "fleet/watchdog.rs",
 ];
 
 /// Files where `as usize` / `as u32` must route through checked helpers.
@@ -60,6 +69,7 @@ pub fn lint_source(rel: &str, text: &str) -> Vec<Finding> {
     rule_lock(rel, &s, &tests, &mut findings);
     rule_hygiene(rel, &s, &tests, &mut findings);
     rule_must_use_result(rel, &s, &tests, &mut findings);
+    rule_timeout_literal(rel, &s, &tests, &mut findings);
     findings
 }
 
@@ -285,6 +295,47 @@ fn rule_must_use_result(rel: &str, s: &Sanitized, tests: &[bool], findings: &mut
     }
 }
 
+fn rule_timeout_literal(rel: &str, s: &Sanitized, tests: &[bool], findings: &mut Vec<Finding>) {
+    if !rel.starts_with("fleet/") {
+        return;
+    }
+    // Brace-tracked exemption region: a block whose opening line names
+    // `FaultConfig` or `WatchdogConfig` (struct definition, `Default`
+    // impl, or literal) is where the numbers legitimately live.
+    let mut depth: i64 = 0;
+    let mut config_open_depth: Option<i64> = None;
+    for (ln, line) in s.code.iter().enumerate() {
+        if config_open_depth.is_none()
+            && line.contains('{')
+            && (has_word(line, "FaultConfig") || has_word(line, "WatchdogConfig"))
+        {
+            config_open_depth = Some(depth);
+        }
+        let in_config = config_open_depth.is_some();
+        if !tests[ln] && !in_config {
+            if let Some(what) = timeout_literal(line) {
+                if !allowed("timeout-literal", ln, &s.comments) {
+                    findings.push(Finding {
+                        rule: "timeout-literal",
+                        file: rel.to_string(),
+                        line: ln + 1,
+                        message: format!(
+                            "{what} — waits in the chaos layer derive from \
+                             FaultConfig/WatchdogConfig fields, never inline numbers"
+                        ),
+                    });
+                }
+            }
+        }
+        depth += brace_delta(line);
+        if let Some(open) = config_open_depth {
+            if depth <= open {
+                config_open_depth = None;
+            }
+        }
+    }
+}
+
 /// The return-type segment of a fn signature: everything after the
 /// `->` that follows the parameter list's closing paren, truncated
 /// before any body/terminator and any `where` clause (so `Result` in a
@@ -394,6 +445,86 @@ fn brace_delta(line: &str) -> i64 {
         }
     }
     d
+}
+
+/// Does the line hard-code a wait? Either a nonzero numeric literal
+/// inside a `Duration::from_*(..)` call, or one assigned (`:` in a
+/// struct literal, `=` in a binding) to a timeout-flavoured name —
+/// one ending in `_secs`, `_ms`, `_deadline`, or `_backoff`. Zero
+/// literals pass: they seed accumulators and "no wait", not tuning.
+fn timeout_literal(line: &str) -> Option<&'static str> {
+    let b = line.as_bytes();
+    let mut from = 0;
+    while let Some(off) = line[from..].find("Duration::from_") {
+        let pos = from + off;
+        from = pos + 1;
+        let mut j = pos + "Duration::from_".len();
+        while j < b.len() && is_ident(b[j]) {
+            j += 1;
+        }
+        if j < b.len() && b[j] == b'(' {
+            j += 1;
+            while j < b.len() && (b[j] == b' ' || b[j] == b'\t') {
+                j += 1;
+            }
+            if nonzero_literal_at(b, j) {
+                return Some("numeric literal inside `Duration::from_*`");
+            }
+        }
+    }
+    for suffix in ["_secs", "_ms", "_deadline", "_backoff"] {
+        let mut from = 0;
+        while let Some(off) = line[from..].find(suffix) {
+            let pos = from + off;
+            from = pos + 1;
+            let end = pos + suffix.len();
+            if end < b.len() && is_ident(b[end]) {
+                continue; // inside a longer identifier
+            }
+            let mut j = end;
+            while j < b.len() && (b[j] == b' ' || b[j] == b'\t') {
+                j += 1;
+            }
+            if j >= b.len() {
+                continue;
+            }
+            let assign = match b[j] {
+                // `:` introduces a field value; `::` is a path, skip it
+                b':' => j + 1 >= b.len() || b[j + 1] != b':',
+                // `=` is a binding; `==`/`=>` are not assignments
+                b'=' => j + 1 >= b.len() || (b[j + 1] != b'=' && b[j + 1] != b'>'),
+                _ => false,
+            };
+            if !assign {
+                continue;
+            }
+            j += 1;
+            while j < b.len() && (b[j] == b' ' || b[j] == b'\t') {
+                j += 1;
+            }
+            if nonzero_literal_at(b, j) {
+                return Some("numeric literal assigned to a timeout-flavoured name");
+            }
+        }
+    }
+    None
+}
+
+/// Is there a numeric literal at byte offset `j` with any nonzero
+/// digit? `0`, `0.0`, and `0_000.00` answer false.
+fn nonzero_literal_at(b: &[u8], j: usize) -> bool {
+    if j >= b.len() || !(b[j].is_ascii_digit() || b[j] == b'.') {
+        return false;
+    }
+    let mut k = j;
+    let mut nonzero = false;
+    while k < b.len() && (b[k].is_ascii_digit() || b[k] == b'.' || b[k] == b'_') {
+        if b[k].is_ascii_digit() && b[k] != b'0' {
+            nonzero = true;
+        }
+        k += 1;
+    }
+    nonzero
 }
 
 /// Does the line contain a narrowing `as usize` / `as u32` cast?
@@ -823,6 +954,62 @@ mod tests {
         assert!(!has_word(" Result<()> ", "where"));
         assert!(has_word("io::Result<u8>", "Result"));
         assert!(!has_word("ResultSet", "Result"));
+    }
+
+    // ---- timeout-literal ----
+
+    #[test]
+    fn duration_literal_flagged_only_in_fleet() {
+        let src = "fn f() { std::thread::sleep(Duration::from_millis(50)); }\n";
+        let f = lint_source("fleet/membership.rs", src);
+        assert_eq!(rules_of(&f), ["timeout-literal"]);
+        assert!(f[0].message.contains("Duration::from_*"), "{}", f[0].message);
+        assert!(lint_source("runtime/worker.rs", src).is_empty(), "scoped to fleet/");
+    }
+
+    #[test]
+    fn timeout_field_literal_flagged_outside_config() {
+        let f = lint_source("fleet/manifest.rs", "fn f() { let drain_deadline = 1.5; }\n");
+        assert_eq!(rules_of(&f), ["timeout-literal"]);
+        // zero seeds an accumulator, identifiers derive from config: both pass
+        assert!(lint_source("fleet/manifest.rs", "fn f() { let mut drain_secs = 0.0; }\n")
+            .is_empty());
+        let derived =
+            "fn f(w: &Watchdog) { let d = Duration::from_secs_f64(w.retry_backoff(0)); }\n";
+        assert!(lint_source("fleet/manifest.rs", derived).is_empty());
+    }
+
+    #[test]
+    fn config_blocks_own_the_numbers() {
+        let src = "impl Default for WatchdogConfig {\n    fn default() -> Self {\n        WatchdogConfig {\n            min_deadline_secs: 0.050,\n            retry_backoff_secs: 0.010,\n        }\n    }\n}\nfn f() { let late_ms = 250; }\n";
+        let f = lint_source("fleet/membership.rs", src);
+        assert_eq!(rules_of(&f), ["timeout-literal"], "{f:?}");
+        assert_eq!(f[0].line, 9, "Default impl exempt, stray literal after it flagged");
+    }
+
+    #[test]
+    fn timeout_literal_honors_tests_and_allow() {
+        let t = "#[cfg(test)]\nmod tests {\n    fn wd() { let probe_ms = 5; }\n}\n";
+        assert!(lint_source("fleet/watchdog.rs", t).is_empty());
+        let a = "fn f() {\n    // tidy: allow(timeout-literal): bench warm-up pause, not a protocol wait\n    std::thread::sleep(Duration::from_millis(5));\n}\n";
+        assert!(lint_source("fleet/scheduler.rs", a).is_empty());
+    }
+
+    #[test]
+    fn timeout_matcher_edges() {
+        // paths, comparisons, and match arms are not assignments
+        assert!(timeout_literal("cfg.retry_backoff_secs * 2.0").is_none());
+        assert!(timeout_literal("if drain_secs == 3.0 {").is_none());
+        assert!(timeout_literal("probe_ms => 1,").is_none());
+        assert!(timeout_literal("use fleet::faults_ms::x;").is_none());
+        // suffix must end the identifier
+        assert!(timeout_literal("let retry_backoff_secsx = 2.0;").is_none());
+        // field inits and bindings with nonzero literals are
+        assert!(timeout_literal("probe_backoff: 2.0,").is_some());
+        assert!(timeout_literal("let grace_ms = 250;").is_some());
+        assert!(timeout_literal("Duration::from_secs_f64(0.25)").is_some());
+        assert!(timeout_literal("Duration::from_secs_f64(0.0)").is_none());
+        assert!(timeout_literal("Duration::from_secs_f64(elapsed)").is_none());
     }
 
     // ---- makefile-bench-drift ----

@@ -11,8 +11,11 @@
 //!   fleet [--replicas N] [--graphs N]         multi-plane elastic
 //!         [--epochs E] [--workers W]          data-parallel fleet sim:
 //!         [--out FILE]                        stream equivalence, overlapped
-//!                                            collectives, join/leave
-//!                                            rebalance (ISSUE 8 acceptance)
+//!         [--chaos [--schedules N]            collectives, join/leave
+//!                  [--chaos-seed S]]          rebalance; --chaos runs seeded
+//!                                            fault schedules through the
+//!                                            guarded epoch driver and checks
+//!                                            every recovery invariant
 //!   prepare [--graphs N] [--cache-dir DIR]   offline prepared-cache build:
 //!           [--r-cut R] [--k-max K]          materialize arena + edges,
 //!           [--paranoid]                     persist, verify warm reload
@@ -36,7 +39,10 @@ use molpack::coordinator::{
     Batcher, DataPlane, JobSpec, PipelineConfig, QosClass, QosWeights, Session,
 };
 use molpack::datasets::{HydroNet, MoleculeSource, PaperDataset, PreparedSource, CACHE_FILE};
-use molpack::fleet::{reference_epoch, Fleet, FleetConfig, Schedule};
+use molpack::fleet::{
+    reference_epoch, FaultConfig, FaultKind, FaultPlan, Fleet, FleetConfig, Schedule, Watchdog,
+    WatchdogConfig,
+};
 use molpack::ipu::IpuArch;
 use molpack::packing::Packer;
 use molpack::planner::{plan_gather, plan_scatter, OpDims};
@@ -479,6 +485,9 @@ fn cmd_prepare(args: &Args) -> Result<()> {
 /// above scheduler noise on CI machines — the *ratio* is modeled, the
 /// hiding is real.
 fn cmd_fleet(args: &Args) -> Result<()> {
+    if args.get("chaos").is_some() {
+        return cmd_fleet_chaos(args);
+    }
     let replicas = args.usize_or("replicas", 3)?;
     let graphs = args.usize_or("graphs", 480)?;
     let epochs = args.usize_or("epochs", 3)? as u64;
@@ -680,6 +689,332 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `molpack fleet --chaos`: the chaos gate. Runs `--schedules` seeded
+/// fault schedules end-to-end through [`Fleet::run_epoch_guarded`] —
+/// each schedule is a fresh fleet driven for `--epochs` epochs under a
+/// [`FaultPlan`] derived from `--chaos-seed` — and asserts the recovery
+/// invariants on every one:
+///
+/// * every fatal injected fault (stall, crash, exhausted retry budget)
+///   is detected on the watchdog's virtual clock and resolved by a
+///   force-leave, and nothing else is force-left;
+/// * the surviving gradient stream is bitwise-equal to the single-plane
+///   reference over the drained-shard union (full coverage: F5 inside
+///   the driver, fingerprint + gradient checked here);
+/// * no survivor's prepared arena is rebuilt by any recovery flip (F2);
+/// * detection + recovery stay inside a deterministic virtual-time
+///   bound derived from the BSP per-graph cost and the watchdog config;
+/// * replaying the same seed reproduces every epoch bit-identically.
+///
+/// Members scheduled for a damaged-cache fault join from a corrupted
+/// persisted cache (built and byte-flipped here) and must degrade to
+/// the cold path, never stall the epoch. Between epochs the watchdog's
+/// measured drain rates reweight the shard manifest, so a chronically
+/// slow plane owns fewer shards in the next generation. Writes a
+/// `BENCH_chaos.json` snapshot; `chaos_virtual_secs` is deterministic,
+/// so the ledger guards it at zero drift.
+fn cmd_fleet_chaos(args: &Args) -> Result<()> {
+    let schedules = args.usize_or("schedules", 5)?;
+    let replicas = args.usize_or("replicas", 4)?;
+    let graphs = args.usize_or("graphs", 480)?;
+    let epochs = args.usize_or("epochs", 3)? as u64;
+    let workers = args.usize_or("workers", 2)?;
+    let base_seed = args.usize_or("chaos-seed", 0xC7A0_5EED)? as u64;
+    let out = args.get("out").unwrap_or("BENCH_chaos.json");
+    if schedules == 0 {
+        bail!("--schedules must be >= 1");
+    }
+    if replicas < 2 {
+        bail!("--replicas must be >= 2: recovery needs survivors");
+    }
+    if epochs == 0 {
+        bail!("--epochs must be >= 1");
+    }
+    let geometry = BatchGeometry {
+        n_nodes: 192,
+        n_edges: 2304,
+        n_graphs: 8,
+        packs_per_batch: 2,
+        nodes_per_pack: 96,
+        edges_per_pack: 1152,
+        graphs_per_pack: 4,
+    };
+    let pipeline = PipelineConfig {
+        workers,
+        prefetch_depth: 4,
+        shard_size: 64,
+        ..Default::default()
+    };
+    let fleet_cfg = FleetConfig { shard_len: 32, pipeline: pipeline.clone(), ..Default::default() };
+    let source = Arc::new(HydroNet::new(graphs, 42));
+    let members: Vec<u64> = (1..=replicas as u64).collect();
+    let wd_cfg = WatchdogConfig::default();
+
+    // Deadline time base (F4): the BSP model's per-graph stream cost for
+    // the paper's pod-scale workload. Any positive deterministic value
+    // drives the virtual clock; using the model keeps the deadlines
+    // proportional to what a real fleet would expect.
+    let profile = perfmodel::WorkloadProfile::measure(PaperDataset::Water4_5m, 256, 6.0, 7);
+    let setup = perfmodel::TrainSetup::default();
+    let bsp = perfmodel::estimate_fleet_epoch(&profile, &setup, replicas.max(2), &IpuArch::bow());
+    let spg = perfmodel::fleet_secs_per_graph(&bsp, profile.n_graphs);
+
+    // Single-plane reference. The sketch is order-independent and every
+    // epoch streams the same multiset (the shuffle is a permutation),
+    // so one reference epoch covers them all.
+    let reference_plane = DataPlane::new(
+        Arc::clone(&source) as Arc<dyn MoleculeSource>,
+        Batcher::new(geometry, 6.0),
+        pipeline.clone(),
+    );
+    let reference = reference_epoch(&reference_plane, 0, fleet_cfg.grad_dim)?;
+    if reference.graphs != graphs {
+        bail!("reference streamed {} of {graphs} graphs", reference.graphs);
+    }
+    let ref_mean = reference.mean_f64();
+
+    // One seeded plan per schedule, generated up front so damaged-cache
+    // members can join from the corrupted cache built below.
+    let plans: Vec<FaultPlan> = (0..schedules as u64)
+        .map(|s| {
+            let seed = base_seed.wrapping_add(s.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            FaultPlan::generate(&FaultConfig { seed, epochs, ..FaultConfig::default() }, &members)
+        })
+        .collect();
+    println!(
+        "fleet chaos: {schedules} schedule(s) x {epochs} epoch(s), {replicas} planes, \
+         {graphs} graphs, base seed {base_seed:#x}"
+    );
+
+    // Build a pristine persisted cache and flip one byte, iff some plan
+    // drew a damaged-cache fault. The damaged member boots from it and
+    // must fall back to the cold path (validation or section checksum).
+    let needs_cache = plans
+        .iter()
+        .any(|p| p.slots().any(|(_, _, k)| matches!(k, FaultKind::DamagedCache)));
+    let damaged_dir = std::env::temp_dir().join(format!("molpack-chaos-{}", std::process::id()));
+    let damaged_pipeline =
+        PipelineConfig { cache_dir: Some(damaged_dir.clone()), ..pipeline.clone() };
+    if needs_cache {
+        std::fs::create_dir_all(&damaged_dir)?;
+        let builder = DataPlane::new(
+            Arc::clone(&source) as Arc<dyn MoleculeSource>,
+            Batcher::new(geometry, 6.0),
+            damaged_pipeline.clone(),
+        );
+        let mut s = builder.open_session(JobSpec::training(0));
+        for lease in s.by_ref() {
+            lease?;
+        }
+        builder
+            .save_prepared()?
+            .ok_or_else(|| anyhow::anyhow!("builder plane lost its cache_dir"))?;
+        let path = damaged_dir.join(CACHE_FILE);
+        let mut bytes = std::fs::read(&path)?;
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes)?;
+    }
+
+    /// One guarded epoch's replay-comparable outcome.
+    #[derive(Clone, PartialEq)]
+    struct EpochTrace {
+        xor: u64,
+        grad: Vec<f32>,
+        graphs: usize,
+        forced: Vec<u64>,
+        makeup: usize,
+        retries: u32,
+        virtual_secs: f64,
+        events: Vec<(&'static str, &'static str)>,
+    }
+
+    let run_schedule = |plan: &FaultPlan| -> Result<Vec<EpochTrace>> {
+        let mut fleet = Fleet::new(
+            Arc::clone(&source) as Arc<dyn MoleculeSource>,
+            Batcher::new(geometry, 6.0),
+            fleet_cfg.clone(),
+        )?;
+        for &m in &members {
+            if matches!(plan.fault(0, m), Some(FaultKind::DamagedCache)) {
+                fleet.join_with_pipeline(m, damaged_pipeline.clone())?;
+            } else {
+                fleet.join(m)?;
+            }
+        }
+        fleet.rebalance();
+        let mut watchdog = Watchdog::new(wd_cfg);
+        let mut alive: Vec<u64> = members.clone();
+        let mut traces = Vec::with_capacity(epochs as usize);
+        for epoch in 0..epochs {
+            let g = fleet.run_epoch_guarded(epoch, &mut watchdog, plan, spg)?;
+
+            // Exactly the fatal planned faults on live members were
+            // force-left — every stall/crash detected, nothing healthy
+            // killed.
+            let mut want: Vec<u64> = alive
+                .iter()
+                .copied()
+                .filter(|&m| {
+                    plan.fault(epoch, m)
+                        .map_or(false, |k| k.is_fatal(wd_cfg.retry_budget))
+                })
+                .collect();
+            let mut got = g.forced_leaves.clone();
+            want.sort_unstable();
+            got.sort_unstable();
+            if got != want {
+                bail!(
+                    "seed {:#x} epoch {epoch}: force-left {got:?}, plan demands {want:?}",
+                    plan.seed()
+                );
+            }
+            alive.retain(|m| !got.contains(m));
+
+            // Bitwise stream equivalence with the 1-plane reference.
+            if g.report.graphs != graphs || g.report.stream_xor != reference.xor {
+                bail!(
+                    "seed {:#x} epoch {epoch}: stream diverged ({} graphs, fingerprint {:#x}; \
+                     reference {graphs} graphs, {:#x})",
+                    plan.seed(),
+                    g.report.graphs,
+                    g.report.stream_xor,
+                    reference.xor
+                );
+            }
+            for (d, (a, b)) in g.report.grad.iter().zip(&ref_mean).enumerate() {
+                if (*a as f64 - b).abs() >= 1e-5 {
+                    bail!("seed {:#x} epoch {epoch}: gradient dim {d} diverged", plan.seed());
+                }
+            }
+
+            // F2 across recovery flips, and bounded detection/recovery
+            // on the virtual clock (worst case: every member burns its
+            // full probe ladder on a min-floored deadline, plus the
+            // makeup round and retry backoffs).
+            if g.survivor_arenas_kept != g.survivors {
+                bail!(
+                    "seed {:#x} epoch {epoch}: recovery rebuilt {} warm arena(s)",
+                    plan.seed(),
+                    g.survivors - g.survivor_arenas_kept
+                );
+            }
+            let bound = 8.0
+                * (wd_cfg.slack * graphs as f64 * spg
+                    + wd_cfg.min_deadline_secs * replicas as f64)
+                + 1.0;
+            if g.virtual_secs > bound {
+                bail!(
+                    "seed {:#x} epoch {epoch}: recovery took {:.3} virtual s (bound {bound:.3})",
+                    plan.seed(),
+                    g.virtual_secs
+                );
+            }
+
+            // Heterogeneous feedback: measured drain rates reweight the
+            // manifest, so a chronically slow plane owns fewer shards
+            // in the next generation.
+            if epoch + 1 < epochs {
+                fleet.reweight_from_rates(&watchdog.measured_rates().clone());
+                fleet.rebalance();
+            }
+            traces.push(EpochTrace {
+                xor: g.report.stream_xor,
+                grad: g.report.grad.clone(),
+                graphs: g.report.graphs,
+                forced: g.forced_leaves.clone(),
+                makeup: g.makeup_shards,
+                retries: g.retries,
+                virtual_secs: g.virtual_secs,
+                events: g
+                    .events
+                    .iter()
+                    .map(|e| {
+                        let action = match e.action {
+                            molpack::fleet::RecoveryAction::Absorbed => "absorbed",
+                            molpack::fleet::RecoveryAction::Retried { .. } => "retried",
+                            molpack::fleet::RecoveryAction::ForceLeft => "force-left",
+                        };
+                        (e.kind.label(), action)
+                    })
+                    .collect(),
+            });
+        }
+        Ok(traces)
+    };
+
+    let t_wall = std::time::Instant::now();
+    let (mut faults, mut absorbed, mut retried, mut forced) = (0u64, 0u64, 0u64, 0u64);
+    let (mut leaves, mut makeup, mut retries, mut virtual_secs) = (0u64, 0u64, 0u64, 0.0f64);
+    for (s, plan) in plans.iter().enumerate() {
+        let first = run_schedule(plan)?;
+        let replay = run_schedule(plan)?;
+        if first != replay {
+            bail!("schedule {s} (seed {:#x}) did not replay identically", plan.seed());
+        }
+        let (mut sf, mut sl, mut sm, mut sr) = (0u64, 0u64, 0u64, 0u64);
+        let mut sv = 0.0f64;
+        for t in &first {
+            sf += t.events.len() as u64;
+            sl += t.forced.len() as u64;
+            sm += t.makeup as u64;
+            sr += t.retries as u64;
+            sv += t.virtual_secs;
+            for &(_, action) in &t.events {
+                match action {
+                    "absorbed" => absorbed += 1,
+                    "retried" => retried += 1,
+                    _ => forced += 1,
+                }
+            }
+        }
+        println!(
+            "  schedule {s} seed {:#x}: {sf} fault(s), {sl} forced leave(s), \
+             {sm} makeup shard(s), {sr} retries, {sv:.3} virtual s; replay bit-identical"
+        , plan.seed());
+        faults += sf;
+        leaves += sl;
+        makeup += sm;
+        retries += sr;
+        virtual_secs += sv;
+    }
+    if needs_cache {
+        std::fs::remove_dir_all(&damaged_dir).ok();
+    }
+    if faults == 0 {
+        bail!("no faults fired across {schedules} schedule(s) — change --chaos-seed");
+    }
+    let wall = t_wall.elapsed().as_secs_f64();
+    println!(
+        "  totals: {faults} fault(s) -> {absorbed} absorbed, {retried} retried, \
+         {forced} force-left; {leaves} leave(s), {makeup} makeup shard(s), {retries} retries"
+    );
+
+    let fields = [
+        "  \"bench\": \"fleet_chaos\"".to_string(),
+        format!("  \"schedules\": {schedules}"),
+        format!("  \"replicas\": {replicas}"),
+        format!("  \"graphs\": {graphs}"),
+        format!("  \"epochs\": {epochs}"),
+        format!("  \"chaos_seed\": {base_seed}"),
+        format!("  \"faults_injected\": {faults}"),
+        format!("  \"faults_absorbed\": {absorbed}"),
+        format!("  \"faults_retried\": {retried}"),
+        format!("  \"faults_forced\": {forced}"),
+        format!("  \"forced_leaves\": {leaves}"),
+        format!("  \"makeup_shards\": {makeup}"),
+        format!("  \"retries\": {retries}"),
+        "  \"replay_identical\": true".to_string(),
+        format!("  \"chaos_virtual_secs\": {virtual_secs:.6}"),
+        format!("  \"wall_time\": {wall:.6}"),
+    ];
+    let json = format!("{{\n{}\n}}\n", fields.join(",\n"));
+    std::fs::write(out, json)?;
+    println!("  wrote {out}");
+    println!("fleet chaos OK");
+    Ok(())
+}
+
 /// `molpack benchdiff`: compare a fresh bench snapshot against a
 /// committed baseline from `BENCH_history/` and fail on regression.
 /// Metric directions are inferred from names (see `util::ledger`), so a
@@ -835,6 +1170,7 @@ const USAGE: &str = "usage: molpack <figures|train|serve|fleet|prepare|pack|plan
   train [--graphs N] [--epochs E] [--workers W] [--prefetch D] [--shard S]\n\
         [--max-batches B] [--replicas R [--no-merged]] [--cache-dir DIR]\n\
   fleet [--replicas N] [--graphs N] [--epochs E] [--workers W] [--out FILE]\n\
+        [--chaos [--schedules N] [--chaos-seed S]]\n\
   serve [--tenants T] [--requests N] [--train-graphs N] [--workers W]\n\
         [--prefetch D] [--shard S] [--cache-dir DIR] [--qos S:T:B]\n\
   prepare [--graphs N] [--seed S] [--r-cut R] [--k-max K] [--cache-dir DIR]\n\

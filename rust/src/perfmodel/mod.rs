@@ -336,6 +336,18 @@ pub fn estimate_fleet_epoch(
     }
 }
 
+/// Modeled seconds of stream wall per graph for one plane of a fleet
+/// splitting `n_graphs` evenly — the unit cost the straggler watchdog
+/// ([`fleet::watchdog`](crate::fleet::watchdog)) multiplies by a
+/// member's shard-graph count to derive its drain deadline (invariant
+/// F4's time base). `epoch_stream_secs` is per *plane* over `1/planes`
+/// of the dataset, so per graph the fleet-wide cost is
+/// `epoch_stream_secs * planes / n_graphs`.
+pub fn fleet_secs_per_graph(est: &FleetEpochEstimate, n_graphs: usize) -> f64 {
+    assert!(n_graphs > 0, "a deadline needs at least one graph");
+    (est.epoch_stream_secs * est.planes as f64 / n_graphs as f64).max(f64::MIN_POSITIVE)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -365,6 +377,24 @@ mod tests {
 
     fn setup(n_ipus: usize, opts: OptFlags) -> TrainSetup {
         TrainSetup { n_ipus, opts, ..Default::default() }
+    }
+
+    #[test]
+    fn secs_per_graph_is_positive_and_scale_consistent() {
+        let arch = IpuArch::bow();
+        let w = water45();
+        let s = setup(16, OptFlags::ALL);
+        let one = estimate_fleet_epoch(&w, &s, 1, &arch);
+        let spg = fleet_secs_per_graph(&one, w.n_graphs);
+        assert!(spg > 0.0 && spg.is_finite());
+        // One plane streaming the whole dataset: per-graph cost times
+        // graph count reproduces the epoch stream wall.
+        assert!((spg * w.n_graphs as f64 - one.epoch_stream_secs).abs() < 1e-9);
+        // More planes split the same stream work: the per-graph unit
+        // cost stays within the rounding slack of one step.
+        let four = estimate_fleet_epoch(&w, &s, 4, &arch);
+        let spg4 = fleet_secs_per_graph(&four, w.n_graphs);
+        assert!((spg4 - spg).abs() / spg < 0.01, "unit cost is plane-count invariant");
     }
 
     #[test]

@@ -33,11 +33,25 @@
 //! credits are conserved across join/leave). Its teeth test seeds a
 //! rebalance that abandons a draining member's in-flight admission
 //! without returning the credit, and asserts the explorer finds it.
+//!
+//! A third family (`watchdog_*` / `guard_*`) adds the chaos layer's
+//! straggler protocol: the *real* `fleet::Watchdog` probes a member
+//! that stalls mid-stream holding a shard and an admission credit, and
+//! on the `Dead` verdict recovery performs a real
+//! `Membership::force_leave` and reassigns every unfinished shard —
+//! including the claimed-but-undelivered in-flight one — to survivors
+//! via the real rendezvous manifest (invariants F4 + F5 + F3: deadlines
+//! only move forward, no shard lost or double-streamed, no credit
+//! leaked). Its teeth test seeds a recovery that skips the in-flight
+//! shard and asserts the explorer reports the lost shard and replays it
+//! bit-identically.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 
 use molpack::datasets::SourceFingerprint;
-use molpack::fleet::{Assignment, MemberId, Membership, ShardId, ShardManifest};
+use molpack::fleet::{
+    Assignment, MemberId, Membership, ShardId, ShardManifest, Verdict, Watchdog, WatchdogConfig,
+};
 use molpack::util::sched::{parse_seed, Explorer, Scenario, Step, Violation};
 use molpack::util::Rng;
 
@@ -792,6 +806,272 @@ fn catches_leaked_admission_on_rebalance() {
     );
     let v2 = ex
         .replay(v.seed, |rng| build_fleet(rng, Some(FleetBug::LeakyRebalance)))
+        .expect_err("replaying the reported seed must fail again");
+    assert_eq!(*v, *v2, "replay diverged from the original violation");
+}
+
+// ---------------------------------------------------------------------------
+// Watchdog force-leave scenario (invariants F4 + F5 + F3): members
+// stream shards the real manifest assigned them while the *real*
+// `fleet::Watchdog` tracks their drain progress on a virtual clock. One
+// scripted member wedges mid-stream holding a claimed shard and an
+// admission credit; the watchdog actor advances the clock to the
+// (F4-monotone) deadline and probes, and on `Dead` performs a real
+// `Membership::force_leave`, reclaims the dead member's credit, and
+// reassigns its unfinished shards — in-flight claim included — to the
+// survivors via the real rendezvous owner function. The probe/drain
+// interleaving is fully explored, so the force-leave can land before
+// the stall, mid-claim, or after partial progress; recovery must keep
+// every shard single-streamed and every credit accounted in all cases.
+// ---------------------------------------------------------------------------
+
+/// The seeded recovery bug for the teeth self-test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum GuardBug {
+    /// Recovery reassigns the dead member's queued shards but skips the
+    /// claimed-but-undelivered one it was streaming when force-left.
+    LostShardOnForceLeave,
+}
+
+/// Shared state: real manifest + membership + watchdog, plus the
+/// modeled per-member stream queues and admission credits.
+struct GuardModel {
+    manifest: ShardManifest,
+    membership: Membership,
+    watchdog: Watchdog,
+    /// Per-member work queues, seeded from the real assignment and
+    /// extended by recovery reassignment.
+    todo: HashMap<MemberId, VecDeque<ShardId>>,
+    /// Shard each member has claimed (one credit) but not delivered.
+    streaming: HashMap<MemberId, ShardId>,
+    /// Delivery counts per shard (F5: exactly one each at quiescence).
+    covered: HashMap<ShardId, u32>,
+    credits: usize,
+    in_flight: usize,
+    /// The member scripted to wedge, and after how many deliveries.
+    stalled: MemberId,
+    stall_after: usize,
+    delivered_by_stalled: usize,
+    recovered: bool,
+    fault: Option<String>,
+}
+
+fn guard_invariant(m: &GuardModel) -> Result<(), String> {
+    if let Some(f) = &m.fault {
+        return Err(f.clone());
+    }
+    if m.in_flight > m.credits {
+        return Err(format!(
+            "admission overrun: in_flight {} > credits {}",
+            m.in_flight, m.credits
+        ));
+    }
+    Ok(())
+}
+
+fn guard_finale(m: &GuardModel) -> Result<(), String> {
+    if !m.recovered {
+        return Err("the stalled member was never force-left".to_string());
+    }
+    if m.in_flight != 0 {
+        return Err(format!(
+            "credits lost: in_flight {} != 0 at quiescence",
+            m.in_flight
+        ));
+    }
+    for s in 0..m.manifest.n_shards() {
+        match m.covered.get(&s).copied().unwrap_or(0) {
+            1 => {}
+            0 => return Err(format!("shard {s} lost on force-leave")),
+            k => return Err(format!("shard {s} streamed {k} times")),
+        }
+    }
+    Ok(())
+}
+
+/// A streaming member: claim an owned shard (one credit), deliver it
+/// (credit back, watchdog progress). The scripted straggler wedges
+/// mid-stream after its delivery quota; a force-left member observes
+/// the real membership and retires — recovery already reclaimed
+/// whatever it held.
+fn guard_member(me: MemberId) -> impl FnMut(&mut GuardModel) -> Step {
+    move |m: &mut GuardModel| {
+        if m.membership.state(me).is_none() {
+            return Step::Done; // force-left: the plane is gone
+        }
+        if let Some(&s) = m.streaming.get(&me) {
+            if me == m.stalled && m.delivered_by_stalled >= m.stall_after {
+                return Step::Blocked; // wedged holding shard + credit
+            }
+            m.streaming.remove(&me);
+            *m.covered.entry(s).or_insert(0) += 1;
+            m.in_flight -= 1;
+            m.watchdog.progress(me, 1);
+            if me == m.stalled {
+                m.delivered_by_stalled += 1;
+            }
+            return Step::Ran;
+        }
+        let next = m.todo.get(&me).and_then(|q| q.front().copied());
+        let Some(s) = next else {
+            // drained: wait for possible recovery reassignment, then done
+            return if m.recovered { Step::Done } else { Step::Blocked };
+        };
+        if m.in_flight >= m.credits {
+            return Step::Blocked;
+        }
+        m.in_flight += 1;
+        m.todo.get_mut(&me).expect("todo queue exists").pop_front();
+        m.streaming.insert(me, s);
+        Step::Ran
+    }
+}
+
+/// The watchdog actor: advance the virtual clock to the straggler's
+/// deadline and probe (checking F4 monotonicity on the real deadline);
+/// on `Dead`, run the recovery protocol — real force-leave, credit
+/// reclaim, unfinished shards to the survivors' queues via the real
+/// rendezvous owner. The seeded bug skips the in-flight claim.
+fn guard_watchdog(bug: Option<GuardBug>) -> impl FnMut(&mut GuardModel) -> Step {
+    move |m: &mut GuardModel| {
+        if m.recovered {
+            return Step::Done;
+        }
+        let Some(d0) = m.watchdog.deadline(m.stalled) else {
+            m.fault = Some("watchdog lost the straggler's track".to_string());
+            return Step::Ran;
+        };
+        m.watchdog.advance_to(d0);
+        let verdict = m.watchdog.probe(m.stalled);
+        if let Some(d1) = m.watchdog.deadline(m.stalled) {
+            if d1 < d0 {
+                m.fault = Some(format!("F4: deadline moved backward ({d1} < {d0})"));
+                return Step::Ran;
+            }
+        }
+        match verdict {
+            Verdict::Healthy | Verdict::Late => Step::Ran,
+            Verdict::Dead => {
+                let target = m.stalled;
+                if let Err(e) = m.membership.force_leave(target) {
+                    m.fault = Some(format!("force-leave failed: {e}"));
+                    return Step::Ran;
+                }
+                let survivors = m.membership.active();
+                let mut orphans: Vec<ShardId> =
+                    m.todo.remove(&target).map(Vec::from).unwrap_or_default();
+                if let Some(s) = m.streaming.remove(&target) {
+                    m.in_flight -= 1; // the admission dies with the plane
+                    if bug != Some(GuardBug::LostShardOnForceLeave) {
+                        orphans.push(s); // the in-flight claim is work too
+                    }
+                }
+                for s in orphans {
+                    let owner = m.manifest.owner(s, &survivors);
+                    m.todo.entry(owner).or_default().push_back(s);
+                }
+                m.recovered = true;
+                Step::Ran
+            }
+        }
+    }
+}
+
+/// Randomized guard shapes: dataset/shard geometry, 2-4 founders, the
+/// straggler is the member with the most shards (guaranteed work to
+/// wedge on), a random delivery quota before the wedge, small credit
+/// caps so the held credit starves real admissions.
+fn build_guard(rng: &mut Rng, bug: Option<GuardBug>) -> Scenario<GuardModel> {
+    let molecules = rng.range(24, 97) as u64;
+    let shard_len = rng.range(4, 13);
+    let fingerprint =
+        SourceFingerprint { molecules, content_hash: 0x00F4_5A_FE_F1_EE ^ molecules };
+    let manifest = ShardManifest::new(fingerprint, shard_len).expect("manifest geometry is legal");
+    let mut membership = Membership::new();
+    let n_initial = rng.range(2, 5) as u64;
+    for id in 1..=n_initial {
+        membership.join(id).expect("founding join");
+    }
+    let change = membership.flip();
+    let active = membership.active();
+    let assignment = manifest.assign(change.generation, &active);
+    let mut todo: HashMap<MemberId, VecDeque<ShardId>> = HashMap::new();
+    for &id in &active {
+        todo.insert(id, assignment.shards(id).iter().copied().collect());
+    }
+    let stalled = active
+        .iter()
+        .copied()
+        .max_by_key(|&id| todo[&id].len())
+        .expect("founders exist");
+    let stall_after = rng.range(0, todo[&stalled].len());
+    let expected: Vec<(MemberId, u64)> =
+        active.iter().map(|&id| (id, todo[&id].len() as u64)).collect();
+    let mut watchdog = Watchdog::new(WatchdogConfig::default());
+    // One virtual second per shard: deadlines dwarf the config's
+    // min-deadline floor, so the probe ladder is exercised for real.
+    watchdog.begin_epoch(&expected, 1.0);
+    let model = GuardModel {
+        manifest,
+        membership,
+        watchdog,
+        todo,
+        streaming: HashMap::new(),
+        covered: HashMap::new(),
+        credits: rng.range(1, 4),
+        in_flight: 0,
+        stalled,
+        stall_after,
+        delivered_by_stalled: 0,
+        recovered: false,
+        fault: None,
+    };
+    let mut sc = Scenario::new(model).with_invariant(guard_invariant).with_finale(guard_finale);
+    for &id in &active {
+        sc = sc.with_actor(&format!("member-{id}"), guard_member(id));
+    }
+    sc.with_actor("watchdog", guard_watchdog(bug))
+}
+
+const GUARD_SEED: u64 = 0x57A1_1EDF;
+
+/// The guard gate: the real watchdog + membership + manifest keep F4,
+/// F5, and F3 over every explored stall/force-leave interleaving.
+#[test]
+fn watchdog_force_leave_protocol_holds_over_seeded_interleavings() {
+    let ex = Explorer::from_env(1500, GUARD_SEED);
+    if let Ok(raw) = std::env::var("MOLPACK_RACE_SEED") {
+        let seed = parse_seed(&raw).expect("MOLPACK_RACE_SEED must be decimal or 0x-hex");
+        match ex.replay(seed, |rng| build_guard(rng, None)) {
+            Ok(steps) => println!("guard seed {seed:#x}: clean ({steps} steps)"),
+            Err(v) => panic!("{v}"),
+        }
+        return;
+    }
+    match ex.run(|rng| build_guard(rng, None)) {
+        Ok(stats) => println!(
+            "guard race explorer: {} schedules, {} steps, F4/F5/F3 held",
+            stats.schedules, stats.steps
+        ),
+        Err(v) => panic!("{v}"),
+    }
+}
+
+/// Teeth: a recovery that skips the dead member's in-flight shard must
+/// be caught as a lost shard at quiescence and must replay identically
+/// from its seed.
+#[test]
+fn catches_lost_shard_on_force_leave() {
+    let ex = Explorer::new(800, GUARD_SEED);
+    let v = ex
+        .run(|rng| build_guard(rng, Some(GuardBug::LostShardOnForceLeave)))
+        .expect_err("LostShardOnForceLeave must be caught within 800 schedules");
+    assert!(
+        v.message.contains("lost on force-leave"),
+        "caught, but with unexpected message: {v}"
+    );
+    let v2 = ex
+        .replay(v.seed, |rng| build_guard(rng, Some(GuardBug::LostShardOnForceLeave)))
         .expect_err("replaying the reported seed must fail again");
     assert_eq!(*v, *v2, "replay diverged from the original violation");
 }
