@@ -24,10 +24,18 @@
 #                     bitwise-identical stream, BENCH_persist.json), the
 #                     zero-copy mapped-load section (>= 1.2x mapped
 #                     over owned, page-sharing RSS check, BENCH_mmap.json),
-#                     and the multi-plane fleet sim (stream equivalence,
+#                     the SLO overload section (`make slo`), and the
+#                     multi-plane fleet sim (stream equivalence,
 #                     >= 1.15x overlapped-collective bar, elastic
 #                     join/leave, BENCH_fleet.json), then the chaos
 #                     sweep (`make chaos`).
+#   make slo          SLO-guarded serving overload: one Serving session
+#                     at ~2x its sustainable rate — unguarded queue-wait
+#                     p95 must diverge quarter over quarter, a guarded
+#                     session must shed (> 0) with served p95 under the
+#                     deadline, and coalesced request packs must reach
+#                     >= 0.8x the whole-mix training LPFHP fill
+#                     (BENCH_slo.json).
 #   make chaos        seeded fault-injection sweep: 5 deterministic
 #                     chaos schedules through the fleet watchdog
 #                     (stall/crash/slow-drain/open-fail/collective-fail/
@@ -39,7 +47,7 @@
 #   make bench-check  the perf ledger gate: bench-smoke, then `molpack
 #                     benchdiff` of each fresh snapshot against the
 #                     committed baselines in BENCH_history/ — fails on
-#                     any guarded metric regressing beyond 25% or
+#                     any guarded metric regressing beyond 20% or
 #                     vanishing from the snapshot.
 #   make bench-record refresh the BENCH_history/ baselines from a fresh
 #                     bench-smoke run, record `make lint` / `make race`
@@ -48,7 +56,7 @@
 #                     BENCH_history/trajectory/<short-sha>/ (run on a
 #                     quiet machine; commit the result).
 
-.PHONY: check fmt clippy lint test race chaos bench-build bench-smoke bench-check bench-record artifacts
+.PHONY: check fmt clippy lint test race chaos slo bench-build bench-smoke bench-check bench-record artifacts
 
 check: fmt clippy lint test race bench-build
 
@@ -73,6 +81,12 @@ race:
 chaos:
 	cargo run --release -q -- fleet --chaos --schedules 5 --graphs 480 --epochs 3 --out BENCH_chaos.json
 
+# SLO overload acceptance: divergence, shedding, and coalescing bars are
+# asserted inside the bench; the deterministic pack-fill rates land in
+# BENCH_slo.json for the ledger.
+slo:
+	cargo bench --bench bench_pipeline -- --slo-only --graphs 4000 --slo-out BENCH_slo.json
+
 # Benches must at least compile in CI even though they only run on demand.
 bench-build:
 	cargo bench --no-run
@@ -82,30 +96,32 @@ bench-smoke:
 	cargo bench --bench bench_pipeline -- --persist-only --graphs 4000 --persist-out BENCH_persist.json
 	cargo bench --bench bench_pipeline -- --mmap-only --graphs 4000 --mmap-out BENCH_mmap.json
 	cargo bench --bench bench_pipeline -- --widen-only
+	$(MAKE) slo
 	cargo run --release -q -- fleet --replicas 3 --graphs 480 --epochs 3 --out BENCH_fleet.json
 	$(MAKE) chaos
 
 # Perf ledger gate: fresh smoke snapshots vs the committed baselines.
-# Tolerance 0.25 = a guarded metric may be up to 25% worse before
+# Tolerance 0.20 = a guarded metric may be up to 20% worse before
 # failing (wall-clock metrics are noisy across CI machines; the hard
-# acceptance bars — 2x/1.5x/1.2x/1.15x — are asserted inside the
+# acceptance bars — 2x/1.5x/1.2x/1.15x/0.8x — are asserted inside the
 # benches themselves, this gate catches slower drift and vanished
 # metrics).
 bench-check: bench-smoke
-	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_assembly.json --current BENCH_assembly.json --tolerance 0.25
-	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_persist.json --current BENCH_persist.json --tolerance 0.25
-	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_mmap.json --current BENCH_mmap.json --tolerance 0.25
-	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_fleet.json --current BENCH_fleet.json --tolerance 0.25
-	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_chaos.json --current BENCH_chaos.json --tolerance 0.25
+	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_assembly.json --current BENCH_assembly.json --tolerance 0.20
+	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_persist.json --current BENCH_persist.json --tolerance 0.20
+	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_mmap.json --current BENCH_mmap.json --tolerance 0.20
+	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_slo.json --current BENCH_slo.json --tolerance 0.20
+	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_fleet.json --current BENCH_fleet.json --tolerance 0.20
+	cargo run -q -- benchdiff --baseline BENCH_history/BENCH_chaos.json --current BENCH_chaos.json --tolerance 0.20
 
 # Refresh the committed baselines (run on a quiet machine, then commit
 # BENCH_history/). Also times the lint and race gates so gate cost is
-# part of the ledger, and files a per-PR trajectory snapshot of all five
+# part of the ledger, and files a per-PR trajectory snapshot of all six
 # bench JSONs under BENCH_history/trajectory/<short-sha>/ so regressions
 # can be bisected against the ledger after the fact.
 bench-record: bench-smoke
 	mkdir -p BENCH_history
-	cp BENCH_assembly.json BENCH_persist.json BENCH_mmap.json BENCH_fleet.json BENCH_chaos.json BENCH_history/
+	cp BENCH_assembly.json BENCH_persist.json BENCH_mmap.json BENCH_slo.json BENCH_fleet.json BENCH_chaos.json BENCH_history/
 	t0=$$(date +%s%N); $(MAKE) lint >/dev/null; t1=$$(date +%s%N); \
 	$(MAKE) race >/dev/null; t2=$$(date +%s%N); \
 	{ printf '{\n  "gates": {\n'; \
@@ -114,7 +130,7 @@ bench-record: bench-smoke
 	  printf '  }\n}\n'; } > BENCH_history/gates.json
 	sha=$$(git rev-parse --short HEAD) && \
 	mkdir -p BENCH_history/trajectory/$$sha && \
-	cp BENCH_assembly.json BENCH_persist.json BENCH_mmap.json BENCH_fleet.json BENCH_chaos.json \
+	cp BENCH_assembly.json BENCH_persist.json BENCH_mmap.json BENCH_slo.json BENCH_fleet.json BENCH_chaos.json \
 	  BENCH_history/gates.json BENCH_history/trajectory/$$sha/
 	@echo "baselines + gate timings + trajectory snapshot recorded into BENCH_history/ — commit them"
 

@@ -7,9 +7,14 @@
 //! `DataPlane`: sharded LPFHP planning means the first prediction fires
 //! after O(shard) host work, admission credits bound how far the plane
 //! runs ahead of the device, and every `HostBatch` recycles through the
-//! buffer pool when its lease drops after `predict`. Session metrics
-//! (dispatcher queue wait, credit stalls) are reported alongside
-//! latency.
+//! buffer pool when its lease drops after `predict`. The session
+//! carries an `Slo` deadline, so the dispatcher classifies every served
+//! batch as met/missed and — under overload — sheds predicted-miss
+//! batches instead of queueing them unboundedly (a shed batch arrives
+//! as an `Err` whose message starts with `"shed:"`; the example counts
+//! it as deliberate degradation, not a failure). Session metrics
+//! (dispatcher queue wait, credit stalls, shed/met/missed) are reported
+//! alongside latency.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example serve_energy -- [requests]
@@ -19,7 +24,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
-use molpack::coordinator::{Batcher, DataPlane, JobSpec, PipelineConfig};
+use molpack::coordinator::{Batcher, DataPlane, JobSpec, PipelineConfig, Slo};
 use molpack::datasets::HydroNet;
 use molpack::packing::Packer;
 use molpack::runtime::Engine;
@@ -37,24 +42,39 @@ fn main() -> Result<()> {
     let batcher = Batcher::new(engine.manifest.batch, engine.manifest.model.r_cut as f32);
     let cfg = PipelineConfig { packer: Packer::Lpfhp, shard_size: 128, ..Default::default() };
 
-    // The request queue is one Serving-class session on the plane.
+    // The request queue is one Serving-class session on the plane, with
+    // a dispatcher-wait SLO: generous enough that a healthy in-process
+    // run sheds nothing, but every served batch is classified met/missed
+    // and a wedged plane degrades by shedding instead of queueing.
+    let slo = Slo::deadline(50.0);
     let plane = DataPlane::new(source, batcher, cfg);
-    let mut session = plane.open_session(JobSpec::serving().with_credits(4));
+    let mut session = plane.open_session(JobSpec::serving().with_credits(4).with_slo(slo));
     println!(
-        "serve_energy: {requests} molecules streaming in shards of {} (G={} slots/batch, session #{} qos={})",
+        "serve_energy: {requests} molecules streaming in shards of {} (G={} slots/batch, session #{} qos={}, SLO {:.0} ms)",
         plane.config().shard_size,
         engine.manifest.batch.n_graphs,
         session.id(),
         session.qos().name(),
+        slo.deadline_ms,
     );
 
     let mut latencies = Vec::new();
     let mut batches = 0usize;
     let mut served = 0usize;
+    let mut shed_batches = 0usize;
     let mut sq_err = 0.0f64;
     let t_all = Instant::now();
     for lease in session.by_ref() {
-        let batch = lease?;
+        let batch = match lease {
+            Ok(b) => b,
+            // Deliberate SLO degradation, not a failure: the dispatcher
+            // predicted this batch would miss its deadline and shed it.
+            Err(e) if e.to_string().starts_with("shed:") => {
+                shed_batches += 1;
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
         let t0 = Instant::now();
         let energies = engine.predict(&state.params, &batch)?;
         latencies.push(t0.elapsed().as_secs_f64() * 1e3);
@@ -70,7 +90,9 @@ fn main() -> Result<()> {
     }
     let total = t_all.elapsed().as_secs_f64();
 
-    assert_eq!(served, requests, "every request must be answered exactly once");
+    if shed_batches == 0 {
+        assert_eq!(served, requests, "every request must be answered exactly once");
+    }
     if served == 0 {
         // 0-request invocation: there is no throughput or error to
         // report — dividing by `served` here used to print NaN RMSE and
@@ -98,6 +120,14 @@ fn main() -> Result<()> {
         w.p95,
         m.assembly_time.as_secs_f64() * 1e3,
         m.credit_stalls
+    );
+    println!(
+        "SLO: deadline met {} missed {} (hit rate {:.3}) | shed {} | down-classed {}",
+        m.deadline_met,
+        m.deadline_missed,
+        m.deadline_hit_rate(),
+        m.shed,
+        m.downclassed
     );
     println!(
         "data-plane buffers allocated: {} (recycled across {batches} batches)",

@@ -119,6 +119,30 @@
 //!   *escalated to force-leave* (F5 then covers its shards), never
 //!   retried forever and never silently dropped with its shards.
 //!
+//! SLO invariants (the [`slo`](crate::coordinator::slo) subsystem adds
+//! deadline admission, load shedding, and credit autoscaling on top of
+//! the credit protocol; these extend the catalog to the guarded path):
+//!
+//! * **S1: shed work always releases its credit** — a batch the SLO
+//!   gate sheds is dispatched *credited* exactly like a served batch
+//!   and delivered as a credited `Err("shed: ...")` without assembly,
+//!   so its credit returns through the one normal receive path. No
+//!   shed-specific release exists to forget: the *credits* invariant
+//!   holds bit-for-bit whether a batch was served, shed, or abandoned.
+//! * **S2: a down-classed batch is dispatched exactly once** — the
+//!   `Downclass` policy moves a Serving head to the Background lane
+//!   *without* taking its credit and marks it down-classed; the SLO
+//!   gate only ever examines the Serving lane and never a marked job,
+//!   so the one dispatch (credit + queue-wait accounting) happens when
+//!   the Background lane takes it. Demotion is single-shot and
+//!   loss-free by construction.
+//! * **S3: predictor state never blocks the dispatch lock** — the
+//!   gate's inputs are two relaxed atomic loads (`WaitPredictor`); the
+//!   EWMA write runs under the dispatch lock it already holds, and the
+//!   amortized p95 refresh runs consumer-side behind a `try_lock` that
+//!   skips rather than contends. No SLO bookkeeping introduces a new
+//!   wait-for edge into the dispatcher.
+//!
 //! Locking discipline, enforced by the `lock-across-send` and
 //! `unwrap-in-hot-path` lints: no `MutexGuard` is held across a
 //! `send`/`notify_*` (lost-wakeup/priority-inversion hazard), and
@@ -138,6 +162,7 @@ use anyhow::Result;
 
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::session::{JobSpec, QosClass, QosWeights, SessionMetrics, SessionState};
+use crate::coordinator::slo::{ShedPolicy, Slo};
 use crate::datasets::{MoleculeSource, PreparedSource, PreparedStats, CACHE_FILE};
 use crate::packing::{effective_shard, pack_shard, Pack, Packer};
 use crate::runtime::{BatchGeometry, HostBatch};
@@ -229,6 +254,13 @@ enum Job {
         packs: Vec<Pack>,
         enqueued: Instant,
         tx: SyncSender<Delivery>,
+        /// The SLO gate shed this batch at dispatch: the worker skips
+        /// assembly and delivers a credited `Err("shed: ...")` in its
+        /// plan slot (invariant S1).
+        shed: bool,
+        /// The SLO gate already demoted this batch to the Background
+        /// lane; it is never examined (or demoted) again (invariant S2).
+        downclassed: bool,
     },
 }
 
@@ -257,7 +289,9 @@ impl SessionQueue {
     fn dispatchable(&self) -> bool {
         match self.jobs.front() {
             Some(Job::Assemble { sess, .. }) => {
-                sess.in_flight.load(Ordering::Acquire) < sess.credits
+                // Admission checks the autoscaled *effective* credits;
+                // the open-time ceiling only sizes the channel/pool.
+                sess.in_flight.load(Ordering::Acquire) < sess.effective_credits()
             }
             Some(Job::PlanShard { .. }) => true,
             None => false,
@@ -316,17 +350,75 @@ impl Lane {
 
     /// Dispatch the head job of the session at rotation position `oi`:
     /// take its credit, account queue-wait/stall time, and rotate the
-    /// session to the lane's back for round-robin fairness.
-    fn take(&mut self, oi: usize) -> Job {
+    /// session to the lane's back for round-robin fairness. With
+    /// `shed`, the credit is still taken (S1: a shed flows through the
+    /// normal credited delivery/receive path) but the wait feeds only
+    /// the predictor, not the served-latency ring.
+    fn take(&mut self, oi: usize, shed: bool) -> Job {
         let id = self.order.remove(oi).expect("rotation index in range");
         let q = self.queues.get_mut(&id).expect("rotation id has a queue");
-        let job = q.jobs.pop_front().expect("dispatchable session has a head job");
-        if let Job::Assemble { sess, enqueued, .. } = &job {
+        let mut job = q.jobs.pop_front().expect("dispatchable session has a head job");
+        if let Job::Assemble { sess, enqueued, shed: mark, .. } = &mut job {
             sess.in_flight.fetch_add(1, Ordering::AcqRel);
-            sess.record_dispatch(*enqueued);
+            if shed {
+                *mark = true;
+                sess.record_shed(*enqueued);
+            } else {
+                sess.record_dispatch(*enqueued);
+            }
             if let Some(t) = q.blocked_since.take() {
                 sess.record_credit_stall_cleared(t.elapsed());
             }
+        }
+        q.blocked_since = None; // the head changed
+        if q.jobs.is_empty() {
+            self.queues.remove(&id);
+        } else {
+            self.order.push_back(id);
+        }
+        job
+    }
+
+    /// What should the SLO gate do with the head job at rotation
+    /// position `oi`? `Serve` for anything without a deadline. Reads
+    /// only atomics (S3): the accrued wait and the predictor estimate.
+    fn slo_verdict(&self, oi: usize) -> SloVerdict {
+        let Some(q) = self.order.get(oi).and_then(|id| self.queues.get(id)) else {
+            return SloVerdict::Serve;
+        };
+        let Some(Job::Assemble { sess, enqueued, downclassed, .. }) = q.jobs.front() else {
+            return SloVerdict::Serve;
+        };
+        let (Some(slo), false) = (&sess.slo, *downclassed) else {
+            return SloVerdict::Serve;
+        };
+        // A batch already late is certainly late; a fresh batch is
+        // judged by the predictor's live estimate of this session's
+        // dispatch wait. Served batches therefore all have accrued
+        // wait <= deadline — the guarded p95 bound is structural.
+        let waited_ms = enqueued.elapsed().as_secs_f64() * 1e3;
+        if waited_ms.max(sess.predictor.predicted_wait_ms()) <= slo.deadline_ms {
+            SloVerdict::Serve
+        } else {
+            match slo.shed_policy {
+                ShedPolicy::Shed => SloVerdict::Shed,
+                ShedPolicy::Downclass => SloVerdict::Downclass,
+            }
+        }
+    }
+
+    /// Remove the head job at rotation position `oi` for demotion:
+    /// *no* credit is taken and no dispatch is recorded — the target
+    /// lane's eventual `take` does both, so the batch is dispatched
+    /// exactly once (S2).
+    fn pop_for_downclass(&mut self, oi: usize) -> Job {
+        let id = self.order.remove(oi).expect("rotation index in range");
+        let q = self.queues.get_mut(&id).expect("rotation id has a queue");
+        let mut job = q.jobs.pop_front().expect("verdicted session has a head job");
+        if let Job::Assemble { sess, downclassed, .. } = &mut job {
+            debug_assert!(!*downclassed, "a batch is down-classed at most once (S2)");
+            *downclassed = true;
+            sess.record_downclass();
         }
         q.blocked_since = None; // the head changed
         if q.jobs.is_empty() {
@@ -351,6 +443,14 @@ impl Lane {
     }
 }
 
+/// The SLO gate's decision for a Serving-lane head (see
+/// [`Lane::slo_verdict`]).
+enum SloVerdict {
+    Serve,
+    Shed,
+    Downclass,
+}
+
 struct DispatchState {
     /// Indexed by `QosClass::lane()` (priority order).
     lanes: [Lane; 3],
@@ -362,31 +462,53 @@ struct DispatchState {
 
 impl DispatchState {
     /// Pick the next job by smooth weighted round-robin over lanes with
-    /// a dispatchable session, or `None` if nothing is runnable.
+    /// a dispatchable session, or `None` if nothing is runnable. When
+    /// the winner is the Serving lane, its head passes the SLO gate
+    /// first: a predicted-miss head is shed (dispatched credited, but
+    /// marked — the worker delivers the shed error without assembling)
+    /// or demoted to the Background lane (no credit taken; the loop
+    /// then rescans, since the demotion changed both lanes' heads).
     fn dispatch_next(&mut self) -> Option<Job> {
         let now = Instant::now();
-        let mut heads: [Option<usize>; 3] = [None; 3];
-        for (li, lane) in self.lanes.iter_mut().enumerate() {
-            heads[li] = lane.scan(now);
+        loop {
+            let mut heads: [Option<usize>; 3] = [None; 3];
+            for (li, lane) in self.lanes.iter_mut().enumerate() {
+                heads[li] = lane.scan(now);
+            }
+            let runnable: Vec<usize> = (0..3).filter(|&l| heads[l].is_some()).collect();
+            if runnable.is_empty() {
+                return None;
+            }
+            let mut total = 0i64;
+            for &l in &runnable {
+                let w = self.weights[l] as i64;
+                self.lanes[l].wrr += w;
+                total += w;
+            }
+            // Highest counter wins; ties break toward the higher-priority
+            // (lower-index) lane.
+            let best = *runnable
+                .iter()
+                .max_by_key(|&&l| (self.lanes[l].wrr, std::cmp::Reverse(l)))
+                .expect("runnable is non-empty");
+            self.lanes[best].wrr -= total;
+            let oi = heads[best].expect("runnable lane has a head");
+            if best == QosClass::Serving.lane() {
+                match self.lanes[best].slo_verdict(oi) {
+                    SloVerdict::Serve => {}
+                    SloVerdict::Shed => return Some(self.lanes[best].take(oi, true)),
+                    SloVerdict::Downclass => {
+                        let job = self.lanes[best].pop_for_downclass(oi);
+                        let sess = Arc::clone(job.session());
+                        self.lanes[QosClass::Background.lane()].push(sess, job);
+                        // Each pass strictly shrinks the Serving lane,
+                        // so the rescan loop terminates.
+                        continue;
+                    }
+                }
+            }
+            return Some(self.lanes[best].take(oi, false));
         }
-        let runnable: Vec<usize> = (0..3).filter(|&l| heads[l].is_some()).collect();
-        if runnable.is_empty() {
-            return None;
-        }
-        let mut total = 0i64;
-        for &l in &runnable {
-            let w = self.weights[l] as i64;
-            self.lanes[l].wrr += w;
-            total += w;
-        }
-        // Highest counter wins; ties break toward the higher-priority
-        // (lower-index) lane.
-        let best = *runnable
-            .iter()
-            .max_by_key(|&&l| (self.lanes[l].wrr, std::cmp::Reverse(l)))
-            .expect("runnable is non-empty");
-        self.lanes[best].wrr -= total;
-        Some(self.lanes[best].take(heads[best].expect("runnable lane has a head")))
     }
 
     /// Drop every queued job of cancelled sessions (dropping their
@@ -813,7 +935,7 @@ impl DataPlane {
             rng.shuffle(&mut ids);
         }
         let sess = Arc::new(SessionState::new(
-            id, spec.qos, credits, source, packer, shard_size, topology,
+            id, spec.qos, credits, source, packer, shard_size, topology, spec.slo,
         ));
         // Channel capacity = credits + 1: credited occupancy is bounded
         // by the credit limit, and the plan chain is strictly sequential
@@ -970,9 +1092,20 @@ impl Session {
         self.stream.sess.qos
     }
 
-    /// Admission credit limit this session was opened with.
+    /// Admission credit ceiling this session was opened with.
     pub fn credits(&self) -> usize {
         self.stream.sess.credits
+    }
+
+    /// Credits currently granted by the autoscaler, in
+    /// `[1, credits()]`; equal to the ceiling without an SLO.
+    pub fn effective_credits(&self) -> usize {
+        self.stream.sess.effective_credits()
+    }
+
+    /// The service-level objective this session was opened with.
+    pub fn slo(&self) -> Option<Slo> {
+        self.stream.sess.slo
     }
 
     /// Snapshot of the session's metrics (`queue_wait`,
@@ -985,6 +1118,14 @@ impl Session {
     /// percentiles; one sample per dispatched batch).
     pub fn queue_wait_samples_ms(&self) -> Vec<f64> {
         self.stream.sess.queue_wait_samples_ms()
+    }
+
+    /// Percentile summary of the retained queue-wait samples in
+    /// milliseconds (`util::stats::Summary`; `None` before the first
+    /// dispatch) — the shared p50/p95 implementation the CLI, benches,
+    /// and SLO predictor all use.
+    pub fn queue_wait_summary_ms(&self) -> Option<crate::util::stats::Summary> {
+        self.stream.sess.queue_wait_summary_ms()
     }
 
     /// The session's batch stream (the `Iterator` impl on `Session`
@@ -1027,6 +1168,23 @@ impl BatchStream {
             self.sess.in_flight.fetch_sub(1, Ordering::AcqRel);
             // A worker may be waiting on this session's admission.
             self.shared.dispatcher.credit_released();
+            if self.sess.slo.is_some() {
+                // SLO maintenance rides the consumer thread: the
+                // amortized p95 refresh (try_lock, S3) and the credit
+                // autoscaler's pool-headroom decision.
+                self.sess.maybe_refresh_predictor_p95();
+                if self.sess.autoscaler.tick() {
+                    let target = self.sess.autoscaler.decide(
+                        self.sess.effective_credits(),
+                        self.sess.credits,
+                        self.shared.pool.pooled(),
+                    );
+                    self.sess.set_effective_credits(target);
+                    // A grow may make this session's next assembly
+                    // newly dispatchable.
+                    self.shared.dispatcher.credit_released();
+                }
+            }
         }
         Some(d)
     }
@@ -1159,6 +1317,8 @@ fn worker_loop(shared: &Shared, batcher: &Batcher) {
                         packs: chunk.to_vec(),
                         enqueued: Instant::now(),
                         tx: tx.clone(),
+                        shed: false,
+                        downclassed: false,
                     });
                     idx += 1;
                 }
@@ -1177,12 +1337,34 @@ fn worker_loop(shared: &Shared, batcher: &Batcher) {
                 // Otherwise `tx` drops here; the session channel closes
                 // once the last in-flight assembly delivers.
             }
-            Job::Assemble { sess, batch_idx, packs, enqueued: _, tx } => {
+            Job::Assemble { sess, batch_idx, packs, enqueued: _, tx, shed, downclassed: _ } => {
                 if dead(shared, &sess) {
                     // Return the credit taken at dispatch; the consumer
                     // is gone (or the plane is) but the accounting stays
                     // consistent.
                     sess.in_flight.fetch_sub(1, Ordering::AcqRel);
+                    continue;
+                }
+                if shed {
+                    // SLO shed: no assembly, no buffer — a credited
+                    // error in the batch's plan slot, so the ordered
+                    // reorder window advances and the credit returns
+                    // through the normal receive path (S1). The "shed:"
+                    // prefix is the consumer's contract for telling a
+                    // deliberate shed from a real assembly failure.
+                    let deadline = sess.slo.map_or(f64::NAN, |s| s.deadline_ms);
+                    deliver(
+                        shared,
+                        &tx,
+                        Delivery {
+                            idx: batch_idx,
+                            credited: true,
+                            payload: Err(anyhow::anyhow!(
+                                "shed: batch {batch_idx} predicted to miss its \
+                                 {deadline:.1} ms dispatcher-wait deadline"
+                            )),
+                        },
+                    );
                     continue;
                 }
                 let t0 = Instant::now();

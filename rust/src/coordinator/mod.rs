@@ -20,9 +20,13 @@ pub mod pipeline;
 pub mod replicas;
 /// Session-layer vocabulary: job specs, QoS classes, metrics.
 pub mod session;
+/// SLO-guarded serving: deadline admission, predictive load shedding,
+/// request coalescing, credit autoscaling.
+pub mod slo;
 
 pub use batcher::{widen_u8_to_i32, AssemblyStats, Batcher};
 pub use dataplane::{BatchLease, BatchStream, BufferPool, DataPlane, PipelineConfig, Session};
 pub use pipeline::{plan_epoch, stream_epoch, EpochStream};
 pub use replicas::{CollectiveStats, DataParallel};
 pub use session::{JobSpec, QosClass, QosWeights, SessionMetrics};
+pub use slo::{Coalescer, CreditAutoscaler, ShedPolicy, Slo, SloConfig, WaitPredictor};

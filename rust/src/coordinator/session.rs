@@ -16,8 +16,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
+use crate::coordinator::slo::{CreditAutoscaler, Slo, SloConfig, WaitPredictor};
 use crate::datasets::{EdgeTopology, MoleculeSource, PreparedSource};
 use crate::packing::Packer;
+use crate::util::stats::{percentile_sorted, Summary};
 
 /// Quality-of-service class of a session: the dispatcher shares workers
 /// between classes by weighted priority (smooth weighted round-robin),
@@ -166,6 +168,11 @@ pub struct JobSpec {
     /// subset's membership — not its order — defines what the session
     /// streams.
     pub subset: Option<Arc<Vec<u32>>>,
+    /// Service-level objective: a dispatcher queue-wait deadline plus
+    /// the policy for work predicted to miss it. `None` (the default)
+    /// keeps the pre-SLO behavior: every batch waits as long as it
+    /// takes. See [`Slo`].
+    pub slo: Option<Slo>,
 }
 
 impl JobSpec {
@@ -180,6 +187,7 @@ impl JobSpec {
             credits: None,
             r_cut: None,
             subset: None,
+            slo: None,
         }
     }
 
@@ -266,6 +274,17 @@ impl JobSpec {
         self.subset = Some(subset);
         self
     }
+
+    /// Attach a service-level objective: batches predicted to miss
+    /// `slo.deadline_ms` of dispatcher queue wait are shed (delivered
+    /// as an error without assembly) or down-classed to the Background
+    /// lane, per `slo.shed_policy`. Overload then degrades deliberately
+    /// instead of inflating every consumer's latency.
+    #[must_use]
+    pub fn with_slo(mut self, slo: Slo) -> JobSpec {
+        self.slo = Some(slo);
+        self
+    }
 }
 
 impl std::fmt::Debug for JobSpec {
@@ -280,6 +299,7 @@ impl std::fmt::Debug for JobSpec {
             .field("credits", &self.credits)
             .field("r_cut", &self.r_cut)
             .field("subset", &self.subset.as_ref().map(|s| s.len()))
+            .field("slo", &self.slo)
             .finish()
     }
 }
@@ -311,6 +331,19 @@ pub struct SessionMetrics {
     /// cost some earlier epoch/tenant had not already covered.
     pub edge_cache_hits: u64,
     pub edge_cache_misses: u64,
+    /// Batches shed by the SLO gate: predicted to miss the session's
+    /// deadline and delivered as credited errors instead of assembled
+    /// (always 0 without an [`Slo`]).
+    pub shed: u64,
+    /// Batches demoted once to the Background lane by the
+    /// [`ShedPolicy::Downclass`](crate::coordinator::slo::ShedPolicy)
+    /// policy (each was still dispatched exactly once).
+    pub downclassed: u64,
+    /// Served batches whose dispatcher queue wait met the deadline.
+    pub deadline_met: u64,
+    /// Served batches whose dispatcher queue wait exceeded the deadline
+    /// (down-classed work typically lands here — late but not lost).
+    pub deadline_missed: u64,
 }
 
 impl SessionMetrics {
@@ -332,6 +365,17 @@ impl SessionMetrics {
             self.edge_cache_hits as f64 / total as f64
         }
     }
+
+    /// Fraction of served batches that met the SLO deadline, in [0, 1]
+    /// (1 when nothing was classified — no SLO, or nothing served yet).
+    pub fn deadline_hit_rate(&self) -> f64 {
+        let total = self.deadline_met + self.deadline_missed;
+        if total == 0 {
+            1.0
+        } else {
+            self.deadline_met as f64 / total as f64
+        }
+    }
 }
 
 /// Internal per-session state shared by the dispatcher, the workers, and
@@ -339,10 +383,16 @@ impl SessionMetrics {
 pub(crate) struct SessionState {
     pub(crate) id: u64,
     pub(crate) qos: QosClass,
-    /// Admission bound: max batches in flight (dispatched or delivered
-    /// but not yet received by the consumer). Always >= 1.
+    /// Admission *ceiling*: max batches in flight (dispatched or
+    /// delivered but not yet received by the consumer). Always >= 1.
+    /// The delivery channel and the pool's retain floor are sized from
+    /// this at open time and never change.
     pub(crate) credits: usize,
-    /// Batches currently in flight against `credits`.
+    /// The credits currently *granted* by the autoscaler, always in
+    /// `[1, credits]`. Admission checks this, not the ceiling; without
+    /// an SLO it stays pinned at the ceiling.
+    effective: AtomicUsize,
+    /// Batches currently in flight against `effective`.
     pub(crate) in_flight: AtomicUsize,
     /// Consumer dropped the stream: workers skip this session's jobs and
     /// the dispatcher purges its queue. (Plane-wide shutdown is a
@@ -374,6 +424,20 @@ pub(crate) struct SessionState {
     /// dispatches, so a long-lived serving session's memory stays
     /// bounded.
     wait_samples: Mutex<WaitRing>,
+    // --- SLO state (all `None`/idle without a JobSpec slo) ---
+    /// The session's service-level objective, if any.
+    pub(crate) slo: Option<Slo>,
+    /// SLO tuning constants (predictor alpha, refresh cadence,
+    /// autoscaler thresholds).
+    pub(crate) slo_cfg: SloConfig,
+    /// Live dispatch-wait estimate feeding the dispatcher's SLO gate.
+    pub(crate) predictor: WaitPredictor,
+    /// Effective-credit controller (consumer-side ticks).
+    pub(crate) autoscaler: CreditAutoscaler,
+    shed: AtomicU64,
+    downclassed: AtomicU64,
+    deadline_met: AtomicU64,
+    deadline_missed: AtomicU64,
 }
 
 /// Most recent queue-wait samples a session retains (8 bytes each).
@@ -406,11 +470,15 @@ impl SessionState {
         packer: Packer,
         shard_size: usize,
         topology: Arc<EdgeTopology>,
+        slo: Option<Slo>,
     ) -> SessionState {
+        let slo_cfg = SloConfig::default();
+        let autoscaler = CreditAutoscaler::new(&slo_cfg);
         SessionState {
             id,
             qos,
             credits: credits.max(1),
+            effective: AtomicUsize::new(credits.max(1)),
             in_flight: AtomicUsize::new(0),
             cancelled: AtomicBool::new(false),
             source,
@@ -426,19 +494,86 @@ impl SessionState {
             edge_cache_hits: AtomicU64::new(0),
             edge_cache_misses: AtomicU64::new(0),
             wait_samples: Mutex::new(WaitRing::default()),
+            slo,
+            slo_cfg,
+            predictor: WaitPredictor::default(),
+            autoscaler,
+            shed: AtomicU64::new(0),
+            downclassed: AtomicU64::new(0),
+            deadline_met: AtomicU64::new(0),
+            deadline_missed: AtomicU64::new(0),
         }
+    }
+
+    /// Credits currently granted by the autoscaler (== the open-time
+    /// ceiling without an SLO).
+    pub(crate) fn effective_credits(&self) -> usize {
+        self.effective.load(Ordering::Acquire)
+    }
+
+    /// Autoscaler decision landing: always clamped to `[1, credits]`,
+    /// so the delivery channel (sized `credits + 1`) and the pool's
+    /// retain floor never need to move.
+    pub(crate) fn set_effective_credits(&self, n: usize) {
+        self.effective.store(n.clamp(1, self.credits), Ordering::Release);
     }
 
     pub(crate) fn is_cancelled(&self) -> bool {
         self.cancelled.load(Ordering::Acquire)
     }
 
-    /// Dispatcher accounting when an assembly job leaves the queue.
+    /// Dispatcher accounting when an assembly job leaves the queue to
+    /// be *served*. Runs under the dispatch lock (the predictor's
+    /// single-writer guarantee); the ring push is a bounded O(1) insert.
     pub(crate) fn record_dispatch(&self, enqueued: Instant) {
         let wait = enqueued.elapsed();
         let ns = wait.as_nanos() as u64;
         self.queue_wait_ns.fetch_add(ns, Ordering::Relaxed);
         self.wait_samples.lock().unwrap_or_else(PoisonError::into_inner).push(ns);
+        if let Some(slo) = &self.slo {
+            let ms = wait.as_secs_f64() * 1e3;
+            self.predictor.observe(ms, self.slo_cfg.ewma_alpha);
+            if ms <= slo.deadline_ms {
+                self.deadline_met.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.deadline_missed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Dispatcher accounting when the SLO gate sheds a batch instead of
+    /// serving it. The shed wait feeds the predictor's EWMA (so the
+    /// estimate keeps tracking the backlog during a full-shed phase and
+    /// recovers as the queue drains) but *not* the served-wait ring —
+    /// the ring is the consumer-visible latency distribution.
+    pub(crate) fn record_shed(&self, enqueued: Instant) {
+        let ms = enqueued.elapsed().as_secs_f64() * 1e3;
+        self.predictor.observe(ms, self.slo_cfg.ewma_alpha);
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The SLO gate demoted a Serving batch to the Background lane.
+    pub(crate) fn record_downclass(&self) {
+        self.downclassed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Consumer-side amortized refresh of the predictor's p95 from the
+    /// served-wait ring. Uses `try_lock`: if the dispatcher is mid-push
+    /// we skip this round rather than contend — predictor maintenance
+    /// never blocks (or is blocked by) the dispatch path (invariant S3).
+    pub(crate) fn maybe_refresh_predictor_p95(&self) {
+        if self.slo.is_none() || !self.predictor.refresh_due(self.slo_cfg.p95_refresh_batches) {
+            return;
+        }
+        if let Ok(ring) = self.wait_samples.try_lock() {
+            if ring.buf.is_empty() {
+                return;
+            }
+            let mut ms: Vec<f64> = ring.buf.iter().map(|&ns| ns as f64 / 1e6).collect();
+            drop(ring);
+            ms.sort_by(f64::total_cmp);
+            self.predictor.store_p95(percentile_sorted(&ms, 95.0));
+        }
     }
 
     /// The session's next assembly just failed admission (all credits in
@@ -475,6 +610,10 @@ impl SessionState {
             credit_stalls: self.credit_stalls.load(Ordering::Relaxed),
             edge_cache_hits: self.edge_cache_hits.load(Ordering::Relaxed),
             edge_cache_misses: self.edge_cache_misses.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            downclassed: self.downclassed.load(Ordering::Relaxed),
+            deadline_met: self.deadline_met.load(Ordering::Relaxed),
+            deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
         }
     }
 
@@ -489,6 +628,19 @@ impl SessionState {
             .iter()
             .map(|&ns| ns as f64 / 1e6)
             .collect()
+    }
+
+    /// Percentile summary (p50/p95/...) of the retained queue-wait
+    /// samples in milliseconds via `util::stats::summarize` — the one
+    /// percentile implementation every consumer (CLI, benches, SLO
+    /// predictor) shares. `None` before the first dispatch.
+    pub(crate) fn queue_wait_summary_ms(&self) -> Option<Summary> {
+        let samples = self.queue_wait_samples_ms();
+        if samples.is_empty() {
+            None
+        } else {
+            Some(crate::util::stats::summarize(&samples))
+        }
     }
 }
 
@@ -561,8 +713,10 @@ mod tests {
             Packer::Lpfhp,
             8,
             topology,
+            None,
         );
         assert_eq!(st.credits, 1);
+        assert_eq!(st.effective_credits(), 1, "effective starts at the ceiling");
         let t = Instant::now();
         st.record_dispatch(t);
         st.record_assembly(Duration::from_millis(2), 6);
@@ -580,5 +734,46 @@ mod tests {
         assert!((m.edge_cache_hit_rate() - 0.75).abs() < 1e-12);
         assert_eq!(st.queue_wait_samples_ms().len(), 1);
         assert!(m.mean_queue_wait_ms() >= 0.0);
+        assert_eq!((m.shed, m.downclassed), (0, 0), "no SLO, nothing shed");
+        assert_eq!(m.deadline_hit_rate(), 1.0, "unclassified sessions never miss");
+        let s = st.queue_wait_summary_ms().expect("one sample recorded");
+        assert_eq!(s.n, 1);
+    }
+
+    #[test]
+    fn slo_state_classifies_and_clamps_effective_credits() {
+        use crate::coordinator::slo::ShedPolicy;
+        let source = Arc::new(PreparedSource::wrap(HydroNet::new(4, 1)));
+        let topology = source.topology(6.0, 12);
+        let st = SessionState::new(
+            2,
+            QosClass::Serving,
+            4,
+            source,
+            Packer::Lpfhp,
+            8,
+            topology,
+            Some(Slo::new(1e6, ShedPolicy::Shed)), // generous: everything meets it
+        );
+        let t = Instant::now();
+        st.record_dispatch(t);
+        st.record_shed(t);
+        st.record_downclass();
+        let m = st.metrics();
+        assert_eq!(m.deadline_met, 1);
+        assert_eq!(m.deadline_missed, 0);
+        assert_eq!(m.shed, 1);
+        assert_eq!(m.downclassed, 1);
+        assert_eq!(st.predictor.observations(), 2, "served and shed both feed the EWMA");
+        // effective credits always land in [1, ceiling]
+        st.set_effective_credits(0);
+        assert_eq!(st.effective_credits(), 1);
+        st.set_effective_credits(99);
+        assert_eq!(st.effective_credits(), 4);
+        st.set_effective_credits(2);
+        assert_eq!(st.effective_credits(), 2);
+        // the consumer-side p95 refresh is a no-op until the cadence
+        st.maybe_refresh_predictor_p95();
+        assert!(st.queue_wait_summary_ms().is_some());
     }
 }

@@ -1,0 +1,483 @@
+//! SLO-guarded serving: deadline admission, predictive load shedding,
+//! request coalescing, and credit autoscaling for the data-plane's
+//! Serving lane.
+//!
+//! The ROADMAP's millions-of-users scenario needs overload to degrade
+//! *deliberately*: without a latency budget, a traffic spike just
+//! inflates every tenant's `queue_wait` until every request is late.
+//! This module gives a session a [`Slo`] — a dispatcher-wait deadline
+//! plus a [`ShedPolicy`] — and three mechanisms that act on the
+//! per-batch queue-wait signal the session layer already collects:
+//!
+//! * **[`WaitPredictor`]** — a live estimate of the session's dispatch
+//!   wait, combining an EWMA over *every* queue departure (served and
+//!   shed, so the estimate keeps tracking the backlog even while the
+//!   gate sheds) with the p95 of the session's bounded queue-wait ring
+//!   (served batches only, refreshed off the dispatch path). All state
+//!   is two atomic `f64` bit-patterns: reading a prediction is two
+//!   relaxed loads, so the dispatcher's SLO gate never takes a lock
+//!   (invariant **S3** in the `coordinator::dataplane` catalog).
+//! * **The SLO gate** (in `dataplane::DispatchState`) — at dispatch
+//!   time, a Serving batch whose accrued wait (or the predictor's
+//!   current estimate) exceeds the deadline is **shed** (delivered as a
+//!   credited error without assembly — the credit flows back through
+//!   the normal receive path, invariant **S1**) or **down-classed**
+//!   (moved once to the Background lane and dispatched from there,
+//!   invariant **S2**), per the session's [`ShedPolicy`].
+//! * **[`Coalescer`]** — aggregates single-molecule inference requests
+//!   arriving on a short time horizon into LPFHP packs via the
+//!   `packing` machinery: the paper's packing algorithm applied to
+//!   *serving* traffic, not just training epochs. The clock is a caller
+//!   -supplied `now_ms`, so tests drive it with a virtual clock exactly
+//!   like `fleet::watchdog` drives drain deadlines — flush decisions
+//!   are bit-deterministic for a given arrival schedule.
+//! * **[`CreditAutoscaler`]** — grows a hot tenant's *effective*
+//!   admission credits toward its opened ceiling while the shared
+//!   `BufferPool` has idle headroom, and shrinks them back under
+//!   pressure. The ceiling (and the channel sized from it) never
+//!   changes after open, so credit-conservation invariants hold
+//!   unchanged.
+//!
+//! Every deadline/horizon/interval constant lives in [`SloConfig`] —
+//! the `timeout-literal` tidy rule covers this file, so a tuning change
+//! is one edit and deterministic tests can never drift from production
+//! numbers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::packing::{pack_shard, Packer, Packing};
+
+/// Tuning constants for the SLO subsystem. The single home for every
+/// deadline-adjacent number (enforced by the `timeout-literal` tidy
+/// rule, like `FaultConfig`/`WatchdogConfig` in the fleet layer).
+#[derive(Debug, Clone)]
+pub struct SloConfig {
+    /// EWMA smoothing factor for the wait predictor in (0, 1]; higher
+    /// reacts faster to a building backlog.
+    pub ewma_alpha: f64,
+    /// Served batches between p95 refreshes from the queue-wait ring
+    /// (the refresh sorts up to `WAIT_SAMPLE_CAP` samples, so it runs
+    /// amortized on the consumer side, never under the dispatch lock).
+    pub p95_refresh_batches: u64,
+    /// Coalescing horizon: a pending single-molecule request is held at
+    /// most this long before its batch is flushed.
+    pub coalesce_horizon_ms: f64,
+    /// Flush regardless of age once this many requests are pending.
+    pub coalesce_max_pending: usize,
+    /// Credited receives between autoscaler decisions.
+    pub autoscale_batches: u64,
+    /// Grow effective credits while at least this many pool buffers
+    /// sit idle; shrink when the pool is dry.
+    pub autoscale_grow_free: usize,
+    /// Effective credits never shrink below this floor.
+    pub min_credits: usize,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            ewma_alpha: 0.2,
+            p95_refresh_batches: 32,
+            coalesce_horizon_ms: 2.0,
+            coalesce_max_pending: 256,
+            autoscale_batches: 8,
+            autoscale_grow_free: 2,
+            min_credits: 1,
+        }
+    }
+}
+
+/// What to do with a Serving batch predicted to miss its deadline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Drop the batch: deliver a credited error immediately instead of
+    /// assembling it (the consumer sees the shed and keeps its slot in
+    /// the ordered stream; the credit returns through the normal
+    /// receive path — invariant S1).
+    Shed,
+    /// Keep the batch but demote it once to the Background lane; it is
+    /// dispatched from there exactly once (invariant S2), trading a
+    /// guaranteed-late completion for not losing the work.
+    Downclass,
+}
+
+/// Per-session service-level objective: a dispatcher queue-wait
+/// deadline and the policy applied to work predicted to miss it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    /// Deadline on the dispatcher queue wait of each batch, in
+    /// milliseconds.
+    pub deadline_ms: f64,
+    /// Policy for predicted-miss batches.
+    pub shed_policy: ShedPolicy,
+}
+
+impl Slo {
+    /// An SLO with the given deadline and policy.
+    pub fn new(deadline_ms: f64, shed_policy: ShedPolicy) -> Slo {
+        assert!(
+            deadline_ms.is_finite() && deadline_ms > 0.0,
+            "SLO deadline must be a positive finite duration"
+        );
+        Slo { deadline_ms, shed_policy }
+    }
+
+    /// A shedding SLO (the common serving configuration).
+    pub fn deadline(deadline_ms: f64) -> Slo {
+        Slo::new(deadline_ms, ShedPolicy::Shed)
+    }
+}
+
+/// Live dispatch-wait estimate for one session: EWMA over every queue
+/// departure plus the last refreshed p95 of the served-batch wait ring.
+///
+/// Writers (`observe`, from the dispatcher's take path) run under the
+/// dispatcher lock, so the read-modify-write EWMA update has a single
+/// writer; readers are lock-free relaxed loads from any thread
+/// (invariant S3: the gate's prediction never blocks, and nothing
+/// blocks on it).
+#[derive(Debug, Default)]
+pub struct WaitPredictor {
+    /// EWMA of departure waits, `f64` bit pattern.
+    ewma_ms_bits: AtomicU64,
+    /// Last refreshed p95 of the served-wait ring, `f64` bit pattern.
+    p95_ms_bits: AtomicU64,
+    /// Departures observed (drives the amortized p95 refresh cadence).
+    observed: AtomicU64,
+    /// Departures at the last p95 refresh.
+    refreshed_at: AtomicU64,
+}
+
+impl WaitPredictor {
+    /// Fold one queue departure (served *or* shed) into the EWMA.
+    /// Single-writer: called only under the dispatcher lock.
+    pub fn observe(&self, wait_ms: f64, alpha: f64) {
+        let prev = f64::from_bits(self.ewma_ms_bits.load(Ordering::Relaxed));
+        let next = if self.observed.load(Ordering::Relaxed) == 0 {
+            wait_ms
+        } else {
+            prev + alpha * (wait_ms - prev)
+        };
+        self.ewma_ms_bits.store(next.to_bits(), Ordering::Relaxed);
+        self.observed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current estimate of a batch's dispatch wait in milliseconds: the
+    /// more pessimistic of the EWMA and the last refreshed ring p95.
+    /// Two relaxed loads — safe to call under any lock (S3).
+    pub fn predicted_wait_ms(&self) -> f64 {
+        let ewma = f64::from_bits(self.ewma_ms_bits.load(Ordering::Relaxed));
+        let p95 = f64::from_bits(self.p95_ms_bits.load(Ordering::Relaxed));
+        ewma.max(p95)
+    }
+
+    /// Is the amortized p95 refresh due? (Consumer-side callers check
+    /// this before paying the ring summarization.)
+    pub fn refresh_due(&self, every: u64) -> bool {
+        let seen = self.observed.load(Ordering::Relaxed);
+        seen.saturating_sub(self.refreshed_at.load(Ordering::Relaxed)) >= every.max(1)
+    }
+
+    /// Store a freshly computed p95 of the served-wait ring. Runs on
+    /// the consumer side (never under the dispatch lock).
+    pub fn store_p95(&self, p95_ms: f64) {
+        self.p95_ms_bits.store(p95_ms.to_bits(), Ordering::Relaxed);
+        self.refreshed_at
+            .store(self.observed.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Total departures folded into the EWMA so far.
+    pub fn observations(&self) -> u64 {
+        self.observed.load(Ordering::Relaxed)
+    }
+}
+
+/// One pending single-molecule request inside the [`Coalescer`].
+#[derive(Debug, Clone, Copy)]
+struct PendingRequest {
+    id: u32,
+    n_nodes: usize,
+    arrived_ms: f64,
+}
+
+/// Aggregates single-molecule inference requests arriving on a short
+/// time horizon into LPFHP packs — the paper's packing algorithm
+/// applied to serving traffic. Deterministic by construction: the clock
+/// is the caller's `now_ms` (virtual in tests, wall-derived in
+/// production), so a given arrival schedule always produces the same
+/// flush sequence, like `fleet::watchdog`'s virtual-clock deadlines.
+#[derive(Debug)]
+pub struct Coalescer {
+    horizon_ms: f64,
+    max_pending: usize,
+    s_m: usize,
+    max_items: Option<usize>,
+    pending: Vec<PendingRequest>,
+    /// Requests ever submitted.
+    requests: u64,
+    /// Batches flushed (each one `Packing` of LPFHP packs).
+    flushes: u64,
+    /// Packs emitted across all flushes.
+    packs: u64,
+    /// Real molecule nodes placed across all flushes.
+    real_nodes: u64,
+    /// Node slots consumed across all flushes (`packs * s_m`).
+    slot_nodes: u64,
+}
+
+impl Coalescer {
+    /// A coalescer flushing LPFHP packs of `s_m` node slots (and at
+    /// most `max_items` molecules per pack) on the config's horizon.
+    pub fn new(cfg: &SloConfig, s_m: usize, max_items: Option<usize>) -> Coalescer {
+        assert!(s_m > 0, "pack size must be positive");
+        Coalescer {
+            horizon_ms: cfg.coalesce_horizon_ms,
+            max_pending: cfg.coalesce_max_pending.max(1),
+            s_m,
+            max_items,
+            pending: Vec::new(),
+            requests: 0,
+            flushes: 0,
+            packs: 0,
+            real_nodes: 0,
+            slot_nodes: 0,
+        }
+    }
+
+    /// Submit one single-molecule request (`id`, `n_nodes` graph nodes)
+    /// arriving at `now_ms`. Returns a flushed batch immediately when
+    /// the submission fills the pending window.
+    pub fn submit(&mut self, id: u32, n_nodes: usize, now_ms: f64) -> Option<Packing> {
+        self.requests += 1;
+        self.pending.push(PendingRequest { id, n_nodes, arrived_ms: now_ms });
+        if self.pending.len() >= self.max_pending {
+            return self.flush();
+        }
+        None
+    }
+
+    /// Flush the pending window if its oldest request has aged past the
+    /// horizon at `now_ms`; `None` while everything is still fresh.
+    pub fn poll(&mut self, now_ms: f64) -> Option<Packing> {
+        let oldest = self.pending.first()?.arrived_ms;
+        if now_ms - oldest >= self.horizon_ms {
+            self.flush()
+        } else {
+            None
+        }
+    }
+
+    /// Unconditionally pack and drain the pending window (end-of-stream
+    /// drain; also the shared tail of `submit`/`poll`).
+    pub fn flush(&mut self) -> Option<Packing> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let ids: Vec<u32> = self.pending.iter().map(|r| r.id).collect();
+        let sizes: Vec<usize> = self.pending.iter().map(|r| r.n_nodes).collect();
+        self.pending.clear();
+        let packing = pack_shard(Packer::Lpfhp, &ids, &sizes, self.s_m, self.max_items);
+        self.flushes += 1;
+        self.packs += packing.n_packs() as u64;
+        self.real_nodes += sizes.iter().sum::<usize>() as u64;
+        self.slot_nodes += (packing.n_packs() * self.s_m) as u64;
+        Some(packing)
+    }
+
+    /// Requests waiting for the next flush.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// `(requests, flushes, packs)` emitted so far.
+    pub fn counts(&self) -> (u64, u64, u64) {
+        (self.requests, self.flushes, self.packs)
+    }
+
+    /// Aggregate node-slot utilization of every flushed pack in (0, 1]
+    /// — directly comparable to the training path's
+    /// `ShardedStrategy::efficiency` on the same molecule mix.
+    pub fn efficiency(&self) -> f64 {
+        if self.slot_nodes == 0 {
+            return 1.0;
+        }
+        self.real_nodes as f64 / self.slot_nodes as f64
+    }
+}
+
+/// Decides a session's *effective* admission credits from shared
+/// `BufferPool` headroom: grow toward the opened ceiling while buffers
+/// sit idle, shrink toward the floor when the pool runs dry. Effective
+/// credits only gate *new* dispatches — in-flight work always drains —
+/// and never exceed the ceiling the channel was sized for, so the
+/// credit-conservation invariants are untouched.
+#[derive(Debug)]
+pub struct CreditAutoscaler {
+    grow_free: usize,
+    min_credits: usize,
+    every: u64,
+    /// Credited receives since the last decision.
+    ticks: AtomicU64,
+}
+
+impl CreditAutoscaler {
+    /// An autoscaler with the config's headroom thresholds and cadence.
+    pub fn new(cfg: &SloConfig) -> CreditAutoscaler {
+        CreditAutoscaler {
+            grow_free: cfg.autoscale_grow_free,
+            min_credits: cfg.min_credits.max(1),
+            every: cfg.autoscale_batches.max(1),
+            ticks: AtomicU64::new(0),
+        }
+    }
+
+    /// Count one credited receive; `true` when a decision is due.
+    pub fn tick(&self) -> bool {
+        self.ticks.fetch_add(1, Ordering::Relaxed) % self.every == self.every - 1
+    }
+
+    /// Next effective-credit target given the current value, the
+    /// session's opened ceiling, and the pool's idle-buffer count.
+    /// Moves one credit per decision so scaling is smooth, and always
+    /// lands in `[min_credits, ceiling]`.
+    pub fn decide(&self, current: usize, ceiling: usize, pool_free: usize) -> usize {
+        let floor = self.min_credits.min(ceiling.max(1));
+        let target = if pool_free >= self.grow_free {
+            current.saturating_add(1)
+        } else if pool_free == 0 {
+            current.saturating_sub(1)
+        } else {
+            current
+        };
+        target.clamp(floor, ceiling.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slo_ctor_validates_and_defaults_to_shedding() {
+        let s = Slo::deadline(25.0);
+        assert_eq!(s.deadline_ms, 25.0);
+        assert_eq!(s.shed_policy, ShedPolicy::Shed);
+        let d = Slo::new(10.0, ShedPolicy::Downclass);
+        assert_eq!(d.shed_policy, ShedPolicy::Downclass);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive finite")]
+    fn slo_rejects_nonpositive_deadline() {
+        let _ = Slo::deadline(0.0);
+    }
+
+    #[test]
+    fn predictor_tracks_ewma_and_p95_pessimistically() {
+        let p = WaitPredictor::default();
+        assert_eq!(p.predicted_wait_ms(), 0.0, "no observations yet");
+        p.observe(10.0, 0.5);
+        assert_eq!(p.predicted_wait_ms(), 10.0, "first observation seeds the EWMA");
+        p.observe(20.0, 0.5);
+        assert!((p.predicted_wait_ms() - 15.0).abs() < 1e-12);
+        // a refreshed p95 above the EWMA takes over (max of the two)
+        p.store_p95(40.0);
+        assert_eq!(p.predicted_wait_ms(), 40.0);
+        // and an EWMA spike above the p95 takes back over
+        for _ in 0..32 {
+            p.observe(100.0, 0.5);
+        }
+        assert!(p.predicted_wait_ms() > 40.0);
+        assert_eq!(p.observations(), 34);
+    }
+
+    #[test]
+    fn predictor_refresh_cadence_is_amortized() {
+        let p = WaitPredictor::default();
+        assert!(!p.refresh_due(4));
+        for _ in 0..3 {
+            p.observe(1.0, 0.2);
+        }
+        assert!(!p.refresh_due(4));
+        p.observe(1.0, 0.2);
+        assert!(p.refresh_due(4));
+        p.store_p95(1.0);
+        assert!(!p.refresh_due(4), "refresh resets the cadence");
+    }
+
+    #[test]
+    fn coalescer_flushes_on_virtual_horizon() {
+        let cfg = SloConfig { coalesce_horizon_ms: 5.0, ..SloConfig::default() };
+        let mut c = Coalescer::new(&cfg, 96, Some(12));
+        assert!(c.submit(0, 30, 0.0).is_none());
+        assert!(c.submit(1, 40, 1.0).is_none());
+        assert!(c.poll(4.9).is_none(), "horizon not reached");
+        let packing = c.poll(5.0).expect("horizon flush");
+        assert_eq!(packing.packs.iter().map(|p| p.items.len()).sum::<usize>(), 2);
+        assert_eq!(c.pending(), 0);
+        // deterministic replay: identical arrivals, identical flush
+        let mut c2 = Coalescer::new(&cfg, 96, Some(12));
+        c2.submit(0, 30, 0.0);
+        c2.submit(1, 40, 1.0);
+        let again = c2.poll(5.0).expect("replay flush");
+        assert_eq!(again.n_packs(), packing.n_packs());
+        assert_eq!(again.packs[0].items, packing.packs[0].items);
+    }
+
+    #[test]
+    fn coalescer_flushes_on_full_window_and_tracks_efficiency() {
+        let cfg = SloConfig {
+            coalesce_horizon_ms: 1000.0,
+            coalesce_max_pending: 4,
+            ..SloConfig::default()
+        };
+        let mut c = Coalescer::new(&cfg, 96, None);
+        for i in 0..3u32 {
+            assert!(c.submit(i, 48, 0.0).is_none());
+        }
+        let packing = c.submit(3, 48, 0.1).expect("full-window flush");
+        // 4 x 48 nodes fit exactly in two 96-slot packs: perfect fill
+        assert_eq!(packing.n_packs(), 2);
+        assert!((c.efficiency() - 1.0).abs() < 1e-12, "{}", c.efficiency());
+        let (req, flushes, packs) = c.counts();
+        assert_eq!((req, flushes, packs), (4, 1, 2));
+        // remapped ids survive the pack
+        let mut ids: Vec<u32> = packing.packs.iter().flat_map(|p| p.items.clone()).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn coalescer_drain_flushes_the_tail() {
+        let mut c = Coalescer::new(&SloConfig::default(), 96, None);
+        assert!(c.flush().is_none(), "empty drain is a no-op");
+        c.submit(7, 10, 0.0);
+        let tail = c.flush().expect("tail drain");
+        assert_eq!(tail.packs[0].items, vec![7]);
+    }
+
+    #[test]
+    fn autoscaler_moves_one_credit_within_bounds() {
+        let cfg = SloConfig {
+            autoscale_grow_free: 2,
+            min_credits: 1,
+            autoscale_batches: 1,
+            ..SloConfig::default()
+        };
+        let a = CreditAutoscaler::new(&cfg);
+        assert_eq!(a.decide(2, 8, 5), 3, "idle pool grows");
+        assert_eq!(a.decide(8, 8, 5), 8, "never beyond the ceiling");
+        assert_eq!(a.decide(2, 8, 0), 1, "dry pool shrinks");
+        assert_eq!(a.decide(1, 8, 0), 1, "never below the floor");
+        assert_eq!(a.decide(3, 8, 1), 3, "mid headroom holds steady");
+        assert!(a.tick(), "cadence of 1 fires every credited receive");
+    }
+
+    #[test]
+    fn autoscaler_cadence_counts_receives() {
+        let cfg = SloConfig { autoscale_batches: 3, ..SloConfig::default() };
+        let a = CreditAutoscaler::new(&cfg);
+        let fires: Vec<bool> = (0..6).map(|_| a.tick()).collect();
+        assert_eq!(fires, [false, false, true, false, false, true]);
+    }
+}

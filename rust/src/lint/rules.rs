@@ -11,11 +11,13 @@
 //!   `Result` carry `#[must_use = "<why>"]` so call sites state why an
 //!   ignored error would be a bug (and clippy's `-D warnings` keeps the
 //!   messages, not bare attributes).
-//! * `timeout-literal` — `fleet/` only: no hard-coded waits. Every
-//!   deadline, backoff, or sleep in the chaos layer must derive from a
-//!   `FaultConfig`/`WatchdogConfig` field (their `Default` impls and
-//!   struct literals are the single home for the numbers), so a tuning
-//!   change is one edit and chaos replays stay seed-deterministic.
+//! * `timeout-literal` — `fleet/` and `coordinator/slo.rs`: no
+//!   hard-coded waits. Every deadline, backoff, horizon, or sleep in
+//!   the chaos layer and the SLO subsystem must derive from a
+//!   `FaultConfig`/`WatchdogConfig`/`SloConfig` field (their `Default`
+//!   impls and struct literals are the single home for the numbers), so
+//!   a tuning change is one edit and deterministic replays never drift
+//!   from production numbers.
 //! * `makefile-bench-drift` — the Makefile against `rust/benches/`.
 //!
 //! Every rule honours `// tidy: allow(<rule>): <invariant>` on the same
@@ -37,13 +39,14 @@ pub const RULES: [&str; 7] = [
 ];
 
 /// Files whose non-test code must not `.unwrap()` / `.expect("")`:
-/// the dispatcher, session admission, batcher, cache decoder, and the
-/// fleet control plane (manifest/membership/scheduler plus the chaos
-/// layer's fault planner and watchdog).
-const HOT_PATH_FILES: [&str; 9] = [
+/// the dispatcher, session admission, SLO gate, batcher, cache decoder,
+/// and the fleet control plane (manifest/membership/scheduler plus the
+/// chaos layer's fault planner and watchdog).
+const HOT_PATH_FILES: [&str; 10] = [
     "coordinator/batcher.rs",
     "coordinator/dataplane.rs",
     "coordinator/session.rs",
+    "coordinator/slo.rs",
     "datasets/persist.rs",
     "fleet/faults.rs",
     "fleet/manifest.rs",
@@ -296,18 +299,21 @@ fn rule_must_use_result(rel: &str, s: &Sanitized, tests: &[bool], findings: &mut
 }
 
 fn rule_timeout_literal(rel: &str, s: &Sanitized, tests: &[bool], findings: &mut Vec<Finding>) {
-    if !rel.starts_with("fleet/") {
+    if !rel.starts_with("fleet/") && rel != "coordinator/slo.rs" {
         return;
     }
     // Brace-tracked exemption region: a block whose opening line names
-    // `FaultConfig` or `WatchdogConfig` (struct definition, `Default`
-    // impl, or literal) is where the numbers legitimately live.
+    // `FaultConfig`, `WatchdogConfig`, or `SloConfig` (struct
+    // definition, `Default` impl, or literal) is where the numbers
+    // legitimately live.
     let mut depth: i64 = 0;
     let mut config_open_depth: Option<i64> = None;
     for (ln, line) in s.code.iter().enumerate() {
         if config_open_depth.is_none()
             && line.contains('{')
-            && (has_word(line, "FaultConfig") || has_word(line, "WatchdogConfig"))
+            && (has_word(line, "FaultConfig")
+                || has_word(line, "WatchdogConfig")
+                || has_word(line, "SloConfig"))
         {
             config_open_depth = Some(depth);
         }
@@ -320,8 +326,8 @@ fn rule_timeout_literal(rel: &str, s: &Sanitized, tests: &[bool], findings: &mut
                         file: rel.to_string(),
                         line: ln + 1,
                         message: format!(
-                            "{what} — waits in the chaos layer derive from \
-                             FaultConfig/WatchdogConfig fields, never inline numbers"
+                            "{what} — waits here derive from FaultConfig/\
+                             WatchdogConfig/SloConfig fields, never inline numbers"
                         ),
                     });
                 }
@@ -985,6 +991,19 @@ mod tests {
         let f = lint_source("fleet/membership.rs", src);
         assert_eq!(rules_of(&f), ["timeout-literal"], "{f:?}");
         assert_eq!(f[0].line, 9, "Default impl exempt, stray literal after it flagged");
+    }
+
+    #[test]
+    fn slo_module_is_a_timeout_literal_root() {
+        // the SLO gate is deadline machinery: inline waits are flagged...
+        let f = lint_source("coordinator/slo.rs", "fn f() { let horizon_ms = 2.0; }\n");
+        assert_eq!(rules_of(&f), ["timeout-literal"]);
+        // ...but SloConfig blocks own the numbers, like the fleet configs
+        let cfg = "impl Default for SloConfig {\n    fn default() -> Self {\n        SloConfig {\n            coalesce_horizon_ms: 2.0,\n        }\n    }\n}\n";
+        assert!(lint_source("coordinator/slo.rs", cfg).is_empty());
+        // the rest of coordinator/ stays out of scope
+        let elsewhere = lint_source("coordinator/batcher.rs", "fn f() { let grace_ms = 5; }\n");
+        assert!(!rules_of(&elsewhere).contains(&"timeout-literal"), "{elsewhere:?}");
     }
 
     #[test]

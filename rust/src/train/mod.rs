@@ -49,6 +49,16 @@ pub struct EpochRecord {
     /// epoch-invariant cache — ~0 on epoch 1 (cold), ~1 from epoch 2 on
     /// (a low warm-epoch value means the shared cache is not engaging).
     pub edge_cache_hit_rate: f64,
+    /// Batches the SLO gate shed for this session (always 0 for a
+    /// training session without an `Slo` — see `coordinator::slo`).
+    pub shed: u64,
+    /// Batches the SLO gate demoted to the Background lane.
+    pub downclassed: u64,
+    /// Served batches whose dispatcher wait met the session's SLO
+    /// deadline (0 when no SLO is attached).
+    pub deadline_met: u64,
+    /// Served batches whose dispatcher wait missed the deadline.
+    pub deadline_missed: u64,
 }
 
 /// Trainer configuration.
@@ -144,6 +154,10 @@ pub fn train<S: MoleculeSource + 'static>(
             queue_wait_ms: metrics.mean_queue_wait_ms(),
             credit_stalls: metrics.credit_stalls,
             edge_cache_hit_rate: metrics.edge_cache_hit_rate(),
+            shed: metrics.shed,
+            downclassed: metrics.downclassed,
+            deadline_met: metrics.deadline_met,
+            deadline_missed: metrics.deadline_missed,
         });
     }
     // With a cache_dir, persist the prepared cache so the *next* process

@@ -34,6 +34,18 @@
 //! rebalance that abandons a draining member's in-flight admission
 //! without returning the credit, and asserts the explorer finds it.
 //!
+//! A fourth family (`slo_*`) drives the SLO-guarded serving protocol:
+//! a modeled dispatcher gates a Serving lane through the *real*
+//! `coordinator::slo::{WaitPredictor, CreditAutoscaler}` on a virtual
+//! clock, shedding or down-classing predicted-miss batches while a
+//! consumer drains deliveries and autoscales the effective credit
+//! window. Invariants S1 (a shed batch is dispatched credited and its
+//! credit returns through the normal receive path), S2 (a down-classed
+//! batch is dispatched exactly once), and S3-adjacent credit bounds
+//! (effective window stays within [1, ceiling]) are checked on every
+//! step. Teeth: a consumer that skips the credit release for shed
+//! deliveries, and a down-class that re-queues the batch twice.
+//!
 //! A third family (`watchdog_*` / `guard_*`) adds the chaos layer's
 //! straggler protocol: the *real* `fleet::Watchdog` probes a member
 //! that stalls mid-stream holding a shard and an admission credit, and
@@ -48,6 +60,7 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 
+use molpack::coordinator::{CreditAutoscaler, ShedPolicy, SloConfig, WaitPredictor};
 use molpack::datasets::SourceFingerprint;
 use molpack::fleet::{
     Assignment, MemberId, Membership, ShardId, ShardManifest, Verdict, Watchdog, WatchdogConfig,
@@ -1072,6 +1085,344 @@ fn catches_lost_shard_on_force_leave() {
     );
     let v2 = ex
         .replay(v.seed, |rng| build_guard(rng, Some(GuardBug::LostShardOnForceLeave)))
+        .expect_err("replaying the reported seed must fail again");
+    assert_eq!(*v, *v2, "replay diverged from the original violation");
+}
+
+// ---------------------------------------------------------------------------
+// SLO-guarded serving scenario (invariants S1 + S2 + the autoscaler
+// credit bound): a modeled dispatcher drives a Serving and a Background
+// lane on a virtual clock through the *real*
+// `coordinator::slo::{WaitPredictor, CreditAutoscaler}`. The gate sheds
+// (credited error delivery — the credit must come back through the one
+// normal receive path, S1) or down-classes (uncredited move to the
+// Background lane, dispatched exactly once from there, S2)
+// predicted-miss batches; the consumer ticks the real autoscaler, whose
+// effective window must stay within [1, ceiling]. Teeth: a consumer
+// that skips the credit release for shed deliveries (the classic S1
+// leak), and a down-class that re-queues the batch into both lanes.
+// ---------------------------------------------------------------------------
+
+/// Deliberately seeded SLO-protocol bugs for the teeth self-tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SloBug {
+    /// The consumer treats shed deliveries as uncredited and never
+    /// returns their admission credit (violates S1).
+    LeakedCreditOnShed,
+    /// Down-classing pushes the batch to the Background lane twice, so
+    /// it is dispatched — and delivered — twice (violates S2).
+    DoubleDispatchOnDownclass,
+}
+
+#[derive(Clone, Copy)]
+struct SloJob {
+    id: u32,
+    /// Virtual enqueue time (ms); waited = now - enqueued.
+    enqueued_vt: f64,
+    /// Virtual dispatch cost (ms) added to the clock when served.
+    cost_ms: f64,
+}
+
+struct SloDelivery {
+    job: u32,
+    shed: bool,
+}
+
+/// Shared state: the real predictor/autoscaler plus the modeled lanes,
+/// credit window, and delivery channel.
+struct SloModel {
+    /// Admission-credit ceiling fixed at session open.
+    ceiling: usize,
+    /// Autoscaled effective window, must stay within [1, ceiling].
+    effective: usize,
+    in_flight: usize,
+    /// Virtual clock (ms); advanced by each served dispatch.
+    vt: f64,
+    serving: VecDeque<SloJob>,
+    background: VecDeque<SloJob>,
+    predictor: WaitPredictor,
+    autoscaler: CreditAutoscaler,
+    cfg: SloConfig,
+    deadline_ms: f64,
+    policy: ShedPolicy,
+    channel: VecDeque<SloDelivery>,
+    chan_cap: usize,
+    n_buffers: usize,
+    /// S2 bookkeeping: ids that have been down-classed (at most once).
+    downclassed: HashSet<u32>,
+    /// Delivery counts per job id (each must end at exactly one).
+    delivered: HashMap<u32, u32>,
+    n_jobs: usize,
+    shed: usize,
+    served: usize,
+    fault: Option<String>,
+}
+
+fn slo_invariant(m: &SloModel) -> Result<(), String> {
+    if let Some(f) = &m.fault {
+        return Err(f.clone());
+    }
+    if m.in_flight > m.ceiling {
+        return Err(format!(
+            "admission overrun: in_flight {} > ceiling {}",
+            m.in_flight, m.ceiling
+        ));
+    }
+    if m.effective < 1 || m.effective > m.ceiling {
+        return Err(format!(
+            "autoscaler out of bounds: effective {} not in [1, {}]",
+            m.effective, m.ceiling
+        ));
+    }
+    if let Some((&id, &k)) = m.delivered.iter().find(|&(_, &k)| k > 1) {
+        return Err(format!("S2: batch {id} dispatched {k} times"));
+    }
+    Ok(())
+}
+
+fn slo_finale(m: &SloModel) -> Result<(), String> {
+    if m.in_flight != 0 {
+        return Err(format!(
+            "credits lost: in_flight {} != 0 at quiescence (S1: a shed credit never came back)",
+            m.in_flight
+        ));
+    }
+    if m.delivered.len() != m.n_jobs {
+        return Err(format!(
+            "deliveries lost: {} of {} batches answered",
+            m.delivered.len(),
+            m.n_jobs
+        ));
+    }
+    if m.shed + m.served != m.n_jobs {
+        return Err(format!(
+            "ledger mismatch: served {} + shed {} != {}",
+            m.served, m.shed, m.n_jobs
+        ));
+    }
+    Ok(())
+}
+
+/// The dispatcher: gate the Serving head through the real predictor
+/// (serve / shed / down-class), then drain the Background lane. Shed
+/// dispatches take a credit like any other (S1); down-class moves the
+/// head without one (S2).
+fn slo_dispatcher(bug: Option<SloBug>) -> impl FnMut(&mut SloModel) -> Step {
+    move |m: &mut SloModel| {
+        if let Some(&head) = m.serving.front() {
+            let waited = m.vt - head.enqueued_vt;
+            let miss = waited.max(m.predictor.predicted_wait_ms()) > m.deadline_ms;
+            if miss && m.policy == ShedPolicy::Downclass {
+                let job = m.serving.pop_front().expect("front() was Some");
+                if !m.downclassed.insert(job.id) {
+                    m.fault = Some(format!("S2: batch {} down-classed twice", job.id));
+                }
+                m.background.push_back(job);
+                if bug == Some(SloBug::DoubleDispatchOnDownclass) {
+                    m.background.push_back(job); // the seeded double-queue
+                }
+                return Step::Ran;
+            }
+            if m.in_flight >= m.effective {
+                return Step::Blocked;
+            }
+            if m.channel.len() >= m.chan_cap {
+                return Step::Blocked;
+            }
+            let job = m.serving.pop_front().expect("front() was Some");
+            m.in_flight += 1; // shed or served, the dispatch is credited
+            m.predictor.observe(waited, m.cfg.ewma_alpha);
+            if miss {
+                m.channel.push_back(SloDelivery { job: job.id, shed: true });
+            } else {
+                m.vt += job.cost_ms;
+                m.channel.push_back(SloDelivery { job: job.id, shed: false });
+            }
+            return Step::Ran;
+        }
+        if let Some(&head) = m.background.front() {
+            // the gate only examines the Serving lane: Background work
+            // (including down-classed batches) always dispatches
+            if m.in_flight >= m.effective || m.channel.len() >= m.chan_cap {
+                return Step::Blocked;
+            }
+            m.background.pop_front();
+            m.in_flight += 1;
+            m.vt += head.cost_ms;
+            m.channel.push_back(SloDelivery { job: head.id, shed: false });
+            return Step::Ran;
+        }
+        // Both lanes empty: nothing can ever arrive again (down-class is
+        // the only producer and it feeds off the Serving lane), so the
+        // dispatcher is done; the consumer drains what is in flight.
+        Step::Done
+    }
+}
+
+/// The receive loop: drain deliveries, return the credit (shed and
+/// served alike — S1), tick the real autoscaler and apply its clamped
+/// decision to the effective window.
+fn slo_consumer(bug: Option<SloBug>) -> impl FnMut(&mut SloModel) -> Step {
+    move |m: &mut SloModel| {
+        let Some(d) = m.channel.pop_front() else {
+            return if m.serving.is_empty() && m.background.is_empty() && m.in_flight == 0 {
+                Step::Done
+            } else {
+                Step::Blocked
+            };
+        };
+        *m.delivered.entry(d.job).or_insert(0) += 1;
+        if d.shed {
+            m.shed += 1;
+        } else {
+            m.served += 1;
+        }
+        let skip_credit = d.shed && bug == Some(SloBug::LeakedCreditOnShed);
+        if !skip_credit {
+            if m.in_flight == 0 {
+                m.fault = Some("credit underflow on receive".to_string());
+            } else {
+                m.in_flight -= 1;
+            }
+        }
+        if m.autoscaler.tick() {
+            let free = m.n_buffers.saturating_sub(m.in_flight);
+            m.effective = m.autoscaler.decide(m.effective, m.ceiling, free);
+        }
+        Step::Ran
+    }
+}
+
+/// Randomized SLO shapes: credit ceilings, buffer headroom, job mixes
+/// across both lanes, tight-vs-loose deadlines, both shed policies,
+/// autoscaler cadences. Buggy builds force the tight-deadline overload
+/// that makes the gate fire.
+fn build_slo(rng: &mut Rng, bug: Option<SloBug>) -> Scenario<SloModel> {
+    let ceiling = rng.range(1, 4);
+    let n_buffers = rng.range(1, 5);
+    let n_jobs = rng.range(3, 9);
+    // A tight deadline with chunky service costs guarantees predicted
+    // misses; a loose one exercises the all-served path.
+    let tight = bug.is_some() || rng.chance(0.6);
+    let deadline_ms = if tight { rng.range(1, 4) as f64 } else { 1e6 };
+    let policy = match bug {
+        Some(SloBug::LeakedCreditOnShed) => ShedPolicy::Shed,
+        Some(SloBug::DoubleDispatchOnDownclass) => ShedPolicy::Downclass,
+        None => {
+            if rng.chance(0.5) {
+                ShedPolicy::Shed
+            } else {
+                ShedPolicy::Downclass
+            }
+        }
+    };
+    let mut serving = VecDeque::new();
+    let mut background = VecDeque::new();
+    for j in 0..n_jobs {
+        let job = SloJob {
+            id: j as u32,
+            enqueued_vt: 0.0,
+            cost_ms: rng.range(2, 8) as f64,
+        };
+        if bug.is_none() && rng.chance(0.25) {
+            background.push_back(job);
+        } else {
+            serving.push_back(job);
+        }
+    }
+    let cfg = SloConfig {
+        autoscale_batches: rng.range(1, 4) as u64,
+        autoscale_grow_free: rng.range(1, 3),
+        min_credits: 1,
+        ..SloConfig::default()
+    };
+    let autoscaler = CreditAutoscaler::new(&cfg);
+    let model = SloModel {
+        ceiling,
+        effective: ceiling,
+        in_flight: 0,
+        vt: 0.0,
+        serving,
+        background,
+        predictor: WaitPredictor::default(),
+        autoscaler,
+        cfg,
+        deadline_ms,
+        policy,
+        channel: VecDeque::new(),
+        chan_cap: ceiling + 1,
+        n_buffers,
+        downclassed: HashSet::new(),
+        delivered: HashMap::new(),
+        n_jobs,
+        shed: 0,
+        served: 0,
+        fault: None,
+    };
+    Scenario::new(model)
+        .with_invariant(slo_invariant)
+        .with_finale(slo_finale)
+        .with_actor("dispatcher", slo_dispatcher(bug))
+        .with_actor("consumer", slo_consumer(bug))
+}
+
+const SLO_SEED: u64 = 0x510_6A7E; // "SLO GATE"
+
+/// The SLO gate: shed/down-class/autoscale keep S1, S2, and the credit
+/// bounds over every explored dispatcher/consumer interleaving.
+#[test]
+fn slo_shed_protocol_holds_over_seeded_interleavings() {
+    let ex = Explorer::from_env(1500, SLO_SEED);
+    if let Ok(raw) = std::env::var("MOLPACK_RACE_SEED") {
+        let seed = parse_seed(&raw).expect("MOLPACK_RACE_SEED must be decimal or 0x-hex");
+        match ex.replay(seed, |rng| build_slo(rng, None)) {
+            Ok(steps) => println!("slo seed {seed:#x}: clean ({steps} steps)"),
+            Err(v) => panic!("{v}"),
+        }
+        return;
+    }
+    match ex.run(|rng| build_slo(rng, None)) {
+        Ok(stats) => println!(
+            "slo race explorer: {} schedules, {} steps, S1/S2 held",
+            stats.schedules, stats.steps
+        ),
+        Err(v) => panic!("{v}"),
+    }
+}
+
+/// Teeth: a consumer that never returns shed credits must be caught —
+/// as the leaked credit at quiescence or as the admission starvation it
+/// causes — and must replay identically from its seed.
+#[test]
+fn catches_leaked_credit_on_shed() {
+    let ex = Explorer::new(800, SLO_SEED);
+    let v = ex
+        .run(|rng| build_slo(rng, Some(SloBug::LeakedCreditOnShed)))
+        .expect_err("LeakedCreditOnShed must be caught within 800 schedules");
+    assert!(
+        v.message.contains("credits lost") || v.message.contains("deadlock"),
+        "caught, but with unexpected message: {v}"
+    );
+    let v2 = ex
+        .replay(v.seed, |rng| build_slo(rng, Some(SloBug::LeakedCreditOnShed)))
+        .expect_err("replaying the reported seed must fail again");
+    assert_eq!(*v, *v2, "replay diverged from the original violation");
+}
+
+/// Teeth: a down-class that queues the batch twice must be caught as a
+/// double dispatch (S2) and must replay identically from its seed.
+#[test]
+fn catches_double_dispatch_on_downclass() {
+    let ex = Explorer::new(800, SLO_SEED);
+    let v = ex
+        .run(|rng| build_slo(rng, Some(SloBug::DoubleDispatchOnDownclass)))
+        .expect_err("DoubleDispatchOnDownclass must be caught within 800 schedules");
+    assert!(
+        v.message.contains("dispatched") || v.message.contains("down-classed twice"),
+        "caught, but with unexpected message: {v}"
+    );
+    let v2 = ex
+        .replay(v.seed, |rng| build_slo(rng, Some(SloBug::DoubleDispatchOnDownclass)))
         .expect_err("replaying the reported seed must fail again");
     assert_eq!(*v, *v2, "replay diverged from the original violation");
 }
